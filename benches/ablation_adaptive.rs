@@ -1,0 +1,76 @@
+//! Ablation of the §7.2 benchmarking strategy: adaptive stopping (stop a
+//! benchmark once its 99% CI is below a width target) vs the paper's
+//! fixed 45-results budget.
+//!
+//! Reports per-benchmark stopping points, the saved fraction of calls,
+//! and verifies the adaptive verdicts still agree with the fixed ones.
+//!
+//! Run: `cargo bench --bench ablation_adaptive`
+
+use elastibench::exp::{baseline, Workbench};
+use elastibench::stats::{adaptive_plan, agreement, Analyzer, Measurements, StoppingRule};
+
+fn main() {
+    let wb = Workbench::native();
+    let base = baseline(&wb).expect("baseline");
+    let analyzer = Analyzer::native();
+    let rule = StoppingRule::default();
+
+    let plan = adaptive_plan(&analyzer, &base.report.measurements, &rule, 0xADA7)
+        .expect("adaptive plan");
+
+    // Re-analyze with the adaptive budgets and compare verdicts.
+    let truncated: Vec<Measurements> = base
+        .report
+        .measurements
+        .iter()
+        .filter_map(|m| {
+            let (_, needed) = plan.per_benchmark.iter().find(|(n, _)| n == &m.name)?;
+            Some(Measurements {
+                name: m.name.clone(),
+                v1: m.v1.iter().copied().take(*needed).collect(),
+                v2: m.v2.iter().copied().take(*needed).collect(),
+            })
+        })
+        .collect();
+    let adaptive_analysis = analyzer
+        .analyze("adaptive", &truncated, 0xBA5E ^ 0xA11A)
+        .expect("adaptive analysis");
+    let rep = agreement(&adaptive_analysis, &base.analysis);
+
+    let mut hist = [0usize; 4]; // <=21, <=30, <=39, 40+
+    for (_, needed) in &plan.per_benchmark {
+        let bucket = match needed {
+            0..=21 => 0,
+            22..=30 => 1,
+            31..=39 => 2,
+            _ => 3,
+        };
+        hist[bucket] += 1;
+    }
+
+    println!("Adaptive stopping (target CI width {:.1} pp) vs fixed 45 results\n", rule.target_ci_pct);
+    println!("| stopping point | benchmarks |");
+    println!("|---|---:|");
+    println!("| <=21 results | {} |", hist[0]);
+    println!("| 22-30 results | {} |", hist[1]);
+    println!("| 31-39 results | {} |", hist[2]);
+    println!("| full 40-45 results | {} |", hist[3]);
+    println!(
+        "\nresults collected: {} adaptive vs {} fixed — {:.1}% of calls (≈cost) saved",
+        plan.adaptive_total,
+        plan.fixed_total,
+        plan.saved_pct()
+    );
+    println!(
+        "verdict agreement with the fixed strategy: {:.2}% over {} benchmarks",
+        rep.agreement_pct(),
+        rep.common
+    );
+    assert!(plan.saved_pct() > 0.0, "adaptive must save something");
+    assert!(
+        rep.agreement_pct() >= 90.0,
+        "adaptive stopping must not change verdicts materially: {:.2}%",
+        rep.agreement_pct()
+    );
+}

@@ -1,0 +1,60 @@
+//! Ablation of §4's parallelism claim: "higher parallelism leads to
+//! shorter runs, while increasing cost due to the increased number of
+//! cold starts."
+//!
+//! Sweeps the runner's call parallelism and reports duration, cost and
+//! cold starts for the baseline configuration.
+//!
+//! Run: `cargo bench --bench ablation_parallelism`
+
+use elastibench::config::ExperimentConfig;
+use elastibench::coordinator::run_experiment;
+use elastibench::exp::Workbench;
+use elastibench::sut::Version;
+
+fn main() {
+    let wb = Workbench::native();
+    println!("Parallelism sweep — baseline configuration (106 benchmarks x 15 calls)\n");
+    println!("| parallelism | invoke duration | total duration | cost | cold starts | instances |");
+    println!("|---:|---:|---:|---:|---:|---:|");
+
+
+    let mut results = Vec::new();
+    for parallelism in [10usize, 50, 150, 300, 600] {
+        let exp = ExperimentConfig {
+            label: format!("par-{parallelism}"),
+            parallelism,
+            seed: 0xAB1A,
+            ..ExperimentConfig::default()
+        };
+        let report = run_experiment(&wb.suite, &wb.sut, &wb.platform, &exp, (Version::V1, Version::V2));
+        println!(
+            "| {} | {:.1} min | {:.1} min | ${:.2} | {} | {} |",
+            parallelism,
+            report.invoke_wall_s / 60.0,
+            report.wall_s / 60.0,
+            report.cost_usd,
+            report.platform.cold_starts,
+            report.platform.instances_created,
+        );
+        results.push((parallelism, report));
+    }
+
+    // Shape assertions: duration monotone down, cold starts monotone up.
+    for w in results.windows(2) {
+        let (p0, r0) = &w[0];
+        let (p1, r1) = &w[1];
+        assert!(
+            r1.invoke_wall_s <= r0.invoke_wall_s * 1.05,
+            "parallelism {p1} should not be slower than {p0}"
+        );
+        assert!(
+            r1.platform.cold_starts >= r0.platform.cold_starts,
+            "parallelism {p1} should not cold-start less than {p0}"
+        );
+
+    }
+    println!(
+        "\nhigher parallelism shortens the run and adds cold starts — the §4 trade-off."
+    );
+}

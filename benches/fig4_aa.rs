@@ -1,0 +1,40 @@
+//! Regenerates paper Fig. 4: CDF of performance differences in the A/A
+//! experiment (§6.2.1). Shape targets: 0 detected changes, ~90 of 106
+//! benchmarks executed, small median |diff| with a heavy max tail.
+//!
+//! Run: `cargo bench --bench fig4_aa`
+
+use elastibench::exp::{aa, Workbench};
+use elastibench::report::render_cdf;
+use elastibench::util::benchkit::time;
+use elastibench::util::stats::percentile_sorted;
+
+fn main() {
+    let wb = Workbench::native();
+    let stats = time("fig4: A/A experiment (simulate + analyze)", 0, 3, || {
+        aa(&wb).expect("aa experiment")
+    });
+    println!("{}", stats.report(None));
+
+    let result = aa(&wb).expect("aa experiment");
+    let mut diffs = result.analysis.abs_diffs_pct();
+    diffs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    println!("\nFig. 4 — CDF of |performance difference| in the A/A experiment");
+    print!("{}", render_cdf(&diffs, 64, 16, "|diff| [%]"));
+    println!(
+        "\nexecuted {}/{} | changes detected {} (paper: 0) | median {:.3}% (paper 0.047%) \
+         | max {:.1}% (paper 32%)",
+        result.analysis.verdicts.len(),
+        wb.suite.len(),
+        result.analysis.change_count(),
+        percentile_sorted(&diffs, 50.0),
+        diffs.last().copied().unwrap_or(0.0),
+    );
+    println!(
+        "duration {:.1} min (paper ~8 min) | cost ${:.2} (paper $1.18)",
+        result.report.wall_s / 60.0,
+        result.report.cost_usd
+    );
+    assert_eq!(result.analysis.change_count(), 0, "A/A must detect nothing");
+}

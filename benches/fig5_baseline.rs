@@ -1,0 +1,77 @@
+//! Regenerates paper Fig. 5: CDF of performance differences in the
+//! baseline experiment (§6.2.2), plus the agreement/coverage numbers
+//! against the VM original dataset. `-- --replication` runs the §6.2.3
+//! replication instead.
+//!
+//! Run: `cargo bench --bench fig5_baseline`
+
+use elastibench::exp::{baseline, replication, vm_original, Workbench};
+use elastibench::report::render_cdf;
+use elastibench::stats::{agreement, coverage};
+use elastibench::util::benchkit::time;
+use elastibench::util::stats::percentile_sorted;
+
+fn main() {
+    let replication_mode = std::env::args().any(|a| a == "--replication");
+    let wb = Workbench::native();
+
+    let stats = time("fig5: baseline experiment (simulate + analyze)", 0, 3, || {
+        baseline(&wb).expect("baseline")
+    });
+    println!("{}", stats.report(None));
+
+    let result = if replication_mode {
+        replication(&wb).expect("replication")
+    } else {
+        baseline(&wb).expect("baseline")
+    };
+    let original = vm_original(&wb).expect("vm baseline");
+
+    let mut diffs = result.analysis.abs_diffs_pct();
+    diffs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "\nFig. 5 — CDF of |performance difference| in the {} experiment",
+        result.analysis.label
+    );
+    print!("{}", render_cdf(&diffs, 64, 16, "|diff| [%]"));
+
+    let mut change_mags: Vec<f64> = result
+        .analysis
+        .verdicts
+        .iter()
+        .filter(|v| v.change.is_change())
+        .map(|v| v.output.boot_median_pct.abs() as f64)
+        .collect();
+    change_mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "\nchanges {} | median change {:.2}% (paper 3.08–4.71%) | max change {:.0}% (paper 116%)",
+        change_mags.len(),
+        if change_mags.is_empty() {
+            0.0
+        } else {
+            percentile_sorted(&change_mags, 50.0)
+        },
+        change_mags.last().copied().unwrap_or(0.0),
+    );
+
+    let rep = agreement(&result.analysis, &original.analysis);
+    let cov = coverage(&result.analysis, &original.analysis);
+    println!(
+        "agreement with original: {:.2}% over {} common (paper 95.65% over 91)",
+        rep.agreement_pct(),
+        rep.common
+    );
+    for d in &rep.disagreements {
+        println!("  {:?} {} ({:.2}%)", d.kind, d.name, d.max_abs_diff_pct);
+    }
+    println!(
+        "coverage one-sided {:.2}% / {:.2}% (paper 86.96% / 52.17%), two-sided {:.2}% (paper 50%)",
+        cov.one_sided_a_in_b_pct, cov.one_sided_b_in_a_pct, cov.two_sided_pct
+    );
+    println!(
+        "duration {:.1} min (paper ~11 min) | cost ${:.2} (paper $0.18–1.18)",
+        result.report.wall_s / 60.0,
+        result.report.cost_usd
+    );
+    assert!(rep.agreement_pct() > 85.0, "agreement shape must hold");
+}

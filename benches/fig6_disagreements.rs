@@ -1,0 +1,52 @@
+//! Regenerates paper Fig. 6: the maximum performance difference of
+//! microbenchmarks on which two experiments disagree about whether a
+//! performance change happened (§6.2.6).
+//!
+//! Run: `cargo bench --bench fig6_disagreements`
+
+use elastibench::exp::{baseline, lower_memory, replication, single_repeat, Workbench};
+use elastibench::report::render_cdf;
+use elastibench::stats::possible_changes;
+use elastibench::util::stats::percentile_sorted;
+
+fn main() {
+    let wb = Workbench::native();
+    let base = baseline(&wb).expect("baseline");
+    let repl = replication(&wb).expect("replication");
+    let low = lower_memory(&wb).expect("lower-memory");
+    let single = single_repeat(&wb).expect("single-repeat");
+
+    let pcs = possible_changes(&[
+        &base.analysis,
+        &repl.analysis,
+        &low.analysis,
+        &single.analysis,
+    ]);
+    let mut mags: Vec<f64> = pcs.iter().map(|(_, m)| *m).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    println!("Fig. 6 — possible performance changes across experiment pairs");
+    if mags.is_empty() {
+        println!("(no disagreements — increase noise or decrease effects)");
+        return;
+    }
+    print!(
+        "{}",
+        render_cdf(&mags, 64, 12, "max |diff| when disagreeing [%]")
+    );
+    println!("\nper-benchmark possible changes:");
+    for (name, m) in &pcs {
+        println!("  {name:<44} {m:>6.2}%");
+    }
+    println!(
+        "\nn {} | median {:.2}% (paper 1.58%) | p75 {:.2}% (paper 3.06%) | max {:.2}% (paper 7.6%)",
+        mags.len(),
+        percentile_sorted(&mags, 50.0),
+        percentile_sorted(&mags, 75.0),
+        mags.last().unwrap(),
+    );
+    assert!(
+        *mags.last().unwrap() < 20.0,
+        "disagreements involve small effects only"
+    );
+}

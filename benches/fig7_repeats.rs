@@ -1,0 +1,66 @@
+//! Regenerates paper Fig. 7: repetitions necessary until ElastiBench's CI
+//! is no wider than the original dataset's (§6.2.7).
+//!
+//! This is the analysis-heavy target (42 prefix analyses x ~100
+//! benchmarks x 2048 bootstrap resamples); pass `-- --backend xla` to run
+//! it through the AOT artifact instead of the native engine.
+//!
+//! Run: `cargo bench --bench fig7_repeats [-- --backend xla]`
+
+use elastibench::exp::sweep::repeats_sweep;
+use elastibench::exp::{vm_original, Workbench};
+use elastibench::report::render_curve;
+use elastibench::stats::Analyzer;
+use elastibench::util::benchkit::time;
+
+fn main() {
+    let use_xla = {
+        let args: Vec<String> = std::env::args().collect();
+        args.windows(2)
+            .any(|w| w[0] == "--backend" && w[1] == "xla")
+    };
+    let mut wb = Workbench::native();
+    if use_xla {
+        wb.analyzer = Analyzer::xla(&elastibench::artifacts_dir())
+            .expect("XLA backend needs `make artifacts`");
+        println!("backend: XLA artifact");
+    } else {
+        println!("backend: native");
+    }
+
+    let original = vm_original(&wb).expect("vm baseline");
+    let stats = time(
+        "fig7: repeats sweep (135 results, 42 prefix analyses)",
+        0,
+        1,
+        || repeats_sweep(&wb, &original.analysis).expect("sweep"),
+    );
+    println!("{}", stats.report(None));
+
+    let sweep = repeats_sweep(&wb, &original.analysis).expect("sweep");
+    println!("\nFig. 7 — % of benchmarks with CI size <= original, by repetitions");
+    print!(
+        "{}",
+        render_curve(&sweep.curve, 64, 16, "results per benchmark")
+    );
+    println!(
+        "\nparity at 45 results: {:.2}% (paper 75.95%) | at full {} results: {:.2}% (paper 89.87%)",
+        sweep.pct_at_45,
+        sweep.curve.last().map(|&(k, _)| k).unwrap_or(0),
+        sweep.pct_at_full,
+    );
+    let overlapping = sweep
+        .per_benchmark
+        .iter()
+        .filter(|b| b.overlaps_original)
+        .count();
+    println!(
+        "benchmarks with overlapping final CIs: {}/{}",
+        overlapping,
+        sweep.per_benchmark.len()
+    );
+    assert!(
+        sweep.pct_at_full >= sweep.pct_at_45,
+        "curve must not decrease"
+    );
+}

@@ -1,0 +1,92 @@
+//! §Perf: bootstrap-analysis throughput — the native Rust engine vs the
+//! AOT-compiled XLA artifact, at the paper's production geometry
+//! (B = 2048 resamples, N = 64 lanes, 45 valid samples per benchmark).
+//!
+//! Reported unit: analyzed benchmark-CIs per second. See EXPERIMENTS.md
+//! §Perf for the recorded numbers and the optimization log.
+//!
+//! Run: `cargo bench --bench perf_analysis`
+
+use elastibench::runtime::{AnalysisEngine, Manifest};
+use elastibench::stats::{bootstrap_native, bootstrap_row_reference};
+use elastibench::util::benchkit::time;
+use elastibench::util::Rng;
+
+const B: usize = 2048;
+const N: usize = 64;
+
+fn inputs(m: usize) -> (Vec<f32>, Vec<f32>, Vec<i32>, Vec<i32>) {
+    let mut rng = Rng::new(42);
+    let mut v1 = vec![1.0f32; m * N];
+    let mut v2 = vec![1.0f32; m * N];
+    let n_valid = vec![45i32; m];
+    for row in 0..m {
+        for j in 0..45 {
+            v1[row * N + j] = rng.lognormal(0.0, 0.05) as f32;
+            v2[row * N + j] = rng.lognormal(0.03, 0.05) as f32;
+        }
+    }
+    let mut idx = vec![0i32; B * N];
+    rng.fill_index_bits(&mut idx);
+    (v1, v2, n_valid, idx)
+}
+
+fn main() {
+    println!("bootstrap analysis throughput (B={B}, N={N}, n_valid=45)\n");
+
+    // Pre-§Perf baseline: the original gather + two-quickselect kernel,
+    // single-threaded (kept in-tree for this comparison).
+    {
+        let m = 32;
+        let (v1, v2, _n_valid, idx) = inputs(m);
+        let stats = time("native REFERENCE (pre-perf), m=32", 1, 5, || {
+            (0..m)
+                .map(|row| {
+                    bootstrap_row_reference(
+                        &v1[row * N..row * N + 45],
+                        &v2[row * N..row * N + 45],
+                        &idx,
+                        B,
+                        N,
+                        0.01,
+                    )
+                })
+                .collect::<Vec<_>>()
+        });
+        println!("{}", stats.report(Some(m as f64)));
+    }
+
+    for m in [8usize, 32, 128] {
+        let (v1, v2, n_valid, idx) = inputs(m);
+        let stats = time(&format!("native OPTIMIZED,  batch m={m}"), 1, 7, || {
+            bootstrap_native(&v1, &v2, &n_valid, &idx, m, B, N, 0.01)
+        });
+        println!("{}", stats.report(Some(m as f64)));
+    }
+
+    match Manifest::load(&elastibench::artifacts_dir()) {
+        Ok(manifest) => {
+            for m in [8usize, 32, 128] {
+                let info = manifest
+                    .artifacts
+                    .iter()
+                    .find(|a| a.m == m && a.n == N && a.b == B)
+                    .expect("artifact variant");
+                let engine = AnalysisEngine::load(&manifest.path_of(info), info.m, info.b, info.n)
+                    .expect("compile artifact");
+                let (v1, v2, n_valid, idx) = inputs(m);
+                let stats = time(&format!("xla artifact,     batch m={m}"), 1, 7, || {
+                    engine.analyze(&v1, &v2, &n_valid, &idx).expect("analyze")
+                });
+                println!("{}", stats.report(Some(m as f64)));
+            }
+        }
+        Err(e) => println!("(skipping XLA engine: {e:#} — run `make artifacts`)"),
+    }
+
+    println!(
+        "\nnote: interpret-mode Pallas lowers to plain HLO, so the XLA path here measures\n\
+         the XLA:CPU-compiled kernel; real-TPU numbers are estimated from the VMEM/roofline\n\
+         analysis in EXPERIMENTS.md §Perf."
+    );
+}

@@ -1,0 +1,50 @@
+//! §Perf: simulator-side throughput — DES engine event rate and
+//! end-to-end experiment simulation wallclock (the L3 hot paths).
+//!
+//! Run: `cargo bench --bench perf_simulator`
+
+use elastibench::config::{ExperimentConfig, PlatformConfig, SutConfig};
+use elastibench::coordinator::run_experiment;
+use elastibench::des::Sim;
+use elastibench::exp::{baseline, Workbench};
+use elastibench::sut::{generate, Version};
+use elastibench::util::benchkit::time;
+
+fn main() {
+    // Raw DES engine: schedule/pop churn with a live heap.
+    let events = 200_000usize;
+    let stats = time(&format!("des: {events} chained events"), 1, 7, || {
+        let mut sim: Sim<u64> = Sim::new();
+        for i in 0..64 {
+            sim.schedule(1.0 + i as f64, i);
+        }
+        let mut fired = 0u64;
+        sim.run(|sim, _, e| {
+            fired += 1;
+            if (fired as usize) < events {
+                sim.schedule(1.0 + (e % 7) as f64, e + 1);
+            }
+        });
+        fired
+    });
+    println!("{}", stats.report(Some(events as f64)));
+
+    // Full experiment simulation (106 benchmarks x 15 calls, parallelism
+    // 150) WITHOUT analysis — the coordinator + platform + benchexec path.
+    let sut = SutConfig::default();
+    let suite = generate(&sut);
+    let platform = PlatformConfig::default();
+    let exp = ExperimentConfig::default();
+    let stats = time("coordinator: full baseline experiment (no analysis)", 1, 5, || {
+        run_experiment(&suite, &sut, &platform, &exp, (Version::V1, Version::V2))
+    });
+    let calls = suite.len() * exp.calls_per_benchmark;
+    println!("{}", stats.report(Some(calls as f64)));
+
+    // Experiment + native analysis (the `elastibench run` path).
+    let wb = Workbench::native();
+    let stats = time("end-to-end: baseline experiment + native analysis", 1, 5, || {
+        baseline(&wb).expect("baseline")
+    });
+    println!("{}", stats.report(None));
+}

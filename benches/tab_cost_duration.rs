@@ -1,0 +1,68 @@
+//! Regenerates the paper's headline cost/duration comparison (§1, §6.3,
+//! and the per-experiment numbers of §6.2.1–§6.2.5): every FaaS
+//! experiment vs the VM baseline.
+//!
+//! Run: `cargo bench --bench tab_cost_duration`
+
+use elastibench::exp::{
+    aa, baseline, lower_memory, replication, single_repeat, vm_original, Workbench,
+};
+use elastibench::report::{experiment_summary_table, SummaryRow};
+
+fn main() {
+    let wb = Workbench::native();
+
+    let vm = vm_original(&wb).expect("vm baseline");
+    let experiments = [
+        aa(&wb).expect("aa"),
+        baseline(&wb).expect("baseline"),
+        replication(&wb).expect("replication"),
+        lower_memory(&wb).expect("lower-memory"),
+        single_repeat(&wb).expect("single-repeat"),
+    ];
+
+    let mut rows = vec![SummaryRow {
+        label: "vm-original [23]".into(),
+        analyzed: vm.analysis.verdicts.len(),
+        changes: vm.analysis.change_count(),
+        wall_s: vm.report.wall_s,
+        cost_usd: vm.report.cost_usd,
+        cold_starts: 0,
+    }];
+    for r in &experiments {
+        rows.push(SummaryRow {
+            label: r.analysis.label.clone(),
+            analyzed: r.analysis.verdicts.len(),
+            changes: r.analysis.change_count(),
+            wall_s: r.report.wall_s,
+            cost_usd: r.report.cost_usd,
+            cold_starts: r.report.platform.cold_starts,
+        });
+    }
+
+    println!("Headline table — cost & duration, FaaS experiments vs VM baseline\n");
+    print!("{}", experiment_summary_table(&rows));
+
+    let base = &experiments[1];
+    let speedup = vm.report.wall_s / base.report.wall_s;
+    let time_frac = base.report.wall_s / vm.report.wall_s * 100.0;
+    println!(
+        "\nbaseline runs in {time_frac:.1}% of the VM time ({speedup:.1}x speedup; \
+         paper: ~4.6–6% / ≤15 min vs ~4 h)"
+    );
+    println!(
+        "baseline cost ${:.2} vs VM ${:.2} (paper: $0.18–1.18 vs $1.14–1.18)",
+        base.report.cost_usd, vm.report.cost_usd
+    );
+    println!(
+        "\nper-experiment paper anchors: A/A ~8 min/$1.18 | baseline ~11 min/$0.18(†) | \
+         replication ~9 min/$1.18 | lower-memory ~12 min/$0.69 | single-repeat ~17 min/$0.49"
+    );
+    println!("(† the paper's baseline cost is inconsistent with its A/A twin; see DESIGN.md §4)");
+
+    assert!(speedup > 10.0, "FaaS must be an order of magnitude faster");
+    assert!(
+        base.report.cost_usd < 1.5 * vm.report.cost_usd,
+        "FaaS cost must be comparable or lower"
+    );
+}

@@ -1,0 +1,82 @@
+//! CI/CD gate: the paper's §1 motivating use case — run the
+//! microbenchmark suite on every change and fail the pipeline when a
+//! performance regression is detected.
+//!
+//! ```bash
+//! cargo run --release --example cicd_gate            # v2 has regressions
+//! cargo run --release --example cicd_gate -- --clean # A/A: must pass
+//! ```
+//!
+//! Exit code 0 = gate passed, 1 = regression(s) detected — wire it into a
+//! pipeline exactly like a test step. Only regressions above a noise
+//! margin (3%, cf. §2 [20, 43]) fail the gate; improvements are reported
+//! but do not block.
+
+use elastibench::config::SutConfig;
+use elastibench::exp::{aa, baseline, Workbench};
+use elastibench::stats::ChangeKind;
+
+/// Regressions below this are within cloud-noise territory (§2).
+const GATE_MARGIN_PCT: f32 = 3.0;
+
+fn main() {
+    let clean = std::env::args().any(|a| a == "--clean");
+    let wb = Workbench::with_sut(SutConfig {
+        benchmark_count: 24,
+        true_changes: 7,
+        faas_incompatible: 2,
+        slow_setup: 1,
+        ..SutConfig::default()
+    });
+
+    let result = if clean {
+        println!("gate: comparing identical versions (A/A)");
+        aa(&wb).expect("aa run")
+    } else {
+        println!("gate: comparing v1 (main) vs v2 (candidate)");
+        baseline(&wb).expect("baseline run")
+    };
+
+    println!(
+        "suite finished in {:.1} min at ${:.2} — fast enough to gate every merge (paper §1)\n",
+        result.report.wall_s / 60.0,
+        result.report.cost_usd
+    );
+
+    let mut regressions = Vec::new();
+    let mut improvements = Vec::new();
+    for v in &result.analysis.verdicts {
+        match v.change {
+            ChangeKind::Regression if v.output.ci_lo_pct >= GATE_MARGIN_PCT => {
+                regressions.push(v)
+            }
+            ChangeKind::Regression => { /* below margin: noise territory */ }
+            ChangeKind::Improvement => improvements.push(v),
+            ChangeKind::NoChange => {}
+        }
+    }
+
+    for v in &improvements {
+        println!(
+            "  IMPROVED  {:<40} {:+.2}% [{:+.2}%, {:+.2}%]",
+            v.name, v.output.boot_median_pct, v.output.ci_lo_pct, v.output.ci_hi_pct
+        );
+    }
+    for v in &regressions {
+        println!(
+            "  REGRESSED {:<40} {:+.2}% [{:+.2}%, {:+.2}%]",
+            v.name, v.output.boot_median_pct, v.output.ci_lo_pct, v.output.ci_hi_pct
+        );
+    }
+
+    if regressions.is_empty() {
+        println!("\ngate PASSED ({} benchmarks checked)", result.analysis.verdicts.len());
+        std::process::exit(0);
+    } else {
+        println!(
+            "\ngate FAILED: {} regression(s) above the {GATE_MARGIN_PCT}% margin",
+            regressions.len()
+        );
+        std::process::exit(1);
+    }
+}

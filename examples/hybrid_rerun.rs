@@ -1,0 +1,59 @@
+//! §7.4 hybrid execution: re-run restricted-environment failures on a
+//! fallback VM so the WHOLE suite gets verdicts, "without significantly
+//! increasing cost and duration".
+//!
+//! ```bash
+//! cargo run --release --example hybrid_rerun
+//! ```
+
+use elastibench::config::{ExperimentConfig, VmConfig};
+use elastibench::coordinator::{run_experiment, run_hybrid};
+use elastibench::exp::Workbench;
+use elastibench::stats::Analyzer;
+use elastibench::sut::Version;
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::native();
+    let exp = ExperimentConfig::default();
+    let vm = VmConfig::default();
+
+    let faas_only = run_experiment(&wb.suite, &wb.sut, &wb.platform, &exp, (Version::V1, Version::V2));
+    let hybrid = run_hybrid(&wb.suite, &wb.sut, &wb.platform, &exp, &vm);
+
+    let analyzer = Analyzer::native();
+    let faas_analysis = analyzer.analyze("faas-only", &faas_only.measurements, exp.seed)?;
+    let hybrid_analysis = analyzer.analyze("hybrid", &hybrid.measurements, exp.seed)?;
+
+    println!("| strategy | verdicts | coverage | duration | cost |");
+    println!("|---|---:|---:|---:|---:|");
+    println!(
+        "| FaaS only | {} | {:.0}% | {:.1} min | ${:.2} |",
+        faas_analysis.verdicts.len(),
+        faas_analysis.verdicts.len() as f64 / wb.suite.len() as f64 * 100.0,
+        faas_only.wall_s / 60.0,
+        faas_only.cost_usd
+    );
+    println!(
+        "| hybrid (§7.4) | {} | {:.0}% | {:.1} min | ${:.2} |",
+        hybrid_analysis.verdicts.len(),
+        hybrid_analysis.verdicts.len() as f64 / wb.suite.len() as f64 * 100.0,
+        hybrid.total_wall_s() / 60.0,
+        hybrid.total_cost_usd()
+    );
+    println!("\nfallback benchmarks ({}):", hybrid.fallback_benchmarks.len());
+    for name in &hybrid.fallback_benchmarks {
+        let verdict = hybrid_analysis
+            .get(name)
+            .map(|v| format!("{:?} [{:+.2}%, {:+.2}%]", v.change, v.output.ci_lo_pct, v.output.ci_hi_pct))
+            .unwrap_or_else(|| "still unmeasured".into());
+        println!("  {name:<44} {verdict}");
+    }
+    println!(
+        "\nhybrid adds {:.0} s wall and ${:.2} over FaaS-only for {} extra verdicts \
+         — the paper's §7.4 trade-off.",
+        hybrid.total_wall_s() - faas_only.wall_s,
+        hybrid.total_cost_usd() - faas_only.cost_usd,
+        hybrid_analysis.verdicts.len() - faas_analysis.verdicts.len()
+    );
+    Ok(())
+}

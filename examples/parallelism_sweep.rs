@@ -1,0 +1,64 @@
+//! Explore the §4 parallelism trade-off interactively: duration and cost
+//! of a full suite run as a function of the runner's call parallelism.
+//!
+//! ```bash
+//! cargo run --release --example parallelism_sweep -- 10 50 150 600
+//! ```
+
+use elastibench::config::ExperimentConfig;
+use elastibench::coordinator::run_experiment;
+use elastibench::exp::Workbench;
+use elastibench::sut::Version;
+
+fn main() {
+    let mut levels: Vec<usize> = std::env::args()
+        .skip(1)
+        .filter_map(|a| a.parse().ok())
+        .collect();
+    if levels.is_empty() {
+        levels = vec![1, 10, 50, 150, 300, 600];
+    }
+
+    let wb = Workbench::native();
+    println!(
+        "suite: {} benchmarks, {} calls each\n",
+        wb.suite.len(),
+        ExperimentConfig::default().calls_per_benchmark
+    );
+    println!(
+        "{:>12} {:>15} {:>12} {:>12} {:>12}",
+        "parallelism", "invoke wall", "cost", "cold starts", "$/minute saved"
+    );
+
+    let mut baseline_wall = None;
+    let mut baseline_cost = None;
+    for parallelism in levels {
+        let exp = ExperimentConfig {
+            label: format!("sweep-{parallelism}"),
+            parallelism,
+            seed: 0x5EED,
+            ..ExperimentConfig::default()
+        };
+        let report =
+            run_experiment(&wb.suite, &wb.sut, &wb.platform, &exp, (Version::V1, Version::V2));
+        let (wall_min, cost) = (report.invoke_wall_s / 60.0, report.cost_usd);
+        let marginal = match (baseline_wall, baseline_cost) {
+            (Some(w0), Some(c0)) if w0 > wall_min && cost > c0 => {
+                format!("{:.4}", (cost - c0) / (w0 - wall_min))
+            }
+            _ => "—".to_string(),
+        };
+        if baseline_wall.is_none() {
+            baseline_wall = Some(wall_min);
+            baseline_cost = Some(cost);
+        }
+        println!(
+            "{parallelism:>12} {wall_min:>13.1}m {cost:>11.2}$ {:>12} {marginal:>12}",
+            report.platform.cold_starts
+        );
+    }
+    println!(
+        "\nhigher parallelism buys wall-clock time with cold starts (paper §4); the\n\
+         marginal column prices each saved minute relative to the first level."
+    );
+}

@@ -1,0 +1,77 @@
+//! Quickstart: detect performance changes between two versions of a
+//! (synthetic) SUT with ElastiBench in under a minute.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Generates a small 20-benchmark suite, runs the paper's baseline
+//! configuration against the simulated FaaS platform, analyzes the duet
+//! measurements with 99% bootstrap CIs, and prints the verdicts next to
+//! the generator's ground truth.
+
+use elastibench::config::SutConfig;
+use elastibench::exp::{baseline, Workbench};
+use elastibench::stats::ChangeKind;
+
+fn main() -> anyhow::Result<()> {
+    // A small suite keeps the quickstart fast; the full paper suite is
+    // SutConfig::default() (106 benchmarks).
+    let wb = Workbench::with_sut(SutConfig {
+        benchmark_count: 20,
+        true_changes: 6,
+        faas_incompatible: 2,
+        slow_setup: 1,
+        ..SutConfig::default()
+    });
+
+    let result = baseline(&wb)?;
+    println!(
+        "ran {} calls on the simulated platform in {:.1} min (cost ${:.2}, {} cold starts)\n",
+        result.report.calls_total,
+        result.report.wall_s / 60.0,
+        result.report.cost_usd,
+        result.report.platform.cold_starts
+    );
+
+    println!(
+        "{:<44} {:>22} {:>10} {:>10}",
+        "benchmark", "99% CI of median diff", "verdict", "truth"
+    );
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for v in &result.analysis.verdicts {
+        let b = wb.suite.get(&v.name).expect("benchmark exists");
+        let truth_pct = b.true_change_pct(true);
+        let truth = if b.has_true_change() || b.benchmark_changed() {
+            format!("{truth_pct:+.1}%")
+        } else {
+            "none".to_string()
+        };
+        let verdict = match v.change {
+            ChangeKind::NoChange => "-".to_string(),
+            ChangeKind::Regression => "SLOWER".to_string(),
+            ChangeKind::Improvement => "faster".to_string(),
+        };
+        let detected_correctly = match v.change {
+            ChangeKind::NoChange => truth_pct.abs() < 3.0,
+            ChangeKind::Regression => truth_pct > 0.0,
+            ChangeKind::Improvement => truth_pct < 0.0,
+        };
+        total += 1;
+        correct += detected_correctly as usize;
+        println!(
+            "{:<44} [{:>+7.2}%, {:>+7.2}%] {:>10} {:>10}",
+            v.name, v.output.ci_lo_pct, v.output.ci_hi_pct, verdict, truth
+        );
+    }
+    for name in &result.analysis.excluded {
+        println!("{name:<44} {:>22} {:>10}", "(too few results)", "n/a");
+    }
+    println!(
+        "\n{}/{} verdicts consistent with ground truth \
+         (missed truths are sub-threshold changes — cf. paper §2)",
+        correct, total
+    );
+    Ok(())
+}

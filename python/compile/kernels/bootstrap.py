@@ -1,0 +1,161 @@
+"""L1 Pallas kernel: batched bootstrap confidence intervals of the median
+relative performance difference between two SUT versions.
+
+This is ElastiBench's numeric hot spot (paper §2, §6.1 "Statistical
+Analysis"): for every microbenchmark, resample the ``n_valid`` measured
+results of both versions ``B`` times with replacement, take the median of
+each resample, form the relative difference of the medians (in percent),
+and report the (alpha/2, 50%, 1-alpha/2) order statistics of the ``B``
+bootstrap differences together with the raw point estimates.
+
+Kernel layout (TPU-shaped, run with ``interpret=True`` on CPU):
+
+* grid = (M,) — one program per microbenchmark;
+* each program stages the two ``N``-lane sample rows plus a shared
+  ``B x N`` resample-index tile in VMEM, gathers both versions'
+  resample matrices (``B x N`` f32, 512 KiB each at B=2048/N=64),
+  sorts rows with a data-oblivious bitonic network, and reduces
+  medians via one-hot dot products (no data-dependent indexing);
+* the ``B`` bootstrap statistics are bitonic-sorted once more to read
+  off the CI bounds as static order statistics.
+
+Everything is compare/permute bound — no MXU use; see DESIGN.md
+§Hardware-Adaptation and EXPERIMENTS.md §Perf for the VMEM budget table.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .sortnet import bitonic_sort
+
+# Output column layout of the kernel (one row per microbenchmark).
+OUT_CI_LO = 0      # lower bootstrap CI bound of the relative diff [%]
+OUT_MED = 1        # median of the bootstrap relative diffs [%]
+OUT_CI_HI = 2      # upper bootstrap CI bound [%]
+OUT_MED_V1 = 3     # raw median of version 1 samples
+OUT_MED_V2 = 4     # raw median of version 2 samples
+OUT_POINT = 5      # raw relative diff of the medians [%]
+OUT_COLS = 6
+
+# Large finite padding sentinel: sorts past every real measurement but
+# multiplies by 0 cleanly in the one-hot median reduction (+inf would
+# produce NaN via inf * 0).
+PAD_SENTINEL = 3.0e38
+
+
+def ci_order_statistics(b: int, alpha: float) -> tuple[int, int]:
+    """Static order-statistic indices used for the CI bounds.
+
+    ``lo = floor(alpha/2 * (B-1))`` and ``hi = ceil((1-alpha/2) * (B-1))``,
+    mirroring the percentile-bootstrap convention without interpolation so
+    the Rust native engine and the reference oracle can match exactly.
+    """
+    lo = math.floor(alpha / 2.0 * (b - 1))
+    hi = math.ceil((1.0 - alpha / 2.0) * (b - 1))
+    return lo, hi
+
+
+def _masked_median(sorted_rows: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """Median of the first ``n`` entries of ascending-sorted rows.
+
+    ``sorted_rows`` is ``[..., N]`` with ``+inf`` padding beyond ``n``;
+    the median is read out with one-hot dot products so there is no
+    data-dependent gather (TPU-friendly).
+    """
+    length = sorted_rows.shape[-1]
+    lane = jax.lax.iota(jnp.int32, length)
+    lo_i = (n - 1) // 2
+    hi_i = n // 2
+    oh_lo = (lane == lo_i).astype(sorted_rows.dtype)
+    oh_hi = (lane == hi_i).astype(sorted_rows.dtype)
+    return 0.5 * (sorted_rows @ oh_lo + sorted_rows @ oh_hi)
+
+
+def _bootstrap_kernel(v1_ref, v2_ref, n_ref, idx_ref, out_ref, *,
+                      b: int, n_lanes: int, lo_q: int, hi_q: int):
+    """Pallas kernel body for one microbenchmark (one grid step)."""
+    v1 = v1_ref[0, :]                      # [N] f32, +inf padded
+    v2 = v2_ref[0, :]
+    n = jnp.maximum(n_ref[0], 1)           # scalar int32, >= 1
+    idx = idx_ref[...]                     # [B, N] int32, >= 0
+
+    col = jax.lax.broadcasted_iota(jnp.int32, (b, n_lanes), 1)
+    valid = col < n
+    r = jnp.where(valid, idx % n, 0)       # resample indices < n
+
+    # Gather resample matrices; invalid lanes become large-finite padding
+    # so the bitonic sort pushes them past the median positions. A finite
+    # sentinel (not +inf) keeps the one-hot median dot products NaN-free
+    # (inf * 0 = NaN).
+    inf = jnp.float32(PAD_SENTINEL)
+    g1 = jnp.where(valid, v1[r], inf)      # [B, N]
+    g2 = jnp.where(valid, v2[r], inf)
+
+    med1 = _masked_median(bitonic_sort(g1, axis=1), n)   # [B]
+    med2 = _masked_median(bitonic_sort(g2, axis=1), n)
+
+    rel = jnp.where(med1 != 0.0, (med2 - med1) / med1 * 100.0, 0.0)
+    rel_sorted = bitonic_sort(rel, axis=0)               # [B]
+
+    # Raw medians of the original (un-resampled) rows.
+    lane = jax.lax.iota(jnp.int32, n_lanes)
+    v1p = jnp.where(lane < n, v1, inf)
+    v2p = jnp.where(lane < n, v2, inf)
+    med_v1 = _masked_median(bitonic_sort(v1p, axis=0)[None, :], n)[0]
+    med_v2 = _masked_median(bitonic_sort(v2p, axis=0)[None, :], n)[0]
+    point = jnp.where(med_v1 != 0.0,
+                      (med_v2 - med_v1) / med_v1 * 100.0, 0.0)
+
+    med_boot = 0.5 * (rel_sorted[(b - 1) // 2] + rel_sorted[b // 2])
+    out_ref[0, :] = jnp.stack([
+        rel_sorted[lo_q], med_boot, rel_sorted[hi_q],
+        med_v1, med_v2, point,
+    ])
+
+
+def make_bootstrap_call(m: int, b: int, n: int, alpha: float = 0.01,
+                        interpret: bool = True):
+    """Build the batched bootstrap analysis as a ``pallas_call``.
+
+    Args:
+      m: number of microbenchmarks analyzed per call (grid size).
+      b: bootstrap resamples per microbenchmark (power of two).
+      n: sample lanes per version (power of two, >= max n_valid).
+      alpha: two-sided CI level (0.01 -> 99% CI as in the paper).
+      interpret: must stay True on CPU PJRT (Mosaic custom-calls cannot
+        run there); kept as a flag for a real-TPU compile-only path.
+
+    Returns a function ``(v1[M,N] f32, v2[M,N] f32, n_valid[M] i32,
+    idx[B,N] i32) -> out[M,6] f32`` (columns per ``OUT_*``).
+    """
+    if b & (b - 1) or n & (n - 1):
+        raise ValueError(f"B and N must be powers of two, got B={b} N={n}")
+    lo_q, hi_q = ci_order_statistics(b, alpha)
+    kernel = partial(_bootstrap_kernel, b=b, n_lanes=n, lo_q=lo_q, hi_q=hi_q)
+    return pl.pallas_call(
+        kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),     # v1 row
+            pl.BlockSpec((1, n), lambda i: (i, 0)),     # v2 row
+            pl.BlockSpec((1,), lambda i: (i,)),          # n_valid
+            pl.BlockSpec((b, n), lambda i: (0, 0)),      # shared idx tile
+        ],
+        out_specs=pl.BlockSpec((1, OUT_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, OUT_COLS), jnp.float32),
+        interpret=interpret,
+    )
+
+
+def vmem_bytes(b: int, n: int) -> int:
+    """Estimated peak VMEM per grid step (see EXPERIMENTS.md §Perf)."""
+    resample = 2 * b * n * 4          # g1/g2 gather+sort buffers
+    idx = b * n * 4                   # shared index tile
+    rows = 2 * n * 4 + b * 4          # sample rows + rel vector
+    return resample + idx + rows

@@ -1,0 +1,65 @@
+"""Pure-numpy oracle for the bootstrap kernel.
+
+Implements the exact same algorithm as ``bootstrap.py`` (same median and
+order-statistic conventions, same index-mod resampling) with plain numpy
+loops, so pytest can assert bit-level-comparable agreement and the Rust
+native engine has a documented specification to match.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .bootstrap import ci_order_statistics, OUT_COLS
+
+
+def median_order_stat(sorted_vals: np.ndarray) -> float:
+    """Median as the average of the two central order statistics."""
+    n = sorted_vals.shape[-1]
+    return 0.5 * (sorted_vals[..., (n - 1) // 2] + sorted_vals[..., n // 2])
+
+
+def bootstrap_ref(v1: np.ndarray, v2: np.ndarray, n_valid: np.ndarray,
+                  idx: np.ndarray, alpha: float = 0.01) -> np.ndarray:
+    """Reference bootstrap analysis.
+
+    Args:
+      v1, v2: ``[M, N]`` float32 sample matrices (padding beyond
+        ``n_valid[m]`` is ignored).
+      n_valid: ``[M]`` int32 valid-sample counts (clamped to ``[1, N]``).
+      idx: ``[B, N]`` non-negative int32 resample bits, shared across
+        benchmarks; resample index = ``idx % n_valid[m]``.
+      alpha: two-sided CI level.
+
+    Returns ``[M, 6]`` float32 with columns
+    (ci_lo, boot_median, ci_hi, med_v1, med_v2, point_diff_percent).
+    """
+    v1 = np.asarray(v1, np.float32)
+    v2 = np.asarray(v2, np.float32)
+    m_count, n_lanes = v1.shape
+    b = idx.shape[0]
+    lo_q, hi_q = ci_order_statistics(b, alpha)
+    out = np.zeros((m_count, OUT_COLS), np.float32)
+
+    for m in range(m_count):
+        n = int(np.clip(n_valid[m], 1, n_lanes))
+        r = idx[:, :n] % n                                 # [B, n]
+        g1 = np.sort(v1[m, r].astype(np.float32), axis=1)  # [B, n]
+        g2 = np.sort(v2[m, r].astype(np.float32), axis=1)
+        med1 = median_order_stat(g1)
+        med2 = median_order_stat(g2)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            rel = np.where(med1 != 0.0, (med2 - med1) / med1 * 100.0, 0.0)
+        rel = np.sort(rel.astype(np.float32))
+        med_v1 = median_order_stat(np.sort(v1[m, :n]))
+        med_v2 = median_order_stat(np.sort(v2[m, :n]))
+        point = (med_v2 - med_v1) / med_v1 * 100.0 if med_v1 != 0.0 else 0.0
+        out[m] = (
+            rel[lo_q],
+            0.5 * (rel[(b - 1) // 2] + rel[b // 2]),
+            rel[hi_q],
+            med_v1,
+            med_v2,
+            point,
+        )
+    return out

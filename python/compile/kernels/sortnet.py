@@ -1,0 +1,66 @@
+"""Bitonic sorting networks for Pallas kernels.
+
+All sorting inside the L1 kernel uses data-oblivious bitonic networks:
+a fixed sequence of compare-exchange stages whose structure depends only
+on the (static, power-of-two) length. This vectorizes cleanly on VPU-style
+wide registers (no data-dependent control flow) and is the standard way to
+sort small, fixed-size tiles on TPU-like hardware.
+
+The network sorts along a chosen axis of an array; every stage is a single
+masked min/max over a lane permutation, so a length-``n`` sort costs
+``log2(n) * (log2(n)+1) / 2`` vectorized compare-exchange steps
+(21 for n=64, 66 for n=2048).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def bitonic_stage_params(n: int):
+    """Yield the static ``(k, j)`` block/stride pairs of a bitonic sort of
+    length ``n`` (``log2(n) * (log2(n)+1) / 2`` stages).
+    """
+    assert _is_pow2(n), f"bitonic sort needs power-of-two length, got {n}"
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            yield k, j
+            j //= 2
+        k *= 2
+
+
+def bitonic_sort(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Sort ``x`` ascending along ``axis`` with a bitonic network.
+
+    The length of ``axis`` must be a power of two (pad with ``+inf``
+    beforehand for partial sorts). Works on any dtype with total order
+    under min/max; NaNs must be removed/padded by the caller.
+
+    All lane bookkeeping (partner index, keep-min mask) is derived from
+    ``lax.iota`` *inside* the trace — Pallas kernel bodies may not capture
+    host-side constant arrays.
+    """
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    # Move the sort axis last for cheap gathers, then restore.
+    xt = jnp.moveaxis(x, axis, -1)
+    lanes = jax.lax.iota(jnp.int32, n)
+    for k, j in bitonic_stage_params(n):
+        partner = lanes ^ j
+        # Ascending block if bit log2(k) of the lane index is 0; a lane
+        # keeps the minimum when it is the lower index of an ascending
+        # pair or the higher index of a descending pair.
+        asc = (lanes & k) == 0
+        keep_min = jnp.where(lanes < partner, asc, ~asc)
+        partner_vals = jnp.take(xt, partner, axis=-1)
+        mn = jnp.minimum(xt, partner_vals)
+        mx = jnp.maximum(xt, partner_vals)
+        xt = jnp.where(keep_min, mn, mx)
+    return jnp.moveaxis(xt, -1, axis)

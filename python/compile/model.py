@@ -1,0 +1,63 @@
+"""L2: the batched statistical-analysis graph lowered for the Rust runtime.
+
+ElastiBench's analysis step (paper §2/§6.1) is a pure function of the
+collected measurements, so the whole graph — input sanitation, the L1
+bootstrap kernel, and the change-classification margins — is authored in
+JAX here and AOT-lowered once by ``aot.py``. Python never runs on the
+experiment path; the Rust coordinator feeds measurement tensors into the
+compiled artifact via PJRT.
+
+Randomness lives in Rust: the coordinator draws the shared resample-index
+tile ``idx`` from its seeded PRNG and passes it as an input, which keeps
+the artifact deterministic and lets the native Rust engine replay the
+identical algorithm for cross-validation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bootstrap import make_bootstrap_call, OUT_COLS, PAD_SENTINEL
+
+
+def make_analyze(m: int, b: int, n: int, alpha: float = 0.01,
+                 interpret: bool = True):
+    """Build the analysis function for a fixed batch geometry.
+
+    Args:
+      m: microbenchmarks per call (callers pad to this).
+      b: bootstrap resamples (power of two).
+      n: sample lanes (power of two).
+      alpha: two-sided CI level (paper uses 99% -> alpha=0.01).
+
+    Returns ``analyze(v1, v2, n_valid, idx) -> (out[M, 6],)`` — a 1-tuple
+    because the AOT bridge lowers with ``return_tuple=True`` and the Rust
+    side unwraps with ``to_tuple1``.
+    """
+    kernel = make_bootstrap_call(m, b, n, alpha=alpha, interpret=interpret)
+
+    def analyze(v1, v2, n_valid, idx):
+        # Sanitize: non-finite samples become large-finite padding
+        # (excluded from medians as long as n_valid is honest), counts are
+        # clamped to the lane width, index bits are forced non-negative.
+        v1 = jnp.where(jnp.isfinite(v1), v1, PAD_SENTINEL).astype(jnp.float32)
+        v2 = jnp.where(jnp.isfinite(v2), v2, PAD_SENTINEL).astype(jnp.float32)
+        nv = jnp.clip(n_valid.astype(jnp.int32), 1, n)
+        ix = jnp.abs(idx.astype(jnp.int32))
+        return (kernel(v1, v2, nv, ix),)
+
+    return analyze
+
+
+def example_args(m: int, b: int, n: int):
+    """ShapeDtypeStructs matching ``make_analyze``'s signature."""
+    return (
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.int32),
+        jax.ShapeDtypeStruct((b, n), jnp.int32),
+    )
+
+
+__all__ = ["make_analyze", "example_args", "OUT_COLS"]

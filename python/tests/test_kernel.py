@@ -1,0 +1,184 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+The Pallas bootstrap kernel (interpret mode) must agree with the pure
+numpy oracle for every geometry, sample distribution, and n_valid edge
+case. Hypothesis sweeps shapes/seeds; fixed tests pin the paper-relevant
+geometries.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bootstrap import (
+    make_bootstrap_call,
+    ci_order_statistics,
+    vmem_bytes,
+    OUT_CI_LO,
+    OUT_MED,
+    OUT_CI_HI,
+    OUT_MED_V1,
+    OUT_MED_V2,
+    OUT_POINT,
+    OUT_COLS,
+)
+from compile.kernels.ref import bootstrap_ref
+
+
+def run_both(v1, v2, nv, idx, alpha=0.01):
+    m, n = v1.shape
+    b = idx.shape[0]
+    out = np.asarray(make_bootstrap_call(m, b, n, alpha=alpha)(v1, v2, nv, idx))
+    ref = bootstrap_ref(v1, v2, nv, idx, alpha=alpha)
+    return out, ref
+
+
+def make_inputs(rng, m, b, n, nv_list=None, shift=1.05):
+    v1 = rng.lognormal(0, 0.1, (m, n)).astype(np.float32)
+    v2 = (rng.lognormal(0, 0.1, (m, n)) * shift).astype(np.float32)
+    if nv_list is None:
+        nv = rng.integers(1, n + 1, m).astype(np.int32)
+    else:
+        nv = np.array(nv_list, np.int32)
+    idx = rng.integers(0, 2**31 - 1, (b, n)).astype(np.int32)
+    return v1, v2, nv, idx
+
+
+class TestAgainstReference:
+    @pytest.mark.parametrize("m,b,n", [(1, 64, 8), (2, 128, 16), (4, 64, 16),
+                                       (3, 256, 32), (8, 64, 64)])
+    def test_geometries(self, m, b, n):
+        rng = np.random.default_rng(m * 1000 + b + n)
+        v1, v2, nv, idx = make_inputs(rng, m, b, n)
+        out, ref = run_both(v1, v2, nv, idx)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_full_lanes(self):
+        rng = np.random.default_rng(1)
+        v1, v2, nv, idx = make_inputs(rng, 4, 128, 16, nv_list=[16] * 4)
+        out, ref = run_both(v1, v2, nv, idx)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_single_sample(self):
+        rng = np.random.default_rng(2)
+        v1, v2, nv, idx = make_inputs(rng, 3, 64, 16, nv_list=[1, 1, 1])
+        out, ref = run_both(v1, v2, nv, idx)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+        # One sample -> zero-width CI at the exact relative difference.
+        expected = (v2[:, 0] - v1[:, 0]) / v1[:, 0] * 100.0
+        np.testing.assert_allclose(out[:, OUT_MED], expected, rtol=1e-4)
+        np.testing.assert_allclose(out[:, OUT_CI_LO], out[:, OUT_CI_HI], rtol=1e-6)
+
+    def test_paper_repeat_count_45(self):
+        # The paper's 45-results-per-benchmark case in 64 lanes.
+        rng = np.random.default_rng(3)
+        v1, v2, nv, idx = make_inputs(rng, 4, 256, 64, nv_list=[45] * 4)
+        out, ref = run_both(v1, v2, nv, idx)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_alpha_variants(self):
+        rng = np.random.default_rng(4)
+        v1, v2, nv, idx = make_inputs(rng, 2, 128, 16)
+        for alpha in (0.01, 0.05, 0.10):
+            out, ref = run_both(v1, v2, nv, idx, alpha=alpha)
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           log2b=st.integers(5, 8),
+           log2n=st.integers(2, 6))
+    def test_property_sweep(self, seed, log2b, log2n):
+        rng = np.random.default_rng(seed)
+        m, b, n = 2, 1 << log2b, 1 << log2n
+        v1, v2, nv, idx = make_inputs(rng, m, b, n)
+        out, ref = run_both(v1, v2, nv, idx)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(shift=st.floats(min_value=0.5, max_value=2.0),
+           sigma=st.floats(min_value=0.0, max_value=1.0))
+    def test_property_distributions(self, shift, sigma):
+        rng = np.random.default_rng(int(shift * 1000 + sigma * 100))
+        m, b, n = 2, 128, 16
+        v1 = rng.lognormal(0, sigma, (m, n)).astype(np.float32)
+        v2 = (rng.lognormal(0, sigma, (m, n)) * shift).astype(np.float32)
+        nv = rng.integers(1, n + 1, m).astype(np.int32)
+        idx = rng.integers(0, 2**31 - 1, (b, n)).astype(np.int32)
+        out, ref = run_both(v1, v2, nv, idx)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+class TestSemantics:
+    def test_identical_versions_zero_diff(self):
+        rng = np.random.default_rng(5)
+        v1, _, nv, idx = make_inputs(rng, 3, 128, 16)
+        out = np.asarray(make_bootstrap_call(3, 128, 16)(v1, v1, nv, idx))
+        np.testing.assert_allclose(out[:, OUT_MED], 0.0, atol=1e-6)
+        np.testing.assert_allclose(out[:, OUT_CI_LO], 0.0, atol=1e-6)
+        np.testing.assert_allclose(out[:, OUT_CI_HI], 0.0, atol=1e-6)
+
+    def test_exact_scaling_detected(self):
+        rng = np.random.default_rng(6)
+        v1 = rng.lognormal(0, 0.3, (2, 16)).astype(np.float32)
+        v2 = (v1 * 1.25).astype(np.float32)
+        nv = np.array([16, 11], np.int32)
+        idx = rng.integers(0, 2**31 - 1, (128, 16)).astype(np.int32)
+        out = np.asarray(make_bootstrap_call(2, 128, 16)(v1, v2, nv, idx))
+        np.testing.assert_allclose(out[:, OUT_MED], 25.0, rtol=1e-4)
+        assert (out[:, OUT_CI_LO] > 0).all()  # change detected
+
+    def test_ci_ordering_invariant(self):
+        rng = np.random.default_rng(7)
+        v1, v2, nv, idx = make_inputs(rng, 8, 128, 16, shift=1.2)
+        out = np.asarray(make_bootstrap_call(8, 128, 16)(v1, v2, nv, idx))
+        assert (out[:, OUT_CI_LO] <= out[:, OUT_MED]).all()
+        assert (out[:, OUT_MED] <= out[:, OUT_CI_HI]).all()
+
+    def test_median_columns_match_numpy(self):
+        rng = np.random.default_rng(8)
+        v1, v2, nv, idx = make_inputs(rng, 4, 64, 16)
+        out = np.asarray(make_bootstrap_call(4, 64, 16)(v1, v2, nv, idx))
+        for m in range(4):
+            n = nv[m]
+            s1 = np.sort(v1[m, :n])
+            med1 = 0.5 * (s1[(n - 1) // 2] + s1[n // 2])
+            np.testing.assert_allclose(out[m, OUT_MED_V1], med1, rtol=1e-6)
+
+    def test_point_estimate_consistent(self):
+        rng = np.random.default_rng(9)
+        v1, v2, nv, idx = make_inputs(rng, 4, 64, 16)
+        out = np.asarray(make_bootstrap_call(4, 64, 16)(v1, v2, nv, idx))
+        expect = (out[:, OUT_MED_V2] - out[:, OUT_MED_V1]) / out[:, OUT_MED_V1] * 100
+        np.testing.assert_allclose(out[:, OUT_POINT], expect, rtol=1e-4)
+
+    def test_n_valid_clamped(self):
+        # n_valid > N must behave like n_valid == N (model clamps, but the
+        # kernel itself is exercised here with in-range data).
+        rng = np.random.default_rng(10)
+        v1, v2, _, idx = make_inputs(rng, 2, 64, 16)
+        out_full = np.asarray(
+            make_bootstrap_call(2, 64, 16)(v1, v2, np.array([16, 16], np.int32), idx))
+        ref = bootstrap_ref(v1, v2, np.array([16, 16], np.int32), idx)
+        np.testing.assert_allclose(out_full, ref, rtol=1e-5, atol=1e-5)
+
+
+class TestHelpers:
+    def test_ci_order_statistics_paper_geometry(self):
+        assert ci_order_statistics(2048, 0.01) == (10, 2037)
+
+    def test_ci_order_statistics_bounds(self):
+        lo, hi = ci_order_statistics(64, 0.01)
+        assert lo == 0 and hi == 63
+
+    def test_rejects_non_pow2(self):
+        with pytest.raises(ValueError):
+            make_bootstrap_call(1, 100, 16)
+        with pytest.raises(ValueError):
+            make_bootstrap_call(1, 128, 20)
+
+    def test_vmem_budget_production_geometry(self):
+        # B=2048, N=64: must fit comfortably in a 16 MiB VMEM budget.
+        assert vmem_bytes(2048, 64) < 4 * 1024 * 1024
+
+    def test_out_cols(self):
+        assert OUT_COLS == 6

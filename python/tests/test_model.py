@@ -1,0 +1,96 @@
+"""L2 model tests: sanitation, shapes, and AOT lowering."""
+
+import numpy as np
+import pytest
+
+from compile.model import make_analyze, example_args, OUT_COLS
+from compile.kernels.ref import bootstrap_ref
+from compile import aot
+
+
+class TestAnalyze:
+    def test_shapes_and_tuple(self):
+        m, b, n = 3, 64, 16
+        analyze = make_analyze(m, b, n)
+        rng = np.random.default_rng(0)
+        v1 = rng.lognormal(0, 0.1, (m, n)).astype(np.float32)
+        v2 = rng.lognormal(0, 0.1, (m, n)).astype(np.float32)
+        nv = np.array([16, 8, 3], np.int32)
+        idx = rng.integers(0, 2**31 - 1, (b, n)).astype(np.int32)
+        out = analyze(v1, v2, nv, idx)
+        assert isinstance(out, tuple) and len(out) == 1
+        assert out[0].shape == (m, OUT_COLS)
+
+    def test_matches_ref(self):
+        m, b, n = 2, 128, 16
+        analyze = make_analyze(m, b, n)
+        rng = np.random.default_rng(1)
+        v1 = rng.lognormal(0, 0.2, (m, n)).astype(np.float32)
+        v2 = (rng.lognormal(0, 0.2, (m, n)) * 1.1).astype(np.float32)
+        nv = np.array([16, 9], np.int32)
+        idx = rng.integers(0, 2**31 - 1, (b, n)).astype(np.int32)
+        out = np.asarray(analyze(v1, v2, nv, idx)[0])
+        ref = bootstrap_ref(v1, v2, nv, idx)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_sanitizes_nonfinite_samples(self):
+        # NaN/inf beyond n_valid must not leak into results.
+        m, b, n = 1, 64, 8
+        analyze = make_analyze(m, b, n)
+        rng = np.random.default_rng(2)
+        v1 = np.full((m, n), np.nan, np.float32)
+        v2 = np.full((m, n), np.inf, np.float32)
+        v1[0, :4] = [1.0, 1.1, 0.9, 1.05]
+        v2[0, :4] = [1.2, 1.3, 1.1, 1.25]
+        nv = np.array([4], np.int32)
+        idx = rng.integers(0, 2**31 - 1, (b, n)).astype(np.int32)
+        out = np.asarray(analyze(v1, v2, nv, idx)[0])
+        assert np.isfinite(out).all()
+        assert out[0, 1] > 0  # v2 clearly slower
+
+    def test_clamps_n_valid(self):
+        m, b, n = 1, 64, 8
+        analyze = make_analyze(m, b, n)
+        rng = np.random.default_rng(3)
+        v1 = rng.lognormal(0, 0.1, (m, n)).astype(np.float32)
+        v2 = rng.lognormal(0, 0.1, (m, n)).astype(np.float32)
+        idx = rng.integers(0, 2**31 - 1, (b, n)).astype(np.int32)
+        out_over = np.asarray(analyze(v1, v2, np.array([99], np.int32), idx)[0])
+        out_exact = np.asarray(analyze(v1, v2, np.array([n], np.int32), idx)[0])
+        np.testing.assert_allclose(out_over, out_exact)
+        out_zero = np.asarray(analyze(v1, v2, np.array([0], np.int32), idx)[0])
+        out_one = np.asarray(analyze(v1, v2, np.array([1], np.int32), idx)[0])
+        np.testing.assert_allclose(out_zero, out_one)
+
+    def test_negative_idx_bits_handled(self):
+        m, b, n = 1, 64, 8
+        analyze = make_analyze(m, b, n)
+        rng = np.random.default_rng(4)
+        v1 = rng.lognormal(0, 0.1, (m, n)).astype(np.float32)
+        v2 = rng.lognormal(0, 0.1, (m, n)).astype(np.float32)
+        nv = np.array([8], np.int32)
+        idx = rng.integers(-(2**31) + 1, 2**31 - 1, (b, n)).astype(np.int32)
+        out = np.asarray(analyze(v1, v2, nv, idx)[0])
+        assert np.isfinite(out).all()
+
+    def test_example_args_shapes(self):
+        a = example_args(4, 128, 32)
+        assert a[0].shape == (4, 32)
+        assert a[2].shape == (4,)
+        assert a[3].shape == (128, 32)
+
+
+class TestAot:
+    def test_lower_produces_hlo_text(self):
+        text = aot.lower_variant(m=1, b=64, n=8)
+        assert "HloModule" in text
+        assert "f32[1,8]" in text          # v1 parameter shape
+        assert "s32[64,8]" in text         # idx parameter shape
+
+    def test_artifact_name(self):
+        assert aot.artifact_name(8, 2048, 64) == "bootstrap_m8_b2048_n64.hlo.txt"
+
+    def test_default_variants_cover_paper_geometries(self):
+        variants = {(v["m"], v["b"], v["n"]) for v in aot.DEFAULT_VARIANTS}
+        assert (128, 2048, 64) in variants       # full-suite batch
+        assert any(n >= 200 for (_, _, n) in variants)  # Fig.7 sweep lanes

@@ -1,0 +1,88 @@
+"""Tests for the bitonic sorting network (outside any Pallas kernel)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.sortnet import bitonic_sort, bitonic_stage_params
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8, 16, 64, 256])
+def test_stage_count(n):
+    stages = list(bitonic_stage_params(n))
+    k = n.bit_length() - 1
+    assert len(stages) == k * (k + 1) // 2
+
+
+@pytest.mark.parametrize("n", [2, 4, 16, 64, 128])
+def test_sorts_random_1d(n):
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=n).astype(np.float32)
+    out = np.asarray(bitonic_sort(x, axis=0))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+def test_sorts_axis0_of_2d():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(16, 5)).astype(np.float32)
+    out = np.asarray(bitonic_sort(x, axis=0))
+    np.testing.assert_array_equal(out, np.sort(x, axis=0))
+
+
+def test_sorts_axis1_of_2d():
+    rng = np.random.default_rng(8)
+    x = rng.normal(size=(5, 32)).astype(np.float32)
+    out = np.asarray(bitonic_sort(x, axis=1))
+    np.testing.assert_array_equal(out, np.sort(x, axis=1))
+
+
+def test_negative_axis():
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=(3, 8)).astype(np.float32)
+    out = np.asarray(bitonic_sort(x, axis=-1))
+    np.testing.assert_array_equal(out, np.sort(x, axis=-1))
+
+
+def test_rejects_non_power_of_two():
+    x = np.zeros(6, np.float32)
+    with pytest.raises(AssertionError):
+        bitonic_sort(x, axis=0)
+
+
+def test_already_sorted_and_reversed():
+    x = np.arange(64, dtype=np.float32)
+    np.testing.assert_array_equal(np.asarray(bitonic_sort(x)), x)
+    np.testing.assert_array_equal(np.asarray(bitonic_sort(x[::-1].copy())), x)
+
+
+def test_duplicates_and_sentinels():
+    x = np.array([3.0, 3.0, 1.0, 3.0e38, 1.0, 3.0e38, 0.0, -1.0], np.float32)
+    out = np.asarray(bitonic_sort(x))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    # allow_subnormal=False: XLA's CPU backend flushes denormals to zero,
+    # which is FTZ platform behaviour, not a sorting bug.
+    data=st.lists(
+        st.floats(min_value=-1e6, max_value=1e6, width=32,
+                  allow_subnormal=False),
+        min_size=32, max_size=32,
+    )
+)
+def test_property_matches_npsort(data):
+    x = np.array(data, np.float32)
+    out = np.asarray(bitonic_sort(x))
+    np.testing.assert_array_equal(out, np.sort(x))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       log2n=st.integers(1, 9))
+def test_property_random_lengths(seed, log2n):
+    n = 1 << log2n
+    rng = np.random.default_rng(seed)
+    x = rng.lognormal(0.0, 2.0, n).astype(np.float32)
+    out = np.asarray(bitonic_sort(x))
+    np.testing.assert_array_equal(out, np.sort(x))

@@ -1,0 +1,474 @@
+//! The Benchrunner model: how one microbenchmark executes inside an
+//! instance (function instance or VM), paper §5.
+//!
+//! Models the `go test -bench` pipeline for a duet pair:
+//!
+//! * **restricted environment** (§3.2): file-system-writing benchmarks
+//!   fail immediately on FaaS;
+//! * **instance cache** (§5): the first run on a fresh instance pays a
+//!   cache-warmup penalty (reading the prepopulated read-only cache and
+//!   populating the writable overlay);
+//! * **setup + calibration + measurement**: fixture setup scales
+//!   inversely with the vCPU share; the measurement phase targets ~1 s of
+//!   benchmark time (go's default benchtime) after a calibration ramp;
+//! * **timeout** (§6.1): a run whose projected wall time exceeds the
+//!   per-benchmark timeout is killed and produces no sample;
+//! * **measured value**: ns/op = true ns/op x environment factor x
+//!   intrinsic noise / vCPU share (CPU throttling inflates wall time per
+//!   op below 1 vCPU).
+
+use crate::des::Time;
+use crate::sut::{Microbenchmark, Version};
+use crate::util::Rng;
+
+/// Why a benchmark run produced no sample.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunError {
+    /// Benchmark writes to the file system; the restricted FaaS
+    /// environment rejects it (§3.2).
+    RestrictedEnv,
+    /// Projected wall time exceeded the per-benchmark timeout.
+    Timeout,
+}
+
+/// One successful benchmark run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RunOutcome {
+    /// Measured time per operation [ns] (what `go test -bench` reports).
+    pub ns_per_op: f64,
+    /// Wall-clock duration of the run [s] (setup + calibration +
+    /// measurement).
+    pub wall_s: f64,
+}
+
+/// Execution context of the hosting instance.
+pub struct ExecCtx<'a> {
+    /// vCPU share (>= 1.0 means an unthrottled core).
+    pub vcpus: f64,
+    /// Environment slowdown factor at a given time (instance
+    /// heterogeneity x diurnal x co-tenancy).
+    pub env_factor: &'a mut dyn FnMut(Time) -> f64,
+    /// Per-run noise source.
+    pub rng: &'a mut Rng,
+    /// Restricted file system (FaaS true, VM false).
+    pub restricted_fs: bool,
+    /// Per-benchmark timeout [s] (paper: 20 s; VMs use a long timeout).
+    pub timeout_s: f64,
+    /// Running on FaaS (selects the FaaS-specific effect of benchmarks
+    /// whose benchmark code changed, §6.2.2).
+    pub on_faas: bool,
+    /// Extra noise [CV] added in quadrature to the benchmark's intrinsic
+    /// sigma. Used for sequential-execution order effects on VMs
+    /// (paper §4: order effects are "not as relevant on FaaS" because one
+    /// call runs one benchmark).
+    pub extra_sigma: f64,
+}
+
+/// Go benchtime target [s] (default `go test -bench` budget).
+const BENCHTIME_S: f64 = 1.0;
+/// Mean calibration overhead [s] (iteration-count ramp before the final
+/// measured run).
+const CALIBRATION_MEAN_S: f64 = 0.9;
+/// Wall-clock cost of a rejected restricted-env run [s].
+const REJECT_WALL_S: f64 = 0.25;
+
+/// Execute one benchmark run of `version` starting at `t`.
+pub fn run_once(
+    b: &Microbenchmark,
+    version: Version,
+    t: Time,
+    ctx: &mut ExecCtx<'_>,
+) -> Result<RunOutcome, (RunError, f64)> {
+    if ctx.restricted_fs && b.writes_fs {
+        return Err((RunError::RestrictedEnv, REJECT_WALL_S));
+    }
+    let cpu_scale = ctx.vcpus.min(1.0);
+    debug_assert!(cpu_scale > 0.0, "vcpus must be positive");
+
+    // Environment factor sampled mid-run; the factor inflates both the
+    // measured value and the wall time.
+    let factor = (ctx.env_factor)(t);
+
+    let setup_wall = b.setup_s * factor / cpu_scale;
+    let calibration_wall = ctx.rng.lognormal(CALIBRATION_MEAN_S.ln(), 0.35);
+    // Measurement phase: go runs ~BENCHTIME_S of wall time, or one full
+    // iteration if a single op exceeds the budget.
+    let true_ns = b.true_ns(version, ctx.on_faas);
+    let op_wall_s = true_ns * factor / cpu_scale / 1e9;
+    let measure_wall = BENCHTIME_S.max(op_wall_s);
+
+    let wall_s = setup_wall + calibration_wall + measure_wall;
+    if wall_s > ctx.timeout_s {
+        return Err((RunError::Timeout, ctx.timeout_s));
+    }
+
+    // Measured ns/op: truth x environment x intrinsic noise / throttling.
+    // Sub-vCPU shares add scheduling-quantum jitter on top of the
+    // benchmark's intrinsic noise (paper §7.1: shared CPU cores increase
+    // performance variability).
+    let throttle_jitter = 1.0 + 0.6 * (1.0 / cpu_scale - 1.0).max(0.0);
+    let sigma = (b.rel_sigma * b.rel_sigma * throttle_jitter * throttle_jitter
+        + ctx.extra_sigma * ctx.extra_sigma)
+        .sqrt();
+    let noise = ctx.rng.lognormal(0.0, sigma);
+    let ns_per_op = true_ns * factor * noise / cpu_scale;
+    Ok(RunOutcome { ns_per_op, wall_s })
+}
+
+/// Outcome of one duet function call (paper Fig. 2: both versions, R
+/// repeats, inside a single invocation).
+#[derive(Debug, Clone, Default)]
+pub struct CallOutcome {
+    /// Paired (v1, v2) ns/op samples, one per successful repeat.
+    pub pairs: Vec<(f64, f64)>,
+    /// Wall time of the whole call [s] (also the billed duration).
+    pub wall_s: f64,
+    /// Error that aborted the call, if any.
+    pub error: Option<RunError>,
+}
+
+/// Run a full duet call: `repeats` x (first + second version) of one
+/// benchmark.
+///
+/// `versions` selects what the two slots execute — `(V1, V2)` for a real
+/// comparison, `(V1, V1)` for an A/A experiment (paper §6.2.1).
+/// `cache_warm == false` adds the instance-cache warmup penalty before
+/// the first run. Version order is randomized per repeat when
+/// `randomize_version_order` (both directions equally often, averaging
+/// out within-call drift).
+#[allow(clippy::too_many_arguments)]
+pub fn run_duet_call(
+    b: &Microbenchmark,
+    versions: (Version, Version),
+    repeats: usize,
+    t0: Time,
+    cache_warm: bool,
+    randomize_version_order: bool,
+    ctx: &mut ExecCtx<'_>,
+) -> CallOutcome {
+    let mut out = CallOutcome::default();
+    let mut t = t0;
+    if !cache_warm {
+        // Populate the writable overlay cache (paper §5): read the
+        // prepopulated cache, link test binaries.
+        let warmup = ctx.rng.lognormal(0.2_f64.ln(), 0.3) / ctx.vcpus.min(1.0);
+        t += warmup;
+        out.wall_s += warmup;
+    }
+    for _ in 0..repeats {
+        let v1_first = !randomize_version_order || ctx.rng.chance(0.5);
+        let (first, second) = if v1_first {
+            (versions.0, versions.1)
+        } else {
+            (versions.1, versions.0)
+        };
+        let r1 = run_once(b, first, t, ctx);
+        match r1 {
+            Ok(o) => {
+                t += o.wall_s;
+                out.wall_s += o.wall_s;
+                let r2 = run_once(b, second, t, ctx);
+                match r2 {
+                    Ok(o2) => {
+                        t += o2.wall_s;
+                        out.wall_s += o2.wall_s;
+                        let (s1, s2) = if v1_first {
+                            (o.ns_per_op, o2.ns_per_op)
+                        } else {
+                            (o2.ns_per_op, o.ns_per_op)
+                        };
+                        out.pairs.push((s1, s2));
+                    }
+                    Err((e, w)) => {
+                        out.wall_s += w;
+                        out.error = Some(e);
+                        return out;
+                    }
+                }
+            }
+            Err((e, w)) => {
+                out.wall_s += w;
+                out.error = Some(e);
+                return out;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SutConfig;
+    use crate::sut::generate;
+
+    fn normal_bench() -> Microbenchmark {
+        let suite = generate(&SutConfig::default());
+        suite
+            .benchmarks
+            .iter()
+            .find(|b| !b.writes_fs && b.setup_s < 4.0 && !b.has_true_change())
+            .unwrap()
+            .clone()
+    }
+
+    fn ctx_parts() -> (Rng, f64) {
+        (Rng::new(9), 1.29)
+    }
+
+    #[test]
+    fn normal_run_succeeds() {
+        let b = normal_bench();
+        let (mut rng, vcpus) = ctx_parts();
+        let mut factor = |_t: Time| 1.0;
+        let mut ctx = ExecCtx {
+            vcpus,
+            env_factor: &mut factor,
+            rng: &mut rng,
+            restricted_fs: true,
+            timeout_s: 20.0,
+            on_faas: true,
+            extra_sigma: 0.0,
+        };
+        let out = run_once(&b, Version::V1, 0.0, &mut ctx).unwrap();
+        assert!(out.ns_per_op > 0.0);
+        assert!(out.wall_s > 1.0, "setup+calibration+measurement: {}", out.wall_s);
+        assert!(out.wall_s < 20.0);
+        // Measured value is within noise of the truth.
+        let rel = out.ns_per_op / b.base_ns_per_op;
+        assert!(rel > 0.5 && rel < 2.0, "rel = {rel}");
+    }
+
+    #[test]
+    fn restricted_env_rejects_fs_writers() {
+        let suite = generate(&SutConfig::default());
+        let b = suite.benchmarks.iter().find(|b| b.writes_fs).unwrap();
+        let (mut rng, vcpus) = ctx_parts();
+        let mut factor = |_t: Time| 1.0;
+        let mut ctx = ExecCtx {
+            vcpus,
+            env_factor: &mut factor,
+            rng: &mut rng,
+            restricted_fs: true,
+            timeout_s: 20.0,
+            on_faas: true,
+            extra_sigma: 0.0,
+        };
+        let err = run_once(b, Version::V1, 0.0, &mut ctx).unwrap_err();
+        assert_eq!(err.0, RunError::RestrictedEnv);
+        // Same benchmark runs fine on a VM.
+        ctx.restricted_fs = false;
+        assert!(run_once(b, Version::V1, 0.0, &mut ctx).is_ok());
+    }
+
+    #[test]
+    fn slow_setup_times_out() {
+        let suite = generate(&SutConfig::default());
+        let b = suite.benchmarks.iter().find(|b| b.setup_s > 20.0).unwrap();
+        let (mut rng, vcpus) = ctx_parts();
+        let mut factor = |_t: Time| 1.0;
+        let mut ctx = ExecCtx {
+            vcpus,
+            env_factor: &mut factor,
+            rng: &mut rng,
+            restricted_fs: true,
+            timeout_s: 20.0,
+            on_faas: true,
+            extra_sigma: 0.0,
+        };
+        let err = run_once(b, Version::V1, 0.0, &mut ctx).unwrap_err();
+        assert_eq!(err.0, RunError::Timeout);
+        assert_eq!(err.1, 20.0, "timeout consumes the full budget");
+        // With a VM-style long timeout it completes.
+        ctx.timeout_s = 300.0;
+        assert!(run_once(b, Version::V1, 0.0, &mut ctx).is_ok());
+    }
+
+    #[test]
+    fn moderate_setup_times_out_only_at_low_vcpu() {
+        let suite = generate(&SutConfig::default());
+        let b = suite
+            .benchmarks
+            .iter()
+            .find(|b| b.setup_s >= 6.0 && b.setup_s <= 12.0)
+            .unwrap();
+        let mut rng = Rng::new(3);
+        let mut factor = |_t: Time| 1.0;
+        let mut ctx = ExecCtx {
+            vcpus: 1.29, // 2048 MB
+            env_factor: &mut factor,
+            rng: &mut rng,
+            restricted_fs: true,
+            timeout_s: 20.0,
+            on_faas: true,
+            extra_sigma: 0.0,
+        };
+        assert!(run_once(b, Version::V1, 0.0, &mut ctx).is_ok());
+        ctx.vcpus = 0.255; // 1024 MB
+        let err = run_once(b, Version::V1, 0.0, &mut ctx).unwrap_err();
+        assert_eq!(err.0, RunError::Timeout);
+    }
+
+    #[test]
+    fn throttling_inflates_measured_value() {
+        let b = normal_bench();
+        let mut rng = Rng::new(4);
+        // Noise-free for exact scaling check.
+        let mut b0 = b.clone();
+        b0.rel_sigma = 0.0;
+        b0.setup_s = 0.0;
+        let mut factor = |_t: Time| 1.0;
+        let mut ctx = ExecCtx {
+            vcpus: 0.5,
+            env_factor: &mut factor,
+            rng: &mut rng,
+            restricted_fs: true,
+            timeout_s: 20.0,
+            on_faas: true,
+            extra_sigma: 0.0,
+        };
+        let half = run_once(&b0, Version::V1, 0.0, &mut ctx).unwrap();
+        ctx.vcpus = 1.0;
+        let full = run_once(&b0, Version::V1, 0.0, &mut ctx).unwrap();
+        assert!((half.ns_per_op / full.ns_per_op - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn env_factor_cancels_in_duet_pair() {
+        // The core duet argument: a common factor scales both versions,
+        // leaving the pair ratio unchanged.
+        let mut b = normal_bench();
+        b.rel_sigma = 0.0;
+        b.setup_s = 0.0;
+        let mut rng = Rng::new(5);
+        let mut slow_factor = |_t: Time| 1.3;
+        let mut ctx = ExecCtx {
+            vcpus: 1.29,
+            env_factor: &mut slow_factor,
+            rng: &mut rng,
+            restricted_fs: true,
+            timeout_s: 20.0,
+            on_faas: true,
+            extra_sigma: 0.0,
+        };
+        let out = run_duet_call(&b, (Version::V1, Version::V2), 3, 0.0, true, false, &mut ctx);
+        assert_eq!(out.pairs.len(), 3);
+        for (v1, v2) in out.pairs {
+            assert!((v2 / v1 - 1.0).abs() < 1e-9, "ratio unaffected by factor");
+        }
+    }
+
+    #[test]
+    fn duet_call_counts_and_wall_time() {
+        let b = normal_bench();
+        let mut rng = Rng::new(6);
+        let mut factor = |_t: Time| 1.0;
+        let mut ctx = ExecCtx {
+            vcpus: 1.29,
+            env_factor: &mut factor,
+            rng: &mut rng,
+            restricted_fs: true,
+            timeout_s: 20.0,
+            on_faas: true,
+            extra_sigma: 0.0,
+        };
+        let out = run_duet_call(&b, (Version::V1, Version::V2), 3, 0.0, true, true, &mut ctx);
+        assert!(out.error.is_none());
+        assert_eq!(out.pairs.len(), 3);
+        // 6 runs of ~2 s each.
+        assert!(out.wall_s > 6.0 && out.wall_s < 40.0, "{}", out.wall_s);
+    }
+
+    #[test]
+    fn cold_instance_pays_cache_warmup() {
+        let mut b = normal_bench();
+        b.rel_sigma = 0.0;
+        b.setup_s = 0.0;
+        let mut rng1 = Rng::new(7);
+        let mut rng2 = Rng::new(7);
+        let mut f1 = |_t: Time| 1.0;
+        let mut f2 = |_t: Time| 1.0;
+        let mut warm_ctx = ExecCtx {
+            vcpus: 1.29,
+            env_factor: &mut f1,
+            rng: &mut rng1,
+            restricted_fs: true,
+            timeout_s: 20.0,
+            on_faas: true,
+            extra_sigma: 0.0,
+        };
+        let mut cold_ctx = ExecCtx {
+            vcpus: 1.29,
+            env_factor: &mut f2,
+            rng: &mut rng2,
+            restricted_fs: true,
+            timeout_s: 20.0,
+            on_faas: true,
+            extra_sigma: 0.0,
+        };
+        // Average over repeats: individual calls share no RNG alignment,
+        // so compare means (the warmup penalty is ~0.2 s per call).
+        let mut warm_total = 0.0;
+        let mut cold_total = 0.0;
+        for _ in 0..50 {
+            warm_total += run_duet_call(&b, (Version::V1, Version::V2), 1, 0.0, true, false, &mut warm_ctx).wall_s;
+            cold_total += run_duet_call(&b, (Version::V1, Version::V2), 1, 0.0, false, false, &mut cold_ctx).wall_s;
+        }
+        assert!(
+            cold_total > warm_total + 2.0,
+            "cache warmup adds wall time: cold {cold_total:.1} vs warm {warm_total:.1}"
+        );
+    }
+
+    #[test]
+    fn failed_call_reports_error_and_no_pairs() {
+        let suite = generate(&SutConfig::default());
+        let b = suite.benchmarks.iter().find(|b| b.writes_fs).unwrap();
+        let mut rng = Rng::new(8);
+        let mut factor = |_t: Time| 1.0;
+        let mut ctx = ExecCtx {
+            vcpus: 1.29,
+            env_factor: &mut factor,
+            rng: &mut rng,
+            restricted_fs: true,
+            timeout_s: 20.0,
+            on_faas: true,
+            extra_sigma: 0.0,
+        };
+        let out = run_duet_call(b, (Version::V1, Version::V2), 3, 0.0, true, true, &mut ctx);
+        assert_eq!(out.error, Some(RunError::RestrictedEnv));
+        assert!(out.pairs.is_empty());
+        assert!(out.wall_s > 0.0);
+    }
+
+    #[test]
+    fn pathological_benchmark_direction_depends_on_platform() {
+        let suite = generate(&SutConfig::default());
+        let b = suite
+            .benchmarks
+            .iter()
+            .find(|b| b.benchmark_changed())
+            .unwrap();
+        let mut b0 = b.clone();
+        b0.rel_sigma = 0.0;
+        b0.setup_s = 0.0;
+        let mut rng = Rng::new(9);
+        let mut factor = |_t: Time| 1.0;
+        let mut ctx = ExecCtx {
+            vcpus: 1.0,
+            env_factor: &mut factor,
+            rng: &mut rng,
+            restricted_fs: false,
+            timeout_s: 300.0,
+            on_faas: false,
+            extra_sigma: 0.0,
+        };
+        let vm1 = run_once(&b0, Version::V1, 0.0, &mut ctx).unwrap();
+        let vm2 = run_once(&b0, Version::V2, 0.0, &mut ctx).unwrap();
+        assert!(vm2.ns_per_op < vm1.ns_per_op, "VM view: improvement");
+        ctx.on_faas = true;
+        let f1 = run_once(&b0, Version::V1, 0.0, &mut ctx).unwrap();
+        let f2 = run_once(&b0, Version::V2, 0.0, &mut ctx).unwrap();
+        assert!(f2.ns_per_op > f1.ns_per_op, "FaaS view: regression");
+    }
+}

@@ -1,0 +1,302 @@
+//! Hand-rolled CLI (no `clap` in the offline registry).
+//!
+//! ```text
+//! elastibench suite [--config FILE]
+//! elastibench run --experiment NAME [--backend native|xla] [--config FILE] [--out DIR]
+//! elastibench reproduce [--backend native|xla] [--out DIR]
+//! elastibench compare --a NAME --b NAME [--backend native|xla]
+//! elastibench version | help
+//! ```
+
+use crate::config::{Document, SutConfig};
+use crate::exp::{self, ExperimentResult, Workbench};
+use crate::report::{
+    analysis_to_csv, experiment_summary_table, render_cdf, write_text, SummaryRow,
+};
+use crate::stats::{agreement, coverage, Analyzer};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Parsed command-line options: positional command + `--key value` flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// The subcommand (first positional argument).
+    pub command: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without the binary name).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        if let Some(cmd) = iter.next() {
+            if cmd.starts_with("--") {
+                bail!("expected a command before flags, got {cmd}");
+            }
+            out.command = cmd;
+        }
+        while let Some(arg) = iter.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument {arg:?}");
+            };
+            let value = iter
+                .next()
+                .with_context(|| format!("flag --{key} needs a value"))?;
+            out.flags.insert(key.to_string(), value);
+        }
+        Ok(out)
+    }
+
+    /// Flag lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    /// Flag with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+/// CLI help text.
+pub const HELP: &str = "\
+elastibench — scalable continuous benchmarking on (simulated) cloud FaaS
+
+USAGE:
+  elastibench suite [--config FILE]
+      Print the generated SUT inventory (ground truth).
+  elastibench run --experiment NAME [--backend native|xla]
+                  [--config FILE] [--out DIR]
+      Run one experiment: aa | baseline | replication | lower-memory |
+      single-repeat | vm. Prints the verdict summary and a Fig.4/5-style
+      CDF; --out writes CSV exports.
+  elastibench reproduce [--backend native|xla] [--out DIR]
+      Run the full paper evaluation (all experiments + comparisons).
+  elastibench compare --a NAME --b NAME [--backend native|xla]
+      Run two experiments and print their agreement/coverage.
+  elastibench version
+  elastibench help
+";
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn run(args: Args) -> Result<i32> {
+    match args.command.as_str() {
+        "" | "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(0)
+        }
+        "version" => {
+            println!("elastibench {}", crate::version());
+            Ok(0)
+        }
+        "suite" => cmd_suite(&args),
+        "run" => cmd_run(&args),
+        "compare" => cmd_compare(&args),
+        "reproduce" => cmd_reproduce(&args),
+        other => {
+            eprintln!("unknown command {other:?}\n\n{HELP}");
+            Ok(2)
+        }
+    }
+}
+
+fn workbench(args: &Args) -> Result<Workbench> {
+    let sut = match args.get("config") {
+        Some(path) => {
+            let doc = Document::load(&PathBuf::from(path))
+                .map_err(|e| anyhow::anyhow!("config: {e}"))?;
+            SutConfig::from_doc(&doc)
+        }
+        None => SutConfig::default(),
+    };
+    let mut wb = Workbench::with_sut(sut);
+    match args.get_or("backend", "native") {
+        "native" => {}
+        "xla" => {
+            wb.analyzer = Analyzer::xla(&crate::artifacts_dir())?;
+        }
+        other => bail!("unknown backend {other:?} (native|xla)"),
+    }
+    Ok(wb)
+}
+
+fn run_named(wb: &Workbench, name: &str) -> Result<ExperimentResult> {
+    match name {
+        "aa" => exp::aa(wb),
+        "baseline" => exp::baseline(wb),
+        "replication" => exp::replication(wb),
+        "lower-memory" => exp::lower_memory(wb),
+        "single-repeat" => exp::single_repeat(wb),
+        other => bail!("unknown experiment {other:?}"),
+    }
+}
+
+fn cmd_suite(args: &Args) -> Result<i32> {
+    let wb = workbench(args)?;
+    println!(
+        "suite: {} microbenchmarks ({} with true changes, {} fs-writers, {} slow setups)\n",
+        wb.suite.len(),
+        wb.suite.true_change_names().len(),
+        wb.suite.benchmarks.iter().filter(|b| b.writes_fs).count(),
+        wb.suite.benchmarks.iter().filter(|b| b.setup_s > 20.0).count(),
+    );
+    println!(
+        "{:<44} {:>12} {:>8} {:>9} {:>8}",
+        "benchmark", "ns/op (v1)", "sigma", "v2 truth", "flags"
+    );
+    for b in &wb.suite.benchmarks {
+        let mut flags = String::new();
+        if b.writes_fs {
+            flags.push('F');
+        }
+        if b.setup_s > 20.0 {
+            flags.push('T');
+        }
+        if b.benchmark_changed() {
+            flags.push('!');
+        }
+        println!(
+            "{:<44} {:>12.0} {:>7.2}% {:>+8.2}% {:>8}",
+            b.name,
+            b.base_ns_per_op,
+            b.rel_sigma * 100.0,
+            b.true_change_pct(true),
+            flags
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_run(args: &Args) -> Result<i32> {
+    let wb = workbench(args)?;
+    let name = args.get("experiment").context("--experiment required")?;
+    if name == "vm" {
+        let vm = exp::vm_original(&wb)?;
+        println!(
+            "vm original dataset: {} analyzed, {} changes, {} wall, ${:.2}",
+            vm.analysis.verdicts.len(),
+            vm.analysis.change_count(),
+            crate::report::fmt_duration(vm.report.wall_s),
+            vm.report.cost_usd
+        );
+        maybe_export(args, &vm.analysis)?;
+        return Ok(0);
+    }
+    let result = run_named(&wb, name)?;
+    let rows = vec![SummaryRow {
+        label: result.analysis.label.clone(),
+        analyzed: result.analysis.verdicts.len(),
+        changes: result.analysis.change_count(),
+        wall_s: result.report.wall_s,
+        cost_usd: result.report.cost_usd,
+        cold_starts: result.report.platform.cold_starts,
+    }];
+    print!("{}", experiment_summary_table(&rows));
+    println!("\nCDF of |bootstrap median difference| (Fig. 4/5 style):");
+    print!(
+        "{}",
+        render_cdf(&result.analysis.abs_diffs_pct(), 60, 14, "|diff| [%]")
+    );
+    maybe_export(args, &result.analysis)?;
+    Ok(0)
+}
+
+fn maybe_export(args: &Args, analysis: &crate::stats::SuiteAnalysis) -> Result<()> {
+    if let Some(dir) = args.get("out") {
+        let path = PathBuf::from(dir).join(format!("{}.csv", analysis.label));
+        write_text(&path, &analysis_to_csv(analysis))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<i32> {
+    let wb = workbench(args)?;
+    let name_a = args.get("a").context("--a required")?;
+    let name_b = args.get("b").context("--b required")?;
+    let run_one = |name: &str| -> Result<crate::stats::SuiteAnalysis> {
+        if name == "vm" {
+            Ok(exp::vm_original(&wb)?.analysis)
+        } else {
+            Ok(run_named(&wb, name)?.analysis)
+        }
+    };
+    let a = run_one(name_a)?;
+    let b = run_one(name_b)?;
+    let rep = agreement(&a, &b);
+    let cov = coverage(&a, &b);
+    println!(
+        "{} vs {}: common {} agreement {:.2}% (disagreements: {})",
+        name_a,
+        name_b,
+        rep.common,
+        rep.agreement_pct(),
+        rep.disagreements.len()
+    );
+    for d in &rep.disagreements {
+        println!("  {:?} {} ({:.2}%)", d.kind, d.name, d.max_abs_diff_pct);
+    }
+    println!(
+        "coverage: one-sided {:.2}% / {:.2}%, two-sided {:.2}% (over {} shared changes)",
+        cov.one_sided_a_in_b_pct, cov.one_sided_b_in_a_pct, cov.two_sided_pct, cov.both_change
+    );
+    Ok(0)
+}
+
+fn cmd_reproduce(args: &Args) -> Result<i32> {
+    let wb = workbench(args)?;
+    let text = exp::reproduce_all(&wb)?;
+    print!("{text}");
+    if let Some(dir) = args.get("out") {
+        let path = PathBuf::from(dir).join("reproduction.md");
+        write_text(&path, &text)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_command_and_flags() {
+        let args = Args::parse(
+            ["run", "--experiment", "baseline", "--backend", "native"]
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(args.command, "run");
+        assert_eq!(args.get("experiment"), Some("baseline"));
+        assert_eq!(args.get_or("backend", "xla"), "native");
+        assert_eq!(args.get_or("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Args::parse(["--flag".to_string(), "x".to_string()]).is_err());
+        assert!(Args::parse(["run".to_string(), "--flag".to_string()]).is_err());
+        assert!(Args::parse(["run".to_string(), "stray".to_string()]).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let args = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(args.command, "");
+        assert_eq!(run(args).unwrap(), 0);
+    }
+
+    #[test]
+    fn unknown_command_exits_2() {
+        let args = Args::parse(["frobnicate".to_string()]).unwrap();
+        assert_eq!(run(args).unwrap(), 2);
+    }
+
+    #[test]
+    fn version_runs() {
+        let args = Args::parse(["version".to_string()]).unwrap();
+        assert_eq!(run(args).unwrap(), 0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Configuration system: a mini-TOML parser plus the typed parameter
+//! structs used across the simulator and coordinator.
+//!
+//! The offline registry has no `serde`/`toml` crates, so [`toml`] is an
+//! in-tree parser covering the subset we use: `[section]` headers,
+//! `key = value` with strings, integers, floats, booleans and flat arrays,
+//! `#` comments. Typed configs ([`ExperimentConfig`], [`PlatformConfig`],
+//! [`VmConfig`], [`SutConfig`]) provide paper-calibrated defaults and load
+//! overrides from parsed documents.
+
+mod experiment;
+pub mod toml;
+
+pub use experiment::{
+    BillingConfig, ExperimentConfig, PlatformConfig, SutConfig, VmConfig,
+};
+pub use toml::{Document, Value};

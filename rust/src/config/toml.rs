@@ -1,0 +1,332 @@
+//! Mini-TOML: `[section]`, `key = value`, `#` comments.
+//!
+//! Supported values: basic strings (`"..."` with escapes), integers,
+//! floats, booleans, and flat arrays of those. Dotted keys, inline tables,
+//! multi-line strings and datetimes are not supported (and not used by
+//! any shipped config).
+
+use std::collections::BTreeMap;
+
+/// A TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Numeric accessor: accepts both ints and floats.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: section -> key -> value. Top-level keys (before any
+/// section header) live in the `""` section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    /// Parse a document, failing with a line-numbered message.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Section names present in the document.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+
+    /// Keys of one section.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    /// `f64` lookup with default (accepts int or float).
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    /// `usize` lookup with default.
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(Value::as_i64)
+            .map(|v| v.max(0) as usize)
+            .unwrap_or(default)
+    }
+
+    /// `u64` lookup with default.
+    pub fn u64_or(&self, section: &str, key: &str, default: u64) -> u64 {
+        self.get(section, key)
+            .and_then(Value::as_i64)
+            .map(|v| v.max(0) as u64)
+            .unwrap_or(default)
+    }
+
+    /// `bool` lookup with default.
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// String lookup with default.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside a string starts a comment.
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => escaped = false,
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or("unterminated string")?;
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = split_array_items(inner)?
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    clean
+        .parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| format!("cannot parse value {s:?}"))
+}
+
+fn split_array_items(s: &str) -> Result<Vec<&str>, String> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.checked_sub(1).ok_or("unbalanced ]")?,
+            ',' if !in_str && depth == 0 => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&s[start..]);
+    Ok(items)
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape \\{other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Document::parse(
+            r#"
+            top = 1
+            [function]
+            memory_mb = 2048          # paper default
+            timeout_s = 900.0
+            arch = "arm64"
+            warm = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&Value::Int(1)));
+        assert_eq!(doc.usize_or("function", "memory_mb", 0), 2048);
+        assert_eq!(doc.f64_or("function", "timeout_s", 0.0), 900.0);
+        assert_eq!(doc.str_or("function", "arch", ""), "arm64");
+        assert!(doc.bool_or("function", "warm", false));
+    }
+
+    #[test]
+    fn defaults_apply_for_missing() {
+        let doc = Document::parse("[a]\nx = 1").unwrap();
+        assert_eq!(doc.f64_or("a", "y", 3.5), 3.5);
+        assert_eq!(doc.usize_or("nope", "x", 7), 7);
+    }
+
+    #[test]
+    fn int_and_float_interplay() {
+        let doc = Document::parse("[s]\na = 2\nb = 2.5\nc = 1_000").unwrap();
+        assert_eq!(doc.f64_or("s", "a", 0.0), 2.0); // int readable as f64
+        assert_eq!(doc.get("s", "b").unwrap().as_i64(), None);
+        assert_eq!(doc.get("s", "c").unwrap().as_i64(), Some(1000));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = Document::parse(r#"[s]\na = [1, 2, 3]"#.replace("\\n", "\n").as_str())
+            .unwrap();
+        let arr = doc.get("s", "a").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2], Value::Int(3));
+    }
+
+    #[test]
+    fn string_escapes_and_comments_in_strings() {
+        let doc = Document::parse("[s]\nmsg = \"a#b\\nc\" # trailing").unwrap();
+        assert_eq!(doc.str_or("s", "msg", ""), "a#b\nc");
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = Document::parse("[s]\nbad line").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = Document::parse("[unterminated").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = Document::parse("[s]\nx = \"open").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn empty_and_comment_only() {
+        let doc = Document::parse("# nothing\n\n   \n").unwrap();
+        assert_eq!(doc.sections().count(), 0);
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = Document::parse("[s]\na = -4\nb = 1.5e-3").unwrap();
+        assert_eq!(doc.get("s", "a").unwrap().as_i64(), Some(-4));
+        assert!((doc.f64_or("s", "b", 0.0) - 0.0015).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,88 @@
+//! Function-image build model (paper §5).
+//!
+//! The image layers and their sizes follow the prototype description:
+//! two SUT source trees (~240 MB each), the Go toolchain (~230 MB), the
+//! Benchrunner (~7 MB), the custom cacher (~3 MB) and the prepopulated
+//! build cache (~1 GB). Building happens on the runner (developer
+//! machine / CI): compile both versions once to fill the cache, assemble
+//! layers, push. Reused layers (toolchain, Benchrunner) are cached by the
+//! registry, so only SUT + cache layers are pushed per experiment.
+
+use crate::config::SutConfig;
+use crate::util::Rng;
+
+/// A built function image ready to deploy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FunctionImage {
+    /// Total image size [MB].
+    pub size_mb: f64,
+    /// Wall time spent building on the runner [s] (compile both versions,
+    /// prepopulate cache, assemble layers).
+    pub build_s: f64,
+    /// Wall time spent pushing + creating/updating the function [s].
+    pub deploy_s: f64,
+}
+
+/// Registry push throughput [MB/s] (runner uplink).
+const PUSH_MB_PER_S: f64 = 60.0;
+/// Function create/update control-plane latency [s].
+const CONTROL_PLANE_S: f64 = 25.0;
+/// Compile throughput for cache prepopulation [MB of source per second].
+const COMPILE_MB_PER_S: f64 = 12.0;
+
+/// Build the duet image for a suite.
+pub fn build_image(sut: &SutConfig, rng: &mut Rng) -> FunctionImage {
+    let size_mb = sut.image_mb();
+    // Compile both SUT versions once (warm developer-machine cache makes
+    // this mostly linking + test-binary compilation).
+    let compile_s = 2.0 * sut.source_mb / COMPILE_MB_PER_S * rng.lognormal(0.0, 0.15);
+    let assemble_s = size_mb / 400.0; // layer tar + hash
+    let build_s = compile_s + assemble_s;
+    // Only SUT + cache layers change between experiments; tooling layers
+    // hit the registry cache (paper §4: "All other container layers ...
+    // can be reused").
+    let pushed_mb = 2.0 * sut.source_mb + sut.build_cache_mb;
+    let deploy_s = pushed_mb / PUSH_MB_PER_S * rng.lognormal(0.0, 0.1) + CONTROL_PLANE_S;
+    FunctionImage {
+        size_mb,
+        build_s,
+        deploy_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_size_matches_paper_scale() {
+        let mut rng = Rng::new(1);
+        let img = build_image(&SutConfig::default(), &mut rng);
+        // ~1.7 GB total (2x240 + 980 + 240).
+        assert!((img.size_mb - 1700.0).abs() < 10.0, "{}", img.size_mb);
+    }
+
+    #[test]
+    fn build_and_deploy_take_minutes_not_hours() {
+        let mut rng = Rng::new(2);
+        let img = build_image(&SutConfig::default(), &mut rng);
+        assert!(img.build_s > 20.0 && img.build_s < 300.0, "{}", img.build_s);
+        assert!(img.deploy_s > 20.0 && img.deploy_s < 120.0, "{}", img.deploy_s);
+    }
+
+    #[test]
+    fn smaller_sut_builds_faster() {
+        let mut rng_a = Rng::new(3);
+        let mut rng_b = Rng::new(3);
+        let small = SutConfig {
+            source_mb: 40.0,
+            build_cache_mb: 150.0,
+            ..SutConfig::default()
+        };
+        let a = build_image(&small, &mut rng_a);
+        let b = build_image(&SutConfig::default(), &mut rng_b);
+        assert!(a.size_mb < b.size_mb);
+        assert!(a.build_s < b.build_s);
+        assert!(a.deploy_s < b.deploy_s);
+    }
+}

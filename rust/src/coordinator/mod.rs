@@ -1,0 +1,24 @@
+//! The ElastiBench coordinator: plan, build, deploy, fan out, collect.
+//!
+//! This is the paper's system contribution (§4, Fig. 2) as a library:
+//!
+//! 1. **Image build** — package both SUT versions, the Go toolchain, the
+//!    Benchrunner and the prepopulated build cache into a function image
+//!    ([`image::build_image`]);
+//! 2. **Deploy** — push the image to the (simulated) platform;
+//! 3. **Plan** — one function call per (benchmark, call-repeat), shuffled
+//!    globally so the platform's opaque call-to-instance assignment also
+//!    randomizes instance allocation (§4);
+//! 4. **Invoke** — fan the plan out with bounded parallelism over the
+//!    discrete-event simulation, reusing warm instances, paying cold
+//!    starts, respecting the function timeout, retrying crashed calls;
+//! 5. **Collect** — gather per-benchmark duet pairs into
+//!    [`crate::stats::Measurements`] ready for the analyzer.
+
+mod hybrid;
+mod image;
+mod runner;
+
+pub use hybrid::{run_hybrid, HybridReport};
+pub use image::{build_image, FunctionImage};
+pub use runner::{run_experiment, CallFailure, RunReport};

@@ -1,0 +1,442 @@
+//! The experiment runner: fan the call plan out over the simulated FaaS
+//! platform with bounded parallelism and collect duet measurements.
+
+use super::image::build_image;
+use crate::benchexec::{run_duet_call, ExecCtx, RunError};
+use crate::config::{ExperimentConfig, PlatformConfig, SutConfig};
+use crate::des::Sim;
+use crate::faas::{FaasPlatform, PlatformStats};
+use crate::stats::Measurements;
+use crate::sut::{Suite, Version};
+use crate::util::Rng;
+
+/// Runner-side overhead per call (request serialization, HTTPS, SDK).
+const CLIENT_OVERHEAD_S: f64 = 0.12;
+
+/// Why a call produced no (or partial) results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallFailure {
+    /// Benchmark rejected by the restricted environment.
+    RestrictedEnv,
+    /// A benchmark run exceeded the per-benchmark timeout.
+    BenchTimeout,
+    /// The whole invocation exceeded the function timeout.
+    FunctionTimeout,
+    /// Injected instance crash.
+    Crash,
+}
+
+/// Full report of one ElastiBench experiment run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Experiment label (from the config).
+    pub label: String,
+    /// Collected duet measurements per benchmark (suite order).
+    pub measurements: Vec<Measurements>,
+    /// End-to-end wall time [s]: image build + deploy + invocation phase.
+    pub wall_s: f64,
+    /// Invocation-phase wall time only [s].
+    pub invoke_wall_s: f64,
+    /// Total cost [USD] (GB-seconds + requests).
+    pub cost_usd: f64,
+    /// Calls issued (including retries).
+    pub calls_total: usize,
+    /// Calls that returned at least one duet pair.
+    pub calls_ok: usize,
+    /// Failure tally: (kind, count).
+    pub failures: Vec<(CallFailure, usize)>,
+    /// Platform-side metrics (cold starts, instances, GB-s).
+    pub platform: PlatformStats,
+    /// Benchmarks with zero collected results.
+    pub failed_benchmarks: Vec<String>,
+}
+
+impl RunReport {
+    /// Count of a specific failure kind.
+    pub fn failure_count(&self, kind: CallFailure) -> usize {
+        self.failures
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, c)| *c)
+            .unwrap_or(0)
+    }
+
+    /// Benchmarks that produced at least `min` results.
+    pub fn benchmarks_with_results(&self, min: usize) -> usize {
+        self.measurements.iter().filter(|m| m.len() >= min).count()
+    }
+}
+
+/// One planned function call.
+#[derive(Debug, Clone, Copy)]
+struct PlannedCall {
+    bench_idx: usize,
+    /// Retry budget left for crash failures.
+    retries_left: u8,
+}
+
+/// DES event: a call finished.
+struct CallDone {
+    plan: PlannedCall,
+    instance: usize,
+    billed_s: f64,
+    pairs: Vec<(f64, f64)>,
+    failure: Option<CallFailure>,
+}
+
+/// Run one ElastiBench experiment over `suite` on a fresh platform.
+///
+/// `versions` picks the duet contents — `(V1, V2)` normally, `(V1, V1)`
+/// for the A/A experiment.
+pub fn run_experiment(
+    suite: &Suite,
+    sut: &SutConfig,
+    platform_cfg: &PlatformConfig,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+) -> RunReport {
+    if let Err(errs) = exp.validate() {
+        panic!("invalid experiment config: {errs:?}");
+    }
+    let mut rng = Rng::new(exp.seed);
+
+    // Phase 1+2: build + deploy.
+    let image = build_image(sut, &mut rng.fork(0xB01D));
+    let mut platform = FaasPlatform::deploy(
+        platform_cfg,
+        image.size_mb,
+        exp.memory_mb,
+        exp.start_hour_utc,
+        exp.seed,
+    );
+
+    // Phase 3: plan — calls_per_benchmark calls per benchmark, shuffled
+    // globally (randomized order => randomized instance assignment, §4).
+    let mut plan: Vec<PlannedCall> = (0..suite.len())
+        .flat_map(|bench_idx| {
+            (0..exp.calls_per_benchmark).map(move |_| PlannedCall {
+                bench_idx,
+                retries_left: 1,
+            })
+        })
+        .collect();
+    if exp.randomize_order {
+        rng.shuffle(&mut plan);
+    }
+    plan.reverse(); // issue order = pop() from the back
+
+    // Phase 4: bounded-parallel fan-out over the DES.
+    let mut sim: Sim<CallDone> = Sim::new();
+    let mut measurements: Vec<Measurements> = suite
+        .benchmarks
+        .iter()
+        .map(|b| Measurements {
+            name: b.name.clone(),
+            v1: Vec::new(),
+            v2: Vec::new(),
+        })
+        .collect();
+    let mut calls_total = 0usize;
+    let mut calls_ok = 0usize;
+    let mut failures: Vec<(CallFailure, usize)> = Vec::new();
+    let mut call_seq = 0u64;
+
+    let issue = |sim: &mut Sim<CallDone>,
+                     platform: &mut FaasPlatform,
+                     plan_item: PlannedCall,
+                     calls_total: &mut usize,
+                     call_seq: &mut u64,
+                     rng: &mut Rng| {
+        let t = sim.now();
+        let Some(placement) = platform.acquire(t) else {
+            // Concurrency limit: retry shortly (rare at paper scale).
+            sim.schedule(0.5, CallDone {
+                plan: plan_item,
+                instance: usize::MAX,
+                billed_s: 0.0,
+                pairs: Vec::new(),
+                failure: None,
+            });
+            return;
+        };
+        *calls_total += 1;
+        *call_seq += 1;
+        let bench = &suite.benchmarks[plan_item.bench_idx];
+        let crash = platform.maybe_crash();
+        let vcpus = platform.vcpus();
+        let cache_warm = platform.cache_warm(placement.instance);
+        let mut call_rng = rng.fork(0xCA11_0000 ^ *call_seq);
+        let outcome = {
+            let instance = placement.instance;
+            let mut factor = |tt: f64| platform.env_factor(instance, tt);
+            let mut ctx = ExecCtx {
+                vcpus,
+                env_factor: &mut factor,
+                rng: &mut call_rng,
+                restricted_fs: true,
+                timeout_s: exp.benchmark_timeout_s,
+                on_faas: true,
+                extra_sigma: 0.0,
+            };
+            run_duet_call(
+                bench,
+                versions,
+                exp.repeats_per_call,
+                placement.start_at,
+                cache_warm,
+                exp.randomize_version_order,
+                &mut ctx,
+            )
+        };
+        let (pairs, mut billed_s, mut failure) = if crash {
+            // Crash mid-call: partial billing, no results.
+            (Vec::new(), outcome.wall_s * call_rng.f64(), Some(CallFailure::Crash))
+        } else {
+            let failure = outcome.error.map(|e| match e {
+                RunError::RestrictedEnv => CallFailure::RestrictedEnv,
+                RunError::Timeout => CallFailure::BenchTimeout,
+            });
+            (outcome.pairs, outcome.wall_s, failure)
+        };
+        if billed_s > exp.function_timeout_s {
+            billed_s = exp.function_timeout_s;
+            failure = Some(CallFailure::FunctionTimeout);
+        }
+        let done_at = placement.start_at + billed_s + CLIENT_OVERHEAD_S;
+        sim.schedule_at(
+            done_at,
+            CallDone {
+                plan: plan_item,
+                instance: placement.instance,
+                billed_s,
+                pairs: if failure == Some(CallFailure::FunctionTimeout) {
+                    Vec::new()
+                } else {
+                    pairs
+                },
+                failure,
+            },
+        );
+    };
+
+    // Seed the pipeline with `parallelism` calls.
+    for _ in 0..exp.parallelism {
+        let Some(item) = plan.pop() else { break };
+        issue(&mut sim, &mut platform, item, &mut calls_total, &mut call_seq, &mut rng);
+    }
+
+    // Drain: every completion issues the next planned call.
+    let invoke_end = sim.run(|sim, t, done| {
+        if done.instance != usize::MAX {
+            platform.release(done.instance, t, done.billed_s);
+            if done.pairs.is_empty() {
+                if let Some(kind) = done.failure {
+                    match failures.iter_mut().find(|(k, _)| *k == kind) {
+                        Some((_, c)) => *c += 1,
+                        None => failures.push((kind, 1)),
+                    }
+                    // Retry crashed calls once (transient); environment
+                    // failures are deterministic, never retried.
+                    if kind == CallFailure::Crash && done.plan.retries_left > 0 {
+                        plan.push(PlannedCall {
+                            bench_idx: done.plan.bench_idx,
+                            retries_left: done.plan.retries_left - 1,
+                        });
+                    }
+                }
+            } else {
+                calls_ok += 1;
+                let m = &mut measurements[done.plan.bench_idx];
+                for (s1, s2) in done.pairs {
+                    m.v1.push(s1);
+                    m.v2.push(s2);
+                }
+            }
+        } else {
+            // Concurrency-limit backoff: reissue the same plan item.
+            plan.push(done.plan);
+        }
+        if let Some(item) = plan.pop() {
+            issue(sim, &mut platform, item, &mut calls_total, &mut call_seq, &mut rng);
+        }
+    });
+
+    let failed_benchmarks = measurements
+        .iter()
+        .filter(|m| m.is_empty())
+        .map(|m| m.name.clone())
+        .collect();
+    RunReport {
+        label: exp.label.clone(),
+        wall_s: image.build_s + image.deploy_s + invoke_end,
+        invoke_wall_s: invoke_end,
+        cost_usd: platform.cost_usd(),
+        calls_total,
+        calls_ok,
+        failures,
+        platform: platform.stats(),
+        measurements,
+        failed_benchmarks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sut::generate;
+
+    fn small() -> (Suite, SutConfig, PlatformConfig, ExperimentConfig) {
+        let sut = SutConfig {
+            benchmark_count: 10,
+            true_changes: 3,
+            faas_incompatible: 2,
+            slow_setup: 1,
+            ..SutConfig::default()
+        };
+        let suite = generate(&sut);
+        let exp = ExperimentConfig {
+            calls_per_benchmark: 5,
+            parallelism: 20,
+            ..ExperimentConfig::default()
+        };
+        (suite, sut, PlatformConfig::default(), exp)
+    }
+
+    #[test]
+    fn collects_results_for_runnable_benchmarks() {
+        let (suite, sut, plat, exp) = small();
+        let report = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        // 10 benchmarks x 5 calls.
+        assert_eq!(report.calls_total, 50);
+        let runnable = suite
+            .benchmarks
+            .iter()
+            .filter(|b| !b.writes_fs && b.setup_s < 15.0)
+            .count();
+        let with_results = report.benchmarks_with_results(1);
+        assert_eq!(with_results, runnable);
+        // Runnable benchmarks get repeats * calls pairs.
+        for (b, m) in suite.benchmarks.iter().zip(&report.measurements) {
+            if !b.writes_fs && b.setup_s < 6.0 {
+                assert_eq!(m.len(), exp.results_per_benchmark(), "{}", b.name);
+            }
+        }
+    }
+
+    #[test]
+    fn failures_are_classified() {
+        let (suite, sut, plat, exp) = small();
+        let report = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        assert!(report.failure_count(CallFailure::RestrictedEnv) >= 5);
+        assert!(report.failure_count(CallFailure::BenchTimeout) >= 5);
+        assert_eq!(report.failure_count(CallFailure::Crash), 0);
+        assert_eq!(report.failed_benchmarks.len(), 10 - report.benchmarks_with_results(1));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (suite, sut, plat, exp) = small();
+        let a = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        let b = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        assert_eq!(a.wall_s, b.wall_s);
+        assert_eq!(a.cost_usd, b.cost_usd);
+        for (x, y) in a.measurements.iter().zip(&b.measurements) {
+            assert_eq!(x.v1, y.v1);
+        }
+    }
+
+    #[test]
+    fn different_seed_different_measurements() {
+        let (suite, sut, plat, mut exp) = small();
+        let a = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        exp.seed = 999;
+        let b = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        let pair = a
+            .measurements
+            .iter()
+            .zip(&b.measurements)
+            .find(|(x, _)| !x.is_empty())
+            .unwrap();
+        assert_ne!(pair.0.v1, pair.1.v1);
+    }
+
+    #[test]
+    fn parallelism_shortens_wall_time() {
+        let (suite, sut, plat, mut exp) = small();
+        exp.parallelism = 1;
+        let serial = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        exp.parallelism = 25;
+        let parallel = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        assert!(
+            parallel.invoke_wall_s < serial.invoke_wall_s / 3.0,
+            "parallel {} vs serial {}",
+            parallel.invoke_wall_s,
+            serial.invoke_wall_s
+        );
+    }
+
+    #[test]
+    fn higher_parallelism_more_cold_starts() {
+        let (suite, sut, plat, mut exp) = small();
+        exp.parallelism = 2;
+        let low = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        exp.parallelism = 40;
+        let high = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        assert!(high.platform.cold_starts > low.platform.cold_starts);
+    }
+
+    #[test]
+    fn aa_mode_runs_v1_twice() {
+        let (suite, sut, plat, exp) = small();
+        let report = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V1));
+        // With rel_sigma > 0 samples differ, but systematically the
+        // medians must be close (same version): check a benchmark with a
+        // large true change would have shown it otherwise.
+        let changed = suite
+            .benchmarks
+            .iter()
+            .position(|b| b.has_true_change() && !b.writes_fs && b.setup_s < 6.0)
+            .expect("has runnable changed benchmark");
+        let m = &report.measurements[changed];
+        assert!(!m.is_empty());
+        let med1 = crate::util::stats::median(&m.v1);
+        let med2 = crate::util::stats::median(&m.v2);
+        let diff_pct = ((med2 / med1) - 1.0).abs() * 100.0;
+        assert!(diff_pct < 10.0, "A/A median diff {diff_pct}% too large");
+    }
+
+    #[test]
+    fn crash_injection_triggers_retries() {
+        let (suite, sut, mut plat, exp) = small();
+        plat.crash_probability = 0.2;
+        let report = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        assert!(report.failure_count(CallFailure::Crash) > 0);
+        // Retries mean more calls than planned.
+        assert!(report.calls_total > 50);
+        // Crashes don't lose benchmarks entirely (retry + other calls).
+        let runnable = suite
+            .benchmarks
+            .iter()
+            .filter(|b| !b.writes_fs && b.setup_s < 6.0)
+            .count();
+        assert!(report.benchmarks_with_results(1) >= runnable);
+    }
+
+    #[test]
+    fn cost_scales_with_memory() {
+        let (suite, sut, plat, mut exp) = small();
+        let c2048 = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        exp.memory_mb = 4096;
+        let c4096 = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        assert!(c4096.cost_usd > 1.5 * c2048.cost_usd);
+    }
+
+    #[test]
+    fn function_timeout_kills_everlong_calls() {
+        let (suite, sut, plat, mut exp) = small();
+        exp.function_timeout_s = 3.0; // absurdly short
+        exp.repeats_per_call = 3;
+        let report = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        assert!(report.failure_count(CallFailure::FunctionTimeout) > 0);
+    }
+}

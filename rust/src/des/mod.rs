@@ -1,0 +1,247 @@
+//! Discrete-event simulation engine.
+//!
+//! A minimal, deterministic DES core: a virtual clock plus a time-ordered
+//! event heap with FIFO tie-breaking. The FaaS platform ([`crate::faas`])
+//! and the VM fleet ([`crate::vm`]) define their own event enums and drive
+//! the loop with a handler closure; the engine itself knows nothing about
+//! benchmarking.
+//!
+//! Determinism: events at equal timestamps fire in scheduling order
+//! (sequence numbers), and the engine never consults wall-clock time, so a
+//! simulation is a pure function of (initial events, handler, RNG seed).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in seconds since simulation start.
+pub type Time = f64;
+
+struct Scheduled<E> {
+    at: Time,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .expect("NaN simulation time")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The simulation core: clock + event heap.
+pub struct Sim<E> {
+    now: Time,
+    seq: u64,
+    heap: BinaryHeap<Scheduled<E>>,
+    fired: u64,
+}
+
+impl<E> Default for Sim<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Sim<E> {
+    /// Empty simulation at t = 0.
+    pub fn new() -> Self {
+        Sim {
+            now: 0.0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            fired: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Total events fired so far (metrics/perf accounting).
+    pub fn events_fired(&self) -> u64 {
+        self.fired
+    }
+
+    /// Pending event count.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `event` after `delay` seconds of virtual time.
+    pub fn schedule(&mut self, delay: Time, event: E) {
+        assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay, event);
+    }
+
+    /// Schedule `event` at absolute virtual time `at` (>= now).
+    pub fn schedule_at(&mut self, at: Time, event: E) {
+        assert!(
+            at >= self.now,
+            "cannot schedule into the past: {at} < {}",
+            self.now
+        );
+        assert!(at.is_finite(), "non-finite event time");
+        self.heap.push(Scheduled {
+            at,
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn next(&mut self) -> Option<(Time, E)> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.at >= self.now);
+        self.now = s.at;
+        self.fired += 1;
+        Some((s.at, s.event))
+    }
+
+    /// Drain the queue through `handler` (which may schedule more events)
+    /// until empty. Returns the final virtual time.
+    pub fn run(mut self, mut handler: impl FnMut(&mut Sim<E>, Time, E)) -> Time {
+        while let Some((t, e)) = self.next() {
+            handler(&mut self, t, e);
+        }
+        self.now
+    }
+
+    /// Like [`Self::run`] but stops once the clock passes `deadline`
+    /// (events strictly after it stay unfired). Returns the final time
+    /// (min(deadline, last event)).
+    pub fn run_until(
+        mut self,
+        deadline: Time,
+        mut handler: impl FnMut(&mut Sim<E>, Time, E),
+    ) -> Time {
+        while let Some(s) = self.heap.peek() {
+            if s.at > deadline {
+                self.now = deadline;
+                break;
+            }
+            let (t, e) = self.next().expect("peeked");
+            handler(&mut self, t, e);
+        }
+        self.now.min(deadline)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_in_time_order() {
+        let mut sim = Sim::new();
+        sim.schedule(3.0, "c");
+        sim.schedule(1.0, "a");
+        sim.schedule(2.0, "b");
+        let mut seen = Vec::new();
+        sim.run(|_, t, e| seen.push((t, e)));
+        assert_eq!(seen, vec![(1.0, "a"), (2.0, "b"), (3.0, "c")]);
+    }
+
+    #[test]
+    fn equal_times_fire_fifo() {
+        let mut sim = Sim::new();
+        for i in 0..10 {
+            sim.schedule(5.0, i);
+        }
+        let mut seen = Vec::new();
+        sim.run(|_, _, e| seen.push(e));
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handler_can_chain_events() {
+        let mut sim = Sim::new();
+        sim.schedule(1.0, 0u32);
+        let mut count = 0;
+        let end = sim.run(|sim, _, e| {
+            count += 1;
+            if e < 4 {
+                sim.schedule(1.0, e + 1);
+            }
+        });
+        assert_eq!(count, 5);
+        assert_eq!(end, 5.0);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut sim = Sim::new();
+        sim.schedule(2.0, ());
+        sim.schedule(2.0, ());
+        sim.schedule(7.5, ());
+        let mut last = 0.0;
+        sim.run(|sim, t, _| {
+            assert!(t >= last);
+            assert_eq!(sim.now(), t);
+            last = t;
+        });
+    }
+
+    #[test]
+    fn run_until_stops_at_deadline() {
+        let mut sim = Sim::new();
+        for i in 1..=10 {
+            sim.schedule(i as f64, i);
+        }
+        let mut seen = Vec::new();
+        let end = sim.run_until(4.5, |_, _, e| seen.push(e));
+        assert_eq!(seen, vec![1, 2, 3, 4]);
+        assert_eq!(end, 4.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot schedule into the past")]
+    fn rejects_past_events() {
+        let mut sim = Sim::new();
+        sim.schedule(5.0, ());
+        sim.next();
+        sim.schedule_at(1.0, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "negative delay")]
+    fn rejects_negative_delay() {
+        let mut sim: Sim<()> = Sim::new();
+        sim.schedule(-1.0, ());
+    }
+
+    #[test]
+    fn empty_sim_runs_to_zero() {
+        let sim: Sim<()> = Sim::new();
+        assert_eq!(sim.run(|_, _, _| {}), 0.0);
+    }
+
+    #[test]
+    fn counts_fired_events() {
+        let mut sim = Sim::new();
+        sim.schedule(1.0, ());
+        sim.schedule(2.0, ());
+        assert_eq!(sim.pending(), 2);
+        sim.next();
+        assert_eq!(sim.events_fired(), 1);
+        assert_eq!(sim.pending(), 1);
+    }
+}

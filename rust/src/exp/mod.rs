@@ -1,0 +1,306 @@
+//! Paper experiment drivers (§6.1 "Experiment Overview").
+//!
+//! Each function reproduces one experiment of the evaluation against the
+//! shared [`Workbench`] (generated SUT + platform + analyzer):
+//!
+//! | paper | driver | notes |
+//! |---|---|---|
+//! | §6.2.1 / Fig. 4 | [`aa`] | A/A: both duet slots run v1 |
+//! | §6.2.2 / Fig. 5 | [`baseline`] | the reference configuration |
+//! | §6.2.3 | [`replication`] | same config, new seed + start time |
+//! | §6.2.4 | [`lower_memory`] | 1024 MB functions |
+//! | §6.2.5 | [`single_repeat`] | 1 in-call repeat x 45 calls |
+//! | §6.2.7 / Fig. 7 | [`sweep::repeats_sweep`] | CI size vs repeats |
+//! | baseline table | [`vm_original`] | the VM "original dataset" |
+//!
+//! Start hours follow the paper's footnotes (all experiments ran on
+//! 2024-05-12 UTC between ~16:50 and ~20:40); seeds are distinct per
+//! experiment so FaaS noise differs across runs exactly like re-running
+//! on the real platform would.
+
+mod reproduce;
+pub mod sweep;
+
+pub use reproduce::reproduce_all;
+
+use crate::config::{ExperimentConfig, PlatformConfig, SutConfig, VmConfig};
+use crate::coordinator::{run_experiment, RunReport};
+use crate::stats::{Analyzer, SuiteAnalysis};
+use crate::sut::{generate, Suite, Version};
+use crate::vm::{run_vm_baseline, VmRunReport};
+use anyhow::Result;
+
+/// Shared experiment context.
+pub struct Workbench {
+    /// The generated SUT (fixed ground truth).
+    pub suite: Suite,
+    /// SUT generation config.
+    pub sut: SutConfig,
+    /// Platform model parameters.
+    pub platform: PlatformConfig,
+    /// Bootstrap analyzer (native or XLA backend).
+    pub analyzer: Analyzer,
+}
+
+impl Workbench {
+    /// Default workbench with the native analyzer.
+    pub fn native() -> Self {
+        let sut = SutConfig::default();
+        Workbench {
+            suite: generate(&sut),
+            sut,
+            platform: PlatformConfig::default(),
+            analyzer: Analyzer::native(),
+        }
+    }
+
+    /// Workbench with the XLA-artifact analyzer (requires
+    /// `make artifacts`).
+    pub fn xla() -> Result<Self> {
+        let sut = SutConfig::default();
+        Ok(Workbench {
+            suite: generate(&sut),
+            sut,
+            platform: PlatformConfig::default(),
+            analyzer: Analyzer::xla(&crate::artifacts_dir())?,
+        })
+    }
+
+    /// Workbench over a custom SUT (for small tests).
+    pub fn with_sut(sut: SutConfig) -> Self {
+        Workbench {
+            suite: generate(&sut),
+            sut,
+            platform: PlatformConfig::default(),
+            analyzer: Analyzer::native(),
+        }
+    }
+}
+
+/// One executed + analyzed experiment.
+pub struct ExperimentResult {
+    /// Raw run report (durations, cost, failures, measurements).
+    pub report: RunReport,
+    /// Statistical verdicts.
+    pub analysis: SuiteAnalysis,
+}
+
+fn run_and_analyze(
+    wb: &Workbench,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+) -> Result<ExperimentResult> {
+    let report = run_experiment(&wb.suite, &wb.sut, &wb.platform, exp, versions);
+    let analysis = wb
+        .analyzer
+        .analyze(&exp.label, &report.measurements, exp.seed ^ 0xA11A)?;
+    Ok(ExperimentResult { report, analysis })
+}
+
+/// §6.2.1 A/A experiment: both duet slots run v1; no change may be
+/// detected. Started ~17:35 UTC.
+pub fn aa(wb: &Workbench) -> Result<ExperimentResult> {
+    let exp = ExperimentConfig {
+        label: "aa".into(),
+        seed: 0xAA01,
+        start_hour_utc: 17.58,
+        ..ExperimentConfig::default()
+    };
+    run_and_analyze(wb, &exp, (Version::V1, Version::V1))
+}
+
+/// §6.2.2 baseline experiment: the paper's reference configuration.
+/// Started ~16:50 UTC.
+pub fn baseline(wb: &Workbench) -> Result<ExperimentResult> {
+    let exp = ExperimentConfig {
+        label: "baseline".into(),
+        seed: 0xBA5E,
+        start_hour_utc: 16.83,
+        ..ExperimentConfig::default()
+    };
+    run_and_analyze(wb, &exp, (Version::V1, Version::V2))
+}
+
+/// §6.2.3 replication: identical config, fresh seed. Started ~19:35 UTC.
+pub fn replication(wb: &Workbench) -> Result<ExperimentResult> {
+    let exp = ExperimentConfig {
+        label: "replication".into(),
+        seed: 0x5EC0_17D,
+        start_hour_utc: 19.58,
+        ..ExperimentConfig::default()
+    };
+    run_and_analyze(wb, &exp, (Version::V1, Version::V2))
+}
+
+/// §6.2.4 lower-memory experiment: 1024 MB functions (0.255 vCPU).
+/// Started ~19:10 UTC.
+pub fn lower_memory(wb: &Workbench) -> Result<ExperimentResult> {
+    let exp = ExperimentConfig {
+        label: "lower-memory".into(),
+        memory_mb: 1024,
+        seed: 0x10_24,
+        start_hour_utc: 19.17,
+        ..ExperimentConfig::default()
+    };
+    run_and_analyze(wb, &exp, (Version::V1, Version::V2))
+}
+
+/// §6.2.5 single-repeat experiment: 1 in-call repeat x 45 calls.
+/// Started ~20:40 UTC.
+pub fn single_repeat(wb: &Workbench) -> Result<ExperimentResult> {
+    let exp = ExperimentConfig {
+        label: "single-repeat".into(),
+        repeats_per_call: 1,
+        calls_per_benchmark: 45,
+        seed: 0x51_47,
+        start_hour_utc: 20.67,
+        ..ExperimentConfig::default()
+    };
+    run_and_analyze(wb, &exp, (Version::V1, Version::V2))
+}
+
+/// The VM baseline that generates the *original dataset* [23].
+pub struct VmOriginal {
+    /// Raw VM run (wall time, cost, measurements).
+    pub report: VmRunReport,
+    /// Analyzed verdicts ("original dataset").
+    pub analysis: SuiteAnalysis,
+}
+
+/// Run the Grambow-style VM experiment and analyze it.
+pub fn vm_original(wb: &Workbench) -> Result<VmOriginal> {
+    let cfg = VmConfig::default();
+    let report = run_vm_baseline(&wb.suite, &wb.sut, &cfg);
+    let analysis = wb
+        .analyzer
+        .analyze("original", &report.measurements, cfg.seed ^ 0xA11A)?;
+    Ok(VmOriginal { report, analysis })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{agreement, ChangeKind};
+
+    fn small_wb() -> Workbench {
+        Workbench::with_sut(SutConfig {
+            benchmark_count: 16,
+            true_changes: 5,
+            faas_incompatible: 2,
+            slow_setup: 1,
+            ..SutConfig::default()
+        })
+    }
+
+    #[test]
+    fn aa_detects_no_changes() {
+        let wb = small_wb();
+        let result = aa(&wb).unwrap();
+        assert_eq!(
+            result.analysis.change_count(),
+            0,
+            "A/A must not flag changes: {:?}",
+            result
+                .analysis
+                .verdicts
+                .iter()
+                .filter(|v| v.change.is_change())
+                .map(|v| (&v.name, v.output))
+                .collect::<Vec<_>>()
+        );
+        assert!(result.analysis.verdicts.len() >= 12);
+    }
+
+    #[test]
+    fn baseline_detects_large_true_changes() {
+        let wb = small_wb();
+        let result = baseline(&wb).unwrap();
+        // Every runnable benchmark with a >=10% true change must be found.
+        for b in &wb.suite.benchmarks {
+            if b.writes_fs || b.setup_s > 6.0 || b.benchmark_changed() {
+                continue;
+            }
+            let truth = b.true_change_pct(true);
+            if truth.abs() >= 10.0 {
+                let v = result.analysis.get(&b.name).expect("analyzed");
+                assert!(
+                    v.change.is_change(),
+                    "{} with true change {truth}% not detected: {:?}",
+                    b.name,
+                    v.output
+                );
+                let expected = if truth > 0.0 {
+                    ChangeKind::Regression
+                } else {
+                    ChangeKind::Improvement
+                };
+                assert_eq!(v.change, expected, "{}", b.name);
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_and_replication_mostly_agree() {
+        let wb = small_wb();
+        let a = baseline(&wb).unwrap();
+        let b = replication(&wb).unwrap();
+        let rep = agreement(&a.analysis, &b.analysis);
+        assert!(
+            rep.agreement_pct() >= 75.0,
+            "replication agreement {}%",
+            rep.agreement_pct()
+        );
+    }
+
+    #[test]
+    fn lower_memory_executes_fewer_benchmarks() {
+        let wb = small_wb();
+        let base = baseline(&wb).unwrap();
+        let low = lower_memory(&wb).unwrap();
+        assert!(
+            low.report.benchmarks_with_results(10) <= base.report.benchmarks_with_results(10)
+        );
+        // Lower memory costs less per GB-s but runs longer per call.
+        assert!(low.report.cost_usd < base.report.cost_usd);
+    }
+
+    #[test]
+    fn single_repeat_same_result_count_more_calls() {
+        let wb = small_wb();
+        let base = baseline(&wb).unwrap();
+        let single = single_repeat(&wb).unwrap();
+        assert_eq!(single.report.calls_total, 3 * base.report.calls_total);
+        // Same 45 results for clean benchmarks.
+        for (mb, ms) in base
+            .report
+            .measurements
+            .iter()
+            .zip(&single.report.measurements)
+        {
+            if mb.len() == 45 {
+                assert_eq!(ms.len(), 45, "{}", mb.name);
+            }
+        }
+    }
+
+    #[test]
+    fn vm_original_includes_fs_writers() {
+        let wb = small_wb();
+        let vm = vm_original(&wb).unwrap();
+        let fs_bench = wb.suite.benchmarks.iter().find(|b| b.writes_fs).unwrap();
+        assert!(vm.analysis.get(&fs_bench.name).is_some());
+    }
+
+    #[test]
+    fn faas_much_faster_than_vm() {
+        let wb = small_wb();
+        let base = baseline(&wb).unwrap();
+        let vm = vm_original(&wb).unwrap();
+        assert!(
+            base.report.wall_s < vm.report.wall_s / 4.0,
+            "FaaS {}s vs VM {}s",
+            base.report.wall_s,
+            vm.report.wall_s
+        );
+    }
+}

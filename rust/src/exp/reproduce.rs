@@ -1,0 +1,324 @@
+//! Full paper reproduction: run every experiment, compare, and render a
+//! markdown report with paper-vs-measured values for every table/figure.
+//!
+//! Used by `elastibench reproduce`, `examples/full_reproduction.rs`, and
+//! the bench targets; its output is the basis of EXPERIMENTS.md.
+
+use super::sweep::repeats_sweep;
+use super::{aa, baseline, lower_memory, replication, single_repeat, vm_original, Workbench};
+use crate::report::{
+    agreement_table, comparison_row, experiment_summary_table, paper_vs_measured_table,
+    render_cdf, render_curve, PaperRow, SummaryRow,
+};
+use crate::stats::{agreement, coverage, possible_changes};
+use crate::util::stats::percentile_sorted;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// Run the complete evaluation and render the reproduction report.
+pub fn reproduce_all(wb: &Workbench) -> Result<String> {
+    let mut out = String::new();
+    let w = &mut out;
+    writeln!(w, "# ElastiBench reproduction report\n").ok();
+    writeln!(
+        w,
+        "Backend: {} bootstrap engine. All platform time/cost figures are \
+         simulated (see DESIGN.md §1 for substitutions).\n",
+        if wb.analyzer.is_xla() { "XLA (AOT artifact)" } else { "native Rust" }
+    )
+    .ok();
+
+    // ---- Run everything. ----
+    let vm = vm_original(wb)?;
+    let r_aa = aa(wb)?;
+    let r_base = baseline(wb)?;
+    let r_repl = replication(wb)?;
+    let r_low = lower_memory(wb)?;
+    let r_single = single_repeat(wb)?;
+
+    // ---- Summary table (durations / costs / counts). ----
+    let mut rows = vec![SummaryRow {
+        label: "vm-original [23]".into(),
+        analyzed: vm.analysis.verdicts.len(),
+        changes: vm.analysis.change_count(),
+        wall_s: vm.report.wall_s,
+        cost_usd: vm.report.cost_usd,
+        cold_starts: 0,
+    }];
+    for r in [&r_aa, &r_base, &r_repl, &r_low, &r_single] {
+        rows.push(SummaryRow {
+            label: r.analysis.label.clone(),
+            analyzed: r.analysis.verdicts.len(),
+            changes: r.analysis.change_count(),
+            wall_s: r.report.wall_s,
+            cost_usd: r.report.cost_usd,
+            cold_starts: r.report.platform.cold_starts,
+        });
+    }
+    writeln!(w, "## Experiment summary (headline cost/duration table)\n").ok();
+    writeln!(w, "{}", experiment_summary_table(&rows)).ok();
+
+    // ---- Fig. 4: A/A CDF. ----
+    writeln!(w, "## Fig. 4 — A/A experiment CDF\n```text").ok();
+    write!(w, "{}", render_cdf(&r_aa.analysis.abs_diffs_pct(), 60, 14, "|diff| [%]")).ok();
+    writeln!(w, "```").ok();
+    let aa_diffs = sorted(r_aa.analysis.abs_diffs_pct());
+    writeln!(
+        w,
+        "A/A: {} analyzed, {} changes detected, median |diff| {:.3}%, max {:.1}%\n",
+        r_aa.analysis.verdicts.len(),
+        r_aa.analysis.change_count(),
+        percentile_sorted(&aa_diffs, 50.0),
+        aa_diffs.last().copied().unwrap_or(0.0)
+    )
+    .ok();
+
+    // ---- Fig. 5: baseline CDF. ----
+    writeln!(w, "## Fig. 5 — baseline experiment CDF\n```text").ok();
+    write!(w, "{}", render_cdf(&r_base.analysis.abs_diffs_pct(), 60, 14, "|diff| [%]")).ok();
+    writeln!(w, "```").ok();
+    let change_mags: Vec<f64> = sorted(
+        r_base
+            .analysis
+            .verdicts
+            .iter()
+            .filter(|v| v.change.is_change())
+            .map(|v| v.output.boot_median_pct.abs() as f64)
+            .collect(),
+    );
+    if !change_mags.is_empty() {
+        writeln!(
+            w,
+            "baseline: {} changes, median detected change {:.2}%, max {:.0}%\n",
+            change_mags.len(),
+            percentile_sorted(&change_mags, 50.0),
+            change_mags.last().unwrap()
+        )
+        .ok();
+    }
+
+    // ---- Agreement & coverage (§6.2.2-§6.2.5). ----
+    writeln!(w, "## Agreement with the original dataset and between runs\n").ok();
+    let mut cmp_rows = Vec::new();
+    for (a, b, la, lb) in [
+        (&r_base.analysis, &vm.analysis, "baseline", "original"),
+        (&r_repl.analysis, &vm.analysis, "replication", "original"),
+        (&r_low.analysis, &vm.analysis, "lower-memory", "original"),
+        (&r_single.analysis, &vm.analysis, "single-repeat", "original"),
+        (&r_repl.analysis, &r_base.analysis, "replication", "baseline"),
+        (&r_low.analysis, &r_base.analysis, "lower-memory", "baseline"),
+        (&r_single.analysis, &r_base.analysis, "single-repeat", "baseline"),
+    ] {
+        let rep = agreement(a, b);
+        let cov = coverage(a, b);
+        cmp_rows.push(comparison_row(la, lb, &rep, &cov));
+    }
+    writeln!(w, "{}", agreement_table(&cmp_rows)).ok();
+
+    let base_orig = agreement(&r_base.analysis, &vm.analysis);
+    writeln!(w, "Baseline-vs-original disagreements:").ok();
+    for d in &base_orig.disagreements {
+        writeln!(w, "- {:?}: {} ({:.2}%)", d.kind, d.name, d.max_abs_diff_pct).ok();
+    }
+    writeln!(w).ok();
+
+    // ---- Fig. 6: possible performance changes. ----
+    let pcs = possible_changes(&[
+        &r_base.analysis,
+        &r_repl.analysis,
+        &r_low.analysis,
+        &r_single.analysis,
+    ]);
+    let mags = sorted(pcs.iter().map(|(_, m)| *m).collect());
+    writeln!(w, "## Fig. 6 — possible performance changes\n").ok();
+    if mags.is_empty() {
+        writeln!(w, "(no inter-experiment disagreements)\n").ok();
+    } else {
+        writeln!(
+            w,
+            "{} disagreeing microbenchmarks; median {:.2}%, p75 {:.2}%, max {:.2}%\n",
+            mags.len(),
+            percentile_sorted(&mags, 50.0),
+            percentile_sorted(&mags, 75.0),
+            mags.last().unwrap()
+        )
+        .ok();
+        for (name, m) in &pcs {
+            writeln!(w, "- {name}: {m:.2}%").ok();
+        }
+        writeln!(w).ok();
+    }
+
+    // ---- Fig. 7: repeats sweep. ----
+    let sweep = repeats_sweep(wb, &vm.analysis)?;
+    writeln!(w, "## Fig. 7 — repetitions until CI size <= original\n```text").ok();
+    write!(w, "{}", render_curve(&sweep.curve, 60, 14, "results per benchmark")).ok();
+    writeln!(w, "```").ok();
+    writeln!(
+        w,
+        "parity at 45 results: {:.2}%; at {} results: {:.2}%\n",
+        sweep.pct_at_45,
+        sweep.curve.last().map(|&(k, _)| k).unwrap_or(0),
+        sweep.pct_at_full
+    )
+    .ok();
+
+    // ---- Paper-vs-measured table. ----
+    let cov_bo = coverage(&r_base.analysis, &vm.analysis);
+    let rep_rb = agreement(&r_repl.analysis, &r_base.analysis);
+    let paper_rows = vec![
+        PaperRow {
+            metric: "A/A: benchmarks executed".into(),
+            paper: "90 / 106".into(),
+            measured: format!("{} / {}", r_aa.analysis.verdicts.len(), wb.suite.len()),
+        },
+        PaperRow {
+            metric: "A/A: changes detected".into(),
+            paper: "0".into(),
+            measured: format!("{}", r_aa.analysis.change_count()),
+        },
+        PaperRow {
+            metric: "A/A: median / max |diff|".into(),
+            paper: "0.047% / 32%".into(),
+            measured: format!(
+                "{:.3}% / {:.0}%",
+                percentile_sorted(&aa_diffs, 50.0),
+                aa_diffs.last().copied().unwrap_or(0.0)
+            ),
+        },
+        PaperRow {
+            metric: "baseline: agreement with original".into(),
+            paper: "95.65%".into(),
+            measured: format!("{:.2}%", base_orig.agreement_pct()),
+        },
+        PaperRow {
+            metric: "baseline: opposite-direction disagreements".into(),
+            paper: "3 (BenchmarkAddMulti)".into(),
+            measured: format!(
+                "{} ({})",
+                base_orig
+                    .disagreements
+                    .iter()
+                    .filter(|d| d.kind == crate::stats::DisagreementKind::OppositeDirections)
+                    .count(),
+                base_orig
+                    .disagreements
+                    .iter()
+                    .filter(|d| d.kind == crate::stats::DisagreementKind::OppositeDirections)
+                    .map(|d| d.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        },
+        PaperRow {
+            metric: "baseline: one-sided coverage".into(),
+            paper: "86.96% / 52.17%".into(),
+            measured: format!(
+                "{:.2}% / {:.2}%",
+                cov_bo.one_sided_a_in_b_pct, cov_bo.one_sided_b_in_a_pct
+            ),
+        },
+        PaperRow {
+            metric: "baseline: two-sided coverage".into(),
+            paper: "50%".into(),
+            measured: format!("{:.2}%", cov_bo.two_sided_pct),
+        },
+        PaperRow {
+            metric: "replication vs baseline disagreement".into(),
+            paper: "10.87%".into(),
+            measured: format!("{:.2}%", 100.0 - rep_rb.agreement_pct()),
+        },
+        PaperRow {
+            metric: "Fig. 6: median / p75 / max possible change".into(),
+            paper: "1.58% / 3.06% / 7.6%".into(),
+            measured: if mags.is_empty() {
+                "—".into()
+            } else {
+                format!(
+                    "{:.2}% / {:.2}% / {:.2}%",
+                    percentile_sorted(&mags, 50.0),
+                    percentile_sorted(&mags, 75.0),
+                    mags.last().unwrap()
+                )
+            },
+        },
+        PaperRow {
+            metric: "Fig. 7: parity at 45 / full results".into(),
+            paper: "75.95% / 89.87%".into(),
+            measured: format!("{:.2}% / {:.2}%", sweep.pct_at_45, sweep.pct_at_full),
+        },
+        PaperRow {
+            metric: "suite duration FaaS vs VM".into(),
+            paper: "≤15 min vs ~4 h".into(),
+            measured: format!(
+                "{:.1} min vs {:.2} h",
+                r_base.report.wall_s / 60.0,
+                vm.report.wall_s / 3600.0
+            ),
+        },
+        PaperRow {
+            metric: "cost FaaS vs VM".into(),
+            paper: "$0.49–1.18 vs $1.18".into(),
+            measured: format!(
+                "${:.2}–{:.2} vs ${:.2}",
+                [
+                    r_aa.report.cost_usd,
+                    r_base.report.cost_usd,
+                    r_low.report.cost_usd,
+                    r_single.report.cost_usd
+                ]
+                .iter()
+                .cloned()
+                .fold(f64::MAX, f64::min),
+                [
+                    r_aa.report.cost_usd,
+                    r_base.report.cost_usd,
+                    r_low.report.cost_usd,
+                    r_single.report.cost_usd
+                ]
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max),
+                vm.report.cost_usd
+            ),
+        },
+    ];
+    writeln!(w, "## Paper vs measured\n").ok();
+    writeln!(w, "{}", paper_vs_measured_table(&paper_rows)).ok();
+    Ok(out)
+}
+
+fn sorted(mut v: Vec<f64>) -> Vec<f64> {
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN"));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SutConfig;
+
+    #[test]
+    fn reproduce_all_renders_report() {
+        let wb = Workbench::with_sut(SutConfig {
+            benchmark_count: 14,
+            true_changes: 4,
+            faas_incompatible: 2,
+            slow_setup: 1,
+            ..SutConfig::default()
+        });
+        let text = reproduce_all(&wb).unwrap();
+        for needle in [
+            "# ElastiBench reproduction report",
+            "## Fig. 4",
+            "## Fig. 5",
+            "## Fig. 6",
+            "## Fig. 7",
+            "## Paper vs measured",
+            "| baseline |",
+            "vm-original",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?}");
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! §6.2.7 / Fig. 7: repetitions necessary for a consistent CI size.
+//!
+//! Runs a long experiment (3 in-call repeats x 45 calls = 135 results per
+//! microbenchmark), then re-analyzes growing prefixes of the results and
+//! measures, for every benchmark whose final CI overlaps the original
+//! dataset's CI, how many results are needed until the ElastiBench CI is
+//! no wider than the original dataset's.
+//!
+//! This is the analysis-heavy experiment: ~45 prefix points x ~100
+//! benchmarks x B bootstrap resamples, all through the (XLA or native)
+//! bootstrap engine — the hot path profiled in EXPERIMENTS.md §Perf.
+
+use super::Workbench;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{run_experiment, RunReport};
+use crate::stats::{Measurements, SuiteAnalysis};
+use crate::sut::Version;
+use anyhow::Result;
+
+/// Per-benchmark sweep outcome.
+#[derive(Debug, Clone)]
+pub struct BenchSweep {
+    /// Benchmark name.
+    pub name: String,
+    /// Final (full-results) CI overlaps the original dataset's CI.
+    pub overlaps_original: bool,
+    /// Minimum number of results after which the CI size stays <= the
+    /// original CI size (`None` if never within the collected results).
+    pub needed_results: Option<usize>,
+}
+
+/// Fig. 7 sweep result.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    /// Per-benchmark details (only benchmarks present in both datasets).
+    pub per_benchmark: Vec<BenchSweep>,
+    /// Curve points `(results k, % of overlapping benchmarks whose CI is
+    /// small enough by k)` — the paper's Fig. 7 series.
+    pub curve: Vec<(usize, f64)>,
+    /// Fraction [%] achieving parity within 45 results (paper: 75.95%).
+    pub pct_at_45: f64,
+    /// Fraction [%] achieving parity within all results (paper: 89.87%).
+    pub pct_at_full: f64,
+    /// The long run that produced the measurements.
+    pub report: RunReport,
+}
+
+/// Number of in-call repeats for the sweep experiment.
+const SWEEP_REPEATS: usize = 3;
+/// Function calls per benchmark (=> 135 results, paper's "full 135").
+const SWEEP_CALLS: usize = 45;
+/// Smallest prefix analyzed (must clear the analyzer's min-results bar).
+const MIN_PREFIX: usize = 12;
+
+/// Run the sweep against the analyzed original dataset.
+pub fn repeats_sweep(wb: &Workbench, original: &SuiteAnalysis) -> Result<SweepResult> {
+    let exp = ExperimentConfig {
+        label: "repeats-sweep".into(),
+        repeats_per_call: SWEEP_REPEATS,
+        calls_per_benchmark: SWEEP_CALLS,
+        seed: 0x5EE9,
+        start_hour_utc: 21.5,
+        ..ExperimentConfig::default()
+    };
+    let report = run_experiment(&wb.suite, &wb.sut, &wb.platform, &exp, (Version::V1, Version::V2));
+    let full = exp.results_per_benchmark();
+    let analysis_seed = exp.seed ^ 0xA11A;
+
+    // Prefix analyses: k = MIN_PREFIX, +step, ..., full. One analyzer
+    // call per prefix length covers the whole suite (batched bootstrap).
+    let step = SWEEP_REPEATS;
+    let ks: Vec<usize> = (MIN_PREFIX..=full).step_by(step).collect();
+    let mut ci_sizes: Vec<Vec<Option<f64>>> = Vec::with_capacity(ks.len());
+    // Benchmarks eligible: enough results AND present in original.
+    let names: Vec<String> = report
+        .measurements
+        .iter()
+        .filter(|m| m.len() >= full.min(45) && original.get(&m.name).is_some())
+        .map(|m| m.name.clone())
+        .collect();
+
+    for &k in &ks {
+        let truncated: Vec<Measurements> = report
+            .measurements
+            .iter()
+            .filter(|m| names.iter().any(|n| n == &m.name))
+            .map(|m| Measurements {
+                name: m.name.clone(),
+                v1: m.v1.iter().copied().take(k).collect(),
+                v2: m.v2.iter().copied().take(k).collect(),
+            })
+            .collect();
+        let analysis = wb.analyzer.analyze("sweep", &truncated, analysis_seed)?;
+        ci_sizes.push(
+            names
+                .iter()
+                .map(|n| analysis.get(n).map(|v| v.output.ci_size_pct() as f64))
+                .collect(),
+        );
+    }
+
+    // Final-prefix analysis for the overlap test.
+    let last = ci_sizes.len() - 1;
+    let final_analysis = {
+        let truncated: Vec<Measurements> = report
+            .measurements
+            .iter()
+            .filter(|m| names.iter().any(|n| n == &m.name))
+            .map(|m| m.clone())
+            .collect();
+        wb.analyzer.analyze("sweep-final", &truncated, analysis_seed)?
+    };
+    let _ = last;
+
+    let mut per_benchmark = Vec::with_capacity(names.len());
+    for (bi, name) in names.iter().enumerate() {
+        let orig = original.get(name).expect("filtered to original");
+        let fin = final_analysis.get(name).expect("analyzed");
+        let overlaps = fin.output.ci_lo_pct <= orig.output.ci_hi_pct
+            && orig.output.ci_lo_pct <= fin.output.ci_hi_pct;
+        let target = orig.output.ci_size_pct() as f64;
+        // Needed = smallest k whose CI size is <= target (the CI size is
+        // noisy but shrinking ~1/sqrt(k); we take the first crossing, as
+        // the paper does with "necessary until the size ... is <=").
+        let needed = ks
+            .iter()
+            .enumerate()
+            .find(|(ki, _)| ci_sizes[*ki][bi].is_some_and(|s| s <= target))
+            .map(|(_, &k)| k);
+        per_benchmark.push(BenchSweep {
+            name: name.clone(),
+            overlaps_original: overlaps,
+            needed_results: needed,
+        });
+    }
+
+    let overlapping: Vec<&BenchSweep> = per_benchmark
+        .iter()
+        .filter(|b| b.overlaps_original)
+        .collect();
+    let denom = overlapping.len().max(1) as f64;
+    let pct_by = |k: usize| {
+        overlapping
+            .iter()
+            .filter(|b| b.needed_results.is_some_and(|n| n <= k))
+            .count() as f64
+            / denom
+            * 100.0
+    };
+    let curve: Vec<(usize, f64)> = ks.iter().map(|&k| (k, pct_by(k))).collect();
+    let pct_at_45 = pct_by(45);
+    let pct_at_full = pct_by(full);
+
+    Ok(SweepResult {
+        per_benchmark,
+        curve,
+        pct_at_45,
+        pct_at_full,
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SutConfig;
+    use crate::exp::{vm_original, Workbench};
+
+    #[test]
+    fn sweep_produces_rising_curve() {
+        let wb = Workbench::with_sut(SutConfig {
+            benchmark_count: 14,
+            true_changes: 4,
+            faas_incompatible: 2,
+            slow_setup: 1,
+            ..SutConfig::default()
+        });
+        let original = vm_original(&wb).unwrap();
+        let sweep = repeats_sweep(&wb, &original.analysis).unwrap();
+
+        assert!(!sweep.per_benchmark.is_empty());
+        assert!(!sweep.curve.is_empty());
+        // Curve is monotone non-decreasing by construction.
+        for w in sweep.curve.windows(2) {
+            assert!(w[0].1 <= w[1].1, "curve must not decrease: {w:?}");
+        }
+        // Full-results fraction >= 45-results fraction.
+        assert!(sweep.pct_at_full >= sweep.pct_at_45);
+        // Most benchmarks eventually overlap and reach parity: FaaS CI at
+        // 135 results should usually be no wider than the VM CI at 45.
+        assert!(
+            sweep.pct_at_full >= 50.0,
+            "parity at full repeats: {}%",
+            sweep.pct_at_full
+        );
+        // Curve values are percentages.
+        assert!(sweep.curve.iter().all(|&(_, p)| (0.0..=100.0).contains(&p)));
+    }
+}

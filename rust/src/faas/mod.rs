@@ -1,0 +1,10 @@
+//! FaaS platform simulator (AWS-Lambda-shaped substrate).
+//!
+//! See [`platform::FaasPlatform`] for the instance/scheduling/billing
+//! model and [`noise`] for the §3.1 performance-variability model shared
+//! with the VM simulator.
+
+pub mod noise;
+mod platform;
+
+pub use platform::{FaasPlatform, Instance, Placement, PlatformStats};

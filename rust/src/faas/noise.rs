@@ -1,0 +1,190 @@
+//! Cloud performance-noise model shared by the FaaS and VM simulators.
+//!
+//! Three multiplicative components act on every measurement and duration
+//! (paper §3.1 and The Night Shift [48]):
+//!
+//! * **instance heterogeneity** — a fixed per-instance factor drawn at
+//!   instance creation (CPU generation / placement), lognormal with
+//!   configurable sigma;
+//! * **diurnal drift** — a sinusoid over the UTC day shared by all
+//!   instances of a platform (up to ~15% peak-to-peak on FaaS);
+//! * **co-tenancy interference** — a per-instance AR(1) process updated
+//!   lazily in one-minute steps (neighbours come and go).
+//!
+//! All components are centred near 1.0 and multiply the *time per
+//! operation* (bigger factor = slower).
+
+use crate::des::Time;
+use crate::util::Rng;
+
+/// Noise parameters (a view over platform/VM config fields).
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseParams {
+    /// Std-dev of the per-instance lognormal factor.
+    pub instance_sigma: f64,
+    /// Diurnal amplitude (0.05 -> ±5%).
+    pub diurnal_amplitude: f64,
+    /// Hour-of-day (UTC) at simulation t = 0.
+    pub start_hour_utc: f64,
+    /// AR(1) innovation std-dev per minute step.
+    pub cotenancy_sigma: f64,
+    /// AR(1) mean-reversion rate per minute (0..1).
+    pub cotenancy_revert: f64,
+}
+
+/// Diurnal multiplier at virtual time `t` (shared platform-wide).
+///
+/// Peak slowness in the evening hours (~20:00 UTC), which is when [48]
+/// observed the strongest interference; amplitude from config.
+pub fn diurnal_factor(params: &NoiseParams, t: Time) -> f64 {
+    let hour = params.start_hour_utc + t / 3600.0;
+    let phase = (hour - 14.0) / 24.0 * std::f64::consts::TAU;
+    1.0 + params.diurnal_amplitude * phase.sin()
+}
+
+/// Per-instance noise state.
+#[derive(Debug, Clone)]
+pub struct EnvState {
+    /// Fixed heterogeneity factor of this instance.
+    pub perf_factor: f64,
+    /// Current AR(1) co-tenancy deviation (log-scale).
+    cotenancy_log: f64,
+    /// Last AR(1) update time.
+    updated_at: Time,
+}
+
+impl EnvState {
+    /// Draw a fresh instance at time `t`.
+    pub fn new(params: &NoiseParams, rng: &mut Rng, t: Time) -> Self {
+        EnvState {
+            perf_factor: rng.lognormal(0.0, params.instance_sigma),
+            cotenancy_log: rng.normal_ms(0.0, params.cotenancy_sigma * 2.0),
+            updated_at: t,
+        }
+    }
+
+    /// Total multiplicative factor at time `t`, advancing the AR(1)
+    /// process lazily in one-minute steps.
+    pub fn factor(&mut self, params: &NoiseParams, rng: &mut Rng, t: Time) -> f64 {
+        // Queries slightly in the past can happen when an invocation is
+        // cut short (crash/function timeout) after its run was simulated:
+        // serve them from the current AR(1) state without advancing.
+        if t < self.updated_at {
+            return self.perf_factor * diurnal_factor(params, t) * self.cotenancy_log.exp();
+        }
+        let mut minutes = ((t - self.updated_at) / 60.0) as usize;
+        // Cap the catch-up: after ~30 steps the AR(1) is fully mixed, so
+        // longer idle gaps can jump straight to stationarity.
+        if minutes > 30 {
+            self.cotenancy_log = rng.normal_ms(0.0, self.stationary_sigma(params));
+            minutes = 0;
+        }
+        for _ in 0..minutes {
+            self.cotenancy_log = (1.0 - params.cotenancy_revert) * self.cotenancy_log
+                + rng.normal_ms(0.0, params.cotenancy_sigma);
+        }
+        self.updated_at = self.updated_at.max(t - (t - self.updated_at) % 60.0);
+        if t > self.updated_at {
+            self.updated_at = t;
+        }
+        self.perf_factor * diurnal_factor(params, t) * self.cotenancy_log.exp()
+    }
+
+    fn stationary_sigma(&self, params: &NoiseParams) -> f64 {
+        // Stationary std-dev of AR(1): sigma / sqrt(1 - (1-r)^2).
+        let a = 1.0 - params.cotenancy_revert;
+        params.cotenancy_sigma / (1.0 - a * a).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> NoiseParams {
+        NoiseParams {
+            instance_sigma: 0.035,
+            diurnal_amplitude: 0.05,
+            start_hour_utc: 16.83,
+            cotenancy_sigma: 0.008,
+            cotenancy_revert: 0.25,
+        }
+    }
+
+    #[test]
+    fn diurnal_oscillates_with_configured_amplitude() {
+        let p = params();
+        let mut lo = f64::MAX;
+        let mut hi = f64::MIN;
+        for h in 0..240 {
+            let f = diurnal_factor(&p, h as f64 * 360.0);
+            lo = lo.min(f);
+            hi = hi.max(f);
+        }
+        assert!((hi - 1.05).abs() < 1e-3, "hi = {hi}");
+        assert!((lo - 0.95).abs() < 1e-3, "lo = {lo}");
+        // 24h periodicity.
+        let f0 = diurnal_factor(&p, 0.0);
+        let f24 = diurnal_factor(&p, 24.0 * 3600.0);
+        assert!((f0 - f24).abs() < 1e-12);
+    }
+
+    #[test]
+    fn instance_factors_spread() {
+        let p = params();
+        let mut rng = Rng::new(1);
+        let factors: Vec<f64> = (0..2000)
+            .map(|_| EnvState::new(&p, &mut rng, 0.0).perf_factor)
+            .collect();
+        let mean = factors.iter().sum::<f64>() / factors.len() as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean = {mean}");
+        let spread = factors.iter().cloned().fold(f64::MIN, f64::max)
+            / factors.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 1.1, "heterogeneity visible: {spread}");
+        assert!(spread < 2.0, "but bounded: {spread}");
+    }
+
+    #[test]
+    fn factor_is_positive_and_near_one() {
+        let p = params();
+        let mut rng = Rng::new(2);
+        let mut env = EnvState::new(&p, &mut rng, 0.0);
+        for i in 0..500 {
+            let f = env.factor(&p, &mut rng, i as f64 * 13.0);
+            assert!(f > 0.7 && f < 1.4, "factor {f} at step {i}");
+        }
+    }
+
+    #[test]
+    fn cotenancy_evolves_over_time() {
+        let p = params();
+        let mut rng = Rng::new(3);
+        let mut env = EnvState::new(&p, &mut rng, 0.0);
+        let f1 = env.factor(&p, &mut rng, 60.0);
+        let f2 = env.factor(&p, &mut rng, 600.0);
+        let f3 = env.factor(&p, &mut rng, 1200.0);
+        // AR(1) innovations make consecutive-minute factors differ.
+        assert!(f1 != f2 || f2 != f3);
+    }
+
+    #[test]
+    fn long_idle_jumps_to_stationarity() {
+        let p = params();
+        let mut rng = Rng::new(4);
+        let mut env = EnvState::new(&p, &mut rng, 0.0);
+        let _ = env.factor(&p, &mut rng, 10.0);
+        // A day of idling must not loop 1440 AR steps (lazy cap) and must
+        // still give a sane factor.
+        let f = env.factor(&p, &mut rng, 86_400.0);
+        assert!(f > 0.7 && f < 1.4, "{f}");
+    }
+
+    #[test]
+    fn zero_amplitude_disables_diurnal() {
+        let mut p = params();
+        p.diurnal_amplitude = 0.0;
+        for h in 0..48 {
+            assert_eq!(diurnal_factor(&p, h as f64 * 1800.0), 1.0);
+        }
+    }
+}

@@ -1,0 +1,395 @@
+//! The FaaS platform simulator: instance pool, scheduling, cold starts,
+//! keepalive reaping, billing, and failure injection.
+//!
+//! Models the AWS-Lambda-shaped behaviour the paper depends on (§3–§5):
+//!
+//! * invocations are routed to an idle warm instance when one exists,
+//!   otherwise a new instance cold-starts (latency grows with image size;
+//!   the first cold starts after a deploy are slower until the container
+//!   loader has cached the image chunks — Brooker et al. [8]);
+//! * instances are reaped after `keepalive_s` idle seconds and live at
+//!   most as long as the platform allows;
+//! * memory size determines the vCPU share via the paper-calibrated
+//!   power-law curve ([`crate::config::PlatformConfig::vcpus`]);
+//! * billing follows Lambda: GB-seconds of execution plus a per-request
+//!   fee (cold-start init is not billed, matching managed runtimes);
+//! * optional crash injection for failure testing.
+
+use super::noise::{EnvState, NoiseParams};
+use crate::config::PlatformConfig;
+use crate::des::Time;
+use crate::util::Rng;
+
+/// One function instance (a MicroVM in Lambda terms).
+#[derive(Debug)]
+pub struct Instance {
+    /// Stable id (creation order).
+    pub id: u64,
+    /// Noise state (heterogeneity + co-tenancy).
+    pub env: EnvState,
+    /// Busy with an invocation until this time (f64::NEG_INFINITY = idle).
+    busy_until: Time,
+    /// Last time the instance went idle (keepalive reaping).
+    idle_since: Time,
+    /// Completed invocations on this instance.
+    pub invocations: u64,
+    /// Whether the writable instance cache is already populated (the
+    /// first invocation on an instance pays the cache-warmup penalty,
+    /// paper §5 "Instance Cache").
+    pub cache_warm: bool,
+}
+
+/// Result of routing an invocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Placement {
+    /// Index into the platform's instance table.
+    pub instance: usize,
+    /// When the function handler actually starts (after dispatch or cold
+    /// start).
+    pub start_at: Time,
+    /// Whether this invocation cold-started a new instance.
+    pub cold: bool,
+}
+
+/// Aggregate platform metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PlatformStats {
+    /// Total invocations routed.
+    pub invocations: u64,
+    /// Cold starts among them.
+    pub cold_starts: u64,
+    /// Instances created over the platform lifetime.
+    pub instances_created: u64,
+    /// Instances reaped after keepalive expiry.
+    pub instances_reaped: u64,
+    /// Billed GB-seconds.
+    pub billed_gb_s: f64,
+    /// Injected crashes.
+    pub crashes: u64,
+}
+
+/// The deployed-function platform state.
+pub struct FaasPlatform {
+    cfg: PlatformConfig,
+    noise: NoiseParams,
+    rng: Rng,
+    instances: Vec<Instance>,
+    next_id: u64,
+    /// Image size [GB] of the deployed function.
+    image_gb: f64,
+    /// Memory configuration [MB].
+    memory_mb: u64,
+    /// Cold starts seen since deploy (drives the loader-cache model).
+    cold_seen: usize,
+    stats: PlatformStats,
+}
+
+impl FaasPlatform {
+    /// Deploy a function image (size in MB) with the given memory config.
+    pub fn deploy(
+        cfg: &PlatformConfig,
+        image_mb: f64,
+        memory_mb: u64,
+        start_hour_utc: f64,
+        seed: u64,
+    ) -> Self {
+        let noise = NoiseParams {
+            instance_sigma: cfg.instance_sigma,
+            diurnal_amplitude: cfg.diurnal_amplitude,
+            start_hour_utc,
+            cotenancy_sigma: cfg.cotenancy_sigma,
+            cotenancy_revert: cfg.cotenancy_revert,
+        };
+        FaasPlatform {
+            cfg: cfg.clone(),
+            noise,
+            rng: Rng::new(seed).fork(0xFAA5),
+            instances: Vec::new(),
+            next_id: 0,
+            image_gb: image_mb / 1024.0,
+            memory_mb,
+            cold_seen: 0,
+            stats: PlatformStats::default(),
+        }
+    }
+
+    /// vCPU share of each instance under the current memory config.
+    pub fn vcpus(&self) -> f64 {
+        self.cfg.vcpus(self.memory_mb)
+    }
+
+    /// Route an invocation arriving at `t`: reuse an idle warm instance
+    /// or cold-start a new one. Returns `None` when the account
+    /// concurrency limit is exhausted (caller should retry later).
+    pub fn acquire(&mut self, t: Time) -> Option<Placement> {
+        self.reap(t);
+        self.stats.invocations += 1;
+        // Prefer the warm instance that has been idle the longest (FIFO
+        // reuse, approximating Lambda's behaviour).
+        let candidate = self
+            .instances
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.busy_until <= t)
+            .min_by(|(_, a), (_, b)| {
+                a.idle_since
+                    .partial_cmp(&b.idle_since)
+                    .expect("NaN idle time")
+            })
+            .map(|(idx, _)| idx);
+        if let Some(idx) = candidate {
+            let inst = &mut self.instances[idx];
+            inst.busy_until = f64::INFINITY; // held until release()
+            return Some(Placement {
+                instance: idx,
+                start_at: t + self.cfg.warm_dispatch_s,
+                cold: false,
+            });
+        }
+        let busy = self.instances.iter().filter(|i| i.busy_until > t).count();
+        if busy >= self.cfg.concurrency_limit {
+            return None;
+        }
+        // Cold start: new instance.
+        let cold_latency = self.cold_start_latency();
+        self.cold_seen += 1;
+        self.stats.cold_starts += 1;
+        self.stats.instances_created += 1;
+        let inst = Instance {
+            id: self.next_id,
+            env: EnvState::new(&self.noise, &mut self.rng, t),
+            busy_until: f64::INFINITY,
+            idle_since: t,
+            invocations: 0,
+            cache_warm: false,
+        };
+        self.next_id += 1;
+        self.instances.push(inst);
+        Some(Placement {
+            instance: self.instances.len() - 1,
+            start_at: t + cold_latency,
+            cold: true,
+        })
+    }
+
+    /// Cold-start latency under the current loader-cache state: the first
+    /// `uncached_cold_count` cold starts after deploy pull uncached image
+    /// chunks and take `uncached_cold_multiplier` times longer.
+    fn cold_start_latency(&mut self) -> f64 {
+        let base = self.cfg.cold_start_base_s + self.cfg.cold_start_per_gb_s * self.image_gb;
+        let mult = if self.cold_seen < self.cfg.uncached_cold_count {
+            self.cfg.uncached_cold_multiplier
+        } else {
+            1.0
+        };
+        base * mult * self.rng.lognormal(0.0, 0.15)
+    }
+
+    /// Finish an invocation on `instance` at time `t_end`, billing
+    /// `billed_s` seconds of execution.
+    pub fn release(&mut self, instance: usize, t_end: Time, billed_s: f64) {
+        let mem_gb = self.memory_mb as f64 / 1024.0;
+        self.stats.billed_gb_s += billed_s * mem_gb;
+        let inst = &mut self.instances[instance];
+        inst.busy_until = f64::NEG_INFINITY;
+        inst.idle_since = t_end;
+        inst.invocations += 1;
+        inst.cache_warm = true;
+    }
+
+    /// Environment factor of an instance at time `t` (advances its AR(1)
+    /// co-tenancy state).
+    pub fn env_factor(&mut self, instance: usize, t: Time) -> f64 {
+        self.instances[instance]
+            .env
+            .factor(&self.noise, &mut self.rng, t)
+    }
+
+    /// Whether the instance's writable cache is already populated.
+    pub fn cache_warm(&self, instance: usize) -> bool {
+        self.instances[instance].cache_warm
+    }
+
+    /// Roll the crash die for an invocation (failure injection).
+    pub fn maybe_crash(&mut self) -> bool {
+        let crash = self.cfg.crash_probability > 0.0 && self.rng.chance(self.cfg.crash_probability);
+        if crash {
+            self.stats.crashes += 1;
+        }
+        crash
+    }
+
+    /// Total cost so far: GB-seconds plus per-request fees.
+    pub fn cost_usd(&self) -> f64 {
+        self.stats.billed_gb_s * self.cfg.usd_per_gb_s
+            + self.stats.invocations as f64 * self.cfg.usd_per_request
+    }
+
+    /// Aggregate metrics snapshot.
+    pub fn stats(&self) -> PlatformStats {
+        self.stats
+    }
+
+    /// Live (unreaped) instance count.
+    pub fn instance_count(&self) -> usize {
+        self.instances.len()
+    }
+
+    /// Drop instances idle past the keepalive window.
+    fn reap(&mut self, t: Time) {
+        let keepalive = self.cfg.keepalive_s;
+        let before = self.instances.len();
+        self.instances
+            .retain(|i| i.busy_until > t || t - i.idle_since <= keepalive);
+        self.stats.instances_reaped += (before - self.instances.len()) as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn platform() -> FaasPlatform {
+        FaasPlatform::deploy(&PlatformConfig::default(), 1700.0, 2048, 16.83, 42)
+    }
+
+    #[test]
+    fn first_invocation_cold_starts() {
+        let mut p = platform();
+        let placement = p.acquire(0.0).unwrap();
+        assert!(placement.cold);
+        assert!(placement.start_at > 1.0, "cold start takes seconds: {placement:?}");
+        assert_eq!(p.stats().cold_starts, 1);
+    }
+
+    #[test]
+    fn warm_reuse_after_release() {
+        let mut p = platform();
+        let a = p.acquire(0.0).unwrap();
+        p.release(a.instance, 10.0, 9.0);
+        let b = p.acquire(20.0).unwrap();
+        assert!(!b.cold);
+        assert_eq!(b.instance, a.instance);
+        assert!(b.start_at - 20.0 < 0.1, "warm dispatch is fast");
+        assert_eq!(p.stats().cold_starts, 1);
+    }
+
+    #[test]
+    fn busy_instance_not_reused() {
+        let mut p = platform();
+        let a = p.acquire(0.0).unwrap();
+        let b = p.acquire(1.0).unwrap();
+        assert_ne!(a.instance, b.instance);
+        assert!(b.cold);
+    }
+
+    #[test]
+    fn parallel_burst_creates_many_instances() {
+        let mut p = platform();
+        let placements: Vec<_> = (0..150).map(|i| p.acquire(i as f64 * 0.01).unwrap()).collect();
+        assert!(placements.iter().all(|pl| pl.cold));
+        assert_eq!(p.instance_count(), 150);
+    }
+
+    #[test]
+    fn keepalive_reaps_idle_instances() {
+        let mut p = platform();
+        let a = p.acquire(0.0).unwrap();
+        p.release(a.instance, 5.0, 4.0);
+        // Past keepalive the instance is gone; next acquire cold-starts.
+        let b = p.acquire(5.0 + 601.0).unwrap();
+        assert!(b.cold);
+        assert_eq!(p.stats().instances_reaped, 1);
+    }
+
+    #[test]
+    fn uncached_cold_starts_are_slower() {
+        let mut p = platform();
+        let mut early = Vec::new();
+        for i in 0..40 {
+            let pl = p.acquire(i as f64 * 0.01).unwrap();
+            early.push(pl.start_at - i as f64 * 0.01);
+        }
+        // Leave them busy; later cold starts are cached.
+        let pl = p.acquire(100.0).unwrap();
+        let late = pl.start_at - 100.0;
+        let early_mean = early.iter().sum::<f64>() / early.len() as f64;
+        assert!(
+            early_mean > 2.0 * late,
+            "uncached {early_mean:.2}s vs cached {late:.2}s"
+        );
+    }
+
+    #[test]
+    fn billing_accumulates() {
+        let mut p = platform();
+        let a = p.acquire(0.0).unwrap();
+        p.release(a.instance, 10.0, 9.0);
+        // 9 s at 2 GB = 18 GB-s.
+        assert!((p.stats().billed_gb_s - 18.0).abs() < 1e-9);
+        let cost = p.cost_usd();
+        let expect = 18.0 * PlatformConfig::default().usd_per_gb_s
+            + 1.0 * PlatformConfig::default().usd_per_request;
+        assert!((cost - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrency_limit_enforced() {
+        let cfg = PlatformConfig {
+            concurrency_limit: 3,
+            ..PlatformConfig::default()
+        };
+        let mut p = FaasPlatform::deploy(&cfg, 1700.0, 2048, 12.0, 1);
+        for i in 0..3 {
+            assert!(p.acquire(i as f64).is_some());
+        }
+        assert!(p.acquire(3.0).is_none(), "limit reached");
+    }
+
+    #[test]
+    fn env_factor_reasonable() {
+        let mut p = platform();
+        let a = p.acquire(0.0).unwrap();
+        for i in 0..50 {
+            let f = p.env_factor(a.instance, a.start_at + i as f64);
+            assert!(f > 0.7 && f < 1.4, "{f}");
+        }
+    }
+
+    #[test]
+    fn cache_warm_tracking() {
+        let mut p = platform();
+        let a = p.acquire(0.0).unwrap();
+        assert!(!p.cache_warm(a.instance));
+        p.release(a.instance, 8.0, 7.0);
+        let b = p.acquire(9.0).unwrap();
+        assert_eq!(a.instance, b.instance);
+        assert!(p.cache_warm(b.instance));
+    }
+
+    #[test]
+    fn crash_injection_rate() {
+        let cfg = PlatformConfig {
+            crash_probability: 0.3,
+            ..PlatformConfig::default()
+        };
+        let mut p = FaasPlatform::deploy(&cfg, 1700.0, 2048, 12.0, 7);
+        let crashes = (0..10_000).filter(|_| p.maybe_crash()).count();
+        assert!((crashes as f64 / 10_000.0 - 0.3).abs() < 0.02);
+        assert_eq!(p.stats().crashes, crashes as u64);
+    }
+
+    #[test]
+    fn no_crashes_by_default() {
+        let mut p = platform();
+        assert!((0..1000).all(|_| !p.maybe_crash()));
+    }
+
+    #[test]
+    fn lower_memory_means_fewer_vcpus() {
+        let p2048 = platform();
+        let p1024 = FaasPlatform::deploy(&PlatformConfig::default(), 1700.0, 1024, 16.83, 42);
+        assert!(p2048.vcpus() > 1.0);
+        assert!(p1024.vcpus() < 0.3);
+    }
+}

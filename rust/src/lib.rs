@@ -1,0 +1,47 @@
+//! # ElastiBench (reproduction)
+//!
+//! A full reproduction of *"ElastiBench: Scalable Continuous Benchmarking
+//! on Cloud FaaS Platforms"* (Schirmer, Pfandzelter, Bermbach, 2024) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the ElastiBench coordinator (planner, function
+//!   image model, bounded-parallel invoker, collector), the simulated
+//!   substrates it runs against (FaaS platform, VM fleet, synthetic SUT,
+//!   in-instance benchrunner) and the statistics/reporting pipeline.
+//! * **L2/L1 (`python/compile/`)** — the bootstrap-CI analysis graph and
+//!   its Pallas kernel, AOT-lowered to `artifacts/*.hlo.txt` at build time
+//!   and executed from Rust via PJRT ([`runtime`]). Python never runs on
+//!   the experiment path.
+//!
+//! See `DESIGN.md` for the system inventory and the paper→module map, and
+//! `EXPERIMENTS.md` for reproduction results.
+
+pub mod benchexec;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod des;
+pub mod exp;
+pub mod faas;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod sut;
+pub mod testkit;
+pub mod util;
+pub mod vm;
+
+/// Crate version (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Default location of the AOT artifacts directory, resolved relative to
+/// the crate root at compile time (overridable via `ELASTIBENCH_ARTIFACTS`
+/// at run time).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("ELASTIBENCH_ARTIFACTS") {
+        return dir.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

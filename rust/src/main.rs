@@ -1,0 +1,20 @@
+//! `elastibench` CLI entrypoint (L3 leader).
+
+use elastibench::cli;
+
+fn main() {
+    let args = match cli::Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}\n\n{}", cli::HELP);
+            std::process::exit(2);
+        }
+    };
+    match cli::run(args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

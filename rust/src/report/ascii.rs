@@ -1,0 +1,114 @@
+//! ASCII plots for terminal reports (the paper's figures, rendered flat).
+
+/// Render an empirical CDF of `values` (e.g. absolute performance
+/// differences in percent) as an ASCII plot of `width` x `height` chars.
+///
+/// Matches the role of the paper's Fig. 4/5: x = value, y = fraction of
+/// microbenchmarks with a difference <= x.
+pub fn render_cdf(values: &[f64], width: usize, height: usize, x_label: &str) -> String {
+    if values.is_empty() {
+        return "(no data)\n".to_string();
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in CDF"));
+    let x_max = sorted.last().copied().unwrap().max(1e-12);
+    let n = sorted.len();
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (i, &v) in sorted.iter().enumerate() {
+        let frac = (i + 1) as f64 / n as f64;
+        let col = ((v / x_max) * (width - 1) as f64).round() as usize;
+        let row = ((1.0 - frac) * (height - 1) as f64).round() as usize;
+        grid[row.min(height - 1)][col.min(width - 1)] = '*';
+    }
+    // Fill each column up to the highest star for a solid step look.
+    for col in 0..width {
+        if let Some(top) = (0..height).find(|&r| grid[r][col] == '*') {
+            for row in grid.iter_mut().skip(top + 1) {
+                if row[col] == ' ' {
+                    row[col] = '.';
+                }
+            }
+        }
+    }
+
+    let mut out = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        let frac = 1.0 - r as f64 / (height - 1) as f64;
+        out.push_str(&format!("{:>5.0}% |", frac * 100.0));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("       +{}\n", "-".repeat(width)));
+    out.push_str(&format!(
+        "        0{:>w$.2}  ({x_label})\n",
+        x_max,
+        w = width - 1
+    ));
+    out
+}
+
+/// Render an x/y curve (e.g. Fig. 7: repetitions -> % of benchmarks with
+/// CI size <= original) as an ASCII plot.
+pub fn render_curve(points: &[(usize, f64)], width: usize, height: usize, x_label: &str) -> String {
+    if points.is_empty() {
+        return "(no data)\n".to_string();
+    }
+    let x_max = points.iter().map(|&(x, _)| x).max().unwrap().max(1) as f64;
+    let y_max = 100.0;
+    let mut grid = vec![vec![' '; width]; height];
+    for &(x, y) in points {
+        let col = ((x as f64 / x_max) * (width - 1) as f64).round() as usize;
+        let row = ((1.0 - y / y_max) * (height - 1) as f64).round() as usize;
+        grid[row.min(height - 1)][col.min(width - 1)] = '*';
+    }
+    let mut out = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        let frac = (1.0 - r as f64 / (height - 1) as f64) * y_max;
+        out.push_str(&format!("{frac:>5.0}% |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("       +{}\n", "-".repeat(width)));
+    out.push_str(&format!(
+        "        0{:>w$}  ({x_label})\n",
+        x_max as usize,
+        w = width - 1
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_renders_monotone_steps() {
+        let values: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        let plot = render_cdf(&values, 40, 10, "diff [%]");
+        assert!(plot.contains('*'));
+        assert!(plot.contains("100%"));
+        assert!(plot.contains("diff [%]"));
+        assert_eq!(plot.lines().count(), 12);
+    }
+
+    #[test]
+    fn cdf_handles_empty_and_single() {
+        assert_eq!(render_cdf(&[], 10, 5, "x"), "(no data)\n");
+        let plot = render_cdf(&[3.0], 20, 5, "x");
+        assert!(plot.contains('*'));
+    }
+
+    #[test]
+    fn curve_renders() {
+        let pts: Vec<(usize, f64)> = (1..=45).map(|k| (k * 3, (k as f64 / 45.0) * 90.0)).collect();
+        let plot = render_curve(&pts, 45, 12, "results");
+        assert!(plot.contains('*'));
+        assert!(plot.contains("135"));
+    }
+
+    #[test]
+    fn curve_handles_empty() {
+        assert_eq!(render_curve(&[], 10, 5, "x"), "(no data)\n");
+    }
+}

@@ -1,0 +1,137 @@
+//! Machine-readable exports (CSV + JSON) of suite analyses.
+
+use crate::stats::SuiteAnalysis;
+use crate::util::json::{obj, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// CSV export: one row per analyzed benchmark.
+pub fn analysis_to_csv(analysis: &SuiteAnalysis) -> String {
+    let mut out = String::from(
+        "benchmark,n_results,ci_lo_pct,boot_median_pct,ci_hi_pct,median_v1,median_v2,\
+         point_pct,change\n",
+    );
+    for v in &analysis.verdicts {
+        let o = v.output;
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{:?}\n",
+            v.name,
+            v.n_results,
+            o.ci_lo_pct,
+            o.boot_median_pct,
+            o.ci_hi_pct,
+            o.median_v1,
+            o.median_v2,
+            o.point_pct,
+            v.change
+        ));
+    }
+    out
+}
+
+/// JSON export of an analysis (verdicts + exclusions).
+pub fn analysis_to_json(analysis: &SuiteAnalysis) -> Json {
+    let verdicts: Vec<Json> = analysis
+        .verdicts
+        .iter()
+        .map(|v| {
+            let o = v.output;
+            obj(vec![
+                ("benchmark", Json::Str(v.name.clone())),
+                ("n_results", Json::Num(v.n_results as f64)),
+                ("ci_lo_pct", Json::Num(o.ci_lo_pct as f64)),
+                ("boot_median_pct", Json::Num(o.boot_median_pct as f64)),
+                ("ci_hi_pct", Json::Num(o.ci_hi_pct as f64)),
+                ("median_v1", Json::Num(o.median_v1 as f64)),
+                ("median_v2", Json::Num(o.median_v2 as f64)),
+                ("point_pct", Json::Num(o.point_pct as f64)),
+                ("change", Json::Str(format!("{:?}", v.change))),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("label", Json::Str(analysis.label.clone())),
+        ("verdicts", Json::Arr(verdicts)),
+        (
+            "excluded",
+            Json::Arr(
+                analysis
+                    .excluded
+                    .iter()
+                    .map(|n| Json::Str(n.clone()))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write text to a file, creating parent directories.
+pub fn write_text(path: &Path, text: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("mkdir -p {}", parent.display()))?;
+    }
+    std::fs::write(path, text).with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::AnalysisOutput;
+    use crate::stats::{BenchmarkVerdict, ChangeKind};
+    use crate::util::json::parse;
+
+    fn sample() -> SuiteAnalysis {
+        let output = AnalysisOutput {
+            ci_lo_pct: 1.0,
+            boot_median_pct: 2.0,
+            ci_hi_pct: 3.0,
+            median_v1: 100.0,
+            median_v2: 102.0,
+            point_pct: 2.0,
+        };
+        SuiteAnalysis {
+            label: "test".into(),
+            verdicts: vec![BenchmarkVerdict {
+                name: "BenchmarkX".into(),
+                n_results: 45,
+                change: ChangeKind::from_output(&output),
+                output,
+            }],
+            excluded: vec!["BenchmarkY".into()],
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let csv = analysis_to_csv(&sample());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("benchmark,"));
+        assert!(lines[1].starts_with("BenchmarkX,45,1,2,3,"));
+        assert!(lines[1].ends_with("Regression"));
+    }
+
+    #[test]
+    fn json_parses_back() {
+        let j = analysis_to_json(&sample());
+        let parsed = parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str(), Some("test"));
+        let verdicts = parsed.get("verdicts").unwrap().as_arr().unwrap();
+        assert_eq!(verdicts.len(), 1);
+        assert_eq!(
+            verdicts[0].get("change").unwrap().as_str(),
+            Some("Regression")
+        );
+    }
+
+    #[test]
+    fn write_text_creates_dirs() {
+        let dir = std::env::temp_dir().join("elastibench_test_export");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("sub/report.csv");
+        write_text(&path, "hello").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "hello");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,16 @@
+//! Report rendering: ASCII figures, markdown tables, CSV/JSON exports.
+//!
+//! Regenerates the paper's presentation artifacts from analysis results:
+//! Fig. 4/5-style CDFs, the Fig. 7 repeats curve, experiment summary and
+//! agreement tables, and machine-readable exports for downstream tooling.
+
+mod ascii;
+mod export;
+mod tables;
+
+pub use ascii::{render_cdf, render_curve};
+pub use export::{analysis_to_csv, analysis_to_json, write_text};
+pub use tables::{
+    agreement_table, comparison_row, experiment_summary_table, fmt_duration,
+    paper_vs_measured_table, PaperRow, SummaryRow,
+};

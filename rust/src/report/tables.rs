@@ -1,0 +1,160 @@
+//! Markdown table builders for experiment reports.
+
+use crate::stats::{AgreementReport, Coverage};
+
+/// One row of the experiment summary (cost/duration table).
+#[derive(Debug, Clone)]
+pub struct SummaryRow {
+    /// Experiment label.
+    pub label: String,
+    /// Benchmarks analyzed (>= min results).
+    pub analyzed: usize,
+    /// Detected performance changes.
+    pub changes: usize,
+    /// End-to-end wall time [s].
+    pub wall_s: f64,
+    /// Cost [USD].
+    pub cost_usd: f64,
+    /// Cold starts (0 for VM rows).
+    pub cold_starts: u64,
+}
+
+/// Render the summary table (the paper's per-experiment numbers).
+pub fn experiment_summary_table(rows: &[SummaryRow]) -> String {
+    let mut out = String::from(
+        "| experiment | analyzed | changes | duration | cost | cold starts |\n\
+         |---|---:|---:|---:|---:|---:|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | ${:.2} | {} |\n",
+            r.label,
+            r.analyzed,
+            r.changes,
+            fmt_duration(r.wall_s),
+            r.cost_usd,
+            r.cold_starts
+        ));
+    }
+    out
+}
+
+/// Render an agreement + coverage row between two experiments.
+pub fn comparison_row(a: &str, b: &str, rep: &AgreementReport, cov: &Coverage) -> String {
+    format!(
+        "| {a} vs {b} | {} | {:.2}% | {} | {:.2}% / {:.2}% | {:.2}% | {} |\n",
+        rep.common,
+        rep.agreement_pct(),
+        rep.disagreements.len(),
+        cov.one_sided_a_in_b_pct,
+        cov.one_sided_b_in_a_pct,
+        cov.two_sided_pct,
+        rep.max_possible_change_pct()
+            .map(|m| format!("{m:.2}%"))
+            .unwrap_or_else(|| "—".into()),
+    )
+}
+
+/// Header for [`comparison_row`] tables.
+pub fn agreement_table(rows: &[String]) -> String {
+    let mut out = String::from(
+        "| pair | common | agreement | disagreements | one-sided cov (a-in-b / b-in-a) \
+         | two-sided cov | max possible change |\n|---|---:|---:|---:|---:|---:|---:|\n",
+    );
+    for r in rows {
+        out.push_str(r);
+    }
+    out
+}
+
+/// One paper-vs-measured row for EXPERIMENTS.md.
+#[derive(Debug, Clone)]
+pub struct PaperRow {
+    /// Metric name (e.g. "baseline agreement").
+    pub metric: String,
+    /// Paper-reported value (free text).
+    pub paper: String,
+    /// Our measured value (free text).
+    pub measured: String,
+}
+
+/// Render the paper-vs-measured table.
+pub fn paper_vs_measured_table(rows: &[PaperRow]) -> String {
+    let mut out = String::from("| metric | paper | measured |\n|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!("| {} | {} | {} |\n", r.metric, r.paper, r.measured));
+    }
+    out
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds >= 3600.0 {
+        format!("{:.2} h", seconds / 3600.0)
+    } else if seconds >= 60.0 {
+        format!("{:.1} min", seconds / 60.0)
+    } else {
+        format!("{seconds:.1} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{Coverage, Disagreement, DisagreementKind};
+
+    #[test]
+    fn summary_table_renders() {
+        let rows = vec![SummaryRow {
+            label: "baseline".into(),
+            analyzed: 90,
+            changes: 19,
+            wall_s: 400.0,
+            cost_usd: 0.78,
+            cold_starts: 150,
+        }];
+        let t = experiment_summary_table(&rows);
+        assert!(t.contains("| baseline | 90 | 19 | 6.7 min | $0.78 | 150 |"));
+    }
+
+    #[test]
+    fn durations_format() {
+        assert_eq!(fmt_duration(30.0), "30.0 s");
+        assert_eq!(fmt_duration(90.0), "1.5 min");
+        assert_eq!(fmt_duration(7200.0), "2.00 h");
+    }
+
+    #[test]
+    fn comparison_row_renders() {
+        let rep = AgreementReport {
+            common: 90,
+            agreeing: 86,
+            disagreements: vec![Disagreement {
+                name: "x".into(),
+                kind: DisagreementKind::OnlyFirstDetects,
+                max_abs_diff_pct: 4.2,
+            }],
+        };
+        let cov = Coverage {
+            both_change: 20,
+            one_sided_a_in_b_pct: 85.0,
+            one_sided_b_in_a_pct: 50.0,
+            two_sided_pct: 50.0,
+        };
+        let row = comparison_row("base", "orig", &rep, &cov);
+        assert!(row.contains("95.56%"));
+        assert!(row.contains("4.20%"));
+        let table = agreement_table(&[row]);
+        assert!(table.contains("| pair |"));
+    }
+
+    #[test]
+    fn paper_table_renders() {
+        let t = paper_vs_measured_table(&[PaperRow {
+            metric: "agreement".into(),
+            paper: "95.65%".into(),
+            measured: "94.4%".into(),
+        }]);
+        assert!(t.contains("| agreement | 95.65% | 94.4% |"));
+    }
+}

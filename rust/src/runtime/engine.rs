@@ -1,0 +1,182 @@
+//! The compiled bootstrap-analysis executable and its host-side interface.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Number of output columns per microbenchmark; must match
+/// `python/compile/kernels/bootstrap.py::OUT_COLS`.
+pub const OUT_COLS: usize = 6;
+
+/// One microbenchmark's analysis result, decoded from the artifact output.
+///
+/// All `*_pct` fields are relative differences of version 2 vs version 1
+/// in percent, matching the paper's "performance change" convention
+/// (negative = v2 is faster when samples are times-per-op).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnalysisOutput {
+    /// Lower bound of the bootstrap CI of the median difference [%].
+    pub ci_lo_pct: f32,
+    /// Median of the bootstrap distribution of the difference [%].
+    pub boot_median_pct: f32,
+    /// Upper bound of the bootstrap CI [%].
+    pub ci_hi_pct: f32,
+    /// Raw median of the version-1 samples.
+    pub median_v1: f32,
+    /// Raw median of the version-2 samples.
+    pub median_v2: f32,
+    /// Point estimate of the relative difference of the raw medians [%].
+    pub point_pct: f32,
+}
+
+impl AnalysisOutput {
+    fn from_row(row: &[f32]) -> Self {
+        AnalysisOutput {
+            ci_lo_pct: row[0],
+            boot_median_pct: row[1],
+            ci_hi_pct: row[2],
+            median_v1: row[3],
+            median_v2: row[4],
+            point_pct: row[5],
+        }
+    }
+
+    /// Paper §6.1: a *performance change* is detected iff the 99% CI does
+    /// not overlap zero.
+    pub fn is_change(&self) -> bool {
+        self.ci_lo_pct > 0.0 || self.ci_hi_pct < 0.0
+    }
+
+    /// Sign of a detected change (+1 slower, -1 faster, 0 = no change).
+    pub fn direction(&self) -> i8 {
+        if !self.is_change() {
+            0
+        } else if self.ci_lo_pct > 0.0 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// CI width in percentage points (used by the Fig. 7 sweep).
+    pub fn ci_size_pct(&self) -> f32 {
+        self.ci_hi_pct - self.ci_lo_pct
+    }
+}
+
+/// A compiled batched bootstrap-analysis executable with geometry `(M,B,N)`.
+///
+/// Inputs per call (see `python/compile/model.py::make_analyze`):
+/// `v1[M,N] f32`, `v2[M,N] f32`, `n_valid[M] i32`, `idx[B,N] i32`.
+pub struct AnalysisEngine {
+    exe: xla::PjRtLoadedExecutable,
+    m: usize,
+    b: usize,
+    n: usize,
+}
+
+impl AnalysisEngine {
+    /// Load an HLO-text artifact and compile it on the shared CPU client.
+    pub fn load(path: &Path, m: usize, b: usize, n: usize) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = super::with_cpu_client(|client| {
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))
+        })?;
+        Ok(AnalysisEngine { exe, m, b, n })
+    }
+
+    /// Batch capacity (microbenchmarks per call).
+    pub fn batch_m(&self) -> usize {
+        self.m
+    }
+    /// Bootstrap resamples per microbenchmark.
+    pub fn resamples_b(&self) -> usize {
+        self.b
+    }
+    /// Sample lanes per version.
+    pub fn lanes_n(&self) -> usize {
+        self.n
+    }
+
+    /// Run one analysis batch.
+    ///
+    /// * `v1`, `v2`: row-major `[M, N]` sample matrices; rows beyond the
+    ///   real benchmark count may be padding (use `n_valid = 1`,
+    ///   `samples = 1.0`).
+    /// * `n_valid`: valid sample count per row (clamped to `[1, N]` by the
+    ///   artifact).
+    /// * `idx`: `[B, N]` non-negative resample index bits, shared across
+    ///   rows; the artifact reduces them `mod n_valid` per row.
+    pub fn analyze(
+        &self,
+        v1: &[f32],
+        v2: &[f32],
+        n_valid: &[i32],
+        idx: &[i32],
+    ) -> Result<Vec<AnalysisOutput>> {
+        if v1.len() != self.m * self.n || v2.len() != self.m * self.n {
+            bail!(
+                "sample matrix must be {}x{} = {} elements, got v1={} v2={}",
+                self.m,
+                self.n,
+                self.m * self.n,
+                v1.len(),
+                v2.len()
+            );
+        }
+        if n_valid.len() != self.m {
+            bail!("n_valid must have {} entries, got {}", self.m, n_valid.len());
+        }
+        if idx.len() != self.b * self.n {
+            bail!(
+                "idx must be {}x{} = {} elements, got {}",
+                self.b,
+                self.n,
+                self.b * self.n,
+                idx.len()
+            );
+        }
+        macro_rules! ctx {
+            ($what:literal) => {
+                |e: xla::Error| anyhow::anyhow!(concat!($what, ": {:?}"), e)
+            };
+        }
+        let v1_lit = xla::Literal::vec1(v1)
+            .reshape(&[self.m as i64, self.n as i64])
+            .map_err(ctx!("reshape v1"))?;
+        let v2_lit = xla::Literal::vec1(v2)
+            .reshape(&[self.m as i64, self.n as i64])
+            .map_err(ctx!("reshape v2"))?;
+        let nv_lit = xla::Literal::vec1(n_valid);
+        let idx_lit = xla::Literal::vec1(idx)
+            .reshape(&[self.b as i64, self.n as i64])
+            .map_err(ctx!("reshape idx"))?;
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[v1_lit, v2_lit, nv_lit, idx_lit])
+            .map_err(ctx!("execute"))?[0][0]
+            .to_literal_sync()
+            .map_err(ctx!("fetch result"))?;
+        // aot.py lowers with return_tuple=True -> 1-tuple.
+        let out = result.to_tuple1().map_err(ctx!("untuple"))?;
+        let flat = out.to_vec::<f32>().map_err(ctx!("decode f32"))?;
+        if flat.len() != self.m * OUT_COLS {
+            bail!(
+                "artifact returned {} floats, expected {}x{}",
+                flat.len(),
+                self.m,
+                OUT_COLS
+            );
+        }
+        Ok(flat
+            .chunks_exact(OUT_COLS)
+            .map(AnalysisOutput::from_row)
+            .collect())
+    }
+}

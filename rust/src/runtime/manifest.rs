@@ -1,0 +1,175 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` and the
+//! Rust runtime: which HLO artifacts exist and their batch geometries.
+
+use crate::util::json::{parse, Json};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One exported artifact and its geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    /// File name within the artifacts directory.
+    pub file: String,
+    /// Microbenchmarks per call.
+    pub m: usize,
+    /// Bootstrap resamples.
+    pub b: usize,
+    /// Sample lanes per version.
+    pub n: usize,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Two-sided CI level baked into the artifacts (paper: 0.01 -> 99%).
+    pub alpha: f64,
+    /// Artifact inventory.
+    pub artifacts: Vec<ArtifactInfo>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`?)", path.display()))?;
+        Self::from_json(&text, dir)
+    }
+
+    /// Parse manifest JSON (separated out for tests).
+    pub fn from_json(text: &str, dir: &Path) -> Result<Self> {
+        let v = parse(text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let alpha = v
+            .get("alpha")
+            .and_then(Json::as_f64)
+            .context("manifest missing alpha")?;
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let field = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("artifact entry missing {k}"))
+            };
+            artifacts.push(ArtifactInfo {
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("artifact entry missing file")?
+                    .to_string(),
+                m: field("m")?,
+                b: field("b")?,
+                n: field("n")?,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest {
+            alpha,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Pick the best variant for analyzing `m` benchmarks with up to
+    /// `max_samples` results each: smallest `n >= max_samples`, then the
+    /// batch capacity that minimizes total padded work
+    /// `ceil(m / cap) * cap` (per-row cost is ~constant across variants,
+    /// so padding waste dominates — §Perf optimization #5), breaking ties
+    /// toward fewer calls (less dispatch overhead).
+    pub fn select(&self, m: usize, max_samples: usize) -> Result<&ArtifactInfo> {
+        let mut fitting: Vec<&ArtifactInfo> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.n >= max_samples)
+            .collect();
+        if fitting.is_empty() {
+            bail!(
+                "no artifact with n >= {max_samples} lanes (have: {:?})",
+                self.artifacts.iter().map(|a| a.n).collect::<Vec<_>>()
+            );
+        }
+        fitting.sort_by_key(|a| (a.n, a.m));
+        let min_n = fitting[0].n;
+        let rows = m.max(1);
+        // Cost model in row-equivalents: padded work + ~2 rows of fixed
+        // dispatch/compile-cache overhead per call (measured in
+        // benches/perf_analysis.rs).
+        const CALL_OVERHEAD_ROWS: usize = 2;
+        fitting
+            .into_iter()
+            .filter(|a| a.n == min_n)
+            .min_by_key(|a| {
+                let calls = rows.div_ceil(a.m);
+                (calls * a.m + CALL_OVERHEAD_ROWS * calls, calls)
+            })
+            .ok_or_else(|| anyhow::anyhow!("no artifact variant"))
+    }
+
+    /// Absolute path of an artifact.
+    pub fn path_of(&self, info: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&info.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{"alpha": 0.01, "out_cols": 6, "artifacts": [
+        {"file": "a1.hlo.txt", "m": 1, "b": 2048, "n": 64},
+        {"file": "a8.hlo.txt", "m": 8, "b": 2048, "n": 64},
+        {"file": "a128.hlo.txt", "m": 128, "b": 2048, "n": 64},
+        {"file": "wide.hlo.txt", "m": 32, "b": 2048, "n": 256}]}"#;
+
+    fn manifest() -> Manifest {
+        Manifest::from_json(DOC, Path::new("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn parses() {
+        let m = manifest();
+        assert_eq!(m.alpha, 0.01);
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.artifacts[0].b, 2048);
+    }
+
+    #[test]
+    fn select_prefers_smallest_fitting() {
+        let m = manifest();
+        assert_eq!(m.select(1, 45).unwrap().file, "a1.hlo.txt");
+        assert_eq!(m.select(5, 45).unwrap().file, "a8.hlo.txt");
+        assert_eq!(m.select(100, 45).unwrap().file, "a128.hlo.txt");
+    }
+
+    #[test]
+    fn select_falls_back_to_largest_for_chunking() {
+        let m = manifest();
+        assert_eq!(m.select(500, 64).unwrap().file, "a128.hlo.txt");
+    }
+
+    #[test]
+    fn select_wide_lanes() {
+        let m = manifest();
+        assert_eq!(m.select(10, 200).unwrap().file, "wide.hlo.txt");
+        assert!(m.select(10, 300).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let doc = r#"{"alpha": 0.01, "artifacts": []}"#;
+        assert!(Manifest::from_json(doc, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let doc = r#"{"artifacts": [{"file": "x", "m": 1}]}"#;
+        assert!(Manifest::from_json(doc, Path::new("/tmp")).is_err());
+    }
+}

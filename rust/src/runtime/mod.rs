@@ -1,0 +1,42 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place Python output crosses into the Rust request
+//! path: `python/compile/aot.py` lowers the L2 analysis graph (which
+//! inlines the L1 Pallas bootstrap kernel) to HLO *text*, and this module
+//! compiles it once per process on the PJRT CPU client and executes it for
+//! every analysis batch. HLO text — not a serialized `HloModuleProto` — is
+//! the interchange format because jax >= 0.5 emits 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+mod engine;
+mod manifest;
+
+pub use engine::{AnalysisEngine, AnalysisOutput, OUT_COLS};
+pub use manifest::{ArtifactInfo, Manifest};
+
+use std::cell::RefCell;
+
+thread_local! {
+    /// Thread-local PJRT CPU client.
+    ///
+    /// `xla::PjRtClient` wraps an `Rc` and is not `Send`, so each thread
+    /// that compiles/executes artifacts owns its own client (created
+    /// lazily). The coordinator performs all analysis on one thread, so in
+    /// practice a single client exists per process.
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with this thread's PJRT CPU client (creating it on first use).
+pub fn with_cpu_client<T>(
+    f: impl FnOnce(&xla::PjRtClient) -> anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT CPU client init failed: {e:?}"))?;
+            *slot = Some(client);
+        }
+        f(slot.as_ref().expect("client just created"))
+    })
+}

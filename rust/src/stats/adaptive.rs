@@ -1,0 +1,205 @@
+//! Adaptive stopping rule (paper §7.2 future work; cf. Mittal et al. [41],
+//! He et al. [28]): instead of a fixed 45 results per microbenchmark,
+//! stop collecting once the bootstrap CI is narrow enough — "45
+//! repetitions ... reduce the mean standard error of results that show a
+//! performance change to less than two percent, with an overall
+//! achievable standard error of around one percent".
+//!
+//! [`required_results`] replays a measurement prefix sequence through the
+//! analyzer and returns the earliest prefix length whose CI width
+//! stabilizes below the target; [`adaptive_plan`] applies it suite-wide
+//! and reports the saved calls.
+
+use super::analyzer::Analyzer;
+use super::suite_result::Measurements;
+use anyhow::Result;
+
+/// Stopping parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct StoppingRule {
+    /// Stop when the 99% CI width [percentage points] drops below this.
+    pub target_ci_pct: f32,
+    /// Check every `step` results (use the in-call repeat count so a
+    /// whole function call is the scheduling unit).
+    pub step: usize,
+    /// Never stop before this many results (statistical floor; the
+    /// paper's related work uses 5–30).
+    pub min_results: usize,
+    /// Give up and accept the CI at this many results.
+    pub max_results: usize,
+}
+
+impl Default for StoppingRule {
+    fn default() -> Self {
+        StoppingRule {
+            // ~±1% per side — the paper's "achievable standard error of
+            // around one percent".
+            target_ci_pct: 2.0,
+            step: 3,
+            min_results: 15,
+            max_results: 45,
+        }
+    }
+}
+
+/// Earliest prefix length at which the benchmark's CI width is below the
+/// target (or `rule.max_results` if it never is).
+pub fn required_results(
+    analyzer: &Analyzer,
+    m: &Measurements,
+    rule: &StoppingRule,
+    seed: u64,
+) -> Result<usize> {
+    let have = m.len().min(rule.max_results);
+    let mut k = rule.min_results.max(analyzer.min_results);
+    while k <= have {
+        let prefix = Measurements {
+            name: m.name.clone(),
+            v1: m.v1.iter().copied().take(k).collect(),
+            v2: m.v2.iter().copied().take(k).collect(),
+        };
+        let analysis = analyzer.analyze("adaptive", std::slice::from_ref(&prefix), seed)?;
+        if let Some(v) = analysis.get(&m.name) {
+            if v.output.ci_size_pct() <= rule.target_ci_pct {
+                return Ok(k);
+            }
+        }
+        k += rule.step;
+    }
+    Ok(have)
+}
+
+/// Suite-wide adaptive plan: per-benchmark stopping points and the saved
+/// fraction of function calls relative to the fixed-budget strategy.
+#[derive(Debug, Clone)]
+pub struct AdaptivePlan {
+    /// `(benchmark, results needed)` per analyzable benchmark.
+    pub per_benchmark: Vec<(String, usize)>,
+    /// Results collected by the fixed strategy.
+    pub fixed_total: usize,
+    /// Results the adaptive strategy would collect.
+    pub adaptive_total: usize,
+}
+
+impl AdaptivePlan {
+    /// Fraction of results (≈ calls ≈ cost) saved [%].
+    pub fn saved_pct(&self) -> f64 {
+        if self.fixed_total == 0 {
+            return 0.0;
+        }
+        (1.0 - self.adaptive_total as f64 / self.fixed_total as f64) * 100.0
+    }
+}
+
+/// Compute the adaptive plan over collected measurements.
+pub fn adaptive_plan(
+    analyzer: &Analyzer,
+    measurements: &[Measurements],
+    rule: &StoppingRule,
+    seed: u64,
+) -> Result<AdaptivePlan> {
+    let mut per_benchmark = Vec::new();
+    let mut fixed_total = 0usize;
+    let mut adaptive_total = 0usize;
+    for m in measurements {
+        if m.len() < analyzer.min_results {
+            continue;
+        }
+        let needed = required_results(analyzer, m, rule, seed)?;
+        fixed_total += m.len().min(rule.max_results);
+        adaptive_total += needed;
+        per_benchmark.push((m.name.clone(), needed));
+    }
+    Ok(AdaptivePlan {
+        per_benchmark,
+        fixed_total,
+        adaptive_total,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn meas(name: &str, seed: u64, n: usize, sigma: f64, shift: f64) -> Measurements {
+        let mut r = Rng::new(seed);
+        Measurements {
+            name: name.into(),
+            v1: (0..n).map(|_| r.lognormal(0.0, sigma)).collect(),
+            v2: (0..n).map(|_| r.lognormal(0.0, sigma) * (1.0 + shift)).collect(),
+        }
+    }
+
+    #[test]
+    fn stable_benchmark_stops_early() {
+        let analyzer = Analyzer::native();
+        let rule = StoppingRule::default();
+        let m = meas("stable", 1, 45, 0.005, 0.10);
+        let needed = required_results(&analyzer, &m, &rule, 7).unwrap();
+        assert!(needed <= 21, "tight distribution stops early: {needed}");
+    }
+
+    #[test]
+    fn noisy_benchmark_uses_full_budget() {
+        let analyzer = Analyzer::native();
+        let rule = StoppingRule::default();
+        let m = meas("noisy", 2, 45, 0.15, 0.10);
+        let needed = required_results(&analyzer, &m, &rule, 7).unwrap();
+        assert_eq!(needed, 45, "wide distribution never meets the target");
+    }
+
+    #[test]
+    fn plan_saves_calls_on_mixed_suite() {
+        let analyzer = Analyzer::native();
+        let rule = StoppingRule::default();
+        let ms: Vec<Measurements> = (0..12)
+            .map(|i| {
+                let sigma = if i % 3 == 0 { 0.12 } else { 0.01 };
+                meas(&format!("b{i}"), 100 + i as u64, 45, sigma, 0.05)
+            })
+            .collect();
+        let plan = adaptive_plan(&analyzer, &ms, &rule, 3).unwrap();
+        assert_eq!(plan.per_benchmark.len(), 12);
+        assert!(plan.adaptive_total < plan.fixed_total);
+        assert!(
+            plan.saved_pct() > 20.0,
+            "mixed suite saves substantially: {:.1}%",
+            plan.saved_pct()
+        );
+        // Noisy benchmarks kept their full budget.
+        for (name, needed) in &plan.per_benchmark {
+            if name.ends_with('0') || name.ends_with('3') || name.ends_with('6') || name.ends_with('9') {
+                continue;
+            }
+            assert!(*needed <= 45);
+        }
+    }
+
+    #[test]
+    fn respects_floors_and_ceilings() {
+        let analyzer = Analyzer::native();
+        let rule = StoppingRule {
+            target_ci_pct: 1000.0, // absurdly lax: stop at the floor
+            ..StoppingRule::default()
+        };
+        let m = meas("x", 3, 45, 0.05, 0.0);
+        let needed = required_results(&analyzer, &m, &rule, 1).unwrap();
+        assert_eq!(needed, 15, "floor respected");
+        let strict = StoppingRule {
+            target_ci_pct: 0.0001,
+            ..StoppingRule::default()
+        };
+        let needed = required_results(&analyzer, &m, &strict, 1).unwrap();
+        assert_eq!(needed, 45, "ceiling respected");
+    }
+
+    #[test]
+    fn short_measurements_are_skipped_in_plan() {
+        let analyzer = Analyzer::native();
+        let ms = vec![meas("short", 4, 5, 0.01, 0.0), meas("ok", 5, 45, 0.01, 0.0)];
+        let plan = adaptive_plan(&analyzer, &ms, &StoppingRule::default(), 1).unwrap();
+        assert_eq!(plan.per_benchmark.len(), 1);
+        assert_eq!(plan.per_benchmark[0].0, "ok");
+    }
+}

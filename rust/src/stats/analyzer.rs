@@ -1,0 +1,304 @@
+//! The suite analyzer: raw duet measurements -> per-benchmark verdicts.
+//!
+//! Wraps one of the two bootstrap engines behind a common interface and
+//! applies the paper's filtering rules (§6.1: benchmarks with fewer than
+//! 10 results are ignored). Given the same seed, the native and XLA
+//! backends produce identical verdicts (enforced by integration tests):
+//! the resample-index tile is drawn host-side from the experiment seed and
+//! fed to both engines.
+
+use super::bootstrap_native::bootstrap_native;
+use super::suite_result::{BenchmarkVerdict, ChangeKind, Measurements, SuiteAnalysis};
+use crate::runtime::{AnalysisEngine, AnalysisOutput, Manifest};
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Default bootstrap resamples (matches the exported artifacts).
+pub const DEFAULT_B: usize = 2048;
+/// Default minimum results per benchmark (paper §6.1).
+pub const DEFAULT_MIN_RESULTS: usize = 10;
+/// Index-lane widths the analyzer may use. Mirrors the artifact variants
+/// exported by `aot.py` so the native backend picks the same geometry and
+/// produces bit-identical resamples.
+pub const SUPPORTED_LANES: [usize; 2] = [64, 256];
+
+/// Which bootstrap engine executes the analysis.
+pub enum AnalysisBackend {
+    /// Pure-Rust engine (no artifacts needed).
+    Native,
+    /// AOT-compiled XLA artifacts, lazily compiled per geometry.
+    Xla {
+        /// Artifact inventory.
+        manifest: Manifest,
+        /// Compiled-executable cache keyed by artifact file name.
+        engines: RefCell<HashMap<String, AnalysisEngine>>,
+    },
+}
+
+/// Suite analyzer configuration + backend.
+pub struct Analyzer {
+    backend: AnalysisBackend,
+    /// Bootstrap resamples per benchmark.
+    pub b: usize,
+    /// Two-sided CI level (paper: 0.01 -> 99%).
+    pub alpha: f64,
+    /// Minimum paired results for a benchmark to be analyzed.
+    pub min_results: usize,
+}
+
+impl Analyzer {
+    /// Native-engine analyzer (no artifacts required).
+    pub fn native() -> Self {
+        Analyzer {
+            backend: AnalysisBackend::Native,
+            b: DEFAULT_B,
+            alpha: 0.01,
+            min_results: DEFAULT_MIN_RESULTS,
+        }
+    }
+
+    /// XLA-artifact analyzer reading `manifest.json` from `dir`.
+    pub fn xla(dir: &std::path::Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let alpha = manifest.alpha;
+        Ok(Analyzer {
+            backend: AnalysisBackend::Xla {
+                manifest,
+                engines: RefCell::new(HashMap::new()),
+            },
+            b: DEFAULT_B,
+            alpha,
+            min_results: DEFAULT_MIN_RESULTS,
+        })
+    }
+
+    /// True if this analyzer runs through the AOT artifact path.
+    pub fn is_xla(&self) -> bool {
+        matches!(self.backend, AnalysisBackend::Xla { .. })
+    }
+
+    /// Smallest supported lane width covering `max_samples`.
+    fn lanes_for(&self, max_samples: usize) -> Result<usize> {
+        SUPPORTED_LANES
+            .iter()
+            .copied()
+            .find(|&l| l >= max_samples)
+            .with_context(|| {
+                format!(
+                    "no supported lane width >= {max_samples} (have {SUPPORTED_LANES:?})"
+                )
+            })
+    }
+
+    /// Analyze a measurement set. `seed` determines the shared bootstrap
+    /// resample-index tile, so runs are reproducible and backends agree.
+    pub fn analyze(
+        &self,
+        label: &str,
+        measurements: &[Measurements],
+        seed: u64,
+    ) -> Result<SuiteAnalysis> {
+        let mut excluded = Vec::new();
+        let mut kept: Vec<&Measurements> = Vec::new();
+        for m in measurements {
+            if m.len() < self.min_results {
+                excluded.push(m.name.clone());
+            } else {
+                kept.push(m);
+            }
+        }
+        let mut analysis = SuiteAnalysis {
+            label: label.to_string(),
+            verdicts: Vec::with_capacity(kept.len()),
+            excluded,
+        };
+        if kept.is_empty() {
+            return Ok(analysis);
+        }
+
+        let max_n = kept.iter().map(|m| m.len()).max().expect("non-empty");
+        let lanes = self.lanes_for(max_n)?;
+        let mut idx = vec![0i32; self.b * lanes];
+        Rng::new(seed).fill_index_bits(&mut idx);
+
+        let outputs = match &self.backend {
+            AnalysisBackend::Native => self.run_native(&kept, &idx, lanes),
+            AnalysisBackend::Xla { manifest, engines } => {
+                self.run_xla(manifest, engines, &kept, &idx, lanes)?
+            }
+        };
+        debug_assert_eq!(outputs.len(), kept.len());
+        for (m, output) in kept.iter().zip(outputs) {
+            analysis.verdicts.push(BenchmarkVerdict {
+                name: m.name.clone(),
+                n_results: m.len(),
+                change: ChangeKind::from_output(&output),
+                output,
+            });
+        }
+        analysis.sort();
+        Ok(analysis)
+    }
+
+    fn pack(
+        &self,
+        kept: &[&Measurements],
+        rows: usize,
+        lanes: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+        let mut v1 = vec![1.0f32; rows * lanes];
+        let mut v2 = vec![1.0f32; rows * lanes];
+        let mut n_valid = vec![1i32; rows];
+        for (row, m) in kept.iter().enumerate() {
+            let nv = m.len().min(lanes);
+            n_valid[row] = nv as i32;
+            for j in 0..nv {
+                v1[row * lanes + j] = m.v1[j] as f32;
+                v2[row * lanes + j] = m.v2[j] as f32;
+            }
+        }
+        (v1, v2, n_valid)
+    }
+
+    fn run_native(
+        &self,
+        kept: &[&Measurements],
+        idx: &[i32],
+        lanes: usize,
+    ) -> Vec<AnalysisOutput> {
+        let (v1, v2, n_valid) = self.pack(kept, kept.len(), lanes);
+        bootstrap_native(
+            &v1,
+            &v2,
+            &n_valid,
+            idx,
+            kept.len(),
+            self.b,
+            lanes,
+            self.alpha,
+        )
+    }
+
+    fn run_xla(
+        &self,
+        manifest: &Manifest,
+        engines: &RefCell<HashMap<String, AnalysisEngine>>,
+        kept: &[&Measurements],
+        idx: &[i32],
+        lanes: usize,
+    ) -> Result<Vec<AnalysisOutput>> {
+        let info = manifest.select(kept.len(), lanes)?.clone();
+        if info.n != lanes {
+            bail!(
+                "artifact lane width {} != analyzer lane width {lanes}; \
+                 regenerate artifacts (make artifacts)",
+                info.n
+            );
+        }
+        if info.b != self.b {
+            bail!(
+                "artifact resample count {} != analyzer b {}; \
+                 regenerate artifacts",
+                info.b,
+                self.b
+            );
+        }
+        let mut engines = engines.borrow_mut();
+        if !engines.contains_key(&info.file) {
+            let engine = AnalysisEngine::load(&manifest.path_of(&info), info.m, info.b, info.n)?;
+            engines.insert(info.file.clone(), engine);
+        }
+        let engine = engines.get(&info.file).expect("just inserted");
+
+        let mut outputs = Vec::with_capacity(kept.len());
+        for chunk in kept.chunks(info.m) {
+            let (v1, v2, n_valid) = self.pack(chunk, info.m, lanes);
+            let got = engine.analyze(&v1, &v2, &n_valid, idx)?;
+            outputs.extend_from_slice(&got[..chunk.len()]);
+        }
+        Ok(outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meas(name: &str, seed: u64, n: usize, shift: f64) -> Measurements {
+        let mut r = Rng::new(seed);
+        Measurements {
+            name: name.into(),
+            v1: (0..n).map(|_| r.lognormal(0.0, 0.05)).collect(),
+            v2: (0..n).map(|_| r.lognormal(0.0, 0.05) * (1.0 + shift)).collect(),
+        }
+    }
+
+    #[test]
+    fn native_analyzer_end_to_end() {
+        let a = Analyzer::native();
+        let ms = vec![
+            meas("regression", 1, 45, 0.15),
+            meas("stable", 2, 45, 0.0),
+            meas("improvement", 3, 45, -0.15),
+            meas("too-few", 4, 5, 0.5),
+        ];
+        let out = a.analyze("test", &ms, 99).unwrap();
+        assert_eq!(out.excluded, vec!["too-few".to_string()]);
+        assert_eq!(out.verdicts.len(), 3);
+        assert_eq!(out.get("regression").unwrap().change, ChangeKind::Regression);
+        assert_eq!(out.get("stable").unwrap().change, ChangeKind::NoChange);
+        assert_eq!(out.get("improvement").unwrap().change, ChangeKind::Improvement);
+        assert_eq!(out.change_count(), 2);
+    }
+
+    #[test]
+    fn same_seed_reproduces() {
+        let a = Analyzer::native();
+        let ms = vec![meas("x", 5, 30, 0.02)];
+        let r1 = a.analyze("t", &ms, 7).unwrap();
+        let r2 = a.analyze("t", &ms, 7).unwrap();
+        assert_eq!(r1.verdicts[0].output, r2.verdicts[0].output);
+    }
+
+    #[test]
+    fn different_seed_differs_slightly() {
+        let a = Analyzer::native();
+        let ms = vec![meas("x", 5, 30, 0.02)];
+        let r1 = a.analyze("t", &ms, 7).unwrap();
+        let r2 = a.analyze("t", &ms, 8).unwrap();
+        // Same data, different resamples: close but not identical CI.
+        let o1 = r1.verdicts[0].output;
+        let o2 = r2.verdicts[0].output;
+        assert_ne!(o1, o2);
+        assert!((o1.boot_median_pct - o2.boot_median_pct).abs() < 2.0);
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let a = Analyzer::native();
+        let out = a.analyze("t", &[], 1).unwrap();
+        assert!(out.verdicts.is_empty());
+        assert!(out.excluded.is_empty());
+    }
+
+    #[test]
+    fn lane_selection() {
+        let a = Analyzer::native();
+        assert_eq!(a.lanes_for(45).unwrap(), 64);
+        assert_eq!(a.lanes_for(64).unwrap(), 64);
+        assert_eq!(a.lanes_for(65).unwrap(), 256);
+        assert_eq!(a.lanes_for(200).unwrap(), 256);
+        assert!(a.lanes_for(300).is_err());
+    }
+
+    #[test]
+    fn wide_sample_counts_use_wide_lanes() {
+        let a = Analyzer::native();
+        let ms = vec![meas("wide", 6, 200, 0.1)];
+        let out = a.analyze("t", &ms, 3).unwrap();
+        assert_eq!(out.verdicts[0].n_results, 200);
+        assert_eq!(out.verdicts[0].change, ChangeKind::Regression);
+    }
+}

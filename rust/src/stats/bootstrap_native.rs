@@ -1,0 +1,536 @@
+//! Pure-Rust bootstrap engine — the native mirror of the Pallas kernel.
+//!
+//! Must stay semantically identical to `python/compile/kernels/ref.py`:
+//! same resample indexing (`idx % n_valid`, shared index tile), same
+//! median convention (mean of the two central order statistics), same CI
+//! order statistics (`floor(alpha/2*(B-1))`, `ceil((1-alpha/2)*(B-1))`).
+//! The artifact-vs-native agreement is enforced by
+//! `rust/tests/runtime_artifact.rs` and the `testkit` property suite.
+//!
+//! ## §Perf optimizations (see EXPERIMENTS.md §Perf for the log)
+//!
+//! The optimized row kernel ([`bootstrap_row`]) replaces the original
+//! gather + two-quickselect formulation ([`bootstrap_row_reference`],
+//! kept as the before/after baseline) with:
+//!
+//! 1. **rank-counting medians** — per benchmark the samples are argsorted
+//!    once; each resample then increments a tiny rank histogram and reads
+//!    both central order statistics off a cumulative walk (no data
+//!    movement, no partitioning);
+//! 2. **strength-reduced modulo** ([`super::fastdiv::FastMod`]) — the
+//!    `idx % n_valid` in the innermost loop becomes multiply+shift;
+//! 3. **row-parallelism** — independent benchmark rows are analyzed on
+//!    all available cores (`std::thread::scope`), keeping determinism.
+
+use super::fastdiv::FastMod;
+use crate::runtime::AnalysisOutput;
+use crate::util::stats::ci_order_statistics;
+
+/// Analyze `m` benchmarks packed in row-major `[m, n]` matrices.
+///
+/// Mirrors the artifact call signature exactly (including padding rules):
+/// rows beyond the real benchmark count should carry `n_valid = 1`.
+#[allow(clippy::too_many_arguments)]
+pub fn bootstrap_native(
+    v1: &[f32],
+    v2: &[f32],
+    n_valid: &[i32],
+    idx: &[i32],
+    m: usize,
+    b: usize,
+    n: usize,
+    alpha: f64,
+) -> Vec<AnalysisOutput> {
+    assert_eq!(v1.len(), m * n, "v1 shape");
+    assert_eq!(v2.len(), m * n, "v2 shape");
+    assert_eq!(n_valid.len(), m, "n_valid shape");
+    assert_eq!(idx.len(), b * n, "idx shape");
+
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(m.max(1));
+    let mut out = vec![AnalysisOutput::default_zero(); m];
+    if threads <= 1 || m <= 2 {
+        let mut scratch = Scratch::new(b, n);
+        for (row, slot) in out.iter_mut().enumerate() {
+            let nv = (n_valid[row].max(1) as usize).min(n);
+            *slot = bootstrap_row(
+                &v1[row * n..row * n + nv],
+                &v2[row * n..row * n + nv],
+                idx,
+                b,
+                n,
+                alpha,
+                &mut scratch,
+            );
+        }
+        return out;
+    }
+
+    // Row-parallel: split the output into per-thread chunks; each thread
+    // owns its scratch. Rows are independent, so results are identical to
+    // the sequential path.
+    let chunk = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, out_chunk) in out.chunks_mut(chunk).enumerate() {
+            let start = t * chunk;
+            scope.spawn(move || {
+                let mut scratch = Scratch::new(b, n);
+                for (i, slot) in out_chunk.iter_mut().enumerate() {
+                    let row = start + i;
+                    let nv = (n_valid[row].max(1) as usize).min(n);
+                    *slot = bootstrap_row(
+                        &v1[row * n..row * n + nv],
+                        &v2[row * n..row * n + nv],
+                        idx,
+                        b,
+                        n,
+                        alpha,
+                        &mut scratch,
+                    );
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Analyze a single benchmark given its (unpadded) sample slices.
+pub fn bootstrap_native_single(
+    v1: &[f32],
+    v2: &[f32],
+    idx: &[i32],
+    b: usize,
+    n_lanes: usize,
+    alpha: f64,
+) -> AnalysisOutput {
+    assert_eq!(v1.len(), v2.len(), "version sample counts must match");
+    assert!(!v1.is_empty(), "need at least one sample");
+    assert!(v1.len() <= n_lanes, "more samples than index lanes");
+    let mut scratch = Scratch::new(b, n_lanes);
+    bootstrap_row(v1, v2, idx, b, n_lanes, alpha, &mut scratch)
+}
+
+impl AnalysisOutput {
+    fn default_zero() -> Self {
+        AnalysisOutput {
+            ci_lo_pct: 0.0,
+            boot_median_pct: 0.0,
+            ci_hi_pct: 0.0,
+            median_v1: 0.0,
+            median_v2: 0.0,
+            point_pct: 0.0,
+        }
+    }
+}
+
+/// Reusable buffers: keeps the hot loop allocation-free.
+struct Scratch {
+    rel: Vec<f32>,
+    counts1: Vec<u16>,
+    counts2: Vec<u16>,
+    rank1: Vec<u16>,
+    rank2: Vec<u16>,
+    sorted1: Vec<f32>,
+    sorted2: Vec<f32>,
+    order: Vec<u16>,
+}
+
+impl Scratch {
+    fn new(b: usize, n: usize) -> Self {
+        Scratch {
+            rel: vec![0.0; b],
+            counts1: vec![0; n],
+            counts2: vec![0; n],
+            rank1: vec![0; n],
+            rank2: vec![0; n],
+            sorted1: vec![0.0; n],
+            sorted2: vec![0.0; n],
+            order: vec![0; n],
+        }
+    }
+}
+
+fn median_of(buf: &mut [f32]) -> f32 {
+    let n = buf.len();
+    let lo_i = (n - 1) / 2;
+    let (_, lo, rest) =
+        buf.select_nth_unstable_by(lo_i, |a, b| a.partial_cmp(b).expect("NaN sample"));
+    let lo = *lo;
+    let hi = if n % 2 == 1 {
+        lo
+    } else {
+        rest.iter().copied().fold(f32::INFINITY, f32::min)
+    };
+    0.5 * (lo + hi)
+}
+
+/// Argsort `vals` into `order`/`rank`/`sorted` scratch slices.
+fn rank_samples(vals: &[f32], order: &mut [u16], rank: &mut [u16], sorted: &mut [f32]) {
+    let nv = vals.len();
+    for (i, o) in order[..nv].iter_mut().enumerate() {
+        *o = i as u16;
+    }
+    order[..nv].sort_unstable_by(|&a, &b| {
+        vals[a as usize]
+            .partial_cmp(&vals[b as usize])
+            .expect("NaN sample")
+    });
+    for (r, &i) in order[..nv].iter().enumerate() {
+        rank[i as usize] = r as u16;
+        sorted[r] = vals[i as usize];
+    }
+}
+
+/// Median of a resample counted into a rank histogram: the average of the
+/// `k1`-th and `k2`-th smallest values (0-indexed, `k1 <= k2`).
+#[inline]
+fn median_from_counts(counts: &[u16], sorted: &[f32], k1: u32, k2: u32) -> f32 {
+    let mut cum = 0u32;
+    let mut lo = f32::NAN;
+    for (r, &c) in counts.iter().enumerate() {
+        let next = cum + c as u32;
+        if lo.is_nan() && next > k1 {
+            lo = sorted[r];
+        }
+        if next > k2 {
+            let hi = sorted[r];
+            return 0.5 * (lo + hi);
+        }
+        cum = next;
+    }
+    unreachable!("counts must sum to nv > k2");
+}
+
+/// Optimized row kernel (see module docs).
+fn bootstrap_row(
+    v1: &[f32],
+    v2: &[f32],
+    idx: &[i32],
+    b: usize,
+    n_lanes: usize,
+    alpha: f64,
+    scratch: &mut Scratch,
+) -> AnalysisOutput {
+    let nv = v1.len();
+    debug_assert!(nv >= 1 && nv <= n_lanes);
+
+    rank_samples(v1, &mut scratch.order, &mut scratch.rank1, &mut scratch.sorted1);
+    rank_samples(v2, &mut scratch.order, &mut scratch.rank2, &mut scratch.sorted2);
+    let (rank1, rank2) = (&scratch.rank1[..nv], &scratch.rank2[..nv]);
+    let (sorted1, sorted2) = (&scratch.sorted1[..nv], &scratch.sorted2[..nv]);
+
+    let fm = FastMod::new(nv as u32);
+    let k1 = ((nv - 1) / 2) as u32;
+    let k2 = (nv / 2) as u32;
+
+    for bi in 0..b {
+        let row_idx = &idx[bi * n_lanes..bi * n_lanes + nv];
+        let counts1 = &mut scratch.counts1[..nv];
+        let counts2 = &mut scratch.counts2[..nv];
+        counts1.fill(0);
+        counts2.fill(0);
+        for &bits in row_idx {
+            let i = fm.rem(bits as u32) as usize;
+            // Both versions resample with the SAME index (duet pairing in
+            // the bootstrap, matching the kernel).
+            counts1[rank1[i] as usize] += 1;
+            counts2[rank2[i] as usize] += 1;
+        }
+        let med1 = median_from_counts(counts1, sorted1, k1, k2);
+        let med2 = median_from_counts(counts2, sorted2, k1, k2);
+        scratch.rel[bi] = if med1 != 0.0 {
+            (med2 - med1) / med1 * 100.0
+        } else {
+            0.0
+        };
+    }
+    // §Perf optimization #4: the CI needs only four order statistics of
+    // the B bootstrap stats, so select them instead of fully sorting
+    // (each select partitions only the remaining left segment). Wide
+    // alpha or tiny B degenerate to the plain sort.
+    let (lo_q, hi_q) = ci_order_statistics(b, alpha);
+    let cmp = |a: &f32, x: &f32| a.partial_cmp(x).expect("NaN rel diff");
+    let rel = &mut scratch.rel[..];
+    let (lo_v, med_lo_v, med_hi_v, hi_v);
+    if b < 8 || hi_q <= b / 2 + 1 {
+        rel.sort_unstable_by(cmp);
+        lo_v = rel[lo_q];
+        med_lo_v = rel[(b - 1) / 2];
+        med_hi_v = rel[b / 2];
+        hi_v = rel[hi_q];
+    } else {
+        let (_, &mut h, _) = rel.select_nth_unstable_by(hi_q, cmp);
+        hi_v = h;
+        let left = &mut rel[..hi_q];
+        let (_, &mut mh, _) = left.select_nth_unstable_by(b / 2, cmp);
+        med_hi_v = mh;
+        let left = &mut left[..b / 2];
+        let (_, &mut ml, _) = left.select_nth_unstable_by((b - 1) / 2, cmp);
+        med_lo_v = ml;
+        let left = &mut left[..(b - 1) / 2];
+        let (_, &mut l, _) = left.select_nth_unstable_by(lo_q, cmp);
+        lo_v = l;
+    }
+
+    let med_v1 = 0.5 * (sorted1[(nv - 1) / 2] + sorted1[nv / 2]);
+    let med_v2 = 0.5 * (sorted2[(nv - 1) / 2] + sorted2[nv / 2]);
+    let point = if med_v1 != 0.0 {
+        (med_v2 - med_v1) / med_v1 * 100.0
+    } else {
+        0.0
+    };
+
+    AnalysisOutput {
+        ci_lo_pct: lo_v,
+        boot_median_pct: 0.5 * (med_lo_v + med_hi_v),
+        ci_hi_pct: hi_v,
+        median_v1: med_v1,
+        median_v2: med_v2,
+        point_pct: point,
+    }
+}
+
+/// The original (pre-§Perf) row kernel: gather + two quickselects per
+/// resample. Kept as the documented perf baseline
+/// (`benches/perf_analysis.rs` reports before/after) and as a second
+/// implementation for differential testing.
+pub fn bootstrap_row_reference(
+    v1: &[f32],
+    v2: &[f32],
+    idx: &[i32],
+    b: usize,
+    n_lanes: usize,
+    alpha: f64,
+) -> AnalysisOutput {
+    let nv = v1.len();
+    assert!(nv >= 1 && nv <= n_lanes);
+    let mut resample = vec![0.0f32; nv];
+    let mut rel = vec![0.0f32; b];
+    let mut sortbuf = vec![0.0f32; nv];
+
+    for bi in 0..b {
+        let row_idx = &idx[bi * n_lanes..bi * n_lanes + nv];
+        for (dst, &bits) in resample.iter_mut().zip(row_idx) {
+            *dst = v1[(bits as usize) % nv];
+        }
+        let med1 = median_of(&mut resample);
+        for (dst, &bits) in resample.iter_mut().zip(row_idx) {
+            *dst = v2[(bits as usize) % nv];
+        }
+        let med2 = median_of(&mut resample);
+        rel[bi] = if med1 != 0.0 {
+            (med2 - med1) / med1 * 100.0
+        } else {
+            0.0
+        };
+    }
+    rel.sort_unstable_by(|a, b| a.partial_cmp(b).expect("NaN rel diff"));
+    let (lo_q, hi_q) = ci_order_statistics(b, alpha);
+
+    sortbuf.copy_from_slice(v1);
+    let med_v1 = median_of(&mut sortbuf);
+    sortbuf.copy_from_slice(v2);
+    let med_v2 = median_of(&mut sortbuf);
+    let point = if med_v1 != 0.0 {
+        (med_v2 - med_v1) / med_v1 * 100.0
+    } else {
+        0.0
+    };
+    AnalysisOutput {
+        ci_lo_pct: rel[lo_q],
+        boot_median_pct: 0.5 * (rel[(b - 1) / 2] + rel[b / 2]),
+        ci_hi_pct: rel[hi_q],
+        median_v1: med_v1,
+        median_v2: med_v2,
+        point_pct: point,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mk_idx(rng: &mut Rng, b: usize, n: usize) -> Vec<i32> {
+        let mut idx = vec![0i32; b * n];
+        rng.fill_index_bits(&mut idx);
+        idx
+    }
+
+    #[test]
+    fn identical_versions_give_zero_diff() {
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..45).map(|_| rng.lognormal(0.0, 0.1) as f32).collect();
+        let idx = mk_idx(&mut rng, 256, 64);
+        let out = bootstrap_native_single(&v, &v, &idx, 256, 64, 0.01);
+        assert_eq!(out.boot_median_pct, 0.0);
+        assert_eq!(out.ci_lo_pct, 0.0);
+        assert_eq!(out.ci_hi_pct, 0.0);
+        assert!(!out.is_change());
+    }
+
+    #[test]
+    fn scaled_version_gives_exact_shift() {
+        // v2 = 1.5 * v1 everywhere => every resample pair differs by
+        // exactly +50%.
+        let mut rng = Rng::new(2);
+        let v1: Vec<f32> = (0..31).map(|_| rng.lognormal(0.0, 0.4) as f32).collect();
+        let v2: Vec<f32> = v1.iter().map(|x| x * 1.5).collect();
+        let idx = mk_idx(&mut rng, 512, 64);
+        let out = bootstrap_native_single(&v1, &v2, &idx, 512, 64, 0.01);
+        assert!((out.boot_median_pct - 50.0).abs() < 1e-3, "{out:?}");
+        assert!(out.is_change());
+        assert_eq!(out.direction(), 1);
+    }
+
+    #[test]
+    fn detects_improvement_direction() {
+        let mut rng = Rng::new(3);
+        let v1: Vec<f32> = (0..45).map(|_| rng.lognormal(0.0, 0.02) as f32).collect();
+        let v2: Vec<f32> = (0..45)
+            .map(|_| (rng.lognormal(0.0, 0.02) * 0.8) as f32)
+            .collect();
+        let idx = mk_idx(&mut rng, 2048, 64);
+        let out = bootstrap_native_single(&v1, &v2, &idx, 2048, 64, 0.01);
+        assert_eq!(out.direction(), -1, "{out:?}");
+        assert!((out.boot_median_pct + 20.0).abs() < 3.0);
+    }
+
+    #[test]
+    fn noisy_identical_distributions_no_change() {
+        // Different draws from the same distribution: CI must (almost
+        // always) cover zero. Fixed seed keeps this deterministic.
+        let mut rng = Rng::new(4);
+        let v1: Vec<f32> = (0..45).map(|_| rng.lognormal(0.0, 0.05) as f32).collect();
+        let v2: Vec<f32> = (0..45).map(|_| rng.lognormal(0.0, 0.05) as f32).collect();
+        let idx = mk_idx(&mut rng, 2048, 64);
+        let out = bootstrap_native_single(&v1, &v2, &idx, 2048, 64, 0.01);
+        assert!(!out.is_change(), "{out:?}");
+    }
+
+    #[test]
+    fn single_sample_degenerates_cleanly() {
+        let idx = mk_idx(&mut Rng::new(5), 64, 64);
+        let out = bootstrap_native_single(&[2.0], &[3.0], &idx, 64, 64, 0.01);
+        // Only one value to resample: every bootstrap stat is +50%.
+        assert_eq!(out.boot_median_pct, 50.0);
+        assert_eq!(out.ci_lo_pct, 50.0);
+        assert_eq!(out.ci_hi_pct, 50.0);
+    }
+
+    #[test]
+    fn batched_matches_single() {
+        let mut rng = Rng::new(6);
+        let (m, b, n) = (3usize, 256usize, 16usize);
+        let mut v1 = vec![1.0f32; m * n];
+        let mut v2 = vec![1.0f32; m * n];
+        let n_valid = [16i32, 9, 13];
+        for row in 0..m {
+            for j in 0..n_valid[row] as usize {
+                v1[row * n + j] = rng.lognormal(0.0, 0.2) as f32;
+                v2[row * n + j] = rng.lognormal(0.1, 0.2) as f32;
+            }
+        }
+        let idx = mk_idx(&mut rng, b, n);
+        let batch = bootstrap_native(&v1, &v2, &n_valid, &idx, m, b, n, 0.01);
+        for row in 0..m {
+            let nv = n_valid[row] as usize;
+            let single = bootstrap_native_single(
+                &v1[row * n..row * n + nv],
+                &v2[row * n..row * n + nv],
+                &idx,
+                b,
+                n,
+                0.01,
+            );
+            assert_eq!(batch[row], single, "row {row}");
+        }
+    }
+
+    #[test]
+    fn optimized_matches_reference_exactly() {
+        // The §Perf rewrite must be bit-identical to the original
+        // formulation across sizes, ties, and duplicate-heavy inputs.
+        let rng = Rng::new(0xFA57);
+        for case in 0..30 {
+            let mut r = rng.fork(case);
+            let nv = 1 + r.below_usize(63);
+            let quantize = r.chance(0.3); // force ties
+            let gen = |r: &mut Rng| {
+                let x = r.lognormal(0.0, 0.4) as f32;
+                if quantize {
+                    (x * 8.0).round() / 8.0 + 0.125
+                } else {
+                    x
+                }
+            };
+            let v1: Vec<f32> = (0..nv).map(|_| gen(&mut r)).collect();
+            let v2: Vec<f32> = (0..nv).map(|_| gen(&mut r)).collect();
+            let mut idx = vec![0i32; 256 * 64];
+            r.fill_index_bits(&mut idx);
+            let fast = bootstrap_native_single(&v1, &v2, &idx, 256, 64, 0.01);
+            let slow = bootstrap_row_reference(&v1, &v2, &idx, 256, 64, 0.01);
+            assert_eq!(fast, slow, "case {case} nv={nv} quantize={quantize}");
+        }
+    }
+
+    #[test]
+    fn parallel_batch_matches_sequential_order() {
+        // Many rows => the threaded path; results must be positionally
+        // identical to per-row singles.
+        let mut rng = Rng::new(8);
+        let (m, b, n) = (40usize, 128usize, 64usize);
+        let mut v1 = vec![1.0f32; m * n];
+        let mut v2 = vec![1.0f32; m * n];
+        let mut n_valid = vec![1i32; m];
+        for row in 0..m {
+            let nv = 1 + rng.below_usize(45);
+            n_valid[row] = nv as i32;
+            for j in 0..nv {
+                v1[row * n + j] = rng.lognormal(0.0, 0.3) as f32;
+                v2[row * n + j] = rng.lognormal(0.05, 0.3) as f32;
+            }
+        }
+        let idx = mk_idx(&mut rng, b, n);
+        let batch = bootstrap_native(&v1, &v2, &n_valid, &idx, m, b, n, 0.01);
+        for row in 0..m {
+            let nv = n_valid[row] as usize;
+            let single = bootstrap_native_single(
+                &v1[row * n..row * n + nv],
+                &v2[row * n..row * n + nv],
+                &idx,
+                b,
+                n,
+                0.01,
+            );
+            assert_eq!(batch[row], single, "row {row}");
+        }
+    }
+
+    #[test]
+    fn ci_is_ordered() {
+        let rng = Rng::new(7);
+        for seed in 0..20 {
+            let mut r = rng.fork(seed);
+            let nv = 2 + r.below_usize(44);
+            let v1: Vec<f32> = (0..nv).map(|_| r.lognormal(0.0, 0.5) as f32).collect();
+            let v2: Vec<f32> = (0..nv).map(|_| r.lognormal(0.2, 0.5) as f32).collect();
+            let idx = mk_idx(&mut r, 512, 64);
+            let o = bootstrap_native_single(&v1, &v2, &idx, 512, 64, 0.01);
+            assert!(o.ci_lo_pct <= o.boot_median_pct && o.boot_median_pct <= o.ci_hi_pct);
+        }
+    }
+
+    #[test]
+    fn wider_alpha_narrower_interval() {
+        let mut rng = Rng::new(8);
+        let v1: Vec<f32> = (0..45).map(|_| rng.lognormal(0.0, 0.3) as f32).collect();
+        let v2: Vec<f32> = (0..45).map(|_| rng.lognormal(0.1, 0.3) as f32).collect();
+        let idx = mk_idx(&mut rng, 2048, 64);
+        let wide = bootstrap_native_single(&v1, &v2, &idx, 2048, 64, 0.01);
+        let narrow = bootstrap_native_single(&v1, &v2, &idx, 2048, 64, 0.10);
+        assert!(narrow.ci_size_pct() <= wide.ci_size_pct());
+    }
+}

@@ -1,0 +1,300 @@
+//! Cross-experiment comparison metrics (paper §6.1 "Statistical Analysis").
+//!
+//! Two experiments *agree* on a microbenchmark if both detect a
+//! *performance change* in the same direction or both detect *no change*;
+//! otherwise they *disagree*. When only one experiment detects a change,
+//! that is a *possible performance change* whose magnitude the paper
+//! tracks (Fig. 6). Coverage measures how close the magnitudes of two
+//! experiments' detected changes are (§6.2.2).
+
+use super::suite_result::{ChangeKind, SuiteAnalysis};
+
+/// Why two experiments disagree on one microbenchmark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DisagreementKind {
+    /// Both detect a change but with opposite directions.
+    OppositeDirections,
+    /// Only the first experiment detects a change.
+    OnlyFirstDetects,
+    /// Only the second experiment detects a change.
+    OnlySecondDetects,
+}
+
+/// One disagreeing microbenchmark.
+#[derive(Debug, Clone)]
+pub struct Disagreement {
+    /// Benchmark name.
+    pub name: String,
+    /// Disagreement class.
+    pub kind: DisagreementKind,
+    /// Maximum |bootstrap median difference| [%] reported by whichever
+    /// experiment detected a change (the paper's *possible performance
+    /// change* magnitude).
+    pub max_abs_diff_pct: f64,
+}
+
+/// Agreement summary between two experiments.
+#[derive(Debug, Clone)]
+pub struct AgreementReport {
+    /// Benchmarks present (with enough results) in both experiments.
+    pub common: usize,
+    /// Benchmarks on which both experiments agree.
+    pub agreeing: usize,
+    /// All disagreements, sorted by descending magnitude.
+    pub disagreements: Vec<Disagreement>,
+}
+
+impl AgreementReport {
+    /// Agreement ratio in percent (paper reports e.g. 95.65%).
+    pub fn agreement_pct(&self) -> f64 {
+        if self.common == 0 {
+            return 100.0;
+        }
+        self.agreeing as f64 / self.common as f64 * 100.0
+    }
+
+    /// Largest *possible performance change* [%] among disagreements
+    /// where only one side detected a change.
+    pub fn max_possible_change_pct(&self) -> Option<f64> {
+        self.disagreements
+            .iter()
+            .filter(|d| d.kind != DisagreementKind::OppositeDirections)
+            .map(|d| d.max_abs_diff_pct)
+            .fold(None, |acc, x| Some(acc.map_or(x, |a: f64| a.max(x))))
+    }
+}
+
+/// Compute the agreement report between two experiments over their common
+/// benchmarks.
+pub fn agreement(a: &SuiteAnalysis, b: &SuiteAnalysis) -> AgreementReport {
+    let mut common = 0usize;
+    let mut agreeing = 0usize;
+    let mut disagreements = Vec::new();
+    for va in &a.verdicts {
+        let Some(vb) = b.get(&va.name) else { continue };
+        common += 1;
+        let same = match (va.change, vb.change) {
+            (ChangeKind::NoChange, ChangeKind::NoChange) => true,
+            (x, y) => x == y && x.is_change(),
+        };
+        if same {
+            agreeing += 1;
+            continue;
+        }
+        let kind = match (va.change.is_change(), vb.change.is_change()) {
+            (true, true) => DisagreementKind::OppositeDirections,
+            (true, false) => DisagreementKind::OnlyFirstDetects,
+            (false, true) => DisagreementKind::OnlySecondDetects,
+            (false, false) => unreachable!("both no-change counted as agreement"),
+        };
+        let mag_a = if va.change.is_change() {
+            va.output.boot_median_pct.abs() as f64
+        } else {
+            0.0
+        };
+        let mag_b = if vb.change.is_change() {
+            vb.output.boot_median_pct.abs() as f64
+        } else {
+            0.0
+        };
+        disagreements.push(Disagreement {
+            name: va.name.clone(),
+            kind,
+            max_abs_diff_pct: mag_a.max(mag_b),
+        });
+    }
+    disagreements.sort_by(|x, y| {
+        y.max_abs_diff_pct
+            .partial_cmp(&x.max_abs_diff_pct)
+            .expect("NaN magnitude")
+    });
+    AgreementReport {
+        common,
+        agreeing,
+        disagreements,
+    }
+}
+
+/// Coverage metrics between two experiments (paper §6.1/§6.2.2), computed
+/// over benchmarks where **both** experiments detect a performance change.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Coverage {
+    /// Benchmarks where both experiments detect a change.
+    pub both_change: usize,
+    /// Fraction [%] where `a`'s median lies inside `b`'s CI.
+    pub one_sided_a_in_b_pct: f64,
+    /// Fraction [%] where `b`'s median lies inside `a`'s CI.
+    pub one_sided_b_in_a_pct: f64,
+    /// Fraction [%] where both medians lie inside the other's CI.
+    pub two_sided_pct: f64,
+}
+
+/// Compute coverage between two experiments.
+pub fn coverage(a: &SuiteAnalysis, b: &SuiteAnalysis) -> Coverage {
+    let mut both = 0usize;
+    let mut a_in_b = 0usize;
+    let mut b_in_a = 0usize;
+    let mut two = 0usize;
+    for va in &a.verdicts {
+        let Some(vb) = b.get(&va.name) else { continue };
+        if !(va.change.is_change() && vb.change.is_change()) {
+            continue;
+        }
+        both += 1;
+        let a_med = va.output.boot_median_pct;
+        let b_med = vb.output.boot_median_pct;
+        let a_in = vb.output.ci_lo_pct <= a_med && a_med <= vb.output.ci_hi_pct;
+        let b_in = va.output.ci_lo_pct <= b_med && b_med <= va.output.ci_hi_pct;
+        a_in_b += a_in as usize;
+        b_in_a += b_in as usize;
+        two += (a_in && b_in) as usize;
+    }
+    let pct = |x: usize| {
+        if both == 0 {
+            0.0
+        } else {
+            x as f64 / both as f64 * 100.0
+        }
+    };
+    Coverage {
+        both_change: both,
+        one_sided_a_in_b_pct: pct(a_in_b),
+        one_sided_b_in_a_pct: pct(b_in_a),
+        two_sided_pct: pct(two),
+    }
+}
+
+/// Collect the *possible performance change* magnitudes across all
+/// pairwise disagreements of a set of experiments (paper §6.2.6/Fig. 6):
+/// for every benchmark on which any two experiments disagree, the maximum
+/// |difference| reported by a change-detecting side.
+pub fn possible_changes(experiments: &[&SuiteAnalysis]) -> Vec<(String, f64)> {
+    use std::collections::BTreeMap;
+    let mut per_bench: BTreeMap<String, f64> = BTreeMap::new();
+    for i in 0..experiments.len() {
+        for j in (i + 1)..experiments.len() {
+            let rep = agreement(experiments[i], experiments[j]);
+            for d in rep.disagreements {
+                if d.kind == DisagreementKind::OppositeDirections {
+                    continue;
+                }
+                let e = per_bench.entry(d.name).or_insert(0.0);
+                *e = e.max(d.max_abs_diff_pct);
+            }
+        }
+    }
+    per_bench.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::AnalysisOutput;
+    use crate::stats::suite_result::BenchmarkVerdict;
+
+    fn verdict(name: &str, lo: f32, med: f32, hi: f32) -> BenchmarkVerdict {
+        let output = AnalysisOutput {
+            ci_lo_pct: lo,
+            boot_median_pct: med,
+            ci_hi_pct: hi,
+            median_v1: 1.0,
+            median_v2: 1.0,
+            point_pct: med,
+        };
+        BenchmarkVerdict {
+            name: name.into(),
+            n_results: 45,
+            change: ChangeKind::from_output(&output),
+            output,
+        }
+    }
+
+    fn suite(label: &str, verdicts: Vec<BenchmarkVerdict>) -> SuiteAnalysis {
+        let mut s = SuiteAnalysis {
+            label: label.into(),
+            verdicts,
+            excluded: vec![],
+        };
+        s.sort();
+        s
+    }
+
+    #[test]
+    fn perfect_agreement() {
+        let a = suite("a", vec![verdict("x", 1.0, 2.0, 3.0), verdict("y", -1.0, 0.0, 1.0)]);
+        let b = suite("b", vec![verdict("x", 0.5, 1.5, 2.5), verdict("y", -0.5, 0.1, 0.9)]);
+        let rep = agreement(&a, &b);
+        assert_eq!(rep.common, 2);
+        assert_eq!(rep.agreeing, 2);
+        assert_eq!(rep.agreement_pct(), 100.0);
+        assert!(rep.max_possible_change_pct().is_none());
+    }
+
+    #[test]
+    fn opposite_directions_detected() {
+        let a = suite("a", vec![verdict("x", 5.0, 7.0, 9.0)]);
+        let b = suite("b", vec![verdict("x", -12.0, -10.0, -8.0)]);
+        let rep = agreement(&a, &b);
+        assert_eq!(rep.agreeing, 0);
+        assert_eq!(rep.disagreements[0].kind, DisagreementKind::OppositeDirections);
+        assert_eq!(rep.disagreements[0].max_abs_diff_pct, 10.0);
+        // Opposite-direction disagreements are not "possible changes".
+        assert!(rep.max_possible_change_pct().is_none());
+    }
+
+    #[test]
+    fn one_sided_detection() {
+        let a = suite("a", vec![verdict("x", 1.0, 3.0, 5.0)]);
+        let b = suite("b", vec![verdict("x", -1.0, 2.0, 5.0)]);
+        let rep = agreement(&a, &b);
+        assert_eq!(rep.disagreements[0].kind, DisagreementKind::OnlyFirstDetects);
+        assert_eq!(rep.max_possible_change_pct(), Some(3.0));
+        let rep_rev = agreement(&b, &a);
+        assert_eq!(rep_rev.disagreements[0].kind, DisagreementKind::OnlySecondDetects);
+    }
+
+    #[test]
+    fn missing_benchmarks_are_skipped() {
+        let a = suite("a", vec![verdict("x", 1.0, 2.0, 3.0), verdict("z", 1.0, 2.0, 3.0)]);
+        let b = suite("b", vec![verdict("x", 1.0, 2.0, 3.0)]);
+        let rep = agreement(&a, &b);
+        assert_eq!(rep.common, 1);
+        assert_eq!(rep.agreement_pct(), 100.0);
+    }
+
+    #[test]
+    fn coverage_metrics() {
+        // a median 2.0 inside b's CI [1,3]; b median 2.5 inside a's CI [1.5,3.5].
+        let a = suite("a", vec![verdict("x", 1.5, 2.0, 3.5), verdict("y", 1.0, 5.0, 9.0)]);
+        let b = suite("b", vec![verdict("x", 1.0, 2.5, 3.0), verdict("y", 0.5, 0.9, 1.2)]);
+        let cov = coverage(&a, &b);
+        assert_eq!(cov.both_change, 2);
+        // x: a_in_b yes, b_in_a yes. y: a med 5.0 not in [0.5,1.2] no;
+        // b med 0.9 not in [1,9]... 0.9 < 1.0 -> no.
+        assert_eq!(cov.one_sided_a_in_b_pct, 50.0);
+        assert_eq!(cov.one_sided_b_in_a_pct, 50.0);
+        assert_eq!(cov.two_sided_pct, 50.0);
+    }
+
+    #[test]
+    fn coverage_requires_both_change() {
+        let a = suite("a", vec![verdict("x", -1.0, 0.0, 1.0)]);
+        let b = suite("b", vec![verdict("x", 1.0, 2.0, 3.0)]);
+        let cov = coverage(&a, &b);
+        assert_eq!(cov.both_change, 0);
+        assert_eq!(cov.two_sided_pct, 0.0);
+    }
+
+    #[test]
+    fn possible_changes_across_experiments() {
+        let a = suite("a", vec![verdict("x", 1.0, 4.0, 7.0), verdict("y", -1.0, 0.0, 1.0)]);
+        let b = suite("b", vec![verdict("x", -1.0, 1.0, 3.0), verdict("y", 1.0, 2.0, 3.0)]);
+        let c = suite("c", vec![verdict("x", 2.0, 5.0, 8.0), verdict("y", -1.0, 0.5, 2.0)]);
+        let pcs = possible_changes(&[&a, &b, &c]);
+        // x: a vs b disagree (4.0), b vs c disagree (5.0) -> max 5.0
+        // y: a vs b disagree (2.0), b vs c disagree (2.0) -> 2.0
+        assert_eq!(pcs.len(), 2);
+        assert_eq!(pcs[0], ("x".to_string(), 5.0));
+        assert_eq!(pcs[1], ("y".to_string(), 2.0));
+    }
+}

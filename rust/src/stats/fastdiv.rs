@@ -1,0 +1,107 @@
+//! Strength-reduced division for the bootstrap hot loop.
+//!
+//! The resample indexing `idx % n_valid` executes B x n_valid times per
+//! benchmark CI (≈92k times at the paper geometry), and `n_valid` is only
+//! loop-invariant — not a compile-time constant — so LLVM cannot strength-
+//! reduce the `%` itself. This precomputes a Granlund–Montgomery-style
+//! reciprocal once per benchmark row and turns each modulo into a
+//! multiply + shift + multiply-subtract (§Perf optimization #1, see
+//! EXPERIMENTS.md).
+//!
+//! Exactness domain: dividend < 2^31 (the index bits are 31-bit by
+//! construction, `Rng::fill_index_bits`) and divisor <= 4096 (lane widths
+//! are <= 256). Verified exhaustively at the boundaries in tests.
+
+/// Precomputed reciprocal for `x % d` with `x < 2^31`, `1 <= d <= 4096`.
+#[derive(Debug, Clone, Copy)]
+pub struct FastMod {
+    d: u64,
+    inv: u64,
+}
+
+/// ceil(2^SHIFT / d) fits the exactness condition for x < 2^31, d <= 4096:
+/// SHIFT = 43 gives 2^43 >= d * 2^31 for all supported d.
+const SHIFT: u32 = 43;
+
+impl FastMod {
+    /// Build the reciprocal for divisor `d`.
+    pub fn new(d: u32) -> Self {
+        assert!(d >= 1, "divisor must be positive");
+        assert!(d <= 4096, "divisor {d} exceeds the exactness domain");
+        let d = d as u64;
+        FastMod {
+            d,
+            inv: ((1u64 << SHIFT) + d - 1) / d,
+        }
+    }
+
+    /// `x % d` (exact for `x < 2^31`).
+    ///
+    /// The 31x43-bit product needs 128-bit arithmetic; on x86-64 this is
+    /// a single widening `mul` + shift.
+    #[inline(always)]
+    pub fn rem(&self, x: u32) -> u32 {
+        debug_assert!(x < (1 << 31));
+        let q = ((x as u128 * self.inv as u128) >> SHIFT) as u64;
+        (x as u64 - q * self.d) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_for_boundary_dividends() {
+        for d in 1..=4096u32 {
+            let fm = FastMod::new(d);
+            for x in [
+                0u32,
+                1,
+                d - 1,
+                d,
+                d + 1,
+                2 * d,
+                (1 << 31) - 1,
+                (1 << 31) - d,
+                (1 << 30),
+                (1 << 30) + 1,
+            ] {
+                if x < (1 << 31) {
+                    assert_eq!(fm.rem(x), x % d, "x={x} d={d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_for_random_dividends() {
+        let mut rng = Rng::new(0xD17);
+        for _ in 0..200 {
+            let d = 1 + rng.below(4096) as u32;
+            let fm = FastMod::new(d);
+            for _ in 0..500 {
+                let x = (rng.next_u32()) >> 1;
+                assert_eq!(fm.rem(x), x % d, "x={x} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_width_divisors_hot_path() {
+        // The divisors the analyzer actually uses.
+        for d in 1..=256u32 {
+            let fm = FastMod::new(d);
+            for x in (0..(1u32 << 31)).step_by(104_729) {
+                assert_eq!(fm.rem(x), x % d, "x={x} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the exactness domain")]
+    fn rejects_out_of_domain_divisor() {
+        let _ = FastMod::new(5000);
+    }
+}

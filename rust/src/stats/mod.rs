@@ -1,0 +1,28 @@
+//! Statistical analysis: bootstrap CIs of the median relative difference,
+//! change classification, and cross-experiment comparison metrics.
+//!
+//! Two interchangeable bootstrap engines exist:
+//!
+//! * the **XLA artifact** ([`crate::runtime::AnalysisEngine`]) — the AOT
+//!   path used by the coordinator's hot loop;
+//! * the **native engine** ([`bootstrap_native`]) — a pure-Rust mirror of
+//!   the same algorithm (same median and order-statistic conventions as
+//!   `python/compile/kernels/ref.py`), used for cross-validation, property
+//!   tests, and as the performance baseline in `benches/perf_analysis.rs`.
+
+mod adaptive;
+mod analyzer;
+mod bootstrap_native;
+mod fastdiv;
+mod compare;
+mod suite_result;
+
+pub use adaptive::{adaptive_plan, required_results, AdaptivePlan, StoppingRule};
+pub use analyzer::{AnalysisBackend, Analyzer, DEFAULT_B, DEFAULT_MIN_RESULTS, SUPPORTED_LANES};
+pub use bootstrap_native::{bootstrap_native, bootstrap_native_single, bootstrap_row_reference};
+pub use fastdiv::FastMod;
+pub use compare::{
+    agreement, coverage, possible_changes, AgreementReport, Coverage, Disagreement,
+    DisagreementKind,
+};
+pub use suite_result::{BenchmarkVerdict, ChangeKind, Measurements, SuiteAnalysis};

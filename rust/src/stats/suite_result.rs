@@ -1,0 +1,181 @@
+//! Result data model: raw measurement sets and per-benchmark verdicts.
+
+use crate::runtime::AnalysisOutput;
+
+/// Raw duet measurements of one microbenchmark: paired per-repeat results
+/// (ns/op) for the two SUT versions, collected from the same instance.
+#[derive(Debug, Clone, Default)]
+pub struct Measurements {
+    /// Benchmark identifier, e.g. `BenchmarkAdd/items_100000`.
+    pub name: String,
+    /// ns/op results of version 1, one per successful repeat.
+    pub v1: Vec<f64>,
+    /// ns/op results of version 2, paired with `v1` by repeat.
+    pub v2: Vec<f64>,
+}
+
+impl Measurements {
+    /// Number of paired results.
+    pub fn len(&self) -> usize {
+        self.v1.len().min(self.v2.len())
+    }
+
+    /// True if no paired results were collected.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Classification of a microbenchmark's performance difference
+/// (paper §6.1: CI overlap with zero at the 99% level).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChangeKind {
+    /// CI overlaps zero: no statistically significant change.
+    NoChange,
+    /// CI entirely above zero: v2 takes more time per op (slower).
+    Regression,
+    /// CI entirely below zero: v2 takes less time per op (faster).
+    Improvement,
+}
+
+impl ChangeKind {
+    /// From a CI output.
+    pub fn from_output(o: &AnalysisOutput) -> Self {
+        match o.direction() {
+            0 => ChangeKind::NoChange,
+            1 => ChangeKind::Regression,
+            _ => ChangeKind::Improvement,
+        }
+    }
+
+    /// Whether this is a *performance change* in the paper's sense.
+    pub fn is_change(self) -> bool {
+        self != ChangeKind::NoChange
+    }
+}
+
+/// Analysis verdict for one microbenchmark.
+#[derive(Debug, Clone)]
+pub struct BenchmarkVerdict {
+    /// Benchmark identifier.
+    pub name: String,
+    /// Number of paired results that entered the analysis.
+    pub n_results: usize,
+    /// Bootstrap output (CI bounds, medians, point estimate).
+    pub output: AnalysisOutput,
+    /// Classification derived from the CI.
+    pub change: ChangeKind,
+}
+
+/// Full suite analysis of one experiment.
+#[derive(Debug, Clone, Default)]
+pub struct SuiteAnalysis {
+    /// Experiment label (e.g. `baseline`, `aa`, `lower-memory`).
+    pub label: String,
+    /// Per-benchmark verdicts, sorted by name (only benchmarks that
+    /// passed the min-results filter).
+    pub verdicts: Vec<BenchmarkVerdict>,
+    /// Benchmarks excluded for insufficient results (paper: < 10).
+    pub excluded: Vec<String>,
+}
+
+impl SuiteAnalysis {
+    /// Verdict lookup by benchmark name.
+    pub fn get(&self, name: &str) -> Option<&BenchmarkVerdict> {
+        self.verdicts
+            .binary_search_by(|v| v.name.as_str().cmp(name))
+            .ok()
+            .map(|i| &self.verdicts[i])
+    }
+
+    /// Number of detected *performance changes*.
+    pub fn change_count(&self) -> usize {
+        self.verdicts.iter().filter(|v| v.change.is_change()).count()
+    }
+
+    /// Absolute bootstrap-median differences of all analyzed benchmarks
+    /// [%] — the data behind the paper's Fig. 4/5 CDFs.
+    pub fn abs_diffs_pct(&self) -> Vec<f64> {
+        self.verdicts
+            .iter()
+            .map(|v| v.output.boot_median_pct.abs() as f64)
+            .collect()
+    }
+
+    /// Sort verdicts by name (required for [`Self::get`]).
+    pub fn sort(&mut self) {
+        self.verdicts.sort_by(|a, b| a.name.cmp(&b.name));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out(lo: f32, med: f32, hi: f32) -> AnalysisOutput {
+        AnalysisOutput {
+            ci_lo_pct: lo,
+            boot_median_pct: med,
+            ci_hi_pct: hi,
+            median_v1: 1.0,
+            median_v2: 1.0 + med / 100.0,
+            point_pct: med,
+        }
+    }
+
+    #[test]
+    fn change_kind_classification() {
+        assert_eq!(ChangeKind::from_output(&out(-1.0, 0.5, 2.0)), ChangeKind::NoChange);
+        assert_eq!(ChangeKind::from_output(&out(0.5, 1.0, 2.0)), ChangeKind::Regression);
+        assert_eq!(ChangeKind::from_output(&out(-3.0, -2.0, -1.0)), ChangeKind::Improvement);
+        assert!(ChangeKind::Regression.is_change());
+        assert!(!ChangeKind::NoChange.is_change());
+    }
+
+    #[test]
+    fn boundary_ci_touching_zero_is_no_change() {
+        // CI bounds exactly at zero overlap zero -> no change.
+        assert_eq!(ChangeKind::from_output(&out(0.0, 1.0, 2.0)), ChangeKind::NoChange);
+        assert_eq!(ChangeKind::from_output(&out(-2.0, -1.0, 0.0)), ChangeKind::NoChange);
+    }
+
+    #[test]
+    fn suite_lookup_and_counts() {
+        let mut s = SuiteAnalysis {
+            label: "t".into(),
+            verdicts: vec![
+                BenchmarkVerdict {
+                    name: "B".into(),
+                    n_results: 45,
+                    output: out(1.0, 2.0, 3.0),
+                    change: ChangeKind::Regression,
+                },
+                BenchmarkVerdict {
+                    name: "A".into(),
+                    n_results: 45,
+                    output: out(-1.0, 0.0, 1.0),
+                    change: ChangeKind::NoChange,
+                },
+            ],
+            excluded: vec!["C".into()],
+        };
+        s.sort();
+        assert_eq!(s.get("A").unwrap().change, ChangeKind::NoChange);
+        assert_eq!(s.get("B").unwrap().change, ChangeKind::Regression);
+        assert!(s.get("Z").is_none());
+        assert_eq!(s.change_count(), 1);
+        assert_eq!(s.abs_diffs_pct(), vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn measurements_len() {
+        let m = Measurements {
+            name: "x".into(),
+            v1: vec![1.0, 2.0, 3.0],
+            v2: vec![1.0, 2.0],
+        };
+        assert_eq!(m.len(), 2);
+        assert!(!m.is_empty());
+        assert!(Measurements::default().is_empty());
+    }
+}

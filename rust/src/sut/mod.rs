@@ -1,0 +1,24 @@
+//! Synthetic Software Under Test: a VictoriaMetrics-like microbenchmark
+//! suite with known ground truth.
+//!
+//! The paper evaluates ElastiBench on the VictoriaMetrics suite (106
+//! microbenchmarks incl. config variants) at two commits. We cannot run
+//! the real database here, so this module generates a synthetic suite
+//! whose *statistical* properties match what the paper reports (DESIGN.md
+//! §1): per-benchmark base latencies and noise classes, ~23 genuine
+//! performance changes between v1 and v2 (up to +116%, improvements around
+//! −10%), benchmarks that cannot run in the restricted FaaS environment
+//! (§3.2), heavy-setup benchmarks that hit the 20 s timeout, and the
+//! pathological `BenchmarkAddMulti` family whose benchmark *code* changed
+//! between versions (§6.2.2) so different environments measure genuinely
+//! different effects.
+//!
+//! Everything is generated deterministically from `SutConfig::seed`, so
+//! the ground truth is identical across all experiments of a run — the
+//! same role the pinned VictoriaMetrics commits play in the paper.
+
+mod generator;
+mod model;
+
+pub use generator::generate;
+pub use model::{Microbenchmark, NoiseClass, Suite, Version};

@@ -1,0 +1,130 @@
+//! SUT data model: microbenchmarks with ground-truth behaviour.
+
+/// Which SUT version executes (paper: commits f611434 / 7ecaa2fe).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Version {
+    /// Reference version (initial commit).
+    V1,
+    /// Candidate version (last commit).
+    V2,
+}
+
+/// Intrinsic run-to-run variability class of a microbenchmark
+/// (Laaber et al. [34]: suites mix stable and highly unstable benchmarks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NoiseClass {
+    /// Coefficient of variation < ~2%.
+    Stable,
+    /// CV ~2–5%.
+    Moderate,
+    /// CV ~5–15% (e.g. allocation/GC heavy).
+    Unstable,
+}
+
+/// Ground-truth model of one microbenchmark (one `Benchmark*` function at
+/// one configuration; configurations count as independent benchmarks,
+/// paper §6.1).
+#[derive(Debug, Clone)]
+pub struct Microbenchmark {
+    /// Full name, e.g. `BenchmarkAddRows/items_100000`.
+    pub name: String,
+    /// Function family, e.g. `BenchmarkAddRows`.
+    pub family: String,
+    /// True mean time per operation for v1 [ns/op].
+    pub base_ns_per_op: f64,
+    /// Relative per-execution measurement noise (CV) of one benchmark run.
+    pub rel_sigma: f64,
+    /// Noise class (determines `rel_sigma`).
+    pub noise: NoiseClass,
+    /// Multiplicative true effect of v2 (1.0 = unchanged, 1.10 = 10%
+    /// slower, 0.90 = 10% faster).
+    pub effect_v2: f64,
+    /// Effect measured on FaaS when it differs from `effect_v2` (ARM vs
+    /// x86 / Go-version magnitude shifts for real changes; opposite-sign
+    /// effects for benchmarks whose benchmark code changed).
+    pub faas_effect_override: Option<f64>,
+    /// The benchmark *code* itself changed between versions (paper's
+    /// `BenchmarkAddMulti`), making cross-environment results
+    /// direction-inconsistent.
+    pub code_changed: bool,
+    /// Per-run fixture setup time [s] at 1.0 vCPU (scales inversely with
+    /// available compute).
+    pub setup_s: f64,
+    /// Peak memory demand [MB] (paper: max observed 740 MB).
+    pub peak_mem_mb: f64,
+    /// Writes to the local file system — fails in the restricted FaaS
+    /// environment (§3.2) but runs on VMs.
+    pub writes_fs: bool,
+}
+
+impl Microbenchmark {
+    /// True time per op of a version in a *neutral* environment [ns].
+    pub fn true_ns(&self, version: Version, on_faas: bool) -> f64 {
+        match version {
+            Version::V1 => self.base_ns_per_op,
+            Version::V2 => {
+                let effect = match self.faas_effect_override {
+                    Some(faas_effect) if on_faas => faas_effect,
+                    _ => self.effect_v2,
+                };
+                self.base_ns_per_op * effect
+            }
+        }
+    }
+
+    /// True relative change [%] as an idealized observer on the given
+    /// platform would see it.
+    pub fn true_change_pct(&self, on_faas: bool) -> f64 {
+        (self.true_ns(Version::V2, on_faas) / self.true_ns(Version::V1, on_faas) - 1.0)
+            * 100.0
+    }
+
+    /// Whether the ground truth changed between versions (on VMs — the
+    /// paper's notion of the "original dataset" truth).
+    pub fn has_true_change(&self) -> bool {
+        self.effect_v2 != 1.0
+    }
+
+    /// Benchmark code changed between versions (direction-inconsistent).
+    pub fn benchmark_changed(&self) -> bool {
+        self.code_changed
+    }
+}
+
+/// The generated suite plus bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Suite {
+    /// All microbenchmarks, sorted by name.
+    pub benchmarks: Vec<Microbenchmark>,
+    /// Config used to generate it.
+    pub config: crate::config::SutConfig,
+}
+
+impl Suite {
+    /// Benchmark count.
+    pub fn len(&self) -> usize {
+        self.benchmarks.len()
+    }
+
+    /// True if empty (never for generated suites).
+    pub fn is_empty(&self) -> bool {
+        self.benchmarks.is_empty()
+    }
+
+    /// Lookup by name.
+    pub fn get(&self, name: &str) -> Option<&Microbenchmark> {
+        self.benchmarks
+            .binary_search_by(|b| b.name.as_str().cmp(name))
+            .ok()
+            .map(|i| &self.benchmarks[i])
+    }
+
+    /// Names of benchmarks with a genuine (VM ground-truth) change.
+    pub fn true_change_names(&self) -> Vec<&str> {
+        self.benchmarks
+            .iter()
+            .filter(|b| b.has_true_change())
+            .map(|b| b.name.as_str())
+            .collect()
+    }
+}

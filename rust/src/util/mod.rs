@@ -1,0 +1,13 @@
+//! Small self-contained utilities.
+//!
+//! The offline build environment has no `rand`, `serde`, or `serde_json`
+//! crates, so the deterministic PRNG, distributions, JSON reader/writer and
+//! descriptive statistics used across the simulator live here (see
+//! DESIGN.md "Dependency policy").
+
+pub mod benchkit;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,159 @@
+//! Descriptive statistics shared by the simulator and the analysis engine.
+//!
+//! Median and CI conventions intentionally mirror
+//! `python/compile/kernels/ref.py` so the native Rust bootstrap engine and
+//! the XLA artifact agree to float tolerance.
+
+/// Median as the average of the two central order statistics of a sorted
+/// slice (matches the kernel's convention).
+pub fn median_sorted(sorted: &[f64]) -> f64 {
+    assert!(!sorted.is_empty(), "median of empty slice");
+    let n = sorted.len();
+    0.5 * (sorted[(n - 1) / 2] + sorted[n / 2])
+}
+
+/// Median of an unsorted slice without full sort (two quickselects).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "median of empty slice");
+    let n = xs.len();
+    let mut buf = xs.to_vec();
+    let lo_i = (n - 1) / 2;
+    let (_, lo, rest) =
+        buf.select_nth_unstable_by(lo_i, |a, b| a.partial_cmp(b).expect("NaN in median"));
+    let lo = *lo;
+    let hi = if n % 2 == 1 {
+        lo
+    } else {
+        // upper median = min of the right partition
+        rest.iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
+    };
+    0.5 * (lo + hi)
+}
+
+/// In-place median for scratch buffers (avoids the alloc in [`median`]).
+pub fn median_in_place(buf: &mut [f64]) -> f64 {
+    assert!(!buf.is_empty(), "median of empty slice");
+    let n = buf.len();
+    let lo_i = (n - 1) / 2;
+    let (_, lo, rest) =
+        buf.select_nth_unstable_by(lo_i, |a, b| a.partial_cmp(b).expect("NaN in median"));
+    let lo = *lo;
+    let hi = if n % 2 == 1 {
+        lo
+    } else {
+        rest.iter().copied().fold(f64::INFINITY, f64::min)
+    };
+    0.5 * (lo + hi)
+}
+
+/// Order statistic `sorted[k]` convention used for bootstrap CI bounds:
+/// `lo = floor(alpha/2 * (B-1))`, `hi = ceil((1-alpha/2) * (B-1))`.
+pub fn ci_order_statistics(b: usize, alpha: f64) -> (usize, usize) {
+    let lo = (alpha / 2.0 * (b - 1) as f64).floor() as usize;
+    let hi = ((1.0 - alpha / 2.0) * (b - 1) as f64).ceil() as usize;
+    (lo, hi)
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn stddev(xs: &[f64]) -> f64 {
+    assert!(xs.len() > 1);
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile (0..=100) by nearest-rank on a sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    let idx = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Empirical CDF sample points `(value, fraction <= value)` of a dataset,
+/// used for the paper's Fig. 4/5 style plots.
+pub fn ecdf(xs: &[f64]) -> Vec<(f64, f64)> {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in ecdf"));
+    let n = sorted.len();
+    sorted
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| (v, (i + 1) as f64 / n as f64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+        assert_eq!(median(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn median_matches_sorted_convention() {
+        let mut r = crate::util::Rng::new(1);
+        for n in 1..40 {
+            let xs: Vec<f64> = (0..n).map(|_| r.f64() * 100.0).collect();
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(median(&xs), median_sorted(&sorted), "n={n}");
+        }
+    }
+
+    #[test]
+    fn median_in_place_matches() {
+        let xs = [9.0, 2.0, 7.0, 7.0, 1.0, 0.5];
+        let mut buf = xs.to_vec();
+        assert_eq!(median_in_place(&mut buf), median(&xs));
+    }
+
+    #[test]
+    fn ci_order_statistics_b2048() {
+        // Must match python ci_order_statistics(2048, 0.01).
+        let (lo, hi) = ci_order_statistics(2048, 0.01);
+        assert_eq!((lo, hi), (10, 2037));
+    }
+
+    #[test]
+    fn ci_order_statistics_small() {
+        let (lo, hi) = ci_order_statistics(64, 0.01);
+        assert_eq!((lo, hi), (0, 63));
+        let (lo, hi) = ci_order_statistics(1024, 0.05);
+        assert_eq!((lo, hi), (25, 998));
+    }
+
+    #[test]
+    fn mean_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.1380899352993947).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let sorted = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile_sorted(&sorted, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&sorted, 100.0), 5.0);
+        assert_eq!(percentile_sorted(&sorted, 50.0), 3.0);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let pts = ecdf(&[3.0, 1.0, 2.0, 2.0]);
+        assert_eq!(pts.len(), 4);
+        assert!(pts.windows(2).all(|w| w[0].0 <= w[1].0 && w[0].1 < w[1].1));
+        assert_eq!(pts.last().unwrap().1, 1.0);
+    }
+}

@@ -1,0 +1,272 @@
+//! Cloud-VM baseline: the Grambow et al. [23] methodology that produced
+//! the paper's *original dataset*.
+//!
+//! The suite's repetitions are spread over a small fleet of VMs
+//! (RMIT — Randomized Multiple Interleaved Trials [1]): each repetition
+//! shuffles the benchmark order and runs every benchmark as a duet
+//! (v1 + v2 back-to-back on the same VM, randomized version order).
+//! Execution is strictly sequential per VM; wall time and cost follow
+//! from boot + setup + benchmark durations and hourly billing.
+//!
+//! This is both the paper's comparison baseline (Table: ~4 h, ~$1.18) and
+//! the generator of the "original dataset" that ElastiBench's agreement
+//! numbers are computed against.
+
+use crate::benchexec::{run_once, ExecCtx};
+use crate::config::{SutConfig, VmConfig};
+use crate::faas::noise::{EnvState, NoiseParams};
+use crate::stats::Measurements;
+use crate::sut::{Suite, Version};
+use crate::util::Rng;
+
+/// Per-benchmark VM timeout [s]: VMs are not subject to the FaaS 20 s
+/// constraint; Grambow et al. allow minutes per benchmark.
+const VM_BENCH_TIMEOUT_S: f64 = 300.0;
+
+/// Outcome of the VM baseline experiment.
+#[derive(Debug, Clone)]
+pub struct VmRunReport {
+    /// Collected duet measurements per benchmark (the original dataset).
+    pub measurements: Vec<Measurements>,
+    /// Wall-clock duration of the whole experiment [s] (max over VMs).
+    pub wall_s: f64,
+    /// Total cost [USD] (hourly billing, rounded up per VM).
+    pub cost_usd: f64,
+    /// Benchmarks that produced no results (all repeats failed).
+    pub failed: Vec<String>,
+    /// Per-VM busy time [s] (diagnostics).
+    pub per_vm_busy_s: Vec<f64>,
+}
+
+/// Run the VM baseline over a suite.
+pub fn run_vm_baseline(suite: &Suite, sut: &SutConfig, cfg: &VmConfig) -> VmRunReport {
+    let mut rng = Rng::new(cfg.seed);
+    let noise = NoiseParams {
+        instance_sigma: cfg.instance_sigma,
+        diurnal_amplitude: cfg.diurnal_amplitude,
+        start_hour_utc: cfg.start_hour_utc,
+        cotenancy_sigma: cfg.cotenancy_sigma,
+        cotenancy_revert: 0.25,
+    };
+    let _ = sut; // image sizing is FaaS-only; kept for interface symmetry
+
+    let n = suite.len();
+    let mut vms: Vec<(EnvState, f64)> = (0..cfg.vm_count)
+        .map(|i| {
+            let mut r = rng.fork(0x7000 + i as u64);
+            // Boot + one-time setup (clone, compile both versions, fill
+            // build cache) serialized at experiment start.
+            let t0 = cfg.boot_s * r.lognormal(0.0, 0.1) + cfg.setup_s * r.lognormal(0.0, 0.15);
+            (EnvState::new(&noise, &mut r, 0.0), t0)
+        })
+        .collect();
+    let mut vm_rngs: Vec<Rng> = (0..cfg.vm_count)
+        .map(|i| rng.fork(0x8000 + i as u64))
+        .collect();
+
+    let mut measurements: Vec<Measurements> = suite
+        .benchmarks
+        .iter()
+        .map(|b| Measurements {
+            name: b.name.clone(),
+            v1: Vec::new(),
+            v2: Vec::new(),
+        })
+        .collect();
+
+    // RMIT: repetition r runs on VM r % vm_count with a fresh shuffle.
+    for rep in 0..cfg.repetitions {
+        let vm = rep % cfg.vm_count;
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for bench_idx in order {
+            let b = &suite.benchmarks[bench_idx];
+            let (env, busy) = &mut vms[vm];
+            let vm_rng = &mut vm_rngs[vm];
+            let t = *busy;
+            let v1_first = vm_rng.chance(0.5);
+            let run = |version, slot: u64, at: f64, env: &mut EnvState, vm_rng: &mut Rng| {
+                // The factor closure borrows env+vm_rng exclusively, so
+                // the run's own noise draws use a pre-forked stream —
+                // distinct per (repetition, benchmark, duet slot).
+                let mut run_rng = vm_rng.fork(((rep * n + bench_idx) as u64) << 1 | slot);
+                let mut factor = |tt: f64| env.factor(&noise, vm_rng, tt);
+                let mut ctx = ExecCtx {
+                    vcpus: 1.0,
+                    env_factor: &mut factor,
+                    rng: &mut run_rng,
+                    restricted_fs: false,
+                    timeout_s: VM_BENCH_TIMEOUT_S,
+                    on_faas: false,
+                    extra_sigma: cfg.order_effect_sigma,
+                };
+                run_once(b, version, at, &mut ctx)
+            };
+            let (first, second) = if v1_first {
+                (Version::V1, Version::V2)
+            } else {
+                (Version::V2, Version::V1)
+            };
+            let r1 = run(first, 0, t, env, vm_rng);
+            let mut t2 = t;
+            if let Ok(o) = &r1 {
+                t2 += o.wall_s;
+            } else if let Err((_, w)) = &r1 {
+                t2 += w;
+            }
+            let r2 = run(second, 1, t2, env, vm_rng);
+            let mut t3 = t2;
+            if let Ok(o) = &r2 {
+                t3 += o.wall_s;
+            } else if let Err((_, w)) = &r2 {
+                t3 += w;
+            }
+            *busy = t3;
+            if let (Ok(a), Ok(bo)) = (r1, r2) {
+                let (s1, s2) = if v1_first {
+                    (a.ns_per_op, bo.ns_per_op)
+                } else {
+                    (bo.ns_per_op, a.ns_per_op)
+                };
+                measurements[bench_idx].v1.push(s1);
+                measurements[bench_idx].v2.push(s2);
+            }
+        }
+    }
+
+    let per_vm_busy_s: Vec<f64> = vms.iter().map(|(_, busy)| *busy).collect();
+    let wall_s = per_vm_busy_s.iter().cloned().fold(0.0, f64::max);
+    // Per-second billing (modern EC2), each VM billed for its busy wall.
+    let cost_usd: f64 = per_vm_busy_s
+        .iter()
+        .map(|&busy| busy / 3600.0 * cfg.usd_per_hour)
+        .sum();
+
+    let failed = measurements
+        .iter()
+        .filter(|m| m.is_empty())
+        .map(|m| m.name.clone())
+        .collect();
+    VmRunReport {
+        measurements,
+        wall_s,
+        cost_usd,
+        failed,
+        per_vm_busy_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sut::generate;
+
+    fn small_cfg() -> (Suite, SutConfig, VmConfig) {
+        let sut = SutConfig {
+            benchmark_count: 12,
+            true_changes: 4,
+            faas_incompatible: 2,
+            slow_setup: 1,
+            ..SutConfig::default()
+        };
+        let suite = generate(&sut);
+        let vm = VmConfig {
+            repetitions: 8,
+            ..VmConfig::default()
+        };
+        (suite, sut, vm)
+    }
+
+    #[test]
+    fn collects_expected_result_counts() {
+        let (suite, sut, vm) = small_cfg();
+        let report = run_vm_baseline(&suite, &sut, &vm);
+        assert_eq!(report.measurements.len(), 12);
+        // Benchmarks that run (incl. fs-writers — VMs are unrestricted)
+        // get one pair per repetition.
+        let ok: Vec<_> = report
+            .measurements
+            .iter()
+            .filter(|m| !m.is_empty())
+            .collect();
+        assert!(ok.len() >= 11, "only slow-setup may fail: {:?}", report.failed);
+        for m in ok {
+            assert_eq!(m.v1.len(), vm.repetitions);
+            assert_eq!(m.v2.len(), vm.repetitions);
+        }
+    }
+
+    #[test]
+    fn fs_writers_succeed_on_vms() {
+        let (suite, sut, vm) = small_cfg();
+        let report = run_vm_baseline(&suite, &sut, &vm);
+        let fs_bench = suite.benchmarks.iter().find(|b| b.writes_fs).unwrap();
+        let m = report
+            .measurements
+            .iter()
+            .find(|m| m.name == fs_bench.name)
+            .unwrap();
+        assert!(!m.is_empty(), "VMs have no restricted fs");
+    }
+
+    #[test]
+    fn wall_time_and_cost_positive_and_consistent() {
+        let (suite, sut, vm) = small_cfg();
+        let report = run_vm_baseline(&suite, &sut, &vm);
+        assert!(report.wall_s > vm.boot_s, "at least boot+setup");
+        assert_eq!(report.per_vm_busy_s.len(), vm.vm_count);
+        // Per-second billing: cost tracks busy time.
+        let busy_h: f64 = report.per_vm_busy_s.iter().sum::<f64>() / 3600.0;
+        assert!((report.cost_usd - busy_h * vm.usd_per_hour).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (suite, sut, vm) = small_cfg();
+        let a = run_vm_baseline(&suite, &sut, &vm);
+        let b = run_vm_baseline(&suite, &sut, &vm);
+        assert_eq!(a.wall_s, b.wall_s);
+        assert_eq!(a.cost_usd, b.cost_usd);
+        for (x, y) in a.measurements.iter().zip(&b.measurements) {
+            assert_eq!(x.v1, y.v1);
+            assert_eq!(x.v2, y.v2);
+        }
+    }
+
+    #[test]
+    fn different_seed_changes_samples() {
+        let (suite, sut, mut vm) = small_cfg();
+        let a = run_vm_baseline(&suite, &sut, &vm);
+        vm.seed = 12345;
+        let b = run_vm_baseline(&suite, &sut, &vm);
+        let some_bench = a
+            .measurements
+            .iter()
+            .zip(&b.measurements)
+            .find(|(x, _)| !x.is_empty())
+            .unwrap();
+        assert_ne!(some_bench.0.v1, some_bench.1.v1);
+    }
+
+    #[test]
+    fn full_suite_vm_baseline_shape() {
+        // The paper-scale run: ~4 h wall, ~$1.2, ~45 results/benchmark.
+        let sut = SutConfig::default();
+        let suite = generate(&sut);
+        let vm = VmConfig::default();
+        let report = run_vm_baseline(&suite, &sut, &vm);
+        let hours = report.wall_s / 3600.0;
+        assert!(hours > 2.0 && hours < 8.0, "VM baseline ~4h, got {hours:.2}h");
+        assert!(
+            report.cost_usd > 0.5 && report.cost_usd < 3.0,
+            "~$1.2, got {}",
+            report.cost_usd
+        );
+        let with_results = report
+            .measurements
+            .iter()
+            .filter(|m| m.len() >= 10)
+            .count();
+        assert!(with_results >= 95, "most benchmarks measured: {with_results}");
+    }
+}

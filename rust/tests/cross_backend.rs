@@ -1,0 +1,124 @@
+//! Cross-backend equivalence: the XLA-artifact analyzer and the native
+//! Rust analyzer must produce the *same verdicts* (and near-identical CI
+//! numbers) for the same measurements and seed — the key guarantee that
+//! lets the native engine serve as the artifact's oracle and perf
+//! baseline.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use elastibench::config::SutConfig;
+use elastibench::exp::{baseline, Workbench};
+use elastibench::stats::{Analyzer, Measurements};
+use elastibench::util::Rng;
+
+fn xla_analyzer_or_skip() -> Option<Analyzer> {
+    match Analyzer::xla(&elastibench::artifacts_dir()) {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("SKIP: {e:#} — run `make artifacts` first");
+            None
+        }
+    }
+}
+
+fn synth_measurements(count: usize, seed: u64) -> Vec<Measurements> {
+    let rng = Rng::new(seed);
+    (0..count)
+        .map(|i| {
+            let mut r = rng.fork(i as u64);
+            let n = 10 + r.below_usize(36);
+            let shift = 1.0 + r.normal_ms(0.0, 0.05);
+            Measurements {
+                name: format!("Benchmark{i}"),
+                v1: (0..n).map(|_| r.lognormal(3.0, 0.2)).collect(),
+                v2: (0..n).map(|_| r.lognormal(3.0, 0.2) * shift).collect(),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn same_verdicts_and_cis_small_batch() {
+    let Some(xla) = xla_analyzer_or_skip() else { return };
+    let native = Analyzer::native();
+    let ms = synth_measurements(7, 0xC0FFEE);
+    let a = xla.analyze("x", &ms, 99).expect("xla analyze");
+    let b = native.analyze("n", &ms, 99).expect("native analyze");
+    assert_eq!(a.verdicts.len(), b.verdicts.len());
+    for (x, n) in a.verdicts.iter().zip(&b.verdicts) {
+        assert_eq!(x.name, n.name);
+        assert_eq!(x.change, n.change, "{}: {:?} vs {:?}", x.name, x.output, n.output);
+        let close = |p: f32, q: f32| (p - q).abs() <= 1e-3 + 1e-4 * p.abs().max(q.abs());
+        assert!(close(x.output.ci_lo_pct, n.output.ci_lo_pct), "{}", x.name);
+        assert!(close(x.output.ci_hi_pct, n.output.ci_hi_pct), "{}", x.name);
+        assert!(close(x.output.boot_median_pct, n.output.boot_median_pct), "{}", x.name);
+    }
+}
+
+#[test]
+fn same_verdicts_full_suite_chunked() {
+    // More benchmarks than any artifact's batch capacity: exercises the
+    // chunking path.
+    let Some(xla) = xla_analyzer_or_skip() else { return };
+    let native = Analyzer::native();
+    let ms = synth_measurements(150, 0xFEED);
+    let a = xla.analyze("x", &ms, 3).expect("xla analyze");
+    let b = native.analyze("n", &ms, 3).expect("native analyze");
+    assert_eq!(a.verdicts.len(), 150);
+    let mismatches = a
+        .verdicts
+        .iter()
+        .zip(&b.verdicts)
+        .filter(|(x, n)| x.change != n.change)
+        .count();
+    assert_eq!(mismatches, 0, "all verdicts must agree across backends");
+}
+
+#[test]
+fn experiment_analysis_matches_across_backends() {
+    let Some(xla) = xla_analyzer_or_skip() else { return };
+    // Run the same (small) experiment measurements through both.
+    let mut wb = Workbench::with_sut(SutConfig {
+        benchmark_count: 12,
+        true_changes: 4,
+        faas_incompatible: 2,
+        slow_setup: 1,
+        ..SutConfig::default()
+    });
+    let native_result = baseline(&wb).expect("native baseline");
+    wb.analyzer = xla;
+    let xla_result = baseline(&wb).expect("xla baseline");
+    assert_eq!(
+        native_result.analysis.verdicts.len(),
+        xla_result.analysis.verdicts.len()
+    );
+    for (n, x) in native_result
+        .analysis
+        .verdicts
+        .iter()
+        .zip(&xla_result.analysis.verdicts)
+    {
+        assert_eq!(n.change, x.change, "{}", n.name);
+    }
+    // The run reports themselves must be identical (same seed, analysis
+    // backend does not influence the simulation).
+    assert_eq!(native_result.report.wall_s, xla_result.report.wall_s);
+    assert_eq!(native_result.report.cost_usd, xla_result.report.cost_usd);
+}
+
+#[test]
+fn wide_lane_sweep_geometry_works_on_xla() {
+    let Some(xla) = xla_analyzer_or_skip() else { return };
+    // >64 results per benchmark forces the 256-lane artifact.
+    let mut rng = Rng::new(5);
+    let ms: Vec<Measurements> = (0..5)
+        .map(|i| Measurements {
+            name: format!("Wide{i}"),
+            v1: (0..135).map(|_| rng.lognormal(0.0, 0.1)).collect(),
+            v2: (0..135).map(|_| rng.lognormal(0.0, 0.1) * 1.08).collect(),
+        })
+        .collect();
+    let a = xla.analyze("wide", &ms, 11).expect("xla wide analyze");
+    assert_eq!(a.verdicts.len(), 5);
+    assert!(a.verdicts.iter().all(|v| v.change.is_change()));
+}

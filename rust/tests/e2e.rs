@@ -1,0 +1,167 @@
+//! End-to-end integration tests: full paper-scale runs and failure
+//! injection through the public API.
+
+use elastibench::config::{ExperimentConfig, PlatformConfig, SutConfig};
+use elastibench::coordinator::{run_experiment, CallFailure};
+use elastibench::exp::{aa, baseline, vm_original, Workbench};
+use elastibench::stats::agreement;
+use elastibench::sut::{generate, Version};
+
+#[test]
+fn paper_scale_headline_shape() {
+    // The full 106-benchmark configuration must land in the paper's
+    // ballpark: ~90 executed, 0 A/A changes, ≥85% agreement with the
+    // original dataset, minutes vs hours, comparable cost.
+    let wb = Workbench::native();
+    let a = aa(&wb).expect("aa");
+    assert_eq!(a.analysis.change_count(), 0, "A/A false positives");
+    assert!(
+        (85..=95).contains(&a.analysis.verdicts.len()),
+        "A/A executed {}",
+        a.analysis.verdicts.len()
+    );
+
+    let base = baseline(&wb).expect("baseline");
+    let orig = vm_original(&wb).expect("vm");
+    let rep = agreement(&base.analysis, &orig.analysis);
+    assert!(
+        rep.agreement_pct() >= 85.0,
+        "agreement {}%",
+        rep.agreement_pct()
+    );
+    assert!(
+        base.report.wall_s < 20.0 * 60.0,
+        "FaaS suite must finish within the function keep-window (paper ≤15 min): {}s",
+        base.report.wall_s
+    );
+    assert!(
+        orig.report.wall_s > 2.0 * 3600.0,
+        "VM baseline takes hours: {}s",
+        orig.report.wall_s
+    );
+    assert!(
+        base.report.cost_usd < 2.0 * orig.report.cost_usd,
+        "FaaS cost {} vs VM {}",
+        base.report.cost_usd,
+        orig.report.cost_usd
+    );
+}
+
+#[test]
+fn pathological_benchmark_reproduces_direction_flip() {
+    // The BenchmarkAddMulti family must be detected with OPPOSITE
+    // directions on the two platforms (paper §6.2.2).
+    let wb = Workbench::native();
+    let base = baseline(&wb).expect("baseline");
+    let orig = vm_original(&wb).expect("vm");
+    let mut flipped = 0;
+    for b in &wb.suite.benchmarks {
+        if !b.benchmark_changed() {
+            continue;
+        }
+        let (Some(f), Some(v)) = (base.analysis.get(&b.name), orig.analysis.get(&b.name))
+        else {
+            continue;
+        };
+        if f.change.is_change() && v.change.is_change() && f.change != v.change {
+            flipped += 1;
+        }
+    }
+    assert!(flipped >= 2, "AddMulti direction flips: {flipped}");
+}
+
+#[test]
+fn crash_injection_degrades_gracefully() {
+    let sut = SutConfig {
+        benchmark_count: 12,
+        true_changes: 3,
+        faas_incompatible: 1,
+        slow_setup: 1,
+        ..SutConfig::default()
+    };
+    let suite = generate(&sut);
+    let platform = PlatformConfig {
+        crash_probability: 0.15,
+        ..PlatformConfig::default()
+    };
+    let exp = ExperimentConfig::default();
+    let report = run_experiment(&suite, &sut, &platform, &exp, (Version::V1, Version::V2));
+    assert!(report.failure_count(CallFailure::Crash) > 0, "crashes injected");
+    // Despite crashes, healthy benchmarks still collect enough results.
+    let healthy = suite
+        .benchmarks
+        .iter()
+        .filter(|b| !b.writes_fs && b.setup_s < 6.0)
+        .count();
+    assert!(
+        report.benchmarks_with_results(10) >= healthy,
+        "healthy benchmarks analyzed: {} >= {healthy}",
+        report.benchmarks_with_results(10)
+    );
+}
+
+#[test]
+fn throttled_platform_times_out_more() {
+    let wb = Workbench::native();
+    let exp2048 = ExperimentConfig::default();
+    let exp1024 = ExperimentConfig {
+        memory_mb: 1024,
+        ..ExperimentConfig::default()
+    };
+    let full = run_experiment(&wb.suite, &wb.sut, &wb.platform, &exp2048, (Version::V1, Version::V2));
+    let low = run_experiment(&wb.suite, &wb.sut, &wb.platform, &exp1024, (Version::V1, Version::V2));
+    assert!(
+        low.failure_count(CallFailure::BenchTimeout)
+            > full.failure_count(CallFailure::BenchTimeout),
+        "reduced vCPU share causes more timeouts (paper §6.2.4)"
+    );
+    assert!(low.benchmarks_with_results(10) < full.benchmarks_with_results(10));
+}
+
+#[test]
+fn function_image_sizes_flow_into_cold_starts() {
+    // Bigger image -> longer cold starts -> longer invoke phase at cold-
+    // start-heavy parallelism.
+    let slim = SutConfig {
+        benchmark_count: 12,
+        source_mb: 20.0,
+        build_cache_mb: 60.0,
+        tooling_mb: 40.0,
+        ..SutConfig::default()
+    };
+    let fat = SutConfig {
+        benchmark_count: 12,
+        ..SutConfig::default()
+    };
+    let exp = ExperimentConfig {
+        parallelism: 180,
+        calls_per_benchmark: 15,
+        ..ExperimentConfig::default()
+    };
+    let plat = PlatformConfig::default();
+    let suite_slim = generate(&slim);
+    let suite_fat = generate(&fat);
+    let r_slim = run_experiment(&suite_slim, &slim, &plat, &exp, (Version::V1, Version::V2));
+    let r_fat = run_experiment(&suite_fat, &fat, &plat, &exp, (Version::V1, Version::V2));
+    assert!(
+        r_fat.wall_s > r_slim.wall_s,
+        "fat image {} vs slim {}",
+        r_fat.wall_s,
+        r_slim.wall_s
+    );
+}
+
+#[test]
+fn reproduction_report_contains_all_artifacts() {
+    let wb = Workbench::with_sut(SutConfig {
+        benchmark_count: 12,
+        true_changes: 4,
+        faas_incompatible: 2,
+        slow_setup: 1,
+        ..SutConfig::default()
+    });
+    let report = elastibench::exp::reproduce_all(&wb).expect("reproduce");
+    for needle in ["Fig. 4", "Fig. 5", "Fig. 6", "Fig. 7", "Paper vs measured"] {
+        assert!(report.contains(needle), "missing {needle}");
+    }
+}

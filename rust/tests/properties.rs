@@ -1,0 +1,263 @@
+//! Property-based tests (in-tree `testkit`) over the statistics engine,
+//! the simulators, and the coordinator invariants.
+
+use elastibench::config::{ExperimentConfig, PlatformConfig, SutConfig, VmConfig};
+use elastibench::coordinator::run_experiment;
+use elastibench::stats::{agreement, bootstrap_native_single, Analyzer, Measurements};
+use elastibench::sut::{generate, Version};
+use elastibench::testkit::{check, Gen};
+use elastibench::vm::run_vm_baseline;
+
+// ---------- bootstrap engine ----------
+
+#[test]
+fn prop_ci_always_ordered_and_contains_point() {
+    check("CI ordered", 60, |g: &mut Gen| {
+        let n = g.usize(2..46);
+        let v1: Vec<f32> = (0..n).map(|_| g.latency() as f32 + 0.01).collect();
+        let v2: Vec<f32> = (0..n).map(|_| g.latency() as f32 + 0.01).collect();
+        let mut idx = vec![0i32; 256 * 64];
+        g.rng().fill_index_bits(&mut idx);
+        let o = bootstrap_native_single(&v1, &v2, &idx, 256, 64, 0.01);
+        assert!(o.ci_lo_pct <= o.boot_median_pct);
+        assert!(o.boot_median_pct <= o.ci_hi_pct);
+        assert!(o.median_v1 > 0.0 && o.median_v2 > 0.0);
+    });
+}
+
+#[test]
+fn prop_scaling_both_versions_preserves_diff() {
+    // Scaling both versions by the same factor (a different instance)
+    // must leave the relative difference unchanged — the duet argument.
+    check("common scale invariance", 40, |g: &mut Gen| {
+        let n = g.usize(5..40);
+        let scale = g.f64(0.25..4.0) as f32;
+        let v1: Vec<f32> = (0..n).map(|_| g.latency() as f32 + 0.01).collect();
+        let v2: Vec<f32> = (0..n).map(|_| g.latency() as f32 + 0.01).collect();
+        let s1: Vec<f32> = v1.iter().map(|x| x * scale).collect();
+        let s2: Vec<f32> = v2.iter().map(|x| x * scale).collect();
+        let mut idx = vec![0i32; 128 * 64];
+        g.rng().fill_index_bits(&mut idx);
+        let a = bootstrap_native_single(&v1, &v2, &idx, 128, 64, 0.01);
+        let b = bootstrap_native_single(&s1, &s2, &idx, 128, 64, 0.01);
+        let close = |x: f32, y: f32| (x - y).abs() < 1e-3 + 1e-4 * x.abs().max(y.abs());
+        assert!(close(a.boot_median_pct, b.boot_median_pct));
+        assert!(close(a.ci_lo_pct, b.ci_lo_pct));
+        assert!(close(a.ci_hi_pct, b.ci_hi_pct));
+    });
+}
+
+#[test]
+fn prop_swapping_versions_flips_direction() {
+    check("antisymmetry", 40, |g: &mut Gen| {
+        let n = g.usize(5..40);
+        let v1: Vec<f32> = (0..n).map(|_| g.latency() as f32 + 0.01).collect();
+        let v2: Vec<f32> = v1.iter().map(|x| x * 1.3).collect();
+        let mut idx = vec![0i32; 128 * 64];
+        g.rng().fill_index_bits(&mut idx);
+        let fwd = bootstrap_native_single(&v1, &v2, &idx, 128, 64, 0.01);
+        let rev = bootstrap_native_single(&v2, &v1, &idx, 128, 64, 0.01);
+        assert_eq!(fwd.direction(), 1);
+        assert_eq!(rev.direction(), -1);
+    });
+}
+
+#[test]
+fn prop_more_samples_tighter_ci() {
+    check("CI shrinks with n", 25, |g: &mut Gen| {
+        let sigma = g.f64(0.02..0.2);
+        let base: Vec<f32> = (0..120)
+            .map(|_| g.rng().lognormal(0.0, sigma) as f32)
+            .collect();
+        let v2: Vec<f32> = (0..120)
+            .map(|_| (g.rng().lognormal(0.0, sigma) * 1.05) as f32)
+            .collect();
+        let mut idx = vec![0i32; 512 * 256];
+        g.rng().fill_index_bits(&mut idx);
+        let small = bootstrap_native_single(&base[..12], &v2[..12], &idx, 512, 256, 0.01);
+        let large = bootstrap_native_single(&base, &v2, &idx, 512, 256, 0.01);
+        // Allow slack: individual draws are noisy, but 10x samples should
+        // rarely widen the CI by more than 40%.
+        assert!(
+            large.ci_size_pct() < small.ci_size_pct() * 1.4,
+            "n=120 CI {} vs n=12 CI {}",
+            large.ci_size_pct(),
+            small.ci_size_pct()
+        );
+    });
+}
+
+// ---------- analyzer ----------
+
+#[test]
+fn prop_analyzer_excludes_short_measurements() {
+    let analyzer = Analyzer::native();
+    check("min-results filter", 30, |g: &mut Gen| {
+        let n_short = g.usize(0..10);
+        let n_long = g.usize(10..50);
+        let ms = vec![
+            Measurements {
+                name: "short".into(),
+                v1: (0..n_short).map(|_| g.latency()).collect(),
+                v2: (0..n_short).map(|_| g.latency()).collect(),
+            },
+            Measurements {
+                name: "long".into(),
+                v1: (0..n_long).map(|_| g.latency()).collect(),
+                v2: (0..n_long).map(|_| g.latency()).collect(),
+            },
+        ];
+        let out = analyzer.analyze("t", &ms, g.case as u64).expect("analyze");
+        assert_eq!(out.excluded, vec!["short".to_string()]);
+        assert_eq!(out.verdicts.len(), 1);
+    });
+}
+
+// ---------- suite generator ----------
+
+#[test]
+fn prop_generator_respects_budgets() {
+    check("generator budgets", 20, |g: &mut Gen| {
+        let count = g.usize(10..140);
+        let changes = g.usize(0..count.min(30));
+        let fs = g.usize(0..count / 3);
+        let cfg = SutConfig {
+            benchmark_count: count,
+            true_changes: changes,
+            faas_incompatible: fs,
+            slow_setup: g.usize(0..4),
+            seed: g.u64(0..u64::MAX),
+            ..SutConfig::default()
+        };
+        let suite = generate(&cfg);
+        assert_eq!(suite.len(), count);
+        let fs_count = suite.benchmarks.iter().filter(|b| b.writes_fs).count();
+        assert!(fs_count <= fs);
+        for b in &suite.benchmarks {
+            assert!(b.base_ns_per_op > 0.0);
+            assert!(b.rel_sigma > 0.0 && b.rel_sigma < 0.5);
+            assert!(b.effect_v2 > 0.0);
+        }
+    });
+}
+
+// ---------- coordinator invariants ----------
+
+#[test]
+fn prop_coordinator_conserves_results() {
+    check("results conservation", 8, |g: &mut Gen| {
+        let sut = SutConfig {
+            benchmark_count: g.usize(6..14),
+            true_changes: 2,
+            faas_incompatible: 1,
+            slow_setup: 1,
+            seed: g.u64(0..u64::MAX),
+            ..SutConfig::default()
+        };
+        let suite = generate(&sut);
+        let exp = ExperimentConfig {
+            calls_per_benchmark: g.usize(2..8),
+            repeats_per_call: g.usize(1..4),
+            parallelism: g.usize(1..40),
+            seed: g.u64(0..u64::MAX),
+            ..ExperimentConfig::default()
+        };
+        let report = run_experiment(
+            &suite,
+            &sut,
+            &PlatformConfig::default(),
+            &exp,
+            (Version::V1, Version::V2),
+        );
+        // Calls: exactly the plan (no crashes configured).
+        assert_eq!(report.calls_total, suite.len() * exp.calls_per_benchmark);
+        // Pairs never exceed the plan per benchmark; paired lengths equal.
+        for m in &report.measurements {
+            assert!(m.v1.len() == m.v2.len());
+            assert!(m.len() <= exp.results_per_benchmark());
+            assert!(m.v1.iter().all(|&x| x > 0.0));
+        }
+        // Billing: cost grows with billed GB-s.
+        assert!(report.cost_usd > 0.0);
+        assert!(report.platform.billed_gb_s > 0.0);
+        // Wall time covers the critical path of any single call.
+        assert!(report.invoke_wall_s > 0.0);
+    });
+}
+
+#[test]
+fn prop_experiments_deterministic_across_seeded_reruns() {
+    check("determinism", 5, |g: &mut Gen| {
+        let sut = SutConfig {
+            benchmark_count: 8,
+            true_changes: 2,
+            faas_incompatible: 1,
+            slow_setup: 0,
+            seed: g.u64(0..u64::MAX),
+            ..SutConfig::default()
+        };
+        let suite = generate(&sut);
+        let exp = ExperimentConfig {
+            calls_per_benchmark: 4,
+            seed: g.u64(0..u64::MAX),
+            ..ExperimentConfig::default()
+        };
+        let a = run_experiment(&suite, &sut, &PlatformConfig::default(), &exp, (Version::V1, Version::V2));
+        let b = run_experiment(&suite, &sut, &PlatformConfig::default(), &exp, (Version::V1, Version::V2));
+        assert_eq!(a.wall_s, b.wall_s);
+        assert_eq!(a.cost_usd, b.cost_usd);
+        for (x, y) in a.measurements.iter().zip(&b.measurements) {
+            assert_eq!(x.v1, y.v1);
+            assert_eq!(x.v2, y.v2);
+        }
+    });
+}
+
+// ---------- cross-platform sanity ----------
+
+#[test]
+fn prop_vm_and_faas_agree_on_large_effects() {
+    // Whatever the seeds, a 100%+ regression must be detected by both
+    // platforms with the same direction.
+    let analyzer = Analyzer::native();
+    check("large effects cross-platform", 3, |g: &mut Gen| {
+        let sut = SutConfig {
+            benchmark_count: 10,
+            true_changes: 3,
+            faas_incompatible: 1,
+            slow_setup: 0,
+            seed: g.u64(0..u64::MAX),
+            ..SutConfig::default()
+        };
+        let suite = generate(&sut);
+        let headline = suite
+            .benchmarks
+            .iter()
+            .filter(|b| !b.writes_fs && !b.benchmark_changed())
+            .max_by(|a, b| {
+                a.true_change_pct(false)
+                    .abs()
+                    .partial_cmp(&b.true_change_pct(false).abs())
+                    .unwrap()
+            })
+            .unwrap();
+        if headline.true_change_pct(false).abs() < 20.0 {
+            return; // this seed's ladder got truncated; nothing to assert
+        }
+        let exp = ExperimentConfig {
+            seed: g.u64(0..u64::MAX),
+            ..ExperimentConfig::default()
+        };
+        let faas = run_experiment(&suite, &sut, &PlatformConfig::default(), &exp, (Version::V1, Version::V2));
+        let vm = run_vm_baseline(&suite, &sut, &VmConfig { seed: g.u64(0..u64::MAX), ..VmConfig::default() });
+        let fa = analyzer.analyze("faas", &faas.measurements, 1).unwrap();
+        let va = analyzer.analyze("vm", &vm.measurements, 1).unwrap();
+        let f = fa.get(&headline.name).expect("faas verdict");
+        let v = va.get(&headline.name).expect("vm verdict");
+        assert!(f.change.is_change(), "{}: {:?}", headline.name, f.output);
+        assert_eq!(f.change, v.change, "{}", headline.name);
+        // And the two datasets agree overall on most benchmarks.
+        let rep = agreement(&fa, &va);
+        assert!(rep.agreement_pct() >= 70.0, "{}", rep.agreement_pct());
+    });
+}

@@ -1,0 +1,112 @@
+//! Integration test: the AOT artifacts load, compile and agree with the
+//! Python reference semantics (re-implemented natively in `stats`).
+//!
+//! Requires `make artifacts` to have run (skipped with a message if not).
+
+use elastibench::runtime::{AnalysisEngine, Manifest};
+use elastibench::util::Rng;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    let dir = elastibench::artifacts_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP: {e:#} — run `make artifacts` first");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifact_loads_and_detects_known_change() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    let info = manifest.select(4, 45).expect("variant for 4x45");
+    let engine = AnalysisEngine::load(&manifest.path_of(info), info.m, info.b, info.n)
+        .expect("compile artifact");
+
+    let (m, b, n) = (info.m, info.b, info.n);
+    let mut rng = Rng::new(0xE1A5_71BE);
+    // Benchmark 0: v2 is ~10% slower (clear change).
+    // Benchmark 1: identical distributions (no change).
+    // Benchmark 2: v2 is ~20% faster (clear improvement).
+    // Remaining rows: padding.
+    let mut v1 = vec![1.0f32; m * n];
+    let mut v2 = vec![1.0f32; m * n];
+    let mut n_valid = vec![1i32; m];
+    for row in 0..3 {
+        n_valid[row] = 45;
+        for j in 0..45 {
+            let base = rng.lognormal(0.0, 0.02) as f32;
+            let noise2 = rng.lognormal(0.0, 0.02) as f32;
+            v1[row * n + j] = base;
+            v2[row * n + j] = match row {
+                0 => noise2 * 1.10,
+                1 => noise2,
+                _ => noise2 * 0.80,
+            };
+        }
+    }
+    let mut idx = vec![0i32; b * n];
+    rng.fill_index_bits(&mut idx);
+
+    let out = engine.analyze(&v1, &v2, &n_valid, &idx).expect("analyze");
+    assert_eq!(out.len(), m);
+
+    assert!(out[0].is_change(), "10% regression must be detected: {:?}", out[0]);
+    assert_eq!(out[0].direction(), 1);
+    assert!((out[0].boot_median_pct - 10.0).abs() < 3.0, "{:?}", out[0]);
+
+    assert!(!out[1].is_change(), "A/A row must not flag: {:?}", out[1]);
+
+    assert!(out[2].is_change(), "20% improvement must be detected: {:?}", out[2]);
+    assert_eq!(out[2].direction(), -1);
+    assert!((out[2].boot_median_pct + 20.0).abs() < 3.0, "{:?}", out[2]);
+
+    // CI ordering invariant.
+    for o in &out {
+        assert!(o.ci_lo_pct <= o.boot_median_pct && o.boot_median_pct <= o.ci_hi_pct);
+    }
+}
+
+#[test]
+fn artifact_matches_native_engine() {
+    let Some(manifest) = manifest_or_skip() else {
+        return;
+    };
+    let info = manifest.select(8, 45).expect("variant");
+    let engine = AnalysisEngine::load(&manifest.path_of(info), info.m, info.b, info.n)
+        .expect("compile artifact");
+    let (m, b, n) = (info.m, info.b, info.n);
+
+    let mut rng = Rng::new(77);
+    let mut v1 = vec![1.0f32; m * n];
+    let mut v2 = vec![1.0f32; m * n];
+    let mut n_valid = vec![1i32; m];
+    for row in 0..m {
+        let nv = 10 + rng.below_usize(36); // 10..=45
+        n_valid[row] = nv as i32;
+        for j in 0..nv {
+            v1[row * n + j] = rng.lognormal(0.0, 0.3) as f32;
+            v2[row * n + j] = rng.lognormal(0.05, 0.3) as f32;
+        }
+    }
+    let mut idx = vec![0i32; b * n];
+    rng.fill_index_bits(&mut idx);
+
+    let xla_out = engine.analyze(&v1, &v2, &n_valid, &idx).expect("xla");
+    let native_out = elastibench::stats::bootstrap_native(
+        &v1, &v2, &n_valid, &idx, m, b, n, manifest.alpha,
+    );
+    assert_eq!(xla_out.len(), native_out.len());
+    for (i, (x, r)) in xla_out.iter().zip(&native_out).enumerate() {
+        let close = |a: f32, b: f32| (a - b).abs() <= 1e-3 + 1e-4 * a.abs().max(b.abs());
+        assert!(close(x.ci_lo_pct, r.ci_lo_pct), "row {i}: {x:?} vs {r:?}");
+        assert!(close(x.boot_median_pct, r.boot_median_pct), "row {i}: {x:?} vs {r:?}");
+        assert!(close(x.ci_hi_pct, r.ci_hi_pct), "row {i}: {x:?} vs {r:?}");
+        assert!(close(x.median_v1, r.median_v1), "row {i}: {x:?} vs {r:?}");
+        assert!(close(x.median_v2, r.median_v2), "row {i}: {x:?} vs {r:?}");
+        assert!(close(x.point_pct, r.point_pct), "row {i}: {x:?} vs {r:?}");
+    }
+}

@@ -7,40 +7,34 @@
 //! cargo run --release --example cicd_gate -- --clean # A/A: must pass
 //! ```
 //!
-//! Exit code 0 = gate passed, 1 = regression(s) detected — wire it into a
-//! pipeline exactly like a test step. Only regressions above a noise
-//! margin (3%, cf. §2 [20, 43]) fail the gate; improvements are reported
-//! but do not block.
+//! The gate is a catalog scenario (`quick-smoke`, the same recipe the CI
+//! workflow smoke-tests) flipped to A/A mode by `--clean` — no hand
+//! wiring. Exit code 0 = gate passed, 1 = regression(s) detected; wire
+//! it into a pipeline exactly like a test step. Only regressions above a
+//! noise margin (3%, cf. §2 [20, 43]) fail the gate; improvements are
+//! reported but do not block.
 
-use elastibench::config::SutConfig;
-use elastibench::exp::{aa, baseline, Workbench};
-use elastibench::stats::ChangeKind;
+use elastibench::scenario::{catalog_entry, run_scenario, DuetMode};
+use elastibench::stats::{Analyzer, ChangeKind};
 
 /// Regressions below this are within cloud-noise territory (§2).
 const GATE_MARGIN_PCT: f32 = 3.0;
 
 fn main() {
     let clean = std::env::args().any(|a| a == "--clean");
-    let wb = Workbench::with_sut(SutConfig {
-        benchmark_count: 24,
-        true_changes: 7,
-        faas_incompatible: 2,
-        slow_setup: 1,
-        ..SutConfig::default()
-    });
-
-    let result = if clean {
+    let mut sc = catalog_entry("quick-smoke").expect("catalog entry");
+    if clean {
         println!("gate: comparing identical versions (A/A)");
-        aa(&wb).expect("aa run")
+        sc.mode = DuetMode::Aa;
     } else {
         println!("gate: comparing v1 (main) vs v2 (candidate)");
-        baseline(&wb).expect("baseline run")
-    };
+    }
 
+    let result = run_scenario(&sc, &Analyzer::native()).expect("scenario run");
     println!(
         "suite finished in {:.1} min at ${:.2} — fast enough to gate every merge (paper §1)\n",
-        result.report.wall_s / 60.0,
-        result.report.cost_usd
+        result.run.wall_s / 60.0,
+        result.run.cost_usd
     );
 
     let mut regressions = Vec::new();
@@ -70,7 +64,10 @@ fn main() {
     }
 
     if regressions.is_empty() {
-        println!("\ngate PASSED ({} benchmarks checked)", result.analysis.verdicts.len());
+        println!(
+            "\ngate PASSED ({} benchmarks checked)",
+            result.analysis.verdicts.len()
+        );
         std::process::exit(0);
     } else {
         println!(

@@ -1,39 +1,39 @@
-//! Quickstart: detect performance changes between two versions of a
-//! (synthetic) SUT with ElastiBench in under a minute.
+//! Quickstart: run a shipped scenario and compare its verdicts to the
+//! generator's ground truth.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Generates a small 20-benchmark suite, runs the paper's baseline
-//! configuration against the simulated FaaS platform, analyzes the duet
-//! measurements with 99% bootstrap CIs, and prints the verdicts next to
-//! the generator's ground truth.
+//! Runs the `quick-smoke` catalog entry (12 synthetic benchmarks on the
+//! Lambda-shaped profile — the same recipe CI smoke-tests), prints the
+//! 99% bootstrap CIs next to the known true effects, and shows where the
+//! exported JSON report would land. The full catalog is
+//! `elastibench scenario list`; the full guide is docs/benchmarks.md.
 
-use elastibench::config::SutConfig;
-use elastibench::exp::{baseline, Workbench};
-use elastibench::stats::ChangeKind;
+use elastibench::scenario::{catalog_entry, run_scenario};
+use elastibench::stats::{Analyzer, ChangeKind};
+use elastibench::sut::generate;
 
 fn main() -> anyhow::Result<()> {
-    // A small suite keeps the quickstart fast; the full paper suite is
-    // SutConfig::default() (106 benchmarks).
-    let wb = Workbench::with_sut(SutConfig {
-        benchmark_count: 20,
-        true_changes: 6,
-        faas_incompatible: 2,
-        slow_setup: 1,
-        ..SutConfig::default()
-    });
-
-    let result = baseline(&wb)?;
+    let sc = catalog_entry("quick-smoke")?;
     println!(
-        "ran {} calls on the simulated platform in {:.1} min (cost ${:.2}, {} cold starts)\n",
-        result.report.calls_total,
-        result.report.wall_s / 60.0,
-        result.report.cost_usd,
-        result.report.platform.cold_starts
+        "scenario {} on profile {} ({} benchmarks, parallelism {})\n",
+        sc.name, sc.profile_name, sc.sut.benchmark_count, sc.exp.parallelism
     );
 
+    let result = run_scenario(&sc, &Analyzer::native())?;
+    println!(
+        "ran {} calls on the simulated platform in {:.1} min (cost ${:.2}, {} cold starts)\n",
+        result.run.calls_total,
+        result.run.wall_s / 60.0,
+        result.run.cost_usd,
+        result.run.platform.cold_starts
+    );
+
+    // The suite is regenerated from the recipe's pinned SUT seed, so the
+    // ground truth here is exactly what the run measured against.
+    let suite = generate(&sc.sut);
     println!(
         "{:<44} {:>22} {:>10} {:>10}",
         "benchmark", "99% CI of median diff", "verdict", "truth"
@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     let mut correct = 0usize;
     let mut total = 0usize;
     for v in &result.analysis.verdicts {
-        let b = wb.suite.get(&v.name).expect("benchmark exists");
+        let b = suite.get(&v.name).expect("benchmark exists");
         let truth_pct = b.true_change_pct(true);
         let truth = if b.has_true_change() || b.benchmark_changed() {
             format!("{truth_pct:+.1}%")
@@ -49,9 +49,9 @@ fn main() -> anyhow::Result<()> {
             "none".to_string()
         };
         let verdict = match v.change {
-            ChangeKind::NoChange => "-".to_string(),
-            ChangeKind::Regression => "SLOWER".to_string(),
-            ChangeKind::Improvement => "faster".to_string(),
+            ChangeKind::NoChange => "-",
+            ChangeKind::Regression => "SLOWER",
+            ChangeKind::Improvement => "faster",
         };
         let detected_correctly = match v.change {
             ChangeKind::NoChange => truth_pct.abs() < 3.0,
@@ -72,6 +72,11 @@ fn main() -> anyhow::Result<()> {
         "\n{}/{} verdicts consistent with ground truth \
          (missed truths are sub-threshold changes — cf. paper §2)",
         correct, total
+    );
+    println!(
+        "\nexport the same run as JSON: \
+         elastibench scenario run {} --out results/",
+        sc.name
     );
     Ok(())
 }

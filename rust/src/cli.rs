@@ -3,6 +3,10 @@
 //! ```text
 //! elastibench suite [--config FILE]
 //! elastibench run --experiment NAME [--backend native|xla] [--config FILE] [--out DIR]
+//! elastibench scenario list
+//! elastibench scenario run <NAME> [--backend native|xla] [--out DIR]
+//! elastibench scenario run --recipe FILE [--backend native|xla] [--out DIR]
+//! elastibench scenario run-all [--backend native|xla] [--out DIR]
 //! elastibench reproduce [--backend native|xla] [--out DIR]
 //! elastibench compare --a NAME --b NAME [--backend native|xla]
 //! elastibench version | help
@@ -11,18 +15,24 @@
 use crate::config::{Document, SutConfig};
 use crate::exp::{self, ExperimentResult, Workbench};
 use crate::report::{
-    analysis_to_csv, experiment_summary_table, render_cdf, write_text, SummaryRow,
+    analysis_to_csv, experiment_summary_table, render_cdf, scenario_report_to_json, write_text,
+    SummaryRow,
 };
+use crate::scenario::{catalog, catalog_entry, run_scenario, Scenario, ScenarioReport};
 use crate::stats::{agreement, coverage, Analyzer};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-/// Parsed command-line options: positional command + `--key value` flags.
+/// Parsed command-line options: positional command, further positional
+/// arguments (subcommands, names) and `--key value` flags.
 #[derive(Debug, Default)]
 pub struct Args {
     /// The subcommand (first positional argument).
     pub command: String,
+    /// Positional arguments after the command (e.g. `scenario run NAME`
+    /// yields `["run", "NAME"]`).
+    pub positionals: Vec<String>,
     flags: BTreeMap<String, String>,
 }
 
@@ -39,7 +49,8 @@ impl Args {
         }
         while let Some(arg) = iter.next() {
             let Some(key) = arg.strip_prefix("--") else {
-                bail!("unexpected positional argument {arg:?}");
+                out.positionals.push(arg);
+                continue;
             };
             let value = iter
                 .next()
@@ -58,6 +69,23 @@ impl Args {
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
+
+    /// Positional argument lookup (0 = first argument after the command).
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(String::as_str)
+    }
+
+    /// Fail when more positional arguments were given than the command
+    /// consumes — a stray positional is a user error, never ignored.
+    pub fn reject_positionals_beyond(&self, used: usize) -> Result<()> {
+        if self.positionals.len() > used {
+            bail!(
+                "unexpected positional argument {:?}",
+                self.positionals[used]
+            );
+        }
+        Ok(())
+    }
 }
 
 /// CLI help text.
@@ -65,19 +93,30 @@ pub const HELP: &str = "\
 elastibench — scalable continuous benchmarking on (simulated) cloud FaaS
 
 USAGE:
+  elastibench scenario list
+      Show the shipped scenario catalog (recipes under scenarios/).
+  elastibench scenario run NAME [--backend native|xla] [--out DIR]
+  elastibench scenario run --recipe FILE [--backend native|xla] [--out DIR]
+      Run one catalog entry (or a recipe file) and write a structured
+      JSON report to DIR (default: results/).
+  elastibench scenario run-all [--backend native|xla] [--out DIR]
+      Sweep the whole catalog; one JSON report per scenario.
   elastibench suite [--config FILE]
       Print the generated SUT inventory (ground truth).
   elastibench run --experiment NAME [--backend native|xla]
                   [--config FILE] [--out DIR]
-      Run one experiment: aa | baseline | replication | lower-memory |
-      single-repeat | vm. Prints the verdict summary and a Fig.4/5-style
-      CDF; --out writes CSV exports.
+      Run one paper experiment: aa | baseline | replication |
+      lower-memory | single-repeat | vm. Prints the verdict summary and
+      a Fig.4/5-style CDF; --out writes CSV exports.
   elastibench reproduce [--backend native|xla] [--out DIR]
       Run the full paper evaluation (all experiments + comparisons).
   elastibench compare --a NAME --b NAME [--backend native|xla]
       Run two experiments and print their agreement/coverage.
   elastibench version
   elastibench help
+
+See docs/benchmarks.md for the full guide (recipe schema, adding
+platform profiles, JSON report format, CI wiring).
 ";
 
 /// Entry point used by `main.rs`; returns the process exit code.
@@ -88,17 +127,27 @@ pub fn run(args: Args) -> Result<i32> {
             Ok(0)
         }
         "version" => {
+            args.reject_positionals_beyond(0)?;
             println!("elastibench {}", crate::version());
             Ok(0)
         }
         "suite" => cmd_suite(&args),
         "run" => cmd_run(&args),
+        "scenario" => cmd_scenario(&args),
         "compare" => cmd_compare(&args),
         "reproduce" => cmd_reproduce(&args),
         other => {
             eprintln!("unknown command {other:?}\n\n{HELP}");
             Ok(2)
         }
+    }
+}
+
+fn analyzer(args: &Args) -> Result<Analyzer> {
+    match args.get_or("backend", "native") {
+        "native" => Ok(Analyzer::native()),
+        "xla" => Analyzer::xla(&crate::artifacts_dir()),
+        other => bail!("unknown backend {other:?} (native|xla)"),
     }
 }
 
@@ -112,13 +161,7 @@ fn workbench(args: &Args) -> Result<Workbench> {
         None => SutConfig::default(),
     };
     let mut wb = Workbench::with_sut(sut);
-    match args.get_or("backend", "native") {
-        "native" => {}
-        "xla" => {
-            wb.analyzer = Analyzer::xla(&crate::artifacts_dir())?;
-        }
-        other => bail!("unknown backend {other:?} (native|xla)"),
-    }
+    wb.analyzer = analyzer(args)?;
     Ok(wb)
 }
 
@@ -134,6 +177,7 @@ fn run_named(wb: &Workbench, name: &str) -> Result<ExperimentResult> {
 }
 
 fn cmd_suite(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(0)?;
     let wb = workbench(args)?;
     println!(
         "suite: {} microbenchmarks ({} with true changes, {} fs-writers, {} slow setups)\n",
@@ -170,6 +214,7 @@ fn cmd_suite(args: &Args) -> Result<i32> {
 }
 
 fn cmd_run(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(0)?;
     let wb = workbench(args)?;
     let name = args.get("experiment").context("--experiment required")?;
     if name == "vm" {
@@ -203,6 +248,110 @@ fn cmd_run(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+fn cmd_scenario(args: &Args) -> Result<i32> {
+    match args.positional(0) {
+        Some("list") => cmd_scenario_list(args),
+        Some("run") => cmd_scenario_run(args),
+        Some("run-all") => cmd_scenario_run_all(args),
+        other => bail!(
+            "scenario needs a subcommand: list | run NAME | run-all (got {other:?})"
+        ),
+    }
+}
+
+fn cmd_scenario_list(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(1)?;
+    let cat = catalog();
+    println!(
+        "{} shipped scenarios (scenarios/*.toml; run with `elastibench scenario run NAME`)\n",
+        cat.len()
+    );
+    println!(
+        "{:<20} {:<20} {:>4} {:>8} {:>6} {:>5}  {}",
+        "name", "profile", "mode", "repeats", "bench", "par", "description"
+    );
+    for sc in &cat {
+        println!(
+            "{:<20} {:<20} {:>4} {:>8} {:>6} {:>5}  {}",
+            sc.name,
+            sc.profile_name,
+            sc.mode.as_str(),
+            sc.repeats.as_str(),
+            sc.sut.benchmark_count,
+            sc.exp.parallelism,
+            sc.description
+        );
+    }
+    Ok(0)
+}
+
+/// Run a scenario and export its JSON report into `--out` (default
+/// `results/`). Returns the report for summary printing.
+fn execute_scenario(args: &Args, sc: &Scenario) -> Result<ScenarioReport> {
+    let report = run_scenario(sc, &analyzer(args)?)?;
+    let dir = PathBuf::from(args.get_or("out", "results"));
+    let path = dir.join(format!("{}.json", sc.name));
+    write_text(&path, &scenario_report_to_json(&report).to_string())?;
+    println!("wrote {}", path.display());
+    Ok(report)
+}
+
+fn scenario_summary_row(report: &ScenarioReport) -> SummaryRow {
+    SummaryRow {
+        label: report.scenario.name.clone(),
+        analyzed: report.analysis.verdicts.len(),
+        changes: report.analysis.change_count(),
+        wall_s: report.run.wall_s,
+        cost_usd: report.run.cost_usd,
+        cold_starts: report.run.platform.cold_starts,
+    }
+}
+
+fn cmd_scenario_run(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(2)?;
+    let sc = match (args.get("recipe"), args.positional(1)) {
+        (Some(_), Some(name)) => bail!(
+            "pass either a catalog NAME or --recipe FILE, not both \
+             (got {name:?} and --recipe)"
+        ),
+        (Some(path), None) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read recipe {path}"))?;
+            Scenario::from_toml(&text)?
+        }
+        (None, Some(name)) => catalog_entry(name)?,
+        (None, None) => bail!("scenario run needs a catalog NAME or --recipe FILE"),
+    };
+    let report = execute_scenario(args, &sc)?;
+    print!("{}", experiment_summary_table(&[scenario_summary_row(&report)]));
+    if let Some(plan) = &report.adaptive {
+        println!(
+            "adaptive replay: {} -> {} results ({:.1}% of calls saved)",
+            plan.fixed_total,
+            plan.adaptive_total,
+            plan.saved_pct()
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_scenario_run_all(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(1)?;
+    let cat = catalog();
+    let mut rows = Vec::with_capacity(cat.len());
+    for sc in &cat {
+        println!(
+            "running {} ({} benchmarks on {})...",
+            sc.name, sc.sut.benchmark_count, sc.profile_name
+        );
+        let report = execute_scenario(args, sc)?;
+        rows.push(scenario_summary_row(&report));
+    }
+    println!();
+    print!("{}", experiment_summary_table(&rows));
+    Ok(0)
+}
+
 fn maybe_export(args: &Args, analysis: &crate::stats::SuiteAnalysis) -> Result<()> {
     if let Some(dir) = args.get("out") {
         let path = PathBuf::from(dir).join(format!("{}.csv", analysis.label));
@@ -213,6 +362,7 @@ fn maybe_export(args: &Args, analysis: &crate::stats::SuiteAnalysis) -> Result<(
 }
 
 fn cmd_compare(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(0)?;
     let wb = workbench(args)?;
     let name_a = args.get("a").context("--a required")?;
     let name_b = args.get("b").context("--b required")?;
@@ -246,6 +396,7 @@ fn cmd_compare(args: &Args) -> Result<i32> {
 }
 
 fn cmd_reproduce(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(0)?;
     let wb = workbench(args)?;
     let text = exp::reproduce_all(&wb)?;
     print!("{text}");
@@ -278,7 +429,85 @@ mod tests {
     fn rejects_malformed() {
         assert!(Args::parse(["--flag".to_string(), "x".to_string()]).is_err());
         assert!(Args::parse(["run".to_string(), "--flag".to_string()]).is_err());
-        assert!(Args::parse(["run".to_string(), "stray".to_string()]).is_err());
+    }
+
+    #[test]
+    fn collects_positionals() {
+        let args = Args::parse(
+            ["scenario", "run", "quick-smoke", "--out", "/tmp/x"].map(String::from),
+        )
+        .unwrap();
+        assert_eq!(args.command, "scenario");
+        assert_eq!(args.positional(0), Some("run"));
+        assert_eq!(args.positional(1), Some("quick-smoke"));
+        assert_eq!(args.positional(2), None);
+        assert_eq!(args.get("out"), Some("/tmp/x"));
+    }
+
+    #[test]
+    fn stray_positionals_are_rejected_per_command() {
+        for argv in [
+            vec!["version", "extra"],
+            vec!["suite", "extra"],
+            vec!["reproduce", "extra"],
+            vec!["scenario", "list", "extra"],
+            vec!["scenario", "run", "quick-smoke", "extra"],
+            vec!["scenario", "run-all", "extra"],
+        ] {
+            let args =
+                Args::parse(argv.iter().map(|s| s.to_string())).unwrap();
+            let err = run(args).unwrap_err();
+            assert!(err.to_string().contains("extra"), "{argv:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn scenario_run_rejects_conflicting_selectors() {
+        let args = Args::parse(
+            ["scenario", "run", "quick-smoke", "--recipe", "x.toml"].map(String::from),
+        )
+        .unwrap();
+        let err = run(args).unwrap_err();
+        assert!(err.to_string().contains("not both"), "{err}");
+    }
+
+    #[test]
+    fn scenario_list_runs() {
+        let args = Args::parse(["scenario", "list"].map(String::from)).unwrap();
+        assert_eq!(run(args).unwrap(), 0);
+    }
+
+    #[test]
+    fn scenario_without_subcommand_errors() {
+        let args = Args::parse(["scenario".to_string()]).unwrap();
+        assert!(run(args).is_err());
+        let args =
+            Args::parse(["scenario", "frobnicate"].map(String::from)).unwrap();
+        assert!(run(args).is_err());
+    }
+
+    #[test]
+    fn scenario_run_writes_json_report() {
+        let dir = std::env::temp_dir().join("elastibench_cli_scenario");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = Args::parse(
+            [
+                "scenario".to_string(),
+                "run".to_string(),
+                "quick-smoke".to_string(),
+                "--out".to_string(),
+                dir.display().to_string(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(run(args).unwrap(), 0);
+        let text = std::fs::read_to_string(dir.join("quick-smoke.json")).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("schema").unwrap().as_str(),
+            Some(crate::report::SCENARIO_REPORT_SCHEMA)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -122,8 +122,66 @@ impl ExperimentConfig {
     }
 }
 
+/// Keys recognized in a recipe's `[experiment]` section (strict
+/// validation in [`crate::scenario`]). Must mirror
+/// [`ExperimentConfig::from_doc`].
+pub const EXPERIMENT_KEYS: &[&str] = &[
+    "label",
+    "repeats_per_call",
+    "calls_per_benchmark",
+    "parallelism",
+    "benchmark_timeout_s",
+    "randomize_order",
+    "randomize_version_order",
+    "seed",
+    "start_hour_utc",
+];
+
+/// Keys recognized in a recipe's `[function]` section.
+pub const FUNCTION_KEYS: &[&str] = &["memory_mb", "timeout_s"];
+
+/// Keys recognized in a recipe's `[sut]` section. Must mirror
+/// [`SutConfig::from_doc`].
+pub const SUT_KEYS: &[&str] = &[
+    "benchmark_count",
+    "true_changes",
+    "faas_incompatible",
+    "slow_setup",
+    "seed",
+    "source_mb",
+    "build_cache_mb",
+    "tooling_mb",
+];
+
+/// Keys recognized in a recipe's `[platform]` section. Must mirror
+/// [`PlatformConfig::overridden`].
+pub const PLATFORM_KEYS: &[&str] = &[
+    "keepalive_s",
+    "warm_dispatch_s",
+    "cold_start_base_s",
+    "cold_start_per_gb_s",
+    "uncached_cold_multiplier",
+    "uncached_cold_count",
+    "instance_sigma",
+    "diurnal_amplitude",
+    "cotenancy_sigma",
+    "cotenancy_revert",
+    "vcpu_at_2048",
+    "vcpu_exponent",
+    "usd_per_gb_s",
+    "usd_per_request",
+    "billing_granularity_s",
+    "billing_min_s",
+    "concurrency_limit",
+    "crash_probability",
+];
+
 /// FaaS platform model parameters (paper §3.1 noise sources + AWS Lambda
 /// operational limits; see DESIGN.md §1 for the calibration rationale).
+///
+/// Provider-shaped bundles of these parameters live in
+/// [`crate::faas::PlatformProfile`]; the defaults here are the
+/// AWS-Lambda calibration the paper was evaluated against.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlatformConfig {
     /// Idle seconds before an instance is reaped (Lambda keeps warm
@@ -161,6 +219,13 @@ pub struct PlatformConfig {
     pub usd_per_gb_s: f64,
     /// Billing: USD per request.
     pub usd_per_request: f64,
+    /// Billing granularity [s]: metered execution time is rounded *up*
+    /// to this multiple (Lambda: 1 ms; Cloud Functions / Azure
+    /// consumption: 100 ms). `0` disables rounding (exact seconds).
+    pub billing_granularity_s: f64,
+    /// Minimum billed duration per invocation [s] (providers with a
+    /// 100 ms floor; 0 = no floor).
+    pub billing_min_s: f64,
     /// Per-account concurrent-instance limit.
     pub concurrency_limit: usize,
     /// Probability that a function instance crashes mid-invocation
@@ -185,6 +250,8 @@ impl Default for PlatformConfig {
             vcpu_exponent: 2.34,
             usd_per_gb_s: 1.333_34e-5,
             usd_per_request: 2.0e-7,
+            billing_granularity_s: 0.001,
+            billing_min_s: 0.0,
             concurrency_limit: 1000,
             crash_probability: 0.0,
         }
@@ -198,9 +265,17 @@ impl PlatformConfig {
         self.vcpu_at_2048 * (memory_mb as f64 / 2048.0).powf(self.vcpu_exponent)
     }
 
-    /// Apply overrides from the `[platform]` section.
+    /// Apply overrides from the `[platform]` section on top of the
+    /// paper's Lambda defaults.
     pub fn from_doc(doc: &Document) -> Self {
-        let d = Self::default();
+        Self::default().overridden(doc)
+    }
+
+    /// Apply `[platform]` overrides on top of `self` — the base may be
+    /// any provider profile's calibration, not just the defaults
+    /// (scenario recipes tweak a named profile this way).
+    pub fn overridden(&self, doc: &Document) -> Self {
+        let d = self;
         PlatformConfig {
             keepalive_s: doc.f64_or("platform", "keepalive_s", d.keepalive_s),
             warm_dispatch_s: doc.f64_or("platform", "warm_dispatch_s", d.warm_dispatch_s),
@@ -228,6 +303,12 @@ impl PlatformConfig {
             vcpu_exponent: doc.f64_or("platform", "vcpu_exponent", d.vcpu_exponent),
             usd_per_gb_s: doc.f64_or("platform", "usd_per_gb_s", d.usd_per_gb_s),
             usd_per_request: doc.f64_or("platform", "usd_per_request", d.usd_per_request),
+            billing_granularity_s: doc.f64_or(
+                "platform",
+                "billing_granularity_s",
+                d.billing_granularity_s,
+            ),
+            billing_min_s: doc.f64_or("platform", "billing_min_s", d.billing_min_s),
             concurrency_limit: doc.usize_or("platform", "concurrency_limit", d.concurrency_limit),
             crash_probability: doc.f64_or("platform", "crash_probability", d.crash_probability),
         }
@@ -430,6 +511,50 @@ mod tests {
         assert_eq!(p.diurnal_amplitude, 0.10);
         assert_eq!(VmConfig::from_doc(&doc).vm_count, 5);
         assert_eq!(SutConfig::from_doc(&doc).benchmark_count, 50);
+    }
+
+    #[test]
+    fn overridden_starts_from_base_not_default() {
+        let base = PlatformConfig {
+            keepalive_s: 900.0,
+            billing_granularity_s: 0.1,
+            ..PlatformConfig::default()
+        };
+        let doc = Document::parse("[platform]\ncold_start_base_s = 2.0").unwrap();
+        let p = base.overridden(&doc);
+        // Overridden key applied, non-default base fields survive.
+        assert_eq!(p.cold_start_base_s, 2.0);
+        assert_eq!(p.keepalive_s, 900.0);
+        assert_eq!(p.billing_granularity_s, 0.1);
+    }
+
+    #[test]
+    fn billing_defaults_are_lambda_shaped() {
+        let p = PlatformConfig::default();
+        assert_eq!(p.billing_granularity_s, 0.001);
+        assert_eq!(p.billing_min_s, 0.0);
+    }
+
+    #[test]
+    fn key_inventories_match_from_doc() {
+        // Every documented key must actually be honoured by the
+        // override parsers (guards the strict recipe validation).
+        let mk = |section: &str, keys: &[&str]| {
+            let body: String = keys
+                .iter()
+                .map(|k| format!("{k} = 3\n"))
+                .collect();
+            Document::parse(&format!("[{section}]\n{body}")).unwrap()
+        };
+        let doc = mk("platform", PLATFORM_KEYS);
+        let p = PlatformConfig::default().overridden(&doc);
+        assert_eq!(p.keepalive_s, 3.0);
+        assert_eq!(p.billing_min_s, 3.0);
+        assert_eq!(p.concurrency_limit, 3);
+        let doc = mk("sut", SUT_KEYS);
+        let s = SutConfig::from_doc(&doc);
+        assert_eq!(s.benchmark_count, 3);
+        assert_eq!(s.tooling_mb, 3.0);
     }
 
     #[test]

@@ -12,6 +12,7 @@ mod experiment;
 pub mod toml;
 
 pub use experiment::{
-    BillingConfig, ExperimentConfig, PlatformConfig, SutConfig, VmConfig,
+    BillingConfig, ExperimentConfig, PlatformConfig, SutConfig, VmConfig, EXPERIMENT_KEYS,
+    FUNCTION_KEYS, PLATFORM_KEYS, SUT_KEYS,
 };
 pub use toml::{Document, Value};

@@ -14,6 +14,11 @@
 //!    starts, respecting the function timeout, retrying crashed calls;
 //! 5. **Collect** — gather per-benchmark duet pairs into
 //!    [`crate::stats::Measurements`] ready for the analyzer.
+//!
+//! The recipe-driven front door is the scenario registry
+//! ([`crate::scenario`]): it resolves a [`crate::faas::PlatformProfile`]
+//! plus per-recipe overrides into the `PlatformConfig` that
+//! [`run_experiment`] executes against.
 
 mod hybrid;
 mod image;

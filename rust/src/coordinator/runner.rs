@@ -324,6 +324,33 @@ mod tests {
     }
 
     #[test]
+    fn provider_calibrations_shift_the_run() {
+        use crate::faas::PlatformProfile as _;
+        let (suite, sut, plat, exp) = small();
+        let lambda = run_experiment(
+            &suite,
+            &sut,
+            &crate::faas::profile::Lambda.config(),
+            &exp,
+            (Version::V1, Version::V2),
+        );
+        let default_run = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        // The Lambda profile IS the default calibration.
+        assert_eq!(lambda.wall_s, default_run.wall_s);
+        assert_eq!(lambda.cost_usd, default_run.cost_usd);
+        // Azure: slower cold starts and coarser billing shift the run.
+        let azure = run_experiment(
+            &suite,
+            &sut,
+            &crate::faas::profile::AzureFunctions.config(),
+            &exp,
+            (Version::V1, Version::V2),
+        );
+        assert!(azure.platform.cold_starts > 0);
+        assert_ne!(azure.wall_s, lambda.wall_s);
+    }
+
+    #[test]
     fn failures_are_classified() {
         let (suite, sut, plat, exp) = small();
         let report = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));

@@ -75,6 +75,21 @@ impl Workbench {
             analyzer: Analyzer::native(),
         }
     }
+
+    /// Workbench over a custom SUT *and* platform calibration — e.g. a
+    /// [`crate::faas::PlatformProfile`] config with recipe overrides.
+    /// This is how the scenario runner ([`crate::scenario`]) sets up a
+    /// run; it also serves ad-hoc experiments against non-default
+    /// providers. The analyzer defaults to native — replace it for the
+    /// XLA backend.
+    pub fn with_sut_and_platform(sut: SutConfig, platform: PlatformConfig) -> Self {
+        Workbench {
+            suite: generate(&sut),
+            sut,
+            platform,
+            analyzer: Analyzer::native(),
+        }
+    }
 }
 
 /// One executed + analyzed experiment.

@@ -1,10 +1,13 @@
-//! FaaS platform simulator (AWS-Lambda-shaped substrate).
+//! FaaS platform simulator and the provider-profile registry.
 //!
 //! See [`platform::FaasPlatform`] for the instance/scheduling/billing
-//! model and [`noise`] for the §3.1 performance-variability model shared
-//! with the VM simulator.
+//! model, [`noise`] for the §3.1 performance-variability model shared
+//! with the VM simulator, and [`profile`] for the named provider
+//! calibrations ([`PlatformProfile`]) that scenarios select platforms by.
 
 pub mod noise;
 mod platform;
+pub mod profile;
 
 pub use platform::{FaasPlatform, Instance, Placement, PlatformStats};
+pub use profile::{profile_by_name, profile_names, profiles, PlatformProfile};

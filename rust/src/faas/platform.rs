@@ -185,11 +185,25 @@ impl FaasPlatform {
         base * mult * self.rng.lognormal(0.0, 0.15)
     }
 
+    /// Metered duration for `raw_s` seconds of execution: clamped to the
+    /// provider's minimum billed duration and rounded *up* to the billing
+    /// granularity (Lambda 1 ms, Cloud Functions / Azure 100 ms). The
+    /// small epsilon keeps exact multiples from double-rounding upward.
+    pub fn metered_s(&self, raw_s: f64) -> f64 {
+        let g = self.cfg.billing_granularity_s;
+        let s = raw_s.max(self.cfg.billing_min_s);
+        if g <= 0.0 {
+            return s;
+        }
+        (s / g - 1e-9).ceil().max(0.0) * g
+    }
+
     /// Finish an invocation on `instance` at time `t_end`, billing
-    /// `billed_s` seconds of execution.
+    /// `billed_s` seconds of execution (metered per
+    /// [`FaasPlatform::metered_s`]).
     pub fn release(&mut self, instance: usize, t_end: Time, billed_s: f64) {
         let mem_gb = self.memory_mb as f64 / 1024.0;
-        self.stats.billed_gb_s += billed_s * mem_gb;
+        self.stats.billed_gb_s += self.metered_s(billed_s) * mem_gb;
         let inst = &mut self.instances[instance];
         inst.busy_until = f64::NEG_INFINITY;
         inst.idle_since = t_end;
@@ -331,6 +345,25 @@ mod tests {
         let expect = 18.0 * PlatformConfig::default().usd_per_gb_s
             + 1.0 * PlatformConfig::default().usd_per_request;
         assert!((cost - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coarse_billing_granularity_rounds_up() {
+        let cfg = PlatformConfig {
+            billing_granularity_s: 0.1,
+            billing_min_s: 0.1,
+            ..PlatformConfig::default()
+        };
+        let mut p = FaasPlatform::deploy(&cfg, 1700.0, 1024, 12.0, 3);
+        // 0.123 s -> billed as 0.2 s; exact multiples stay put.
+        assert!((p.metered_s(0.123) - 0.2).abs() < 1e-9);
+        assert!((p.metered_s(0.2) - 0.2).abs() < 1e-9);
+        // The 100 ms floor applies to near-zero executions.
+        assert!((p.metered_s(0.001) - 0.1).abs() < 1e-9);
+        let a = p.acquire(0.0).unwrap();
+        p.release(a.instance, 1.0, 0.123);
+        // 0.2 s at 1 GB = 0.2 GB-s.
+        assert!((p.stats().billed_gb_s - 0.2).abs() < 1e-9);
     }
 
     #[test]

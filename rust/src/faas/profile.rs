@@ -1,0 +1,312 @@
+//! Named, calibrated cloud-provider platform profiles.
+//!
+//! The paper demonstrates ElastiBench against one Lambda-shaped platform;
+//! this module is the seam that makes the provider model pluggable (in
+//! the spirit of SeBS's platform abstraction): every provider-specific
+//! behaviour — cold-start model, memory→vCPU curve, keepalive horizon,
+//! metered billing, noise regime — is bundled behind [`PlatformProfile`]
+//! and consumed by the simulator as a plain
+//! [`PlatformConfig`](crate::config::PlatformConfig).
+//!
+//! Three calibrated profiles ship in the registry ([`profiles`]):
+//!
+//! | name | shaped after | distinguishing traits |
+//! |---|---|---|
+//! | `aws-lambda` | AWS Lambda (ARM) | 1 ms billing, power-law vCPU curve, fast cold starts |
+//! | `gcp-cloud-functions` | Cloud Functions 2nd gen | 100 ms billing floor, ~linear vCPU curve, 100-instance default limit |
+//! | `azure-functions` | Azure Functions (consumption) | 100 ms billing floor, memory-independent single vCPU, slow cold starts |
+//!
+//! Calibration sources: the Lambda numbers are the paper's (§3.1, §6 and
+//! DESIGN.md §1); the other two are order-of-magnitude calibrations from
+//! public pricing/limits pages and published cold-start studies. They are
+//! *simulation profiles*, not measurements — see `docs/benchmarks.md`
+//! ("Adding a platform profile") for how to calibrate a new one.
+
+use crate::config::PlatformConfig;
+
+/// A named, self-describing cloud platform calibration.
+///
+/// # Invariants
+///
+/// Every implementation must uphold the contract the simulator and the
+/// scenario registry rely on:
+///
+/// * **Billing granularity** — `config().billing_granularity_s >= 0`,
+///   and when positive, metered durations are rounded *up* to that
+///   multiple with `billing_min_s` as the floor
+///   ([`FaasPlatform::metered_s`](crate::faas::FaasPlatform::metered_s));
+///   cold-start initialization is never billed (managed-runtime
+///   convention).
+/// * **Cold-start distribution** — cold-start latency is lognormal
+///   around `cold_start_base_s + cold_start_per_gb_s * image_gb`, with
+///   the first `uncached_cold_count` starts after a deploy scaled by
+///   `uncached_cold_multiplier` (container-loader cache model, Brooker
+///   et al.). Base and per-GB terms must be positive.
+/// * **Compute curve** — `config().vcpus(m)` is non-decreasing in `m`
+///   over the profile's supported memory range.
+/// * **Identity** — `name()` is unique within [`profiles`], kebab-case,
+///   and stable across releases (it is recorded in exported reports and
+///   must stay comparable months apart).
+pub trait PlatformProfile: Sync {
+    /// Unique kebab-case profile id (e.g. `aws-lambda`), stable across
+    /// releases.
+    fn name(&self) -> &'static str;
+
+    /// Human-readable provider name (e.g. `AWS Lambda (ARM)`).
+    fn provider(&self) -> &'static str;
+
+    /// One-line description for `scenario list` and reports.
+    fn description(&self) -> &'static str;
+
+    /// The full simulator calibration for this provider.
+    fn config(&self) -> PlatformConfig;
+
+    /// Default function memory size [MB] for scenarios that do not pin
+    /// one. Must satisfy [`PlatformProfile::validate_memory`].
+    fn default_memory_mb(&self) -> u64;
+
+    /// Check a memory size against the provider's offering (tiers or
+    /// ranges). Returns a human-readable error on mismatch.
+    fn validate_memory(&self, memory_mb: u64) -> Result<(), String>;
+}
+
+/// AWS-Lambda-shaped profile: the paper's evaluation platform.
+///
+/// Calibration is exactly [`PlatformConfig::default`] — 1 ms billing
+/// granularity, the §6.2.4 memory→vCPU power law, 10 min keepalive.
+pub struct Lambda;
+
+impl PlatformProfile for Lambda {
+    fn name(&self) -> &'static str {
+        "aws-lambda"
+    }
+    fn provider(&self) -> &'static str {
+        "AWS Lambda (ARM)"
+    }
+    fn description(&self) -> &'static str {
+        "paper calibration: 1 ms billing, power-law vCPU share, fast cold starts"
+    }
+    fn config(&self) -> PlatformConfig {
+        PlatformConfig::default()
+    }
+    fn default_memory_mb(&self) -> u64 {
+        2048
+    }
+    fn validate_memory(&self, memory_mb: u64) -> Result<(), String> {
+        if (128..=10_240).contains(&memory_mb) {
+            Ok(())
+        } else {
+            Err(format!(
+                "aws-lambda memory {memory_mb} MB outside [128, 10240]"
+            ))
+        }
+    }
+}
+
+/// Cloud-Functions-shaped profile (2nd gen).
+///
+/// CPU scales ~linearly with the memory tier, billing is metered in
+/// 100 ms slices with a 100 ms floor, instances idle longer before
+/// reaping, and the default per-function concurrency limit is low (100),
+/// so high-parallelism scenarios must either lower their fan-out or
+/// accept backoff.
+pub struct CloudFunctions;
+
+/// Cloud Functions memory tiers [MB].
+const GCF_TIERS: [u64; 7] = [128, 256, 512, 1024, 2048, 4096, 8192];
+
+impl PlatformProfile for CloudFunctions {
+    fn name(&self) -> &'static str {
+        "gcp-cloud-functions"
+    }
+    fn provider(&self) -> &'static str {
+        "Google Cloud Functions (2nd gen)"
+    }
+    fn description(&self) -> &'static str {
+        "100 ms metered billing, ~linear vCPU curve, 100-instance default limit"
+    }
+    fn config(&self) -> PlatformConfig {
+        PlatformConfig {
+            keepalive_s: 900.0,
+            warm_dispatch_s: 0.040,
+            cold_start_base_s: 0.90,
+            cold_start_per_gb_s: 2.2,
+            uncached_cold_multiplier: 2.5,
+            uncached_cold_count: 30,
+            instance_sigma: 0.045,
+            diurnal_amplitude: 0.040,
+            cotenancy_sigma: 0.010,
+            cotenancy_revert: 0.20,
+            // ~1 vCPU at the 2 GB tier, scaling roughly linearly.
+            vcpu_at_2048: 1.0,
+            vcpu_exponent: 1.0,
+            usd_per_gb_s: 2.5e-5,
+            usd_per_request: 4.0e-7,
+            billing_granularity_s: 0.1,
+            billing_min_s: 0.1,
+            concurrency_limit: 100,
+            crash_probability: 0.0,
+        }
+    }
+    fn default_memory_mb(&self) -> u64 {
+        2048
+    }
+    fn validate_memory(&self, memory_mb: u64) -> Result<(), String> {
+        if GCF_TIERS.contains(&memory_mb) {
+            Ok(())
+        } else {
+            Err(format!(
+                "gcp-cloud-functions memory {memory_mb} MB is not a tier {GCF_TIERS:?}"
+            ))
+        }
+    }
+}
+
+/// Azure-Functions-shaped profile (consumption plan).
+///
+/// The consumption plan allocates a single vCPU regardless of the
+/// (dynamic, ≤1536 MB) memory footprint — `vcpu_exponent = 0` makes
+/// `vcpus()` constant — has the slowest cold starts of the three
+/// providers, and bills GB-seconds in 100 ms slices with a 100 ms floor.
+pub struct AzureFunctions;
+
+impl PlatformProfile for AzureFunctions {
+    fn name(&self) -> &'static str {
+        "azure-functions"
+    }
+    fn provider(&self) -> &'static str {
+        "Azure Functions (consumption)"
+    }
+    fn description(&self) -> &'static str {
+        "single vCPU regardless of memory, slow cold starts, 100 ms billing"
+    }
+    fn config(&self) -> PlatformConfig {
+        PlatformConfig {
+            keepalive_s: 1200.0,
+            warm_dispatch_s: 0.050,
+            cold_start_base_s: 1.50,
+            cold_start_per_gb_s: 3.0,
+            uncached_cold_multiplier: 2.0,
+            uncached_cold_count: 20,
+            instance_sigma: 0.055,
+            diurnal_amplitude: 0.060,
+            cotenancy_sigma: 0.012,
+            cotenancy_revert: 0.25,
+            // One vCPU no matter the memory size: constant curve.
+            vcpu_at_2048: 1.0,
+            vcpu_exponent: 0.0,
+            usd_per_gb_s: 1.6e-5,
+            usd_per_request: 2.0e-7,
+            billing_granularity_s: 0.1,
+            billing_min_s: 0.1,
+            concurrency_limit: 200,
+            crash_probability: 0.0,
+        }
+    }
+    fn default_memory_mb(&self) -> u64 {
+        1536
+    }
+    fn validate_memory(&self, memory_mb: u64) -> Result<(), String> {
+        if (128..=1536).contains(&memory_mb) {
+            Ok(())
+        } else {
+            Err(format!(
+                "azure-functions (consumption) memory {memory_mb} MB outside [128, 1536]"
+            ))
+        }
+    }
+}
+
+static LAMBDA: Lambda = Lambda;
+static CLOUD_FUNCTIONS: CloudFunctions = CloudFunctions;
+static AZURE_FUNCTIONS: AzureFunctions = AzureFunctions;
+
+static ALL: [&dyn PlatformProfile; 3] = [&LAMBDA, &CLOUD_FUNCTIONS, &AZURE_FUNCTIONS];
+
+/// The built-in profile registry, in presentation order.
+pub fn profiles() -> &'static [&'static dyn PlatformProfile] {
+    &ALL
+}
+
+/// Look a profile up by its stable [`PlatformProfile::name`].
+pub fn profile_by_name(name: &str) -> Option<&'static dyn PlatformProfile> {
+    profiles().iter().copied().find(|p| p.name() == name)
+}
+
+/// All registered profile names (error messages, `scenario list`).
+pub fn profile_names() -> Vec<&'static str> {
+    profiles().iter().map(|p| p.name()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_three_unique_profiles() {
+        let names = profile_names();
+        assert_eq!(names.len(), 3);
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 3, "profile names must be unique");
+        for p in profiles() {
+            assert_eq!(profile_by_name(p.name()).unwrap().name(), p.name());
+        }
+        assert!(profile_by_name("aws-lamda").is_none(), "typos miss");
+    }
+
+    #[test]
+    fn default_memory_is_valid_for_each_profile() {
+        for p in profiles() {
+            p.validate_memory(p.default_memory_mb())
+                .unwrap_or_else(|e| panic!("{}: {e}", p.name()));
+        }
+    }
+
+    #[test]
+    fn billing_invariants_hold() {
+        for p in profiles() {
+            let c = p.config();
+            assert!(c.billing_granularity_s >= 0.0, "{}", p.name());
+            assert!(c.billing_min_s >= 0.0, "{}", p.name());
+            assert!(c.cold_start_base_s > 0.0, "{}", p.name());
+            assert!(c.cold_start_per_gb_s > 0.0, "{}", p.name());
+            assert!(c.usd_per_gb_s > 0.0, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn vcpu_curves_are_monotone_non_decreasing() {
+        for p in profiles() {
+            let c = p.config();
+            let mut last = 0.0;
+            for m in [128u64, 256, 512, 1024, 2048, 4096] {
+                let v = c.vcpus(m);
+                assert!(v >= last, "{} not monotone at {m} MB", p.name());
+                last = v;
+            }
+        }
+    }
+
+    #[test]
+    fn azure_vcpus_are_memory_independent() {
+        let c = AzureFunctions.config();
+        assert_eq!(c.vcpus(128), c.vcpus(1536));
+        assert!((c.vcpus(512) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gcf_rejects_non_tier_memory() {
+        assert!(CloudFunctions.validate_memory(2048).is_ok());
+        assert!(CloudFunctions.validate_memory(1536).is_err());
+        assert!(AzureFunctions.validate_memory(1536).is_ok());
+        assert!(AzureFunctions.validate_memory(2048).is_err());
+        assert!(Lambda.validate_memory(10_241).is_err());
+    }
+
+    #[test]
+    fn lambda_profile_is_the_paper_calibration() {
+        assert_eq!(Lambda.config(), PlatformConfig::default());
+    }
+}

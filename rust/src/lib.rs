@@ -13,8 +13,13 @@
 //!   and executed from Rust via PJRT ([`runtime`]). Python never runs on
 //!   the experiment path.
 //!
-//! See `DESIGN.md` for the system inventory and the paper→module map, and
-//! `EXPERIMENTS.md` for reproduction results.
+//! Entry points: the [`scenario`] registry (named recipes over pluggable
+//! [`faas::PlatformProfile`] provider calibrations — start with
+//! `elastibench scenario list`) and the [`exp`] paper-experiment drivers.
+//!
+//! See `docs/benchmarks.md` for the full suite guide (recipe schema,
+//! profiles, JSON report format, CI wiring) and `DESIGN.md` for the
+//! system inventory and the paper→module map.
 
 pub mod benchexec;
 pub mod cli;
@@ -25,6 +30,7 @@ pub mod exp;
 pub mod faas;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod stats;
 pub mod sut;
 pub mod testkit;

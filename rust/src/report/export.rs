@@ -1,5 +1,7 @@
-//! Machine-readable exports (CSV + JSON) of suite analyses.
+//! Machine-readable exports (CSV + JSON) of suite analyses and scenario
+//! runs.
 
+use crate::scenario::ScenarioReport;
 use crate::stats::SuiteAnalysis;
 use crate::util::json::{obj, Json};
 use anyhow::{Context, Result};
@@ -65,6 +67,122 @@ pub fn analysis_to_json(analysis: &SuiteAnalysis) -> Json {
     ])
 }
 
+/// Schema identifier stamped into every scenario report export. Bump on
+/// breaking shape changes so downstream tooling can dispatch.
+pub const SCENARIO_REPORT_SCHEMA: &str = "elastibench.scenario-report.v1";
+
+/// JSON export of a full scenario run: recipe identity, provenance
+/// (commit, crate version, seeds, engine), the resolved platform
+/// calibration, run metrics, per-benchmark verdicts, and the adaptive
+/// replay when present. This is the contract that keeps runs recorded
+/// months apart comparable — extend it, don't repurpose fields.
+pub fn scenario_report_to_json(r: &ScenarioReport) -> Json {
+    let sc = &r.scenario;
+    let p = &sc.platform;
+    let failures: Vec<Json> = r
+        .run
+        .failures
+        .iter()
+        .map(|(kind, count)| {
+            obj(vec![
+                ("kind", Json::Str(format!("{kind:?}"))),
+                ("count", Json::Num(*count as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", Json::Str(SCENARIO_REPORT_SCHEMA.into())),
+        (
+            "scenario",
+            obj(vec![
+                ("name", Json::Str(sc.name.clone())),
+                ("description", Json::Str(sc.description.clone())),
+                ("profile", Json::Str(sc.profile_name.clone())),
+                ("mode", Json::Str(sc.mode.as_str().into())),
+                ("repeats", Json::Str(sc.repeats.as_str().into())),
+                (
+                    "tags",
+                    Json::Arr(sc.tags.iter().map(|t| Json::Str(t.clone())).collect()),
+                ),
+            ]),
+        ),
+        (
+            "metadata",
+            obj(vec![
+                ("commit", Json::Str(r.commit.clone())),
+                ("elastibench_version", Json::Str(r.version.clone())),
+                ("engine", Json::Str(r.engine.clone())),
+                ("seed", Json::Num(sc.exp.seed as f64)),
+                ("sut_seed", Json::Num(sc.sut.seed as f64)),
+                ("start_hour_utc", Json::Num(sc.exp.start_hour_utc)),
+                ("memory_mb", Json::Num(sc.exp.memory_mb as f64)),
+                ("parallelism", Json::Num(sc.exp.parallelism as f64)),
+                ("repeats_per_call", Json::Num(sc.exp.repeats_per_call as f64)),
+                (
+                    "calls_per_benchmark",
+                    Json::Num(sc.exp.calls_per_benchmark as f64),
+                ),
+                ("benchmark_count", Json::Num(sc.sut.benchmark_count as f64)),
+                ("vcpus", Json::Num(p.vcpus(sc.exp.memory_mb))),
+            ]),
+        ),
+        (
+            "platform",
+            obj(vec![
+                ("keepalive_s", Json::Num(p.keepalive_s)),
+                ("warm_dispatch_s", Json::Num(p.warm_dispatch_s)),
+                ("cold_start_base_s", Json::Num(p.cold_start_base_s)),
+                ("cold_start_per_gb_s", Json::Num(p.cold_start_per_gb_s)),
+                ("usd_per_gb_s", Json::Num(p.usd_per_gb_s)),
+                ("usd_per_request", Json::Num(p.usd_per_request)),
+                ("billing_granularity_s", Json::Num(p.billing_granularity_s)),
+                ("billing_min_s", Json::Num(p.billing_min_s)),
+                ("concurrency_limit", Json::Num(p.concurrency_limit as f64)),
+            ]),
+        ),
+        (
+            "run",
+            obj(vec![
+                ("wall_s", Json::Num(r.run.wall_s)),
+                ("invoke_wall_s", Json::Num(r.run.invoke_wall_s)),
+                ("cost_usd", Json::Num(r.run.cost_usd)),
+                ("calls_total", Json::Num(r.run.calls_total as f64)),
+                ("calls_ok", Json::Num(r.run.calls_ok as f64)),
+                ("cold_starts", Json::Num(r.run.platform.cold_starts as f64)),
+                (
+                    "instances_created",
+                    Json::Num(r.run.platform.instances_created as f64),
+                ),
+                ("billed_gb_s", Json::Num(r.run.platform.billed_gb_s)),
+                ("crashes", Json::Num(r.run.platform.crashes as f64)),
+                ("failures", Json::Arr(failures)),
+                (
+                    "failed_benchmarks",
+                    Json::Arr(
+                        r.run
+                            .failed_benchmarks
+                            .iter()
+                            .map(|n| Json::Str(n.clone()))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        ("analysis", analysis_to_json(&r.analysis)),
+        (
+            "adaptive",
+            match &r.adaptive {
+                None => Json::Null,
+                Some(plan) => obj(vec![
+                    ("fixed_total", Json::Num(plan.fixed_total as f64)),
+                    ("adaptive_total", Json::Num(plan.adaptive_total as f64)),
+                    ("saved_pct", Json::Num(plan.saved_pct())),
+                ]),
+            },
+        ),
+    ])
+}
+
 /// Write text to a file, creating parent directories.
 pub fn write_text(path: &Path, text: &str) -> Result<()> {
     if let Some(parent) = path.parent() {
@@ -123,6 +241,34 @@ mod tests {
             verdicts[0].get("change").unwrap().as_str(),
             Some("Regression")
         );
+    }
+
+    #[test]
+    fn scenario_report_json_roundtrips_with_metadata() {
+        let sc = crate::scenario::catalog_entry("quick-smoke").unwrap();
+        let report =
+            crate::scenario::run_scenario(&sc, &crate::stats::Analyzer::native()).unwrap();
+        let j = scenario_report_to_json(&report);
+        let parsed = parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("schema").unwrap().as_str(),
+            Some(SCENARIO_REPORT_SCHEMA)
+        );
+        let meta = parsed.get("metadata").unwrap();
+        assert!(meta.get("commit").unwrap().as_str().is_some());
+        assert_eq!(meta.get("seed").unwrap().as_f64(), Some(7001.0));
+        let scj = parsed.get("scenario").unwrap();
+        assert_eq!(scj.get("profile").unwrap().as_str(), Some("aws-lambda"));
+        assert!(parsed.get("run").unwrap().get("wall_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!parsed
+            .get("analysis")
+            .unwrap()
+            .get("verdicts")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .is_empty());
+        assert_eq!(parsed.get("adaptive"), Some(&crate::util::json::Json::Null));
     }
 
     #[test]

@@ -9,7 +9,10 @@ mod export;
 mod tables;
 
 pub use ascii::{render_cdf, render_curve};
-pub use export::{analysis_to_csv, analysis_to_json, write_text};
+pub use export::{
+    analysis_to_csv, analysis_to_json, scenario_report_to_json, write_text,
+    SCENARIO_REPORT_SCHEMA,
+};
 pub use tables::{
     agreement_table, comparison_row, experiment_summary_table, fmt_duration,
     paper_vs_measured_table, PaperRow, SummaryRow,

@@ -1,6 +1,8 @@
 //! The compiled bootstrap-analysis executable and its host-side interface.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
 use std::path::Path;
 
 /// Number of output columns per microbenchmark; must match
@@ -29,6 +31,7 @@ pub struct AnalysisOutput {
 }
 
 impl AnalysisOutput {
+    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
     fn from_row(row: &[f32]) -> Self {
         AnalysisOutput {
             ci_lo_pct: row[0],
@@ -67,6 +70,11 @@ impl AnalysisOutput {
 ///
 /// Inputs per call (see `python/compile/model.py::make_analyze`):
 /// `v1[M,N] f32`, `v2[M,N] f32`, `n_valid[M] i32`, `idx[B,N] i32`.
+///
+/// Only functional when the crate is built with the `xla` feature; the
+/// default build provides the same API but [`AnalysisEngine::load`]
+/// returns an error directing callers to the native backend.
+#[cfg(feature = "xla")]
 pub struct AnalysisEngine {
     exe: xla::PjRtLoadedExecutable,
     m: usize,
@@ -74,6 +82,7 @@ pub struct AnalysisEngine {
     n: usize,
 }
 
+#[cfg(feature = "xla")]
 impl AnalysisEngine {
     /// Load an HLO-text artifact and compile it on the shared CPU client.
     pub fn load(path: &Path, m: usize, b: usize, n: usize) -> Result<Self> {
@@ -178,5 +187,56 @@ impl AnalysisEngine {
             .chunks_exact(OUT_COLS)
             .map(AnalysisOutput::from_row)
             .collect())
+    }
+}
+
+/// Stub engine used when the crate is built without the `xla` feature.
+///
+/// Keeps the public surface identical so callers (the analyzer, the
+/// cross-backend tests) compile unchanged; [`AnalysisEngine::load`]
+/// always fails with an actionable message and the analyze path is
+/// unreachable.
+#[cfg(not(feature = "xla"))]
+pub struct AnalysisEngine {
+    m: usize,
+    b: usize,
+    n: usize,
+}
+
+#[cfg(not(feature = "xla"))]
+impl AnalysisEngine {
+    /// Always fails: the PJRT backend is not compiled in.
+    pub fn load(path: &Path, _m: usize, _b: usize, _n: usize) -> Result<Self> {
+        bail!(
+            "cannot load artifact {}: this build has no PJRT runtime \
+             (crate feature `xla` disabled); use the native backend or \
+             rebuild with --features xla (see docs/benchmarks.md)",
+            path.display()
+        )
+    }
+
+    /// Batch capacity (microbenchmarks per call).
+    pub fn batch_m(&self) -> usize {
+        self.m
+    }
+    /// Bootstrap resamples per microbenchmark.
+    pub fn resamples_b(&self) -> usize {
+        self.b
+    }
+    /// Sample lanes per version.
+    pub fn lanes_n(&self) -> usize {
+        self.n
+    }
+
+    /// Unreachable in practice: [`AnalysisEngine::load`] never succeeds
+    /// without the `xla` feature, so no instance exists to call this on.
+    pub fn analyze(
+        &self,
+        _v1: &[f32],
+        _v2: &[f32],
+        _n_valid: &[i32],
+        _idx: &[i32],
+    ) -> Result<Vec<AnalysisOutput>> {
+        bail!("PJRT runtime not compiled in (crate feature `xla` disabled)")
     }
 }

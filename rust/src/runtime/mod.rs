@@ -7,6 +7,13 @@
 //! every analysis batch. HLO text — not a serialized `HloModuleProto` — is
 //! the interchange format because jax >= 0.5 emits 64-bit instruction ids
 //! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! The PJRT path requires the `xla` bindings crate and its prebuilt
+//! `xla_extension` library, neither of which the default offline
+//! environment ships. It is therefore compiled only with the non-default
+//! `xla` cargo feature; without it, [`AnalysisEngine::load`] returns a
+//! descriptive error and every caller falls back to (or starts from) the
+//! bit-compatible native engine ([`crate::stats::bootstrap_native`]).
 
 mod engine;
 mod manifest;
@@ -14,8 +21,10 @@ mod manifest;
 pub use engine::{AnalysisEngine, AnalysisOutput, OUT_COLS};
 pub use manifest::{ArtifactInfo, Manifest};
 
+#[cfg(feature = "xla")]
 use std::cell::RefCell;
 
+#[cfg(feature = "xla")]
 thread_local! {
     /// Thread-local PJRT CPU client.
     ///
@@ -27,6 +36,7 @@ thread_local! {
 }
 
 /// Run `f` with this thread's PJRT CPU client (creating it on first use).
+#[cfg(feature = "xla")]
 pub fn with_cpu_client<T>(
     f: impl FnOnce(&xla::PjRtClient) -> anyhow::Result<T>,
 ) -> anyhow::Result<T> {

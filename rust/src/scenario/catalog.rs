@@ -1,0 +1,138 @@
+//! The shipped scenario catalog: recipes embedded from `scenarios/*.toml`
+//! at compile time, so the binary is self-contained and `scenario list`
+//! works without a checkout.
+//!
+//! Every entry is a plain recipe file — the catalog is not privileged:
+//! `scenario run --recipe my.toml` executes a user recipe through exactly
+//! the same loader ([`Scenario::from_toml`]). A round-trip test in
+//! `rust/tests/scenario_catalog.rs` keeps every shipped entry loading and
+//! validating.
+
+use super::recipe::Scenario;
+use anyhow::{anyhow, Result};
+
+/// Shipped recipe sources: `(file name, TOML text)` in catalog order.
+pub const CATALOG_SOURCES: &[(&str, &str)] = &[
+    (
+        "quick-smoke.toml",
+        include_str!("../../../scenarios/quick-smoke.toml"),
+    ),
+    (
+        "lambda-baseline.toml",
+        include_str!("../../../scenarios/lambda-baseline.toml"),
+    ),
+    (
+        "lambda-aa.toml",
+        include_str!("../../../scenarios/lambda-aa.toml"),
+    ),
+    (
+        "lambda-low-memory.toml",
+        include_str!("../../../scenarios/lambda-low-memory.toml"),
+    ),
+    (
+        "lambda-adaptive.toml",
+        include_str!("../../../scenarios/lambda-adaptive.toml"),
+    ),
+    (
+        "gcf-baseline.toml",
+        include_str!("../../../scenarios/gcf-baseline.toml"),
+    ),
+    (
+        "gcf-burst.toml",
+        include_str!("../../../scenarios/gcf-burst.toml"),
+    ),
+    (
+        "azure-baseline.toml",
+        include_str!("../../../scenarios/azure-baseline.toml"),
+    ),
+];
+
+/// Load the full shipped catalog, in catalog order.
+///
+/// Panics if a shipped recipe fails to validate — that is a build bug,
+/// caught by the round-trip tests, not a runtime condition.
+pub fn catalog() -> Vec<Scenario> {
+    CATALOG_SOURCES
+        .iter()
+        .map(|(file, text)| {
+            Scenario::from_toml(text)
+                .unwrap_or_else(|e| panic!("shipped recipe {file} invalid: {e:#}"))
+        })
+        .collect()
+}
+
+/// Look up one shipped scenario by its `scenario.name`.
+pub fn catalog_entry(name: &str) -> Result<Scenario> {
+    catalog()
+        .into_iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| {
+            anyhow!(
+                "no catalog scenario named {name:?} (have: {})",
+                catalog()
+                    .iter()
+                    .map(|s| s.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::recipe::DuetMode;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn every_shipped_entry_loads_and_validates() {
+        let cat = catalog();
+        assert_eq!(cat.len(), CATALOG_SOURCES.len());
+        for (sc, (file, _)) in cat.iter().zip(CATALOG_SOURCES) {
+            assert!(!sc.name.is_empty(), "{file}");
+            assert!(!sc.description.is_empty(), "{file}");
+            assert_eq!(sc.exp.label, sc.name, "{file}");
+        }
+    }
+
+    #[test]
+    fn catalog_meets_coverage_floor() {
+        // Acceptance criteria: >= 6 entries spanning >= 3 profiles.
+        let cat = catalog();
+        assert!(cat.len() >= 6, "catalog has {}", cat.len());
+        let profiles: BTreeSet<&str> =
+            cat.iter().map(|s| s.profile_name.as_str()).collect();
+        assert!(profiles.len() >= 3, "profiles spanned: {profiles:?}");
+        // Both duet modes and both repeat policies are represented.
+        assert!(cat.iter().any(|s| s.mode == DuetMode::Aa));
+        assert!(cat.iter().any(|s| s.mode == DuetMode::Ab));
+        assert!(cat
+            .iter()
+            .any(|s| s.repeats == crate::scenario::RepeatPolicy::Adaptive));
+    }
+
+    #[test]
+    fn names_are_unique_and_lookup_works() {
+        let cat = catalog();
+        let names: BTreeSet<&str> = cat.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names.len(), cat.len(), "duplicate scenario names");
+        for sc in &cat {
+            assert_eq!(catalog_entry(&sc.name).unwrap().name, sc.name);
+        }
+        let err = catalog_entry("no-such-scenario").unwrap_err();
+        assert!(err.to_string().contains("quick-smoke"), "{err}");
+    }
+
+    #[test]
+    fn quick_smoke_is_the_smallest_entry() {
+        let cat = catalog();
+        let smoke = catalog_entry("quick-smoke").unwrap();
+        for sc in &cat {
+            assert!(
+                smoke.planned_calls() <= sc.planned_calls(),
+                "{} plans fewer calls than quick-smoke",
+                sc.name
+            );
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Scenario registry: named, reproducible benchmark-suite recipes.
+//!
+//! This is the architectural seam the ROADMAP's "as many scenarios as
+//! you can imagine" plugs into. A *scenario* is a self-describing recipe
+//! — SUT shape × platform profile × parallelism × repeat policy × seeds
+//! — stored as mini-TOML ([`recipe`]), shipped in a compiled-in catalog
+//! ([`catalog`]), executed by [`runner::run_scenario`], and exported as
+//! one metadata-rich JSON report per run
+//! ([`crate::report::scenario_report_to_json`]).
+//!
+//! CLI surface: `elastibench scenario list | run <name> | run-all`
+//! (see [`crate::cli`]). Workloads and providers extend the system by
+//! adding a recipe file and, when needed, a
+//! [`crate::faas::PlatformProfile`] — no coordinator changes required.
+
+pub mod catalog;
+pub mod recipe;
+pub mod runner;
+
+pub use catalog::{catalog, catalog_entry, CATALOG_SOURCES};
+pub use recipe::{DuetMode, RepeatPolicy, Scenario, SCENARIO_KEYS};
+pub use runner::{commit_id, run_scenario, ScenarioReport};

@@ -1,0 +1,514 @@
+//! Scenario recipes: named, self-describing experiment descriptions
+//! loadable from mini-TOML.
+//!
+//! A recipe is the unit of reproducibility: SUT shape × platform profile
+//! × parallelism × repeat policy, plus the seeds that pin the
+//! realization. Parsing is *strict* — unknown sections, unknown keys,
+//! wrong value types and profile-name typos are hard errors, because a
+//! silently ignored key in a CI recipe means months of incomparable
+//! results.
+//!
+//! ## Schema
+//!
+//! ```toml
+//! [scenario]                  # required
+//! name = "lambda-baseline"    # required; kebab-case identifier
+//! description = "..."         # optional
+//! profile = "aws-lambda"      # required; a registered PlatformProfile
+//! mode = "ab"                 # "ab" (v1 vs v2, default) | "aa" (A/A)
+//! repeats = "fixed"           # "fixed" (default) | "adaptive"
+//! tags = ["paper", "ci"]      # optional
+//!
+//! [experiment]                # optional ExperimentConfig overrides
+//! [function]                  # optional memory_mb / timeout_s
+//! [sut]                       # optional SutConfig overrides
+//! [platform]                  # optional overrides on TOP of the profile
+//! ```
+
+use crate::config::{
+    Document, ExperimentConfig, PlatformConfig, SutConfig, Value, EXPERIMENT_KEYS, FUNCTION_KEYS,
+    PLATFORM_KEYS, SUT_KEYS,
+};
+use crate::faas::{profile_by_name, profile_names, PlatformProfile};
+use crate::sut::Version;
+use anyhow::{anyhow, Result};
+
+/// Keys recognized in the `[scenario]` section.
+pub const SCENARIO_KEYS: &[&str] = &["name", "description", "profile", "mode", "repeats", "tags"];
+
+/// Sections a recipe may contain.
+const SECTIONS: &[(&str, &[&str])] = &[
+    ("scenario", SCENARIO_KEYS),
+    ("experiment", EXPERIMENT_KEYS),
+    ("function", FUNCTION_KEYS),
+    ("sut", SUT_KEYS),
+    ("platform", PLATFORM_KEYS),
+];
+
+/// Expected value shape of a recipe key (strict type validation: a
+/// wrong-typed value must be a hard error, never a silent default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Str,
+    Int,
+    Num,
+    Bool,
+    Tags,
+}
+
+impl Kind {
+    fn accepts(self, v: &Value) -> bool {
+        match self {
+            Kind::Str => v.as_str().is_some(),
+            Kind::Int => v.as_i64().is_some(),
+            Kind::Num => v.as_f64().is_some(),
+            Kind::Bool => v.as_bool().is_some(),
+            Kind::Tags => v
+                .as_array()
+                .is_some_and(|a| a.iter().all(|i| i.as_str().is_some())),
+        }
+    }
+
+    fn describe(self) -> &'static str {
+        match self {
+            Kind::Str => "a string",
+            Kind::Int => "an integer",
+            Kind::Num => "a number",
+            Kind::Bool => "a boolean",
+            Kind::Tags => "an array of strings",
+        }
+    }
+}
+
+/// Expected kind of each recognized key. Defaults mirror the override
+/// parsers: integer-typed config fields demand TOML integers, floats
+/// accept both, booleans and strings are exact.
+fn expected_kind(section: &str, key: &str) -> Kind {
+    match (section, key) {
+        ("scenario", "tags") => Kind::Tags,
+        ("scenario", _) | ("experiment", "label") => Kind::Str,
+        ("experiment", "randomize_order" | "randomize_version_order") => Kind::Bool,
+        (
+            "experiment",
+            "repeats_per_call" | "calls_per_benchmark" | "parallelism" | "seed",
+        ) => Kind::Int,
+        ("function", "memory_mb") => Kind::Int,
+        (
+            "sut",
+            "benchmark_count" | "true_changes" | "faas_incompatible" | "slow_setup" | "seed",
+        ) => Kind::Int,
+        ("platform", "uncached_cold_count" | "concurrency_limit") => Kind::Int,
+        _ => Kind::Num,
+    }
+}
+
+/// Which versions the duet slots run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DuetMode {
+    /// Both slots run v1 (false-positive control, paper §6.2.1).
+    Aa,
+    /// v1 vs v2 — the regular change-detection configuration.
+    Ab,
+}
+
+impl DuetMode {
+    /// Recipe spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DuetMode::Aa => "aa",
+            DuetMode::Ab => "ab",
+        }
+    }
+}
+
+/// How many results to collect per microbenchmark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RepeatPolicy {
+    /// The paper's fixed budget (`repeats_per_call` × `calls_per_benchmark`).
+    Fixed,
+    /// Fixed collection plus a CI-width stopping-rule replay
+    /// ([`crate::stats::adaptive_plan`], paper §7.2) reporting how many
+    /// calls an adaptive coordinator would have saved.
+    Adaptive,
+}
+
+impl RepeatPolicy {
+    /// Recipe spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RepeatPolicy::Fixed => "fixed",
+            RepeatPolicy::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// A fully resolved, validated scenario: everything needed to execute
+/// and re-execute one benchmark-suite run months apart.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Unique catalog name (doubles as the experiment label).
+    pub name: String,
+    /// One-line human description.
+    pub description: String,
+    /// Name of the platform profile the run executes against.
+    pub profile_name: String,
+    /// Duet contents (A/A or v1-vs-v2).
+    pub mode: DuetMode,
+    /// Fixed vs adaptive repeat budget.
+    pub repeats: RepeatPolicy,
+    /// Free-form tags (`scenario list` filtering, report metadata).
+    pub tags: Vec<String>,
+    /// Experiment configuration (label == scenario name unless the
+    /// recipe pins one).
+    pub exp: ExperimentConfig,
+    /// SUT generation parameters.
+    pub sut: SutConfig,
+    /// Resolved platform calibration: profile config + `[platform]`
+    /// overrides.
+    pub platform: PlatformConfig,
+}
+
+impl Scenario {
+    /// Parse and validate a recipe from mini-TOML text.
+    pub fn from_toml(text: &str) -> Result<Scenario> {
+        let doc = Document::parse(text).map_err(|e| anyhow!("recipe parse: {e}"))?;
+        Self::from_doc(&doc)
+    }
+
+    /// Build a scenario from a parsed document, collecting *all*
+    /// validation errors into one message.
+    pub fn from_doc(doc: &Document) -> Result<Scenario> {
+        let mut errs: Vec<String> = Vec::new();
+
+        // Structural strictness: no unknown sections, unknown keys or
+        // wrong-typed values (a silently defaulted value is as bad as a
+        // silently ignored key).
+        for section in doc.sections() {
+            match SECTIONS.iter().find(|(s, _)| *s == section) {
+                None => errs.push(format!(
+                    "unknown section [{section}] (expected one of {:?})",
+                    SECTIONS.iter().map(|(s, _)| *s).collect::<Vec<_>>()
+                )),
+                Some((_, allowed)) => {
+                    for key in doc.keys(section) {
+                        if !allowed.contains(&key) {
+                            errs.push(format!("unknown key {section}.{key}"));
+                        } else if let Some(v) = doc.get(section, key) {
+                            let kind = expected_kind(section, key);
+                            if !kind.accepts(v) {
+                                errs.push(format!(
+                                    "{section}.{key} must be {}",
+                                    kind.describe()
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if doc.keys("scenario").is_empty() {
+            errs.push("missing required [scenario] section".into());
+        }
+
+        // Type errors are already collected above; extraction is lenient.
+        let str_key = |key: &str| -> Option<String> {
+            doc.get("scenario", key)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+        };
+
+        let name = str_key("name").unwrap_or_default();
+        if name.is_empty() && !doc.keys("scenario").is_empty() {
+            errs.push("scenario.name is required".into());
+        }
+        let description = str_key("description").unwrap_or_default();
+
+        let profile_name = str_key("profile").unwrap_or_default();
+        let profile: Option<&'static dyn PlatformProfile> = if profile_name.is_empty() {
+            if !doc.keys("scenario").is_empty() {
+                errs.push("scenario.profile is required".into());
+            }
+            None
+        } else {
+            match profile_by_name(&profile_name) {
+                Some(p) => Some(p),
+                None => {
+                    errs.push(format!(
+                        "unknown platform profile {profile_name:?} (available: {})",
+                        profile_names().join(", ")
+                    ));
+                    None
+                }
+            }
+        };
+
+        let mode = match str_key("mode").as_deref() {
+            None => DuetMode::Ab,
+            Some("ab") => DuetMode::Ab,
+            Some("aa") => DuetMode::Aa,
+            Some(other) => {
+                errs.push(format!("scenario.mode must be \"aa\" or \"ab\", got {other:?}"));
+                DuetMode::Ab
+            }
+        };
+        let repeats = match str_key("repeats").as_deref() {
+            None => RepeatPolicy::Fixed,
+            Some("fixed") => RepeatPolicy::Fixed,
+            Some("adaptive") => RepeatPolicy::Adaptive,
+            Some(other) => {
+                errs.push(format!(
+                    "scenario.repeats must be \"fixed\" or \"adaptive\", got {other:?}"
+                ));
+                RepeatPolicy::Fixed
+            }
+        };
+        let tags: Vec<String> = doc
+            .get("scenario", "tags")
+            .and_then(Value::as_array)
+            .map(|items| {
+                items
+                    .iter()
+                    .filter_map(|i| i.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        let mut exp = ExperimentConfig::from_doc(doc);
+        if doc.get("experiment", "label").is_none() {
+            exp.label = name.clone();
+        }
+        if let Some(p) = profile {
+            if doc.get("function", "memory_mb").is_none() {
+                exp.memory_mb = p.default_memory_mb();
+            }
+            if let Err(e) = p.validate_memory(exp.memory_mb) {
+                errs.push(e);
+            }
+        }
+        if let Err(es) = exp.validate() {
+            errs.extend(es);
+        }
+        let sut = SutConfig::from_doc(doc);
+        if sut.benchmark_count == 0 {
+            errs.push("sut.benchmark_count must be >= 1".into());
+        }
+        let platform = profile
+            .map(|p| p.config().overridden(doc))
+            .unwrap_or_else(PlatformConfig::default);
+
+        if !errs.is_empty() {
+            let label = if name.is_empty() { "<recipe>" } else { name.as_str() };
+            return Err(anyhow!("invalid scenario {label}: {}", errs.join("; ")));
+        }
+        Ok(Scenario {
+            name,
+            description,
+            profile_name,
+            mode,
+            repeats,
+            tags,
+            exp,
+            sut,
+            platform,
+        })
+    }
+
+    /// The duet slot contents this scenario runs.
+    pub fn versions(&self) -> (Version, Version) {
+        match self.mode {
+            DuetMode::Aa => (Version::V1, Version::V1),
+            DuetMode::Ab => (Version::V1, Version::V2),
+        }
+    }
+
+    /// The registered profile backing this scenario.
+    ///
+    /// Panics only if the scenario was constructed by hand with an
+    /// unregistered name; recipes always validate it.
+    pub fn profile(&self) -> &'static dyn PlatformProfile {
+        profile_by_name(&self.profile_name)
+            .unwrap_or_else(|| panic!("unregistered profile {:?}", self.profile_name))
+    }
+
+    /// Planned function calls (cost/size indicator for `scenario list`).
+    pub fn planned_calls(&self) -> usize {
+        self.sut.benchmark_count * self.exp.calls_per_benchmark
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = r#"
+        [scenario]
+        name = "t"
+        profile = "aws-lambda"
+    "#;
+
+    #[test]
+    fn minimal_recipe_gets_defaults() {
+        let sc = Scenario::from_toml(MINIMAL).unwrap();
+        assert_eq!(sc.name, "t");
+        assert_eq!(sc.exp.label, "t");
+        assert_eq!(sc.mode, DuetMode::Ab);
+        assert_eq!(sc.repeats, RepeatPolicy::Fixed);
+        assert_eq!(sc.exp.memory_mb, 2048);
+        assert_eq!(sc.sut.benchmark_count, 106);
+        assert_eq!(sc.platform, PlatformConfig::default());
+        assert_eq!(sc.versions(), (Version::V1, Version::V2));
+        assert_eq!(sc.planned_calls(), 106 * 15);
+    }
+
+    #[test]
+    fn unknown_key_is_an_error() {
+        let err = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "t"
+            profile = "aws-lambda"
+            [experiment]
+            paralelism = 10
+            "#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown key experiment.paralelism"), "{err}");
+    }
+
+    #[test]
+    fn unknown_section_is_an_error() {
+        let err = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "t"
+            profile = "aws-lambda"
+            [platfrom]
+            keepalive_s = 1
+            "#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown section [platfrom]"), "{err}");
+    }
+
+    #[test]
+    fn wrong_value_types_are_errors_not_silent_defaults() {
+        let err = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "t"
+            profile = "aws-lambda"
+            [experiment]
+            seed = "7001"
+            parallelism = 2.5
+            randomize_order = 1
+            [platform]
+            keepalive_s = "long"
+            "#,
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("experiment.seed must be an integer"), "{msg}");
+        assert!(msg.contains("experiment.parallelism must be an integer"), "{msg}");
+        assert!(msg.contains("experiment.randomize_order must be a boolean"), "{msg}");
+        assert!(msg.contains("platform.keepalive_s must be a number"), "{msg}");
+    }
+
+    #[test]
+    fn non_string_scenario_fields_are_type_errors() {
+        let err = Scenario::from_toml(
+            "[scenario]\nname = 3\nprofile = \"aws-lambda\"\ntags = [1, 2]",
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("scenario.name must be a string"), "{msg}");
+        assert!(msg.contains("scenario.tags must be an array of strings"), "{msg}");
+    }
+
+    #[test]
+    fn missing_scenario_section_is_an_error() {
+        let err = Scenario::from_toml("[experiment]\nparallelism = 10").unwrap_err();
+        assert!(err.to_string().contains("missing required [scenario]"), "{err}");
+    }
+
+    #[test]
+    fn profile_typo_lists_alternatives() {
+        let err = Scenario::from_toml(
+            "[scenario]\nname = \"t\"\nprofile = \"aws-lamda\"",
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown platform profile"), "{msg}");
+        assert!(msg.contains("aws-lambda"), "must list available: {msg}");
+    }
+
+    #[test]
+    fn multiple_errors_are_collected() {
+        let err = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "t"
+            profile = "nope"
+            mode = "abba"
+            [experiment]
+            parallelism = 0
+            "#,
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown platform profile"), "{msg}");
+        assert!(msg.contains("mode"), "{msg}");
+        assert!(msg.contains("parallelism"), "{msg}");
+    }
+
+    #[test]
+    fn profile_default_memory_applies_and_validates() {
+        let sc = Scenario::from_toml(
+            "[scenario]\nname = \"t\"\nprofile = \"azure-functions\"",
+        )
+        .unwrap();
+        assert_eq!(sc.exp.memory_mb, 1536);
+        // Azure caps at 1536 MB: explicit 2048 must fail.
+        let err = Scenario::from_toml(
+            "[scenario]\nname = \"t\"\nprofile = \"azure-functions\"\n[function]\nmemory_mb = 2048",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("1536"), "{err}");
+    }
+
+    #[test]
+    fn platform_overrides_stack_on_profile() {
+        let sc = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "t"
+            profile = "gcp-cloud-functions"
+            [platform]
+            keepalive_s = 42.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(sc.platform.keepalive_s, 42.0);
+        // Untouched fields keep the PROFILE's value, not the default.
+        assert_eq!(sc.platform.billing_granularity_s, 0.1);
+        assert_eq!(sc.platform.concurrency_limit, 100);
+    }
+
+    #[test]
+    fn aa_mode_and_tags_parse() {
+        let sc = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "t"
+            profile = "aws-lambda"
+            mode = "aa"
+            repeats = "adaptive"
+            tags = ["ci", "paper"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(sc.mode, DuetMode::Aa);
+        assert_eq!(sc.versions(), (Version::V1, Version::V1));
+        assert_eq!(sc.repeats, RepeatPolicy::Adaptive);
+        assert_eq!(sc.tags, vec!["ci".to_string(), "paper".to_string()]);
+    }
+}

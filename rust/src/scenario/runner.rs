@@ -1,0 +1,157 @@
+//! Execute a scenario end-to-end and assemble the metadata-rich report.
+//!
+//! One call = generate SUT → fan out on the profiled platform → analyze
+//! → (optionally) replay the adaptive stopping rule. The result carries
+//! enough provenance (commit, crate version, seeds, profile calibration)
+//! that two runs months apart remain honestly comparable — see
+//! [`crate::report::scenario_report_to_json`] for the export shape.
+
+use super::recipe::{RepeatPolicy, Scenario};
+use crate::coordinator::{run_experiment, RunReport};
+use crate::exp::Workbench;
+use crate::stats::{adaptive_plan, AdaptivePlan, Analyzer, StoppingRule, SuiteAnalysis};
+use anyhow::Result;
+
+/// A fully executed scenario with provenance.
+pub struct ScenarioReport {
+    /// The scenario exactly as executed (post-validation).
+    pub scenario: Scenario,
+    /// Raw run outcome (wall/cost/failures/measurements).
+    pub run: RunReport,
+    /// Statistical verdicts.
+    pub analysis: SuiteAnalysis,
+    /// Stopping-rule replay (only for `repeats = "adaptive"` scenarios).
+    pub adaptive: Option<AdaptivePlan>,
+    /// VCS commit the binary was run from (`ELASTIBENCH_COMMIT` env
+    /// override, else `git rev-parse --short HEAD`, else `unknown`).
+    pub commit: String,
+    /// Crate version that produced the report.
+    pub version: String,
+    /// Analysis backend (`native` or `xla`).
+    pub engine: String,
+}
+
+impl ScenarioReport {
+    /// Detected performance changes (shorthand for summaries).
+    pub fn change_count(&self) -> usize {
+        self.analysis.change_count()
+    }
+}
+
+/// Best-effort commit id for report provenance.
+pub fn commit_id() -> String {
+    if let Ok(c) = std::env::var("ELASTIBENCH_COMMIT") {
+        if !c.is_empty() {
+            return c;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Seed offset between the run seed and the analysis resample seed
+/// (matches the experiment drivers in [`crate::exp`]).
+const ANALYSIS_SEED_XOR: u64 = 0xA11A;
+
+/// Run one scenario on a fresh simulated platform and analyze it.
+pub fn run_scenario(sc: &Scenario, analyzer: &Analyzer) -> Result<ScenarioReport> {
+    // The workbench generates the SUT from the recipe's pinned seed and
+    // carries the resolved platform; the analysis backend is the
+    // caller's `analyzer`, not the workbench default.
+    let wb = Workbench::with_sut_and_platform(sc.sut.clone(), sc.platform.clone());
+    let run = run_experiment(&wb.suite, &wb.sut, &wb.platform, &sc.exp, sc.versions());
+    let analysis = analyzer.analyze(
+        &sc.exp.label,
+        &run.measurements,
+        sc.exp.seed ^ ANALYSIS_SEED_XOR,
+    )?;
+    let adaptive = match sc.repeats {
+        RepeatPolicy::Fixed => None,
+        RepeatPolicy::Adaptive => Some(adaptive_plan(
+            analyzer,
+            &run.measurements,
+            &StoppingRule {
+                step: sc.exp.repeats_per_call.max(1),
+                ..StoppingRule::default()
+            },
+            sc.exp.seed ^ ANALYSIS_SEED_XOR,
+        )?),
+    };
+    Ok(ScenarioReport {
+        scenario: sc.clone(),
+        run,
+        analysis,
+        adaptive,
+        commit: commit_id(),
+        version: crate::version().to_string(),
+        engine: if analyzer.is_xla() { "xla" } else { "native" }.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::catalog::catalog_entry;
+    use crate::scenario::recipe::DuetMode;
+
+    #[test]
+    fn quick_smoke_runs_end_to_end() {
+        let sc = catalog_entry("quick-smoke").unwrap();
+        let report = run_scenario(&sc, &Analyzer::native()).unwrap();
+        assert_eq!(report.scenario.name, "quick-smoke");
+        assert!(report.run.calls_total >= sc.planned_calls());
+        assert!(!report.analysis.verdicts.is_empty());
+        assert!(report.adaptive.is_none());
+        assert!(!report.commit.is_empty());
+        assert_eq!(report.engine, "native");
+        // 2 repeats x 8 calls for clean benchmarks.
+        assert!(report
+            .run
+            .measurements
+            .iter()
+            .any(|m| m.len() == sc.exp.results_per_benchmark()));
+    }
+
+    #[test]
+    fn scenario_runs_are_deterministic() {
+        let sc = catalog_entry("quick-smoke").unwrap();
+        let a = run_scenario(&sc, &Analyzer::native()).unwrap();
+        let b = run_scenario(&sc, &Analyzer::native()).unwrap();
+        assert_eq!(a.run.wall_s, b.run.wall_s);
+        assert_eq!(a.run.cost_usd, b.run.cost_usd);
+        assert_eq!(a.analysis.change_count(), b.analysis.change_count());
+        for (x, y) in a.analysis.verdicts.iter().zip(&b.analysis.verdicts) {
+            assert_eq!(x.output, y.output, "{}", x.name);
+        }
+    }
+
+    #[test]
+    fn aa_scenario_detects_nothing() {
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        sc.mode = DuetMode::Aa;
+        let report = run_scenario(&sc, &Analyzer::native()).unwrap();
+        assert_eq!(report.change_count(), 0, "A/A must stay clean");
+    }
+
+    #[test]
+    fn adaptive_scenario_reports_savings() {
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        sc.repeats = RepeatPolicy::Adaptive;
+        let report = run_scenario(&sc, &Analyzer::native()).unwrap();
+        let plan = report.adaptive.expect("adaptive plan present");
+        assert!(plan.fixed_total > 0);
+        assert!(plan.adaptive_total <= plan.fixed_total);
+    }
+
+    #[test]
+    fn commit_id_is_nonempty() {
+        assert!(!commit_id().is_empty());
+    }
+}

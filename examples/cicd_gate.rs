@@ -1,79 +1,101 @@
-//! CI/CD gate: the paper's §1 motivating use case — run the
-//! microbenchmark suite on every change and fail the pipeline when a
-//! performance regression is detected.
+//! CI/CD gate, the paper's §1 motivating use case — now as the full
+//! *continuous* loop: run the suite on every change, record the result
+//! in the history store, and gate the newest run against the recorded
+//! baseline of prior runs.
 //!
 //! ```bash
-//! cargo run --release --example cicd_gate            # v2 has regressions
-//! cargo run --release --example cicd_gate -- --clean # A/A: must pass
+//! cargo run --release --example cicd_gate            # candidate regresses
+//! cargo run --release --example cicd_gate -- --clean # clean candidate: passes
 //! ```
 //!
-//! The gate is a catalog scenario (`quick-smoke`, the same recipe the CI
-//! workflow smoke-tests) flipped to A/A mode by `--clean` — no hand
-//! wiring. Exit code 0 = gate passed, 1 = regression(s) detected; wire
-//! it into a pipeline exactly like a test step. Only regressions above a
-//! noise margin (3%, cf. §2 [20, 43]) fail the gate; improvements are
-//! reported but do not block.
+//! The example builds a fresh store, simulates three "main" builds
+//! (A/A runs over different experiment seeds — the false-positive
+//! control, so the baseline is honest history, not copies of one run),
+//! then runs the candidate: by default a v1-vs-v2 run whose injected
+//! true changes play the regression; with `--clean` another A/A run.
+//! The candidate is recorded and `history::evaluate` decides. Exit code
+//! 0 = gate passed, 1 = cross-run regression(s) — wire it into a
+//! pipeline exactly like a test step.
+//!
+//! Everything is deterministic: commit ids are strings, timestamps are
+//! build numbers, seeds are pinned — rerunning the example reproduces
+//! the same gate table byte for byte.
 
-use elastibench::scenario::{catalog_entry, run_scenario, DuetMode};
-use elastibench::stats::{Analyzer, ChangeKind};
+use elastibench::history::{evaluate, GatePolicy, HistoryStore, Timeline};
+use elastibench::report::gate_table;
+use elastibench::scenario::{catalog_entry, run_scenario, DuetMode, Scenario};
+use elastibench::stats::Analyzer;
 
-/// Regressions below this are within cloud-noise territory (§2).
-const GATE_MARGIN_PCT: f32 = 3.0;
+fn run_build(sc: &Scenario, commit: &str, store: &HistoryStore, build: usize) {
+    let mut report = run_scenario(sc, &Analyzer::native()).expect("scenario run");
+    report.commit = commit.to_string();
+    let meta = store
+        .record(&report, &format!("build-{build}"))
+        .expect("record run");
+    println!(
+        "  recorded {commit:<10} as {} ({} analyzed, {} regression verdict(s), {:.1} min, ${:.2})",
+        meta.run_id, meta.analyzed, meta.regressions, meta.wall_s / 60.0, meta.cost_usd
+    );
+}
 
 fn main() {
     let clean = std::env::args().any(|a| a == "--clean");
-    let mut sc = catalog_entry("quick-smoke").expect("catalog entry");
-    if clean {
-        println!("gate: comparing identical versions (A/A)");
+    let store_dir = std::env::temp_dir().join("elastibench_cicd_gate_store");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store = HistoryStore::open(&store_dir);
+
+    let base = catalog_entry("quick-smoke").expect("catalog entry");
+
+    // Three "main" builds: A/A runs (both duet slots run v1) over
+    // different experiment seeds — genuine run-to-run noise, no true
+    // changes. This is the recorded baseline history.
+    println!("building baseline history ({} benchmarks on {}):", base.sut.benchmark_count, base.profile_name);
+    for (i, commit) in ["main-1", "main-2", "main-3"].iter().enumerate() {
+        let mut sc = base.clone();
         sc.mode = DuetMode::Aa;
-    } else {
-        println!("gate: comparing v1 (main) vs v2 (candidate)");
+        sc.exp.seed = base.exp.seed + i as u64;
+        run_build(&sc, commit, &store, i + 1);
     }
 
-    let result = run_scenario(&sc, &Analyzer::native()).expect("scenario run");
+    // The candidate build: v1 vs v2 flips the recipe's injected true
+    // changes live (the "regression"); --clean stays A/A.
+    let mut candidate = base.clone();
+    candidate.exp.seed = base.exp.seed + 3;
+    if clean {
+        println!("\ncandidate: clean change (A/A — no real regressions)");
+        candidate.mode = DuetMode::Aa;
+    } else {
+        println!("\ncandidate: v1 vs v2 (the recipe's true changes now bite)");
+        candidate.mode = DuetMode::Ab;
+    }
+    run_build(&candidate, "candidate", &store, 4);
+
+    // Gate the newest recorded run against the prior runs.
+    let tl = Timeline::load(&store, &base.name).expect("timeline");
+    let policy = GatePolicy::default();
+    let outcome = evaluate(&tl, &policy).expect("gate");
     println!(
-        "suite finished in {:.1} min at ${:.2} — fast enough to gate every merge (paper §1)\n",
-        result.run.wall_s / 60.0,
-        result.run.cost_usd
+        "\ngating {} (commit {}) against [{}], window {}, threshold {}%",
+        outcome.newest_run,
+        outcome.newest_commit,
+        outcome.baseline_runs.join(", "),
+        policy.window,
+        policy.threshold_pct
     );
 
-    let mut regressions = Vec::new();
-    let mut improvements = Vec::new();
-    for v in &result.analysis.verdicts {
-        match v.change {
-            ChangeKind::Regression if v.output.ci_lo_pct >= GATE_MARGIN_PCT => {
-                regressions.push(v)
-            }
-            ChangeKind::Regression => { /* below margin: noise territory */ }
-            ChangeKind::Improvement => improvements.push(v),
-            ChangeKind::NoChange => {}
-        }
-    }
-
-    for v in &improvements {
+    let _ = std::fs::remove_dir_all(&store_dir);
+    if outcome.passed() {
         println!(
-            "  IMPROVED  {:<40} {:+.2}% [{:+.2}%, {:+.2}%]",
-            v.name, v.output.boot_median_pct, v.output.ci_lo_pct, v.output.ci_hi_pct
-        );
-    }
-    for v in &regressions {
-        println!(
-            "  REGRESSED {:<40} {:+.2}% [{:+.2}%, {:+.2}%]",
-            v.name, v.output.boot_median_pct, v.output.ci_lo_pct, v.output.ci_hi_pct
-        );
-    }
-
-    if regressions.is_empty() {
-        println!(
-            "\ngate PASSED ({} benchmarks checked)",
-            result.analysis.verdicts.len()
+            "\ngate PASSED ({} benchmark(s) checked against history)",
+            outcome.checked
         );
         std::process::exit(0);
-    } else {
-        println!(
-            "\ngate FAILED: {} regression(s) above the {GATE_MARGIN_PCT}% margin",
-            regressions.len()
-        );
-        std::process::exit(1);
     }
+    println!();
+    print!("{}", gate_table(&outcome.table_rows()));
+    println!(
+        "\ngate FAILED: {} benchmark(s) regressed vs recorded history",
+        outcome.findings.len()
+    );
+    std::process::exit(1);
 }

@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "\nexport the same run as JSON: \
-         elastibench scenario run {} --out results/",
+         elastibench scenario run {} --out-dir results/",
         sc.name
     );
     Ok(())

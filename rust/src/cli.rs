@@ -4,9 +4,14 @@
 //! elastibench suite [--config FILE]
 //! elastibench run --experiment NAME [--backend native|xla] [--config FILE] [--out DIR]
 //! elastibench scenario list
-//! elastibench scenario run <NAME> [--backend native|xla] [--out DIR]
-//! elastibench scenario run --recipe FILE [--backend native|xla] [--out DIR]
-//! elastibench scenario run-all [--backend native|xla] [--out DIR]
+//! elastibench scenario run <NAME> [--backend native|xla] [--out-dir DIR]
+//! elastibench scenario run --recipe FILE [--backend native|xla] [--out-dir DIR]
+//! elastibench scenario run-all [--backend native|xla] [--out-dir DIR]
+//! elastibench history record FILE... [--report FILE] [--store DIR] [--timestamp T]
+//! elastibench history list [SCENARIO] [--store DIR]
+//! elastibench history show SCENARIO [--store DIR] [--last N]
+//! elastibench history diff SCENARIO --a RUN --b RUN [--store DIR]
+//! elastibench history gate SCENARIO [--store DIR] [--window K] [--threshold PCT]
 //! elastibench reproduce [--backend native|xla] [--out DIR]
 //! elastibench compare --a NAME --b NAME [--backend native|xla]
 //! elastibench version | help
@@ -14,12 +19,14 @@
 
 use crate::config::{Document, SutConfig};
 use crate::exp::{self, ExperimentResult, Workbench};
+use crate::history::{self, GatePolicy, HistoryStore, Timeline};
 use crate::report::{
-    analysis_to_csv, experiment_summary_table, render_cdf, scenario_report_to_json, write_text,
-    SummaryRow,
+    analysis_to_csv, experiment_summary_table, gate_table, history_runs_table,
+    render_cdf, report_file_name, scenario_report_to_json, trend_table, write_text,
+    HistoryRunRow, SummaryRow, TrendCell,
 };
 use crate::scenario::{catalog, catalog_entry, run_scenario, Scenario, ScenarioReport};
-use crate::stats::{agreement, coverage, Analyzer};
+use crate::stats::{agreement, coverage, Analyzer, ChangeKind};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -95,12 +102,32 @@ elastibench — scalable continuous benchmarking on (simulated) cloud FaaS
 USAGE:
   elastibench scenario list
       Show the shipped scenario catalog (recipes under scenarios/).
-  elastibench scenario run NAME [--backend native|xla] [--out DIR]
-  elastibench scenario run --recipe FILE [--backend native|xla] [--out DIR]
+  elastibench scenario run NAME [--backend native|xla] [--out-dir DIR]
+  elastibench scenario run --recipe FILE [--backend native|xla] [--out-dir DIR]
       Run one catalog entry (or a recipe file) and write a structured
-      JSON report to DIR (default: results/).
-  elastibench scenario run-all [--backend native|xla] [--out DIR]
-      Sweep the whole catalog; one JSON report per scenario.
+      JSON report NAME-COMMIT.json to DIR (default: results/; --out is
+      an accepted alias). Recipes with a [history] section auto-record
+      into their store.
+  elastibench scenario run-all [--backend native|xla] [--out-dir DIR]
+      Sweep the whole catalog; one JSON report per scenario. Exits 1
+      when any scenario reports a regression verdict (CI gate without
+      JSON parsing).
+  elastibench history record FILE... [--report FILE] [--store DIR]
+                             [--timestamp T]
+      Append scenario-report JSONs to the run store (default store:
+      results/history) — globs over several files record them all.
+      Timestamps are opaque strings you pass in — never wall clock —
+      so records stay deterministic.
+  elastibench history list [SCENARIO] [--store DIR]
+      List recorded scenarios, or the runs of one scenario.
+  elastibench history show SCENARIO [--store DIR] [--last N]
+      Cross-commit trend table over the last N recorded runs (default 8).
+  elastibench history diff SCENARIO --a RUN --b RUN [--store DIR]
+      Compare two recorded runs benchmark by benchmark.
+  elastibench history gate SCENARIO [--store DIR] [--window K]
+                           [--threshold PCT] [--min-baseline N]
+      Regression-gate the newest recorded run against a baseline window
+      of K prior runs (default 3, threshold 3%). Exits 1 on findings.
   elastibench suite [--config FILE]
       Print the generated SUT inventory (ground truth).
   elastibench run --experiment NAME [--backend native|xla]
@@ -134,6 +161,7 @@ pub fn run(args: Args) -> Result<i32> {
         "suite" => cmd_suite(&args),
         "run" => cmd_run(&args),
         "scenario" => cmd_scenario(&args),
+        "history" => cmd_history(&args),
         "compare" => cmd_compare(&args),
         "reproduce" => cmd_reproduce(&args),
         other => {
@@ -285,15 +313,45 @@ fn cmd_scenario_list(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// Run a scenario and export its JSON report into `--out` (default
-/// `results/`). Returns the report for summary printing.
+/// Report output directory: `--out-dir`, or its legacy alias `--out`,
+/// or `results/`. Shared by `scenario run|run-all` and `history record`.
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("out-dir").or_else(|| args.get("out")).unwrap_or("results"))
+}
+
+/// Run a scenario, export its JSON report (`NAME-COMMIT.json` under
+/// `--out-dir`, default `results/`), and auto-record it into the run
+/// store when the recipe's `[history]` section asks for it. Returns the
+/// report for summary printing.
 fn execute_scenario(args: &Args, sc: &Scenario) -> Result<ScenarioReport> {
     let report = run_scenario(sc, &analyzer(args)?)?;
-    let dir = PathBuf::from(args.get_or("out", "results"));
-    let path = dir.join(format!("{}.json", sc.name));
+    let path = out_dir(args).join(report_file_name(&sc.name, &report.commit));
     write_text(&path, &scenario_report_to_json(&report).to_string())?;
     println!("wrote {}", path.display());
+    if let Some(h) = &sc.history {
+        if h.record {
+            let store = HistoryStore::open(&h.store);
+            let meta = store.record(&report, args.get_or("timestamp", ""))?;
+            println!(
+                "recorded {}/{}/{} (run {} of this scenario)",
+                h.store,
+                meta.scenario,
+                meta.run_id,
+                meta.run_id.split('-').next().unwrap_or("?").trim_start_matches('0')
+            );
+        }
+    }
     Ok(report)
+}
+
+/// True when the analysis carries at least one regression verdict — the
+/// exit-code contract of `scenario run-all`.
+fn has_regression(report: &ScenarioReport) -> bool {
+    report
+        .analysis
+        .verdicts
+        .iter()
+        .any(|v| v.change == ChangeKind::Regression)
 }
 
 fn scenario_summary_row(report: &ScenarioReport) -> SummaryRow {
@@ -339,17 +397,355 @@ fn cmd_scenario_run_all(args: &Args) -> Result<i32> {
     args.reject_positionals_beyond(1)?;
     let cat = catalog();
     let mut rows = Vec::with_capacity(cat.len());
+    let mut regressed: Vec<&str> = Vec::new();
     for sc in &cat {
         println!(
             "running {} ({} benchmarks on {})...",
             sc.name, sc.sut.benchmark_count, sc.profile_name
         );
         let report = execute_scenario(args, sc)?;
+        if has_regression(&report) {
+            regressed.push(&sc.name);
+        }
         rows.push(scenario_summary_row(&report));
     }
     println!();
     print!("{}", experiment_summary_table(&rows));
+    if regressed.is_empty() {
+        Ok(0)
+    } else {
+        // CI contract: a regression verdict anywhere fails the sweep
+        // without the pipeline having to parse report JSON.
+        println!(
+            "\n{} scenario(s) reported regression verdicts: {}",
+            regressed.len(),
+            regressed.join(", ")
+        );
+        Ok(1)
+    }
+}
+
+// ------------------------------------------------------------------
+// `history` — the continuous-benchmarking store (crate::history).
+// ------------------------------------------------------------------
+
+fn history_store(args: &Args) -> HistoryStore {
+    HistoryStore::open(args.get_or("store", history::DEFAULT_STORE_DIR))
+}
+
+/// Store for a *named* scenario: `--store` wins, else the scenario's
+/// catalog recipe `[history] store` (so the documented auto-record →
+/// gate loop works without repeating the path), else the default.
+fn scenario_store(args: &Args, scenario: &str) -> HistoryStore {
+    match args.get("store") {
+        Some(dir) => HistoryStore::open(dir),
+        None => HistoryStore::open(
+            catalog_entry(scenario)
+                .ok()
+                .and_then(|sc| sc.history)
+                .map(|h| h.store)
+                .unwrap_or_else(|| history::DEFAULT_STORE_DIR.to_string()),
+        ),
+    }
+}
+
+fn cmd_history(args: &Args) -> Result<i32> {
+    match args.positional(0) {
+        Some("record") => cmd_history_record(args),
+        Some("list") => cmd_history_list(args),
+        Some("show") => cmd_history_show(args),
+        Some("diff") => cmd_history_diff(args),
+        Some("gate") => cmd_history_gate(args),
+        other => bail!(
+            "history needs a subcommand: record | list | show | diff | gate (got {other:?})"
+        ),
+    }
+}
+
+fn cmd_history_record(args: &Args) -> Result<i32> {
+    // Report files come from `--report` and/or positionals, so a shell
+    // glob over NAME-COMMIT.json files (several commits, several
+    // scenarios) records every expansion in one call.
+    let mut paths: Vec<&str> = args.positionals[1..].iter().map(String::as_str).collect();
+    if let Some(path) = args.get("report") {
+        paths.insert(0, path);
+    }
+    if paths.is_empty() {
+        bail!("history record needs report FILE(s) (positional or --report)");
+    }
+    let store = history_store(args);
+    for path in paths {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read report {path}"))?;
+        let doc = crate::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse report {path}: {e}"))?;
+        let meta = store.record_json(&doc, args.get_or("timestamp", ""))?;
+        println!(
+            "recorded {}/{}/{}.json (commit {}, {} analyzed, {} regression(s))",
+            store.root().display(),
+            meta.scenario,
+            meta.run_id,
+            meta.commit,
+            meta.analyzed,
+            meta.regressions
+        );
+    }
     Ok(0)
+}
+
+fn cmd_history_list(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(2)?;
+    let store = history_store(args);
+    match args.positional(1) {
+        None => {
+            let scenarios = store.scenarios()?;
+            if scenarios.is_empty() {
+                println!(
+                    "no recorded runs under {} (record one with `history record`)",
+                    store.root().display()
+                );
+                return Ok(0);
+            }
+            println!("{} recorded scenario(s) under {}:\n", scenarios.len(), store.root().display());
+            for name in scenarios {
+                let runs = store.runs(&name)?;
+                let commits: Vec<&str> =
+                    runs.iter().map(|r| r.commit.as_str()).collect();
+                println!(
+                    "  {:<24} {:>3} run(s)   commits: {}",
+                    name,
+                    runs.len(),
+                    commits.join(" -> ")
+                );
+            }
+            Ok(0)
+        }
+        Some(scenario) => {
+            let store = scenario_store(args, scenario);
+            let runs = store.runs(scenario)?;
+            if runs.is_empty() {
+                bail!(
+                    "no recorded runs for {scenario:?} under {}",
+                    store.root().display()
+                );
+            }
+            let rows: Vec<HistoryRunRow> = runs.iter().map(run_row).collect();
+            print!("{}", history_runs_table(&rows));
+            Ok(0)
+        }
+    }
+}
+
+fn run_row(meta: &history::RunMeta) -> HistoryRunRow {
+    HistoryRunRow {
+        run_id: meta.run_id.clone(),
+        commit: meta.commit.clone(),
+        timestamp: meta.timestamp.clone(),
+        analyzed: meta.analyzed,
+        regressions: meta.regressions,
+        improvements: meta.improvements,
+        wall_s: meta.wall_s,
+        cost_usd: meta.cost_usd,
+    }
+}
+
+fn cmd_history_show(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(2)?;
+    let scenario = args
+        .positional(1)
+        .context("history show needs a SCENARIO name")?;
+    let store = scenario_store(args, scenario);
+    let last: usize = match args.get("last") {
+        None => 8,
+        Some(text) => text
+            .parse()
+            .ok()
+            .filter(|n| *n >= 1)
+            .with_context(|| format!("--last must be a positive integer, got {text:?}"))?,
+    };
+    // load_last already truncated to the newest `last` runs.
+    let tl = Timeline::load_last(&store, scenario, last)?;
+    if tl.is_empty() {
+        bail!(
+            "no recorded runs for {scenario:?} under {}",
+            store.root().display()
+        );
+    }
+    let metas: Vec<HistoryRunRow> =
+        tl.entries.iter().map(|e| run_row(&e.meta)).collect();
+    print!("{}", history_runs_table(&metas));
+    println!();
+
+    let labels: Vec<String> = tl.entries
+        .iter()
+        .map(|e| e.meta.run_id.clone())
+        .collect();
+    let mut rows: Vec<(String, Vec<TrendCell>)> = Vec::new();
+    for name in tl.benchmark_names() {
+        let series = tl.series(&name);
+        let cells: Vec<TrendCell> = (0..tl.len())
+            .map(|run_idx| {
+                series.at(run_idx).map(|p| {
+                    let marker = match p.change {
+                        ChangeKind::Regression => 'R',
+                        ChangeKind::Improvement => 'I',
+                        ChangeKind::NoChange => ' ',
+                    };
+                    (p.boot_median_pct, marker)
+                })
+            })
+            .collect();
+        rows.push((name, cells));
+    }
+    print!("{}", trend_table(&labels, &rows));
+    println!("\ncells: bootstrap median difference [%]; R regression, I improvement, — absent");
+    Ok(0)
+}
+
+fn cmd_history_diff(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(2)?;
+    let scenario = args
+        .positional(1)
+        .context("history diff needs a SCENARIO name")?;
+    let id_a = args.get("a").context("--a RUN_ID required")?;
+    let id_b = args.get("b").context("--b RUN_ID required")?;
+    let store = scenario_store(args, scenario);
+    let a = store.load(scenario, id_a)?;
+    let b = store.load(scenario, id_b)?;
+    println!(
+        "{scenario}: {id_a} (commit {}) vs {id_b} (commit {})\n",
+        a.metadata.commit, b.metadata.commit
+    );
+    println!("| benchmark | {id_a} | {id_b} | delta | verdict |");
+    println!("|---|---:|---:|---:|---|");
+    let mut names: Vec<String> = a
+        .analysis
+        .verdicts
+        .iter()
+        .chain(&b.analysis.verdicts)
+        .map(|v| v.name.clone())
+        .collect();
+    names.sort();
+    names.dedup();
+    for name in &names {
+        match (a.verdict(name), b.verdict(name)) {
+            (Some(va), Some(vb)) => {
+                let pa = va.output.boot_median_pct as f64;
+                let pb = vb.output.boot_median_pct as f64;
+                let verdict = if va.change == vb.change {
+                    va.change.as_str().to_string()
+                } else {
+                    format!("{} -> {}", va.change.as_str(), vb.change.as_str())
+                };
+                println!(
+                    "| {name} | {pa:+.2}% | {pb:+.2}% | {:+.2}% | {verdict} |",
+                    pb - pa
+                );
+            }
+            (Some(va), None) => println!(
+                "| {name} | {:+.2}% | — | — | disappeared |",
+                va.output.boot_median_pct
+            ),
+            (None, Some(vb)) => println!(
+                "| {name} | — | {:+.2}% | — | appeared |",
+                vb.output.boot_median_pct
+            ),
+            (None, None) => {}
+        }
+    }
+    Ok(0)
+}
+
+/// Gate policy for one scenario: built-in defaults, overlaid with the
+/// catalog recipe's `[history]` section when the scenario ships one,
+/// overlaid with explicit CLI flags.
+fn gate_policy(args: &Args, scenario: &str) -> Result<GatePolicy> {
+    let mut policy = GatePolicy::default();
+    if let Some(h) = catalog_entry(scenario).ok().and_then(|sc| sc.history) {
+        policy.window = h.window;
+        policy.threshold_pct = h.threshold_pct;
+    }
+    let parse_usize = |key: &str| -> Result<Option<usize>> {
+        match args.get(key) {
+            None => Ok(None),
+            Some(text) => text
+                .parse::<usize>()
+                .map(Some)
+                .with_context(|| format!("--{key} must be a positive integer, got {text:?}")),
+        }
+    };
+    if let Some(w) = parse_usize("window")? {
+        if w == 0 {
+            bail!("--window must be >= 1");
+        }
+        policy.window = w;
+    }
+    if let Some(m) = parse_usize("min-baseline")? {
+        if m == 0 {
+            bail!("--min-baseline must be >= 1");
+        }
+        policy.min_baseline = m;
+    }
+    if let Some(text) = args.get("threshold") {
+        let t: f64 = text
+            .parse()
+            .with_context(|| format!("--threshold must be numeric, got {text:?}"))?;
+        if t < 0.0 {
+            bail!("--threshold must be >= 0, got {t}");
+        }
+        policy.threshold_pct = t;
+    }
+    Ok(policy)
+}
+
+fn cmd_history_gate(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(2)?;
+    let scenario = args
+        .positional(1)
+        .context("history gate needs a SCENARIO name")?;
+    let policy = gate_policy(args, scenario)?;
+    let store = scenario_store(args, scenario);
+    // Only the newest window + 1 runs matter; never parse the archive.
+    let tl = Timeline::load_last(&store, scenario, policy.window + 1)?;
+    if tl.is_empty() {
+        bail!(
+            "no recorded runs for {scenario:?} under {}",
+            store.root().display()
+        );
+    }
+    let outcome = history::evaluate(&tl, &policy)?;
+    if let Some(why) = &outcome.skipped {
+        println!("gate SKIPPED for {scenario}: {why}");
+        return Ok(0);
+    }
+    println!(
+        "gating {} run {} (commit {}) against {} baseline run(s) [{}], window {}, threshold {}%",
+        scenario,
+        outcome.newest_run,
+        outcome.newest_commit,
+        outcome.baseline_runs.len(),
+        outcome.baseline_runs.join(", "),
+        policy.window,
+        policy.threshold_pct
+    );
+    if !outcome.new_benchmarks.is_empty() {
+        println!("  new benchmarks (no history yet): {}", outcome.new_benchmarks.join(", "));
+    }
+    if !outcome.missing_benchmarks.is_empty() {
+        println!("  missing vs baseline: {}", outcome.missing_benchmarks.join(", "));
+    }
+    if outcome.passed() {
+        println!("\ngate PASSED ({} benchmark(s) checked against history)", outcome.checked);
+        return Ok(0);
+    }
+    println!();
+    print!("{}", gate_table(&outcome.table_rows()));
+    println!(
+        "\ngate FAILED: {} benchmark(s) regressed vs the last {} run(s)",
+        outcome.findings.len(),
+        outcome.baseline_runs.len()
+    );
+    Ok(1)
 }
 
 fn maybe_export(args: &Args, analysis: &crate::stats::SuiteAnalysis) -> Result<()> {
@@ -453,6 +849,8 @@ mod tests {
             vec!["scenario", "list", "extra"],
             vec!["scenario", "run", "quick-smoke", "extra"],
             vec!["scenario", "run-all", "extra"],
+            vec!["history", "show", "quick-smoke", "extra"],
+            vec!["history", "gate", "quick-smoke", "extra"],
         ] {
             let args =
                 Args::parse(argv.iter().map(|s| s.to_string())).unwrap();
@@ -495,19 +893,152 @@ mod tests {
                 "scenario".to_string(),
                 "run".to_string(),
                 "quick-smoke".to_string(),
-                "--out".to_string(),
+                "--out-dir".to_string(),
                 dir.display().to_string(),
             ],
         )
         .unwrap();
         assert_eq!(run(args).unwrap(), 0);
-        let text = std::fs::read_to_string(dir.join("quick-smoke.json")).unwrap();
+        // Default file name embeds the short commit so reports from
+        // different commits never overwrite each other.
+        let file = report_file_name("quick-smoke", &crate::scenario::commit_id());
+        let text = std::fs::read_to_string(dir.join(&file))
+            .unwrap_or_else(|e| panic!("missing {file}: {e}"));
         let parsed = crate::util::json::parse(&text).unwrap();
         assert_eq!(
             parsed.get("schema").unwrap().as_str(),
             Some(crate::report::SCENARIO_REPORT_SCHEMA)
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn out_flag_is_an_alias_for_out_dir() {
+        let args = Args::parse(
+            ["scenario", "run", "x", "--out", "/tmp/alias"].map(String::from),
+        )
+        .unwrap();
+        assert_eq!(out_dir(&args), PathBuf::from("/tmp/alias"));
+        let args = Args::parse(
+            ["scenario", "run", "x", "--out-dir", "/tmp/primary"].map(String::from),
+        )
+        .unwrap();
+        assert_eq!(out_dir(&args), PathBuf::from("/tmp/primary"));
+        let args = Args::parse(["scenario", "run", "x"].map(String::from)).unwrap();
+        assert_eq!(out_dir(&args), PathBuf::from("results"));
+    }
+
+    #[test]
+    fn gate_policy_flags_override_and_validate() {
+        let args = Args::parse(
+            [
+                "history", "gate", "quick-smoke", "--window", "5", "--threshold", "1.5",
+                "--min-baseline", "2",
+            ]
+            .map(String::from),
+        )
+        .unwrap();
+        let p = gate_policy(&args, "quick-smoke").unwrap();
+        assert_eq!(p.window, 5);
+        assert_eq!(p.threshold_pct, 1.5);
+        assert_eq!(p.min_baseline, 2);
+        // No flags: built-in defaults (quick-smoke ships no [history]).
+        let args = Args::parse(["history", "gate", "quick-smoke"].map(String::from)).unwrap();
+        assert_eq!(gate_policy(&args, "quick-smoke").unwrap(), GatePolicy::default());
+        // Fractional and zero windows are hard errors, not truncations.
+        let args =
+            Args::parse(["history", "gate", "x", "--window", "2.5"].map(String::from)).unwrap();
+        assert!(gate_policy(&args, "x").is_err());
+        let args =
+            Args::parse(["history", "gate", "x", "--window", "0"].map(String::from)).unwrap();
+        assert!(gate_policy(&args, "x").is_err());
+    }
+
+    #[test]
+    fn history_needs_a_subcommand() {
+        let args = Args::parse(["history".to_string()]).unwrap();
+        assert!(run(args).is_err());
+        let args = Args::parse(["history", "frobnicate"].map(String::from)).unwrap();
+        assert!(run(args).is_err());
+    }
+
+    #[test]
+    fn history_list_on_an_empty_store_is_fine() {
+        let dir = std::env::temp_dir().join("elastibench_cli_hist_empty");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = Args::parse(
+            ["history".to_string(), "list".to_string(), "--store".to_string(), dir.display().to_string()],
+        )
+        .unwrap();
+        assert_eq!(run(args).unwrap(), 0);
+        // ...but listing a specific unrecorded scenario is an error.
+        let args = Args::parse(
+            [
+                "history".to_string(),
+                "list".to_string(),
+                "quick-smoke".to_string(),
+                "--store".to_string(),
+                dir.display().to_string(),
+            ],
+        )
+        .unwrap();
+        assert!(run(args).is_err());
+    }
+
+    #[test]
+    fn history_record_list_show_gate_smoke() {
+        let base = std::env::temp_dir().join("elastibench_cli_hist_smoke");
+        let _ = std::fs::remove_dir_all(&base);
+        let reports = base.join("reports");
+        let store = base.join("store");
+        // One real (tiny) run, exported to a report file.
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        sc.sut.benchmark_count = 6;
+        sc.sut.true_changes = 1;
+        sc.sut.faas_incompatible = 1;
+        sc.sut.slow_setup = 0;
+        sc.exp.calls_per_benchmark = 6;
+        sc.exp.parallelism = 8;
+        let report = run_scenario(&sc, &Analyzer::native()).unwrap();
+        let file = reports.join("r.json");
+        write_text(&file, &scenario_report_to_json(&report).to_string()).unwrap();
+
+        let run_cli = |argv: Vec<String>| run(Args::parse(argv).unwrap()).unwrap();
+        let record = |ts: &str| {
+            run_cli(
+                [
+                    "history",
+                    "record",
+                    "--report",
+                    file.to_str().unwrap(),
+                    "--store",
+                    store.to_str().unwrap(),
+                    "--timestamp",
+                    ts,
+                ]
+                .map(String::from)
+                .to_vec(),
+            )
+        };
+        assert_eq!(record("t1"), 0);
+        assert_eq!(record("t2"), 0);
+        let with_store = |head: &[&str]| -> Vec<String> {
+            head.iter()
+                .map(|s| s.to_string())
+                .chain(["--store".to_string(), store.display().to_string()])
+                .collect()
+        };
+        assert_eq!(run_cli(with_store(&["history", "list"])), 0);
+        assert_eq!(run_cli(with_store(&["history", "list", "quick-smoke"])), 0);
+        assert_eq!(run_cli(with_store(&["history", "show", "quick-smoke"])), 0);
+        // Two identical runs: nothing flipped, nothing shifted -> pass.
+        assert_eq!(run_cli(with_store(&["history", "gate", "quick-smoke"])), 0);
+        // diff of the two recorded runs.
+        let mut argv = with_store(&["history", "diff", "quick-smoke"]);
+        let runs = HistoryStore::open(&store).runs("quick-smoke").unwrap();
+        argv.extend(["--a".into(), runs[0].run_id.clone(), "--b".into(), runs[1].run_id.clone()]);
+        assert_eq!(run_cli(argv), 0);
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

@@ -1,0 +1,478 @@
+//! Cross-run regression gate: compare the newest recorded run of a
+//! scenario against a baseline window of K prior runs and decide,
+//! deterministically, whether CI may merge.
+//!
+//! A benchmark trips the gate when its newest verdict is a CI-backed
+//! regression **and** the shift is attributable to the newest run rather
+//! than to noise inside the baseline. Two defenses keep one noisy run
+//! from blocking a pipeline:
+//!
+//! * the baseline statistic is the *median* over the window (robust to a
+//!   single outlier run), and
+//! * a single-level binary-segmentation change-point pass
+//!   ([`best_split`]) over the whole series must place the change at the
+//!   newest point — if the dominant shift sits inside the baseline, the
+//!   newest run is not the culprit and the gate stays green.
+//!
+//! Everything is a pure function of the recorded series: same store,
+//! same policy → same outcome (no wall clock, no RNG).
+
+use super::timeline::Timeline;
+use crate::stats::ChangeKind;
+use anyhow::Result;
+
+/// Regression-gate policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GatePolicy {
+    /// Baseline window: the newest run is compared against up to this
+    /// many immediately preceding runs.
+    pub window: usize,
+    /// Minimum sustained shift of the bootstrap-median difference [%]
+    /// (vs. the baseline median) for a threshold finding — the cloud
+    /// noise margin (paper §2 cites swings of a few percent). Verdict
+    /// flips use half this value as their margin.
+    pub threshold_pct: f64,
+    /// Minimum number of baseline runs required before the gate
+    /// evaluates at all; with fewer, the gate *skips* (passes with a
+    /// notice) instead of guessing.
+    pub min_baseline: usize,
+}
+
+impl Default for GatePolicy {
+    fn default() -> Self {
+        GatePolicy {
+            window: 3,
+            threshold_pct: 3.0,
+            min_baseline: 1,
+        }
+    }
+}
+
+/// Why a benchmark tripped the gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateReason {
+    /// CI-backed regression whose shift over the baseline median exceeds
+    /// the policy threshold.
+    ThresholdExceeded,
+    /// The verdict flipped to `Regression` while the baseline window was
+    /// predominantly non-regressing.
+    VerdictFlip,
+}
+
+impl GateReason {
+    /// Short table label.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            GateReason::ThresholdExceeded => "threshold",
+            GateReason::VerdictFlip => "verdict-flip",
+        }
+    }
+}
+
+/// One benchmark that tripped the gate.
+#[derive(Debug, Clone)]
+pub struct GateFinding {
+    /// Benchmark name.
+    pub benchmark: String,
+    /// Trip reason.
+    pub reason: GateReason,
+    /// Newest bootstrap median difference [%].
+    pub newest_pct: f64,
+    /// Newest CI lower bound [%].
+    pub newest_ci_lo_pct: f64,
+    /// Newest CI upper bound [%].
+    pub newest_ci_hi_pct: f64,
+    /// Median of the baseline window's bootstrap medians [%].
+    pub baseline_median_pct: f64,
+    /// `newest_pct - baseline_median_pct`.
+    pub delta_pct: f64,
+}
+
+/// Full gate verdict for one scenario.
+#[derive(Debug, Clone)]
+pub struct GateOutcome {
+    /// Scenario gated.
+    pub scenario: String,
+    /// Run id of the newest (gated) run.
+    pub newest_run: String,
+    /// Commit of the newest run.
+    pub newest_commit: String,
+    /// Run ids of the baseline window (oldest first).
+    pub baseline_runs: Vec<String>,
+    /// Benchmarks that tripped the gate (empty = pass).
+    pub findings: Vec<GateFinding>,
+    /// Benchmarks present in the newest run but absent from the whole
+    /// baseline window (no history to gate against).
+    pub new_benchmarks: Vec<String>,
+    /// Benchmarks present in the baseline window but missing from the
+    /// newest run (deleted or excluded — surfaced, not failed).
+    pub missing_benchmarks: Vec<String>,
+    /// Benchmarks actually compared against history.
+    pub checked: usize,
+    /// Set when the gate could not evaluate (not enough history); a
+    /// skipped gate passes.
+    pub skipped: Option<String>,
+}
+
+impl GateOutcome {
+    /// Gate verdict: pass iff no benchmark tripped.
+    pub fn passed(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Findings as renderable rows for [`crate::report::gate_table`] —
+    /// the one conversion the CLI and examples share.
+    pub fn table_rows(&self) -> Vec<crate::report::GateRow> {
+        self.findings
+            .iter()
+            .map(|f| crate::report::GateRow {
+                benchmark: f.benchmark.clone(),
+                reason: f.reason.as_str().to_string(),
+                newest_pct: f.newest_pct,
+                ci_lo_pct: f.newest_ci_lo_pct,
+                ci_hi_pct: f.newest_ci_hi_pct,
+                baseline_pct: f.baseline_median_pct,
+                delta_pct: f.delta_pct,
+            })
+            .collect()
+    }
+}
+
+/// Single-level binary segmentation: the best split of `series` into a
+/// left and right segment by the size-weighted mean-shift score
+/// `|mean(right) − mean(left)| · sqrt(k·(n−k)/n)`. Returns
+/// `(split_index, mean(right) − mean(left))`; ties keep the earliest
+/// split, so the scan is fully deterministic. `None` for series shorter
+/// than 2.
+pub fn best_split(series: &[f64]) -> Option<(usize, f64)> {
+    let n = series.len();
+    if n < 2 {
+        return None;
+    }
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    let mut best: Option<(usize, f64, f64)> = None; // (k, score, shift)
+    for k in 1..n {
+        let (left, right) = series.split_at(k);
+        let shift = mean(right) - mean(left);
+        let weight = ((k * (n - k)) as f64 / n as f64).sqrt();
+        let score = shift.abs() * weight;
+        if best.map_or(true, |(_, s, _)| score > s) {
+            best = Some((k, score, shift));
+        }
+    }
+    best.map(|(k, _, shift)| (k, shift))
+}
+
+/// True when the dominant change point of `series` is the boundary
+/// before its last element, with a positive (slower) shift of at least
+/// `min_shift`.
+fn shift_at_end(series: &[f64], min_shift: f64) -> bool {
+    match best_split(series) {
+        Some((k, shift)) => k == series.len() - 1 && shift > 0.0 && shift >= min_shift,
+        None => false,
+    }
+}
+
+/// Evaluate the gate over a timeline: newest run vs. the policy's
+/// baseline window.
+pub fn evaluate(tl: &Timeline, policy: &GatePolicy) -> Result<GateOutcome> {
+    let mut outcome = GateOutcome {
+        scenario: tl.scenario.clone(),
+        newest_run: String::new(),
+        newest_commit: String::new(),
+        baseline_runs: Vec::new(),
+        findings: Vec::new(),
+        new_benchmarks: Vec::new(),
+        missing_benchmarks: Vec::new(),
+        checked: 0,
+        skipped: None,
+    };
+    let newest_idx = match tl.len().checked_sub(1) {
+        Some(i) => i,
+        None => {
+            outcome.skipped = Some("no recorded runs".into());
+            return Ok(outcome);
+        }
+    };
+    let newest_entry = &tl.entries[newest_idx];
+    outcome.newest_run = newest_entry.meta.run_id.clone();
+    outcome.newest_commit = newest_entry.meta.commit.clone();
+
+    // Baseline window: up to `window` runs immediately before the newest.
+    let base_lo = newest_idx.saturating_sub(policy.window);
+    outcome.baseline_runs = tl.entries[base_lo..newest_idx]
+        .iter()
+        .map(|e| e.meta.run_id.clone())
+        .collect();
+    if outcome.baseline_runs.len() < policy.min_baseline.max(1) {
+        outcome.skipped = Some(format!(
+            "only {} baseline run(s) recorded, need {} — record more runs before gating",
+            outcome.baseline_runs.len(),
+            policy.min_baseline.max(1)
+        ));
+        return Ok(outcome);
+    }
+
+    for name in tl.benchmark_names() {
+        let series = tl.series(&name);
+        let newest = series.at(newest_idx);
+        let baseline: Vec<_> = series
+            .points
+            .iter()
+            .filter(|p| p.run_idx >= base_lo && p.run_idx < newest_idx)
+            .collect();
+        let Some(newest) = newest else {
+            if !baseline.is_empty() {
+                outcome.missing_benchmarks.push(name);
+            }
+            continue;
+        };
+        if baseline.is_empty() {
+            outcome.new_benchmarks.push(name);
+            continue;
+        }
+        outcome.checked += 1;
+
+        let mut base_vals: Vec<f64> = baseline.iter().map(|p| p.boot_median_pct).collect();
+        let baseline_median = median(&mut base_vals);
+        let delta = newest.boot_median_pct - baseline_median;
+        let mut series_vals: Vec<f64> =
+            baseline.iter().map(|p| p.boot_median_pct).collect();
+        series_vals.push(newest.boot_median_pct);
+
+        let ci_backed_regression =
+            newest.change == ChangeKind::Regression && newest.ci_lo_pct > 0.0;
+        if !ci_backed_regression {
+            continue;
+        }
+        let threshold_trip = delta >= policy.threshold_pct
+            && shift_at_end(&series_vals, policy.threshold_pct);
+        let non_regressing_baseline = baseline
+            .iter()
+            .filter(|p| p.change != ChangeKind::Regression)
+            .count();
+        // Flips keep half the threshold as a noise margin: the 99%
+        // bootstrap CI has a ~1% per-benchmark false-positive rate, so
+        // an unmargined flip gate would flake on any sizeable suite.
+        let flip_trip = non_regressing_baseline * 2 > baseline.len()
+            && shift_at_end(&series_vals, policy.threshold_pct / 2.0);
+        let reason = if threshold_trip {
+            Some(GateReason::ThresholdExceeded)
+        } else if flip_trip {
+            Some(GateReason::VerdictFlip)
+        } else {
+            None
+        };
+        if let Some(reason) = reason {
+            outcome.findings.push(GateFinding {
+                benchmark: name,
+                reason,
+                newest_pct: newest.boot_median_pct,
+                newest_ci_lo_pct: newest.ci_lo_pct,
+                newest_ci_hi_pct: newest.ci_hi_pct,
+                baseline_median_pct: baseline_median,
+                delta_pct: delta,
+            });
+        }
+    }
+    // Worst offender first: deterministic order for tables and CI logs.
+    outcome.findings.sort_by(|a, b| {
+        b.delta_pct
+            .partial_cmp(&a.delta_pct)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.benchmark.cmp(&b.benchmark))
+    });
+    Ok(outcome)
+}
+
+/// Median of a scratch slice (sorts in place; average of the middle two
+/// for even lengths).
+fn median(vals: &mut [f64]) -> f64 {
+    assert!(!vals.is_empty(), "median of empty slice");
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = vals.len();
+    if n % 2 == 1 {
+        vals[n / 2]
+    } else {
+        (vals[n / 2 - 1] + vals[n / 2]) / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::history::store::RunMeta;
+    use crate::history::timeline::{synthetic_run, TimelineEntry};
+    use crate::history::StoredRun;
+
+    fn timeline_of(runs: Vec<StoredRun>) -> Timeline {
+        let entries = runs
+            .into_iter()
+            .enumerate()
+            .map(|(i, run)| TimelineEntry {
+                meta: RunMeta {
+                    run_id: format!("{:04}-{}", i + 1, run.metadata.commit),
+                    scenario: run.scenario.name.clone(),
+                    commit: run.metadata.commit.clone(),
+                    profile: run.scenario.profile.clone(),
+                    engine: run.metadata.engine.clone(),
+                    seed: run.metadata.seed,
+                    timestamp: String::new(),
+                    analyzed: run.analysis.verdicts.len(),
+                    regressions: 0,
+                    improvements: 0,
+                    excluded: 0,
+                    wall_s: run.run.wall_s,
+                    cost_usd: run.run.cost_usd,
+                },
+                run,
+            })
+            .collect();
+        Timeline {
+            scenario: "synthetic".into(),
+            entries,
+        }
+    }
+
+    #[test]
+    fn best_split_finds_end_shift_and_interior_outlier() {
+        // Clean baseline then a jump: change point at the last boundary.
+        let (k, shift) = best_split(&[0.0, 0.1, 0.0, 10.0]).unwrap();
+        assert_eq!(k, 3);
+        assert!(shift > 9.0);
+        // Outlier inside the baseline: the dominant split isolates it,
+        // NOT the newest point.
+        let (k, _) = best_split(&[0.0, 0.0, 10.0, 0.1]).unwrap();
+        assert_ne!(k, 3);
+        assert!(best_split(&[1.0]).is_none());
+        assert!(best_split(&[]).is_none());
+    }
+
+    #[test]
+    fn injected_regression_trips_the_gate() {
+        let clean = &[("A", 0.2), ("B", -0.1), ("C", 0.1)][..];
+        let tl = timeline_of(vec![
+            synthetic_run("c1", clean),
+            synthetic_run("c2", clean),
+            synthetic_run("c3", clean),
+            synthetic_run("c4", &[("A", 0.2), ("B", 9.0), ("C", 0.1)]),
+        ]);
+        let out = evaluate(&tl, &GatePolicy::default()).unwrap();
+        assert!(out.skipped.is_none());
+        assert_eq!(out.checked, 3);
+        assert!(!out.passed());
+        assert_eq!(out.findings.len(), 1);
+        let f = &out.findings[0];
+        assert_eq!(f.benchmark, "B");
+        assert_eq!(f.reason, GateReason::ThresholdExceeded);
+        assert!(f.delta_pct > 8.0, "{}", f.delta_pct);
+        assert_eq!(out.baseline_runs, vec!["0001-c1", "0002-c2", "0003-c3"]);
+        assert_eq!(out.newest_run, "0004-c4");
+    }
+
+    #[test]
+    fn single_noisy_baseline_run_does_not_trip() {
+        // Run c2 is a one-off outlier; the newest run is clean again.
+        let tl = timeline_of(vec![
+            synthetic_run("c1", &[("A", 0.1)]),
+            synthetic_run("c2", &[("A", 9.0)]),
+            synthetic_run("c3", &[("A", 0.2)]),
+            synthetic_run("c4", &[("A", 0.1)]),
+        ]);
+        let out = evaluate(&tl, &GatePolicy::default()).unwrap();
+        assert!(out.passed(), "noisy baseline tripped: {:?}", out.findings);
+    }
+
+    #[test]
+    fn persistent_regression_is_known_not_retripped() {
+        // A benchmark that regressed in every baseline run (e.g. the
+        // recipe's injected true change) is not news.
+        let hot = &[("A", 8.0)][..];
+        let tl = timeline_of(vec![
+            synthetic_run("c1", hot),
+            synthetic_run("c2", hot),
+            synthetic_run("c3", hot),
+            synthetic_run("c4", hot),
+        ]);
+        let out = evaluate(&tl, &GatePolicy::default()).unwrap();
+        assert!(out.passed(), "{:?}", out.findings);
+    }
+
+    #[test]
+    fn verdict_flip_below_threshold_still_flags() {
+        // Newest flips to a CI-backed ~+4% regression against a clean
+        // baseline. With the threshold raised past the delta only the
+        // flip path (margin = threshold/2) can fire.
+        let tl = timeline_of(vec![
+            synthetic_run("c1", &[("A", 0.1)]),
+            synthetic_run("c2", &[("A", 0.0)]),
+            synthetic_run("c3", &[("A", 4.0)]),
+        ]);
+        let policy = GatePolicy {
+            threshold_pct: 4.5, // delta ~3.95 < threshold; flip margin 2.25
+            ..GatePolicy::default()
+        };
+        let out = evaluate(&tl, &policy).unwrap();
+        assert_eq!(out.findings.len(), 1, "{:?}", out.findings);
+        assert_eq!(out.findings[0].reason, GateReason::VerdictFlip);
+    }
+
+    #[test]
+    fn sub_margin_spurious_flip_does_not_flake_the_gate() {
+        // A spurious CI-backed verdict at +1.2% (the bootstrap's ~1%
+        // per-benchmark false-positive rate makes these routine) stays
+        // under the flip margin (threshold/2 = 1.5%) and must not fail
+        // the merge.
+        let mut spurious = synthetic_run("c3", &[("A", 1.2)]);
+        spurious.analysis.verdicts[0].change = ChangeKind::Regression;
+        spurious.analysis.verdicts[0].output.ci_lo_pct = 0.3;
+        let tl = timeline_of(vec![
+            synthetic_run("c1", &[("A", 0.1)]),
+            synthetic_run("c2", &[("A", 0.0)]),
+            spurious,
+        ]);
+        let out = evaluate(&tl, &GatePolicy::default()).unwrap();
+        assert!(out.passed(), "spurious flip tripped: {:?}", out.findings);
+    }
+
+    #[test]
+    fn appearance_and_disappearance_are_surfaced_not_failed() {
+        let tl = timeline_of(vec![
+            synthetic_run("c1", &[("A", 0.1), ("B", 0.1)]),
+            synthetic_run("c2", &[("A", 0.1), ("B", 0.1)]),
+            synthetic_run("c3", &[("A", 0.1), ("NEW", 9.0)]),
+        ]);
+        let out = evaluate(&tl, &GatePolicy::default()).unwrap();
+        assert!(out.passed(), "{:?}", out.findings);
+        assert_eq!(out.new_benchmarks, vec!["NEW"]);
+        assert_eq!(out.missing_benchmarks, vec!["B"]);
+        assert_eq!(out.checked, 1);
+    }
+
+    #[test]
+    fn too_little_history_skips_instead_of_guessing() {
+        let tl = timeline_of(vec![synthetic_run("c1", &[("A", 0.1)])]);
+        let out = evaluate(&tl, &GatePolicy::default()).unwrap();
+        assert!(out.skipped.is_some());
+        assert!(out.passed());
+        let empty = timeline_of(vec![]);
+        let out = evaluate(&empty, &GatePolicy::default()).unwrap();
+        assert!(out.skipped.is_some());
+        assert!(out.passed());
+    }
+
+    #[test]
+    fn gate_is_deterministic() {
+        let tl = timeline_of(vec![
+            synthetic_run("c1", &[("A", 0.1), ("B", 0.3)]),
+            synthetic_run("c2", &[("A", 0.2), ("B", 0.2)]),
+            synthetic_run("c3", &[("A", 7.0), ("B", 6.0)]),
+        ]);
+        let a = evaluate(&tl, &GatePolicy::default()).unwrap();
+        let b = evaluate(&tl, &GatePolicy::default()).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        // Findings are ordered worst-delta-first.
+        assert_eq!(a.findings[0].benchmark, "A");
+        assert_eq!(a.findings[1].benchmark, "B");
+    }
+}

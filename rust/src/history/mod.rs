@@ -1,0 +1,37 @@
+//! Continuous-benchmarking history: a durable run store, cross-commit
+//! timelines, and a CI regression gate.
+//!
+//! `scenario run` answers "did v2 regress vs v1 *in this run*?"; this
+//! subsystem answers the pipeline question the paper's title promises —
+//! "did commit N regress benchmark B relative to its recorded history?".
+//! Three layers:
+//!
+//! * [`store`] — an append-only on-disk archive of
+//!   `elastibench.scenario-report.v1` documents (one directory per
+//!   scenario, one JSON file per run, a compact `index.jsonl` of run
+//!   metadata) plus the typed importer/re-exporter that round-trips the
+//!   report schema losslessly;
+//! * [`timeline`] — runs in recording order and sparse per-benchmark
+//!   series that survive benchmark appearance/disappearance across
+//!   commits;
+//! * [`gate`] — a deterministic regression policy: newest run vs. a
+//!   baseline window of K prior runs, median-robust thresholds, and a
+//!   change-point pass so one noisy run never blocks a merge.
+//!
+//! CLI surface: `elastibench history record | list | show | diff | gate`
+//! (see [`crate::cli`]); scenarios opt into auto-recording with a
+//! `[history]` recipe section. Everything is deterministic: commits and
+//! timestamps come from flags, recipe fields or the environment — never
+//! from the wall clock.
+
+pub mod gate;
+pub mod store;
+pub mod timeline;
+
+pub use gate::{best_split, evaluate, GateFinding, GateOutcome, GatePolicy, GateReason};
+pub use store::{
+    parse_scenario_report, stored_run_to_json, HistoryStore, RunMeta, StoredAdaptive,
+    StoredMetadata, StoredPlatform, StoredRun, StoredRunMetrics, StoredScenario,
+    DEFAULT_STORE_DIR,
+};
+pub use timeline::{BenchmarkSeries, SeriesPoint, Timeline, TimelineEntry};

@@ -1,0 +1,743 @@
+//! Append-only on-disk archive of scenario runs — the durable half of
+//! *continuous* benchmarking.
+//!
+//! Layout (one directory per scenario, one JSON file per run):
+//!
+//! ```text
+//! <root>/
+//!   <scenario>/
+//!     index.jsonl        # one compact metadata line per recorded run
+//!     0001-8c99d17.json  # full elastibench.scenario-report.v1 document
+//!     0002-b35d986.json
+//! ```
+//!
+//! The `index.jsonl` is the cheap path: `history list` and run ordering
+//! never parse full reports. Run ids are `SEQ-COMMIT` where `SEQ` is the
+//! 1-based recording order — recording order *is* timeline order, and
+//! timestamps are opaque caller-provided strings (a CI run number, an
+//! ISO date, anything), never read from the wall clock, so every store
+//! operation is deterministic.
+//!
+//! [`parse_scenario_report`] is the importer half of
+//! [`crate::report::scenario_report_to_json`]: it parses a v1 report
+//! back into typed structs ([`StoredRun`]), and [`stored_run_to_json`]
+//! re-exports them losslessly (round-trip asserted by property tests).
+
+use crate::report::{scenario_report_to_json, short_commit, write_text, SCENARIO_REPORT_SCHEMA};
+use crate::scenario::ScenarioReport;
+use crate::stats::{BenchmarkVerdict, ChangeKind, SuiteAnalysis};
+use crate::util::json::{obj, parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write as _;
+use std::path::PathBuf;
+
+/// Default store root used by the CLI and `[history]` recipe sections.
+pub const DEFAULT_STORE_DIR: &str = "results/history";
+
+/// Compact per-run metadata, one line of `index.jsonl`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunMeta {
+    /// Run id: `SEQ-COMMIT` (doubles as the report file stem).
+    pub run_id: String,
+    /// Scenario the run belongs to.
+    pub scenario: String,
+    /// Commit id recorded in the report metadata.
+    pub commit: String,
+    /// Platform profile name.
+    pub profile: String,
+    /// Analysis backend (`native` / `xla`).
+    pub engine: String,
+    /// Experiment RNG seed.
+    pub seed: f64,
+    /// Caller-provided timestamp (opaque string; never wall clock).
+    pub timestamp: String,
+    /// Benchmarks analyzed.
+    pub analyzed: usize,
+    /// Regression verdicts.
+    pub regressions: usize,
+    /// Improvement verdicts.
+    pub improvements: usize,
+    /// Benchmarks excluded for insufficient results.
+    pub excluded: usize,
+    /// End-to-end wall time [s].
+    pub wall_s: f64,
+    /// Run cost [USD].
+    pub cost_usd: f64,
+}
+
+impl RunMeta {
+    /// Serialize as one `index.jsonl` line (without trailing newline).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("run_id", Json::Str(self.run_id.clone())),
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("commit", Json::Str(self.commit.clone())),
+            ("profile", Json::Str(self.profile.clone())),
+            ("engine", Json::Str(self.engine.clone())),
+            ("seed", Json::Num(self.seed)),
+            ("timestamp", Json::Str(self.timestamp.clone())),
+            ("analyzed", Json::Num(self.analyzed as f64)),
+            ("regressions", Json::Num(self.regressions as f64)),
+            ("improvements", Json::Num(self.improvements as f64)),
+            ("excluded", Json::Num(self.excluded as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("cost_usd", Json::Num(self.cost_usd)),
+        ])
+    }
+
+    /// Parse one `index.jsonl` line.
+    pub fn from_json(j: &Json) -> Result<RunMeta> {
+        let s = |key: &str| -> Result<String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("index line missing string {key:?}"))
+        };
+        let n = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("index line missing number {key:?}"))
+        };
+        Ok(RunMeta {
+            run_id: s("run_id")?,
+            scenario: s("scenario")?,
+            commit: s("commit")?,
+            profile: s("profile")?,
+            engine: s("engine")?,
+            seed: n("seed")?,
+            timestamp: s("timestamp")?,
+            analyzed: n("analyzed")? as usize,
+            regressions: n("regressions")? as usize,
+            improvements: n("improvements")? as usize,
+            excluded: n("excluded")? as usize,
+            wall_s: n("wall_s")?,
+            cost_usd: n("cost_usd")?,
+        })
+    }
+}
+
+/// The append-only run archive rooted at one directory.
+#[derive(Debug, Clone)]
+pub struct HistoryStore {
+    root: PathBuf,
+}
+
+impl HistoryStore {
+    /// Open (lazily — nothing is created until the first record) a store
+    /// rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Self {
+        HistoryStore { root: root.into() }
+    }
+
+    /// The store root directory.
+    pub fn root(&self) -> &std::path::Path {
+        &self.root
+    }
+
+    fn scenario_dir(&self, scenario: &str) -> Result<PathBuf> {
+        if scenario.is_empty()
+            || scenario.contains(&['/', '\\'][..])
+            || scenario.starts_with('.')
+        {
+            bail!("unsafe scenario name {scenario:?} for a store path");
+        }
+        Ok(self.root.join(scenario))
+    }
+
+    /// Scenarios with at least one recorded run, sorted by name.
+    pub fn scenarios(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&self.root) {
+            Ok(e) => e,
+            Err(_) => return Ok(out), // absent root = empty store
+        };
+        for entry in entries {
+            let entry = entry.with_context(|| format!("read {}", self.root.display()))?;
+            if entry.path().join("index.jsonl").is_file() {
+                if let Some(name) = entry.file_name().to_str() {
+                    out.push(name.to_string());
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Recorded runs of one scenario, in recording (= timeline) order.
+    /// An unrecorded scenario yields an empty list, not an error.
+    pub fn runs(&self, scenario: &str) -> Result<Vec<RunMeta>> {
+        let index = self.scenario_dir(scenario)?.join("index.jsonl");
+        let text = match std::fs::read_to_string(&index) {
+            Ok(t) => t,
+            Err(_) => return Ok(Vec::new()),
+        };
+        let mut out = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = parse(line)
+                .map_err(|e| anyhow!("{}:{}: {e}", index.display(), i + 1))?;
+            out.push(
+                RunMeta::from_json(&j)
+                    .with_context(|| format!("{}:{}", index.display(), i + 1))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Record a freshly executed scenario run.
+    pub fn record(&self, report: &ScenarioReport, timestamp: &str) -> Result<RunMeta> {
+        self.record_json(&scenario_report_to_json(report), timestamp)
+    }
+
+    /// Record a `elastibench.scenario-report.v1` document (the CLI path
+    /// for report files produced elsewhere). Validates the full shape by
+    /// round-tripping it through the typed importer, appends an index
+    /// line and writes the run file. Returns the new run's metadata.
+    pub fn record_json(&self, doc: &Json, timestamp: &str) -> Result<RunMeta> {
+        let run = parse_scenario_report(doc)?;
+        let scenario = run.scenario.name.clone();
+        let dir = self.scenario_dir(&scenario)?;
+        // Next sequence number: one past the index, skipping forward if
+        // a run file already occupies the slot (e.g. an index line was
+        // lost or another writer got there first). Never overwrite a
+        // recorded run — the store is append-only.
+        let mut seq = self.runs(&scenario)?.len() + 1;
+        let run_id = loop {
+            let candidate = format!("{seq:04}-{}", short_commit(&run.metadata.commit));
+            if !dir.join(format!("{candidate}.json")).exists() {
+                break candidate;
+            }
+            seq += 1;
+        };
+        let meta = RunMeta {
+            run_id: run_id.clone(),
+            scenario: scenario.clone(),
+            commit: run.metadata.commit.clone(),
+            profile: run.scenario.profile.clone(),
+            engine: run.metadata.engine.clone(),
+            seed: run.metadata.seed,
+            timestamp: timestamp.to_string(),
+            analyzed: run.analysis.verdicts.len(),
+            regressions: count(&run.analysis, ChangeKind::Regression),
+            improvements: count(&run.analysis, ChangeKind::Improvement),
+            excluded: run.analysis.excluded.len(),
+            wall_s: run.run.wall_s,
+            cost_usd: run.run.cost_usd,
+        };
+        write_text(&dir.join(format!("{run_id}.json")), &doc.to_string())?;
+        let index = dir.join("index.jsonl");
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&index)
+            .with_context(|| format!("open {}", index.display()))?;
+        writeln!(file, "{}", meta.to_json().to_string())
+            .with_context(|| format!("append {}", index.display()))?;
+        Ok(meta)
+    }
+
+    /// Load one recorded run back into typed structs.
+    pub fn load(&self, scenario: &str, run_id: &str) -> Result<StoredRun> {
+        if run_id.is_empty() || run_id.contains(&['/', '\\'][..]) || run_id.starts_with('.') {
+            bail!("unsafe run id {run_id:?}");
+        }
+        let path = self.scenario_dir(scenario)?.join(format!("{run_id}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let doc = parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        parse_scenario_report(&doc).with_context(|| path.display().to_string())
+    }
+
+    /// Load every run of a scenario in timeline order, paired with its
+    /// index metadata.
+    pub fn load_all(&self, scenario: &str) -> Result<Vec<(RunMeta, StoredRun)>> {
+        let metas = self.runs(scenario)?;
+        let mut out = Vec::with_capacity(metas.len());
+        for meta in metas {
+            let run = self.load(scenario, &meta.run_id)?;
+            out.push((meta, run));
+        }
+        Ok(out)
+    }
+}
+
+fn count(analysis: &SuiteAnalysis, kind: ChangeKind) -> usize {
+    analysis.verdicts.iter().filter(|v| v.change == kind).count()
+}
+
+// ---------------------------------------------------------------------
+// Typed model of a stored `elastibench.scenario-report.v1` document.
+// ---------------------------------------------------------------------
+
+/// `scenario` section of a stored report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredScenario {
+    pub name: String,
+    pub description: String,
+    pub profile: String,
+    pub mode: String,
+    pub repeats: String,
+    pub tags: Vec<String>,
+}
+
+/// `metadata` section (provenance) of a stored report. Numeric fields
+/// stay `f64` — exactly what the JSON carries — so re-export is lossless.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredMetadata {
+    pub commit: String,
+    pub version: String,
+    pub engine: String,
+    pub seed: f64,
+    pub sut_seed: f64,
+    pub start_hour_utc: f64,
+    pub memory_mb: f64,
+    pub parallelism: f64,
+    pub repeats_per_call: f64,
+    pub calls_per_benchmark: f64,
+    pub benchmark_count: f64,
+    pub vcpus: f64,
+}
+
+/// `platform` section (resolved calibration) of a stored report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredPlatform {
+    pub keepalive_s: f64,
+    pub warm_dispatch_s: f64,
+    pub cold_start_base_s: f64,
+    pub cold_start_per_gb_s: f64,
+    pub usd_per_gb_s: f64,
+    pub usd_per_request: f64,
+    pub billing_granularity_s: f64,
+    pub billing_min_s: f64,
+    pub concurrency_limit: f64,
+}
+
+/// `run` section (raw run metrics) of a stored report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredRunMetrics {
+    pub wall_s: f64,
+    pub invoke_wall_s: f64,
+    pub cost_usd: f64,
+    pub calls_total: f64,
+    pub calls_ok: f64,
+    pub cold_starts: f64,
+    pub instances_created: f64,
+    pub billed_gb_s: f64,
+    pub crashes: f64,
+    /// `(kind, count)` failure tally.
+    pub failures: Vec<(String, f64)>,
+    pub failed_benchmarks: Vec<String>,
+}
+
+/// `adaptive` section (stopping-rule replay) when present.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredAdaptive {
+    pub fixed_total: f64,
+    pub adaptive_total: f64,
+    pub saved_pct: f64,
+}
+
+/// A fully parsed stored run: the typed mirror of
+/// `elastibench.scenario-report.v1`.
+#[derive(Debug, Clone)]
+pub struct StoredRun {
+    pub schema: String,
+    pub scenario: StoredScenario,
+    pub metadata: StoredMetadata,
+    pub platform: StoredPlatform,
+    pub run: StoredRunMetrics,
+    /// Per-benchmark verdicts, reusing the live analysis types.
+    pub analysis: SuiteAnalysis,
+    pub adaptive: Option<StoredAdaptive>,
+}
+
+impl StoredRun {
+    /// Verdict lookup by benchmark name (linear; reports are small).
+    pub fn verdict(&self, benchmark: &str) -> Option<&BenchmarkVerdict> {
+        self.analysis.verdicts.iter().find(|v| v.name == benchmark)
+    }
+}
+
+fn sect<'a>(doc: &'a Json, section: &str) -> Result<&'a Json> {
+    doc.get(section)
+        .ok_or_else(|| anyhow!("report missing section {section:?}"))
+}
+
+fn get_str(j: &Json, section: &str, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("report missing string {section}.{key}"))
+}
+
+fn get_num(j: &Json, section: &str, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("report missing number {section}.{key}"))
+}
+
+fn get_str_arr(j: &Json, section: &str, key: &str) -> Result<Vec<String>> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("report missing array {section}.{key}"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("{section}.{key} must hold strings"))
+        })
+        .collect()
+}
+
+/// Parse a `elastibench.scenario-report.v1` document into typed structs —
+/// the importer half of [`crate::report::scenario_report_to_json`].
+pub fn parse_scenario_report(doc: &Json) -> Result<StoredRun> {
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("not a scenario report: missing \"schema\""))?;
+    if schema != SCENARIO_REPORT_SCHEMA {
+        bail!("unsupported report schema {schema:?} (expected {SCENARIO_REPORT_SCHEMA:?})");
+    }
+
+    let sc = sect(doc, "scenario")?;
+    let scenario = StoredScenario {
+        name: get_str(sc, "scenario", "name")?,
+        description: get_str(sc, "scenario", "description")?,
+        profile: get_str(sc, "scenario", "profile")?,
+        mode: get_str(sc, "scenario", "mode")?,
+        repeats: get_str(sc, "scenario", "repeats")?,
+        tags: get_str_arr(sc, "scenario", "tags")?,
+    };
+    if scenario.name.is_empty() {
+        bail!("report scenario.name is empty");
+    }
+
+    let m = sect(doc, "metadata")?;
+    let metadata = StoredMetadata {
+        commit: get_str(m, "metadata", "commit")?,
+        version: get_str(m, "metadata", "elastibench_version")?,
+        engine: get_str(m, "metadata", "engine")?,
+        seed: get_num(m, "metadata", "seed")?,
+        sut_seed: get_num(m, "metadata", "sut_seed")?,
+        start_hour_utc: get_num(m, "metadata", "start_hour_utc")?,
+        memory_mb: get_num(m, "metadata", "memory_mb")?,
+        parallelism: get_num(m, "metadata", "parallelism")?,
+        repeats_per_call: get_num(m, "metadata", "repeats_per_call")?,
+        calls_per_benchmark: get_num(m, "metadata", "calls_per_benchmark")?,
+        benchmark_count: get_num(m, "metadata", "benchmark_count")?,
+        vcpus: get_num(m, "metadata", "vcpus")?,
+    };
+
+    let p = sect(doc, "platform")?;
+    let platform = StoredPlatform {
+        keepalive_s: get_num(p, "platform", "keepalive_s")?,
+        warm_dispatch_s: get_num(p, "platform", "warm_dispatch_s")?,
+        cold_start_base_s: get_num(p, "platform", "cold_start_base_s")?,
+        cold_start_per_gb_s: get_num(p, "platform", "cold_start_per_gb_s")?,
+        usd_per_gb_s: get_num(p, "platform", "usd_per_gb_s")?,
+        usd_per_request: get_num(p, "platform", "usd_per_request")?,
+        billing_granularity_s: get_num(p, "platform", "billing_granularity_s")?,
+        billing_min_s: get_num(p, "platform", "billing_min_s")?,
+        concurrency_limit: get_num(p, "platform", "concurrency_limit")?,
+    };
+
+    let r = sect(doc, "run")?;
+    let failures = r
+        .get("failures")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("report missing array run.failures"))?
+        .iter()
+        .map(|f| {
+            Ok((
+                get_str(f, "run.failures[]", "kind")?,
+                get_num(f, "run.failures[]", "count")?,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let run = StoredRunMetrics {
+        wall_s: get_num(r, "run", "wall_s")?,
+        invoke_wall_s: get_num(r, "run", "invoke_wall_s")?,
+        cost_usd: get_num(r, "run", "cost_usd")?,
+        calls_total: get_num(r, "run", "calls_total")?,
+        calls_ok: get_num(r, "run", "calls_ok")?,
+        cold_starts: get_num(r, "run", "cold_starts")?,
+        instances_created: get_num(r, "run", "instances_created")?,
+        billed_gb_s: get_num(r, "run", "billed_gb_s")?,
+        crashes: get_num(r, "run", "crashes")?,
+        failures,
+        failed_benchmarks: get_str_arr(r, "run", "failed_benchmarks")?,
+    };
+
+    let a = sect(doc, "analysis")?;
+    let verdicts = a
+        .get("verdicts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("report missing array analysis.verdicts"))?
+        .iter()
+        .map(parse_verdict)
+        .collect::<Result<Vec<_>>>()?;
+    let analysis = SuiteAnalysis {
+        label: get_str(a, "analysis", "label")?,
+        verdicts,
+        excluded: get_str_arr(a, "analysis", "excluded")?,
+    };
+
+    let adaptive = match sect(doc, "adaptive")? {
+        Json::Null => None,
+        ad => Some(StoredAdaptive {
+            fixed_total: get_num(ad, "adaptive", "fixed_total")?,
+            adaptive_total: get_num(ad, "adaptive", "adaptive_total")?,
+            saved_pct: get_num(ad, "adaptive", "saved_pct")?,
+        }),
+    };
+
+    Ok(StoredRun {
+        schema: schema.to_string(),
+        scenario,
+        metadata,
+        platform,
+        run,
+        analysis,
+        adaptive,
+    })
+}
+
+fn parse_verdict(j: &Json) -> Result<BenchmarkVerdict> {
+    let change_str = get_str(j, "analysis.verdicts[]", "change")?;
+    let change = ChangeKind::parse(&change_str)
+        .ok_or_else(|| anyhow!("unknown change kind {change_str:?}"))?;
+    // f32 -> f64 widening in the export is exact, so narrowing back is
+    // lossless for every value a report can legally contain.
+    let f32_of = |key: &str| -> Result<f32> {
+        Ok(get_num(j, "analysis.verdicts[]", key)? as f32)
+    };
+    Ok(BenchmarkVerdict {
+        name: get_str(j, "analysis.verdicts[]", "benchmark")?,
+        n_results: get_num(j, "analysis.verdicts[]", "n_results")? as usize,
+        output: crate::runtime::AnalysisOutput {
+            ci_lo_pct: f32_of("ci_lo_pct")?,
+            boot_median_pct: f32_of("boot_median_pct")?,
+            ci_hi_pct: f32_of("ci_hi_pct")?,
+            median_v1: f32_of("median_v1")?,
+            median_v2: f32_of("median_v2")?,
+            point_pct: f32_of("point_pct")?,
+        },
+        change,
+    })
+}
+
+/// Re-export a stored run as a v1 document. With
+/// [`parse_scenario_report`] this forms a lossless round trip:
+/// `export → parse → re-export` yields byte-identical JSON (keys are
+/// canonically ordered by the writer).
+pub fn stored_run_to_json(run: &StoredRun) -> Json {
+    let sc = &run.scenario;
+    let m = &run.metadata;
+    let p = &run.platform;
+    let r = &run.run;
+    let failures: Vec<Json> = r
+        .failures
+        .iter()
+        .map(|(kind, count)| {
+            obj(vec![
+                ("kind", Json::Str(kind.clone())),
+                ("count", Json::Num(*count)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", Json::Str(run.schema.clone())),
+        (
+            "scenario",
+            obj(vec![
+                ("name", Json::Str(sc.name.clone())),
+                ("description", Json::Str(sc.description.clone())),
+                ("profile", Json::Str(sc.profile.clone())),
+                ("mode", Json::Str(sc.mode.clone())),
+                ("repeats", Json::Str(sc.repeats.clone())),
+                (
+                    "tags",
+                    Json::Arr(sc.tags.iter().map(|t| Json::Str(t.clone())).collect()),
+                ),
+            ]),
+        ),
+        (
+            "metadata",
+            obj(vec![
+                ("commit", Json::Str(m.commit.clone())),
+                ("elastibench_version", Json::Str(m.version.clone())),
+                ("engine", Json::Str(m.engine.clone())),
+                ("seed", Json::Num(m.seed)),
+                ("sut_seed", Json::Num(m.sut_seed)),
+                ("start_hour_utc", Json::Num(m.start_hour_utc)),
+                ("memory_mb", Json::Num(m.memory_mb)),
+                ("parallelism", Json::Num(m.parallelism)),
+                ("repeats_per_call", Json::Num(m.repeats_per_call)),
+                ("calls_per_benchmark", Json::Num(m.calls_per_benchmark)),
+                ("benchmark_count", Json::Num(m.benchmark_count)),
+                ("vcpus", Json::Num(m.vcpus)),
+            ]),
+        ),
+        (
+            "platform",
+            obj(vec![
+                ("keepalive_s", Json::Num(p.keepalive_s)),
+                ("warm_dispatch_s", Json::Num(p.warm_dispatch_s)),
+                ("cold_start_base_s", Json::Num(p.cold_start_base_s)),
+                ("cold_start_per_gb_s", Json::Num(p.cold_start_per_gb_s)),
+                ("usd_per_gb_s", Json::Num(p.usd_per_gb_s)),
+                ("usd_per_request", Json::Num(p.usd_per_request)),
+                ("billing_granularity_s", Json::Num(p.billing_granularity_s)),
+                ("billing_min_s", Json::Num(p.billing_min_s)),
+                ("concurrency_limit", Json::Num(p.concurrency_limit)),
+            ]),
+        ),
+        (
+            "run",
+            obj(vec![
+                ("wall_s", Json::Num(r.wall_s)),
+                ("invoke_wall_s", Json::Num(r.invoke_wall_s)),
+                ("cost_usd", Json::Num(r.cost_usd)),
+                ("calls_total", Json::Num(r.calls_total)),
+                ("calls_ok", Json::Num(r.calls_ok)),
+                ("cold_starts", Json::Num(r.cold_starts)),
+                ("instances_created", Json::Num(r.instances_created)),
+                ("billed_gb_s", Json::Num(r.billed_gb_s)),
+                ("crashes", Json::Num(r.crashes)),
+                ("failures", Json::Arr(failures)),
+                (
+                    "failed_benchmarks",
+                    Json::Arr(
+                        r.failed_benchmarks
+                            .iter()
+                            .map(|n| Json::Str(n.clone()))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        ("analysis", crate::report::analysis_to_json(&run.analysis)),
+        (
+            "adaptive",
+            match &run.adaptive {
+                None => Json::Null,
+                Some(ad) => obj(vec![
+                    ("fixed_total", Json::Num(ad.fixed_total)),
+                    ("adaptive_total", Json::Num(ad.adaptive_total)),
+                    ("saved_pct", Json::Num(ad.saved_pct)),
+                ]),
+            },
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{catalog_entry, run_scenario};
+    use crate::stats::Analyzer;
+
+    fn temp_store(tag: &str) -> HistoryStore {
+        let dir = std::env::temp_dir().join(format!("elastibench_history_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        HistoryStore::open(dir)
+    }
+
+    fn quick_report() -> ScenarioReport {
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        sc.sut.benchmark_count = 8;
+        sc.sut.true_changes = 2;
+        sc.sut.faas_incompatible = 1;
+        sc.sut.slow_setup = 1;
+        sc.exp.calls_per_benchmark = 6;
+        sc.exp.parallelism = 12;
+        run_scenario(&sc, &Analyzer::native()).unwrap()
+    }
+
+    #[test]
+    fn record_load_roundtrip_is_lossless() {
+        let store = temp_store("roundtrip");
+        let report = quick_report();
+        let exported = scenario_report_to_json(&report);
+        let meta = store.record(&report, "t-1").unwrap();
+        assert_eq!(meta.scenario, "quick-smoke");
+        assert!(meta.run_id.starts_with("0001-"));
+        assert_eq!(meta.analyzed, report.analysis.verdicts.len());
+
+        let loaded = store.load("quick-smoke", &meta.run_id).unwrap();
+        assert_eq!(
+            stored_run_to_json(&loaded).to_string(),
+            exported.to_string(),
+            "export -> import -> re-export must be byte-identical"
+        );
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn index_orders_runs_and_counts_verdicts() {
+        let store = temp_store("index");
+        let mut report = quick_report();
+        for commit in ["c-one", "c-two", "c-three"] {
+            report.commit = commit.to_string();
+            store.record(&report, commit).unwrap();
+        }
+        let runs = store.runs("quick-smoke").unwrap();
+        assert_eq!(runs.len(), 3);
+        assert_eq!(runs[0].run_id, "0001-c-one");
+        assert_eq!(runs[2].run_id, "0003-c-three");
+        assert_eq!(runs[1].timestamp, "c-two");
+        let regressions = report
+            .analysis
+            .verdicts
+            .iter()
+            .filter(|v| v.change == ChangeKind::Regression)
+            .count();
+        assert_eq!(runs[0].regressions, regressions);
+        assert_eq!(store.scenarios().unwrap(), vec!["quick-smoke".to_string()]);
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn empty_store_lists_nothing() {
+        let store = temp_store("empty");
+        assert!(store.scenarios().unwrap().is_empty());
+        assert!(store.runs("quick-smoke").unwrap().is_empty());
+        assert!(store.load("quick-smoke", "0001-x").is_err());
+    }
+
+    #[test]
+    fn rejects_unsafe_names_and_foreign_schemas() {
+        let store = temp_store("unsafe");
+        assert!(store.runs("../evil").is_err());
+        assert!(store.load("quick-smoke", "../../etc/passwd").is_err());
+        let doc = obj(vec![("schema", Json::Str("other.v9".into()))]);
+        let err = store.record_json(&doc, "").unwrap_err();
+        assert!(err.to_string().contains("other.v9"), "{err}");
+    }
+
+    #[test]
+    fn run_meta_jsonl_roundtrip() {
+        let meta = RunMeta {
+            run_id: "0007-abc".into(),
+            scenario: "s".into(),
+            commit: "abc".into(),
+            profile: "aws-lambda".into(),
+            engine: "native".into(),
+            seed: 7001.0,
+            timestamp: "2026-07-29T00:00:00Z".into(),
+            analyzed: 12,
+            regressions: 3,
+            improvements: 1,
+            excluded: 2,
+            wall_s: 123.5,
+            cost_usd: 0.07,
+        };
+        let line = meta.to_json().to_string();
+        let back = RunMeta::from_json(&parse(&line).unwrap()).unwrap();
+        assert_eq!(back, meta);
+    }
+}

@@ -1,0 +1,328 @@
+//! Cross-commit timeline of one scenario: runs in recording order,
+//! per-benchmark series extraction, and appearance/disappearance
+//! tracking.
+//!
+//! The timeline is the analysis-facing view of the store: the gate
+//! ([`crate::history::gate`]) and the `history show`/`diff` CLI render
+//! from it. Benchmarks may appear (new code) or disappear (deleted or
+//! excluded for insufficient results) between commits; a series is
+//! therefore *sparse* — each point carries the index of the run it came
+//! from instead of assuming one point per run.
+
+use super::store::{HistoryStore, RunMeta, StoredRun};
+use crate::stats::ChangeKind;
+use anyhow::Result;
+use std::collections::BTreeSet;
+
+/// One recorded run inside a timeline.
+#[derive(Debug, Clone)]
+pub struct TimelineEntry {
+    /// Compact index metadata (run id, commit, timestamp, counts).
+    pub meta: RunMeta,
+    /// The fully parsed report.
+    pub run: StoredRun,
+}
+
+/// All recorded runs of one scenario, oldest first.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    /// Scenario name.
+    pub scenario: String,
+    /// Runs in recording (= commit) order.
+    pub entries: Vec<TimelineEntry>,
+}
+
+/// One point of a per-benchmark series.
+#[derive(Debug, Clone, Copy)]
+pub struct SeriesPoint {
+    /// Index into [`Timeline::entries`] this point came from.
+    pub run_idx: usize,
+    /// Verdict of the benchmark in that run.
+    pub change: ChangeKind,
+    /// Bootstrap median difference [%].
+    pub boot_median_pct: f64,
+    /// CI lower bound [%].
+    pub ci_lo_pct: f64,
+    /// CI upper bound [%].
+    pub ci_hi_pct: f64,
+}
+
+/// The (sparse) series of one benchmark across a timeline.
+#[derive(Debug, Clone)]
+pub struct BenchmarkSeries {
+    /// Benchmark name.
+    pub name: String,
+    /// Number of runs in the timeline the series was cut from.
+    pub total_runs: usize,
+    /// Points in run order; runs where the benchmark was absent
+    /// contribute no point.
+    pub points: Vec<SeriesPoint>,
+}
+
+impl BenchmarkSeries {
+    /// Bootstrap-median values in run order (present points only).
+    pub fn values(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.boot_median_pct).collect()
+    }
+
+    /// The point taken from run `run_idx`, if the benchmark was present.
+    pub fn at(&self, run_idx: usize) -> Option<&SeriesPoint> {
+        self.points.iter().find(|p| p.run_idx == run_idx)
+    }
+
+    /// First run index the benchmark appeared in.
+    pub fn appeared_at(&self) -> Option<usize> {
+        self.points.first().map(|p| p.run_idx)
+    }
+
+    /// Whether the benchmark is present in the newest run.
+    pub fn present_in_newest(&self) -> bool {
+        self.total_runs > 0 && self.at(self.total_runs - 1).is_some()
+    }
+}
+
+impl Timeline {
+    /// Load every recorded run of `scenario` from the store.
+    pub fn load(store: &HistoryStore, scenario: &str) -> Result<Timeline> {
+        let entries = store
+            .load_all(scenario)?
+            .into_iter()
+            .map(|(meta, run)| TimelineEntry { meta, run })
+            .collect();
+        Ok(Timeline {
+            scenario: scenario.to_string(),
+            entries,
+        })
+    }
+
+    /// Load only the newest `n` recorded runs — the cheap path for the
+    /// gate (`window + 1` runs) and bounded trend views: the index is
+    /// read once and only the needed report files are parsed, keeping
+    /// the PR-blocking path O(window) instead of O(archive).
+    pub fn load_last(store: &HistoryStore, scenario: &str, n: usize) -> Result<Timeline> {
+        let metas = store.runs(scenario)?;
+        let skip = metas.len().saturating_sub(n);
+        let mut entries = Vec::with_capacity(metas.len() - skip);
+        for meta in metas.into_iter().skip(skip) {
+            let run = store.load(scenario, &meta.run_id)?;
+            entries.push(TimelineEntry { meta, run });
+        }
+        Ok(Timeline {
+            scenario: scenario.to_string(),
+            entries,
+        })
+    }
+
+    /// Number of recorded runs.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no runs are recorded.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The newest recorded run.
+    pub fn newest(&self) -> Option<&TimelineEntry> {
+        self.entries.last()
+    }
+
+    /// Union of benchmark names across all runs, sorted.
+    pub fn benchmark_names(&self) -> Vec<String> {
+        let mut names = BTreeSet::new();
+        for entry in &self.entries {
+            for v in &entry.run.analysis.verdicts {
+                names.insert(v.name.clone());
+            }
+        }
+        names.into_iter().collect()
+    }
+
+    /// Cut the (sparse) series of one benchmark across all runs.
+    pub fn series(&self, benchmark: &str) -> BenchmarkSeries {
+        let mut points = Vec::new();
+        for (run_idx, entry) in self.entries.iter().enumerate() {
+            if let Some(v) = entry.run.verdict(benchmark) {
+                points.push(SeriesPoint {
+                    run_idx,
+                    change: v.change,
+                    boot_median_pct: v.output.boot_median_pct as f64,
+                    ci_lo_pct: v.output.ci_lo_pct as f64,
+                    ci_hi_pct: v.output.ci_hi_pct as f64,
+                });
+            }
+        }
+        BenchmarkSeries {
+            name: benchmark.to_string(),
+            total_runs: self.entries.len(),
+            points,
+        }
+    }
+}
+
+/// Hand-built stored run with the given per-benchmark medians; a
+/// regression verdict is assigned where the median exceeds 3%. Shared
+/// by the timeline and gate unit tests.
+#[cfg(test)]
+pub(crate) fn synthetic_run(commit: &str, benches: &[(&str, f64)]) -> StoredRun {
+    use crate::history::store::{
+        StoredMetadata, StoredPlatform, StoredRunMetrics, StoredScenario,
+    };
+    use crate::runtime::AnalysisOutput;
+    use crate::stats::{BenchmarkVerdict, SuiteAnalysis};
+    {
+        let verdicts = benches
+            .iter()
+            .map(|(name, pct)| {
+                let pct = *pct as f32;
+                let regressed = pct > 3.0;
+                BenchmarkVerdict {
+                    name: name.to_string(),
+                    n_results: 16,
+                    output: AnalysisOutput {
+                        ci_lo_pct: if regressed { pct - 2.0 } else { pct - 1.0 },
+                        boot_median_pct: pct,
+                        ci_hi_pct: pct + 2.0,
+                        median_v1: 100.0,
+                        median_v2: 100.0 * (1.0 + pct / 100.0),
+                        point_pct: pct,
+                    },
+                    change: if regressed {
+                        ChangeKind::Regression
+                    } else {
+                        ChangeKind::NoChange
+                    },
+                }
+            })
+            .collect();
+        StoredRun {
+            schema: crate::report::SCENARIO_REPORT_SCHEMA.to_string(),
+            scenario: StoredScenario {
+                name: "synthetic".into(),
+                description: "hand-built".into(),
+                profile: "aws-lambda".into(),
+                mode: "ab".into(),
+                repeats: "fixed".into(),
+                tags: vec![],
+            },
+            metadata: StoredMetadata {
+                commit: commit.to_string(),
+                version: "0.0.0".into(),
+                engine: "native".into(),
+                seed: 1.0,
+                sut_seed: 9.0,
+                start_hour_utc: 0.0,
+                memory_mb: 2048.0,
+                parallelism: 8.0,
+                repeats_per_call: 2.0,
+                calls_per_benchmark: 8.0,
+                benchmark_count: benches.len() as f64,
+                vcpus: 1.0,
+            },
+            platform: StoredPlatform {
+                keepalive_s: 600.0,
+                warm_dispatch_s: 0.05,
+                cold_start_base_s: 0.35,
+                cold_start_per_gb_s: 0.5,
+                usd_per_gb_s: 1.0e-5,
+                usd_per_request: 2.0e-7,
+                billing_granularity_s: 0.001,
+                billing_min_s: 0.0,
+                concurrency_limit: 100.0,
+            },
+            run: StoredRunMetrics {
+                wall_s: 60.0,
+                invoke_wall_s: 50.0,
+                cost_usd: 0.05,
+                calls_total: 128.0,
+                calls_ok: 128.0,
+                cold_starts: 16.0,
+                instances_created: 16.0,
+                billed_gb_s: 10.0,
+                crashes: 0.0,
+                failures: vec![],
+                failed_benchmarks: vec![],
+            },
+            analysis: SuiteAnalysis {
+                label: "synthetic".into(),
+                verdicts,
+                excluded: vec![],
+            },
+            adaptive: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timeline_of(runs: Vec<StoredRun>) -> Timeline {
+        let entries = runs
+            .into_iter()
+            .enumerate()
+            .map(|(i, run)| TimelineEntry {
+                meta: RunMeta {
+                    run_id: format!("{:04}-{}", i + 1, run.metadata.commit),
+                    scenario: run.scenario.name.clone(),
+                    commit: run.metadata.commit.clone(),
+                    profile: run.scenario.profile.clone(),
+                    engine: run.metadata.engine.clone(),
+                    seed: run.metadata.seed,
+                    timestamp: String::new(),
+                    analyzed: run.analysis.verdicts.len(),
+                    regressions: 0,
+                    improvements: 0,
+                    excluded: 0,
+                    wall_s: run.run.wall_s,
+                    cost_usd: run.run.cost_usd,
+                },
+                run,
+            })
+            .collect();
+        Timeline {
+            scenario: "synthetic".into(),
+            entries,
+        }
+    }
+
+    #[test]
+    fn series_tracks_appearance_and_disappearance() {
+        let tl = timeline_of(vec![
+            synthetic_run("c1", &[("A", 0.1), ("B", 0.2)]),
+            synthetic_run("c2", &[("A", 0.2), ("B", 0.1), ("C", 0.3)]),
+            synthetic_run("c3", &[("A", 0.1), ("C", 0.2)]),
+        ]);
+        assert_eq!(tl.len(), 3);
+        assert_eq!(tl.benchmark_names(), vec!["A", "B", "C"]);
+
+        let a = tl.series("A");
+        assert_eq!(a.points.len(), 3);
+        assert!(a.present_in_newest());
+        assert_eq!(a.appeared_at(), Some(0));
+
+        let b = tl.series("B");
+        assert_eq!(b.points.len(), 2);
+        assert!(!b.present_in_newest(), "B disappeared in c3");
+
+        let c = tl.series("C");
+        assert_eq!(c.appeared_at(), Some(1));
+        assert!(c.at(0).is_none());
+        assert!(c.at(2).is_some());
+        let vals = c.values();
+        assert_eq!(vals.len(), 2);
+        assert!((vals[0] - 0.3).abs() < 1e-6 && (vals[1] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_timeline_is_well_behaved() {
+        let tl = timeline_of(vec![]);
+        assert!(tl.is_empty());
+        assert!(tl.newest().is_none());
+        assert!(tl.benchmark_names().is_empty());
+        let s = tl.series("A");
+        assert!(s.points.is_empty());
+        assert!(!s.present_in_newest());
+    }
+}

@@ -15,7 +15,9 @@
 //!
 //! Entry points: the [`scenario`] registry (named recipes over pluggable
 //! [`faas::PlatformProfile`] provider calibrations — start with
-//! `elastibench scenario list`) and the [`exp`] paper-experiment drivers.
+//! `elastibench scenario list`), the [`history`] subsystem (durable run
+//! store, cross-commit trends, CI regression gate — the *continuous* in
+//! continuous benchmarking) and the [`exp`] paper-experiment drivers.
 //!
 //! See `docs/benchmarks.md` for the full suite guide (recipe schema,
 //! profiles, JSON report format, CI wiring) and `DESIGN.md` for the
@@ -28,6 +30,7 @@ pub mod coordinator;
 pub mod des;
 pub mod exp;
 pub mod faas;
+pub mod history;
 pub mod report;
 pub mod runtime;
 pub mod scenario;

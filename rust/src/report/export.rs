@@ -47,7 +47,7 @@ pub fn analysis_to_json(analysis: &SuiteAnalysis) -> Json {
                 ("median_v1", Json::Num(o.median_v1 as f64)),
                 ("median_v2", Json::Num(o.median_v2 as f64)),
                 ("point_pct", Json::Num(o.point_pct as f64)),
-                ("change", Json::Str(format!("{:?}", v.change))),
+                ("change", Json::Str(v.change.as_str().into())),
             ])
         })
         .collect();
@@ -70,6 +70,28 @@ pub fn analysis_to_json(analysis: &SuiteAnalysis) -> Json {
 /// Schema identifier stamped into every scenario report export. Bump on
 /// breaking shape changes so downstream tooling can dispatch.
 pub const SCENARIO_REPORT_SCHEMA: &str = "elastibench.scenario-report.v1";
+
+/// Filesystem-safe short form of a commit id: keeps `[A-Za-z0-9._-]`,
+/// truncates to 12 chars, falls back to `"unknown"`. Used for default
+/// report file names and history-store run ids.
+pub fn short_commit(commit: &str) -> String {
+    let short: String = commit
+        .chars()
+        .filter(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+        .take(12)
+        .collect();
+    if short.is_empty() {
+        "unknown".to_string()
+    } else {
+        short
+    }
+}
+
+/// Default report file name for a scenario run: `NAME-COMMIT.json`, so
+/// reports from different commits never overwrite each other.
+pub fn report_file_name(scenario: &str, commit: &str) -> String {
+    format!("{scenario}-{}.json", short_commit(commit))
+}
 
 /// JSON export of a full scenario run: recipe identity, provenance
 /// (commit, crate version, seeds, engine), the resolved platform
@@ -269,6 +291,15 @@ mod tests {
             .unwrap()
             .is_empty());
         assert_eq!(parsed.get("adaptive"), Some(&crate::util::json::Json::Null));
+    }
+
+    #[test]
+    fn short_commit_and_file_names() {
+        assert_eq!(short_commit("8c99d17"), "8c99d17");
+        assert_eq!(short_commit("deadbeefcafe0123"), "deadbeefcafe");
+        assert_eq!(short_commit("a/b:c"), "abc");
+        assert_eq!(short_commit(""), "unknown");
+        assert_eq!(report_file_name("quick-smoke", "8c99d17"), "quick-smoke-8c99d17.json");
     }
 
     #[test]

@@ -10,10 +10,11 @@ mod tables;
 
 pub use ascii::{render_cdf, render_curve};
 pub use export::{
-    analysis_to_csv, analysis_to_json, scenario_report_to_json, write_text,
-    SCENARIO_REPORT_SCHEMA,
+    analysis_to_csv, analysis_to_json, report_file_name, scenario_report_to_json,
+    short_commit, write_text, SCENARIO_REPORT_SCHEMA,
 };
 pub use tables::{
     agreement_table, comparison_row, experiment_summary_table, fmt_duration,
-    paper_vs_measured_table, PaperRow, SummaryRow,
+    gate_table, history_runs_table, paper_vs_measured_table, trend_table, GateRow,
+    HistoryRunRow, PaperRow, SummaryRow, TrendCell,
 };

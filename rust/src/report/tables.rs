@@ -87,6 +87,125 @@ pub fn paper_vs_measured_table(rows: &[PaperRow]) -> String {
     out
 }
 
+/// One row of the recorded-run listing (`history list SCENARIO`).
+#[derive(Debug, Clone)]
+pub struct HistoryRunRow {
+    /// Run id (`SEQ-COMMIT`).
+    pub run_id: String,
+    /// Full commit id.
+    pub commit: String,
+    /// Caller-provided timestamp (opaque; may be empty).
+    pub timestamp: String,
+    /// Benchmarks analyzed.
+    pub analyzed: usize,
+    /// Regression verdicts.
+    pub regressions: usize,
+    /// Improvement verdicts.
+    pub improvements: usize,
+    /// Wall time [s].
+    pub wall_s: f64,
+    /// Cost [USD].
+    pub cost_usd: f64,
+}
+
+/// Render the recorded-run listing of one scenario, oldest first.
+pub fn history_runs_table(rows: &[HistoryRunRow]) -> String {
+    let mut out = String::from(
+        "| run | commit | timestamp | analyzed | regr | impr | duration | cost |\n\
+         |---|---|---|---:|---:|---:|---:|---:|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | ${:.2} |\n",
+            r.run_id,
+            r.commit,
+            if r.timestamp.is_empty() { "—" } else { &r.timestamp },
+            r.analyzed,
+            r.regressions,
+            r.improvements,
+            fmt_duration(r.wall_s),
+            r.cost_usd
+        ));
+    }
+    out
+}
+
+/// One cell of the cross-run trend table: bootstrap median difference
+/// [%] plus a verdict marker (`R` regression, `I` improvement, empty for
+/// no change). `None` = benchmark absent from that run.
+pub type TrendCell = Option<(f64, char)>;
+
+/// Render the per-benchmark trend table of a scenario timeline: one
+/// column per run (labelled by `run_labels`, oldest first), one row per
+/// benchmark; absent cells render as `—`.
+pub fn trend_table(run_labels: &[String], rows: &[(String, Vec<TrendCell>)]) -> String {
+    let mut out = String::from("| benchmark |");
+    for label in run_labels {
+        out.push_str(&format!(" {label} |"));
+    }
+    out.push_str("\n|---|");
+    for _ in run_labels {
+        out.push_str("---:|");
+    }
+    out.push('\n');
+    for (name, cells) in rows {
+        out.push_str(&format!("| {name} |"));
+        for cell in cells {
+            match cell {
+                None => out.push_str(" — |"),
+                Some((pct, marker)) => {
+                    out.push_str(&format!(" {pct:+.2}%{} |", marker_str(*marker)))
+                }
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn marker_str(marker: char) -> String {
+    if marker == ' ' {
+        String::new()
+    } else {
+        format!(" {marker}")
+    }
+}
+
+/// One row of the gate-findings table.
+#[derive(Debug, Clone)]
+pub struct GateRow {
+    /// Benchmark that tripped.
+    pub benchmark: String,
+    /// Trip reason label.
+    pub reason: String,
+    /// Newest bootstrap median difference [%].
+    pub newest_pct: f64,
+    /// Newest CI bounds [%].
+    pub ci_lo_pct: f64,
+    /// Newest CI bounds [%].
+    pub ci_hi_pct: f64,
+    /// Baseline-window median [%].
+    pub baseline_pct: f64,
+    /// Shift vs. the baseline median [%].
+    pub delta_pct: f64,
+}
+
+/// Render the gate-findings table (worst offender first).
+pub fn gate_table(rows: &[GateRow]) -> String {
+    let mut out = String::from(
+        "| benchmark | reason | newest | 99% CI | baseline | delta |\n\
+         |---|---|---:|---:|---:|---:|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {:+.2}% | [{:+.2}%, {:+.2}%] | {:+.2}% | {:+.2}% |\n",
+            r.benchmark, r.reason, r.newest_pct, r.ci_lo_pct, r.ci_hi_pct,
+            r.baseline_pct, r.delta_pct
+        ));
+    }
+    out
+}
+
 /// Human-readable duration.
 pub fn fmt_duration(seconds: f64) -> String {
     if seconds >= 3600.0 {
@@ -146,6 +265,51 @@ mod tests {
         assert!(row.contains("4.20%"));
         let table = agreement_table(&[row]);
         assert!(table.contains("| pair |"));
+    }
+
+    #[test]
+    fn history_runs_table_renders() {
+        let t = history_runs_table(&[HistoryRunRow {
+            run_id: "0001-8c99d17".into(),
+            commit: "8c99d17".into(),
+            timestamp: String::new(),
+            analyzed: 12,
+            regressions: 3,
+            improvements: 1,
+            wall_s: 90.0,
+            cost_usd: 0.05,
+        }]);
+        assert!(t.contains("| 0001-8c99d17 | 8c99d17 | — | 12 | 3 | 1 | 1.5 min | $0.05 |"), "{t}");
+    }
+
+    #[test]
+    fn trend_table_renders_sparse_cells() {
+        let labels = vec!["0001-a".to_string(), "0002-b".to_string()];
+        let rows = vec![
+            ("BenchX".to_string(), vec![Some((0.5, ' ')), Some((9.31, 'R'))]),
+            ("BenchY".to_string(), vec![None, Some((-2.0, 'I'))]),
+        ];
+        let t = trend_table(&labels, &rows);
+        assert!(t.contains("| benchmark | 0001-a | 0002-b |"), "{t}");
+        assert!(t.contains("| BenchX | +0.50% | +9.31% R |"), "{t}");
+        assert!(t.contains("| BenchY | — | -2.00% I |"), "{t}");
+    }
+
+    #[test]
+    fn gate_table_renders() {
+        let t = gate_table(&[GateRow {
+            benchmark: "BenchX".into(),
+            reason: "threshold".into(),
+            newest_pct: 9.31,
+            ci_lo_pct: 7.1,
+            ci_hi_pct: 11.4,
+            baseline_pct: 0.12,
+            delta_pct: 9.19,
+        }]);
+        assert!(
+            t.contains("| BenchX | threshold | +9.31% | [+7.10%, +11.40%] | +0.12% | +9.19% |"),
+            "{t}"
+        );
     }
 
     #[test]

@@ -18,5 +18,7 @@ pub mod recipe;
 pub mod runner;
 
 pub use catalog::{catalog, catalog_entry, CATALOG_SOURCES};
-pub use recipe::{DuetMode, RepeatPolicy, Scenario, SCENARIO_KEYS};
+pub use recipe::{
+    DuetMode, HistorySpec, RepeatPolicy, Scenario, HISTORY_KEYS, SCENARIO_KEYS,
+};
 pub use runner::{commit_id, run_scenario, ScenarioReport};

@@ -23,6 +23,11 @@
 //! [function]                  # optional memory_mb / timeout_s
 //! [sut]                       # optional SutConfig overrides
 //! [platform]                  # optional overrides on TOP of the profile
+//! [history]                   # optional: auto-record runs to a store
+//! store = "results/history"   # store root (default shown)
+//! record = true               # opt-out switch (default true)
+//! window = 3                  # gate baseline window (K prior runs)
+//! threshold_pct = 3.0         # gate noise margin [%]
 //! ```
 
 use crate::config::{
@@ -36,6 +41,10 @@ use anyhow::{anyhow, Result};
 /// Keys recognized in the `[scenario]` section.
 pub const SCENARIO_KEYS: &[&str] = &["name", "description", "profile", "mode", "repeats", "tags"];
 
+/// Keys recognized in the `[history]` section (continuous-benchmarking
+/// auto-record + gate defaults; see [`crate::history`]).
+pub const HISTORY_KEYS: &[&str] = &["store", "record", "window", "threshold_pct"];
+
 /// Sections a recipe may contain.
 const SECTIONS: &[(&str, &[&str])] = &[
     ("scenario", SCENARIO_KEYS),
@@ -43,6 +52,7 @@ const SECTIONS: &[(&str, &[&str])] = &[
     ("function", FUNCTION_KEYS),
     ("sut", SUT_KEYS),
     ("platform", PLATFORM_KEYS),
+    ("history", HISTORY_KEYS),
 ];
 
 /// Expected value shape of a recipe key (strict type validation: a
@@ -86,7 +96,9 @@ impl Kind {
 fn expected_kind(section: &str, key: &str) -> Kind {
     match (section, key) {
         ("scenario", "tags") => Kind::Tags,
-        ("scenario", _) | ("experiment", "label") => Kind::Str,
+        ("scenario", _) | ("experiment", "label") | ("history", "store") => Kind::Str,
+        ("history", "record") => Kind::Bool,
+        ("history", "window") => Kind::Int,
         ("experiment", "randomize_order" | "randomize_version_order") => Kind::Bool,
         (
             "experiment",
@@ -142,6 +154,22 @@ impl RepeatPolicy {
     }
 }
 
+/// Continuous-benchmarking opt-in of a recipe: where runs are
+/// auto-recorded and the gate defaults for this scenario
+/// (see [`crate::history`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistorySpec {
+    /// Store root directory runs are recorded into.
+    pub store: String,
+    /// Whether `scenario run`/`run-all` auto-record (default true when
+    /// the `[history]` section is present).
+    pub record: bool,
+    /// Gate baseline window (K prior runs).
+    pub window: usize,
+    /// Gate noise margin [%].
+    pub threshold_pct: f64,
+}
+
 /// A fully resolved, validated scenario: everything needed to execute
 /// and re-execute one benchmark-suite run months apart.
 #[derive(Debug, Clone)]
@@ -166,6 +194,9 @@ pub struct Scenario {
     /// Resolved platform calibration: profile config + `[platform]`
     /// overrides.
     pub platform: PlatformConfig,
+    /// Continuous-benchmarking opt-in (`[history]` section); `None`
+    /// when the recipe does not auto-record.
+    pub history: Option<HistorySpec>,
 }
 
 impl Scenario {
@@ -296,6 +327,27 @@ impl Scenario {
             .map(|p| p.config().overridden(doc))
             .unwrap_or_else(PlatformConfig::default);
 
+        let history = if doc.keys("history").is_empty() {
+            None
+        } else {
+            let spec = HistorySpec {
+                store: doc.str_or("history", "store", crate::history::DEFAULT_STORE_DIR),
+                record: doc.bool_or("history", "record", true),
+                window: doc.usize_or("history", "window", 3),
+                threshold_pct: doc.f64_or("history", "threshold_pct", 3.0),
+            };
+            if spec.store.is_empty() {
+                errs.push("history.store must not be empty".into());
+            }
+            if spec.window == 0 {
+                errs.push("history.window must be >= 1".into());
+            }
+            if spec.threshold_pct < 0.0 {
+                errs.push("history.threshold_pct must be >= 0".into());
+            }
+            Some(spec)
+        };
+
         if !errs.is_empty() {
             let label = if name.is_empty() { "<recipe>" } else { name.as_str() };
             return Err(anyhow!("invalid scenario {label}: {}", errs.join("; ")));
@@ -310,6 +362,7 @@ impl Scenario {
             exp,
             sut,
             platform,
+            history,
         })
     }
 
@@ -350,6 +403,7 @@ mod tests {
     fn minimal_recipe_gets_defaults() {
         let sc = Scenario::from_toml(MINIMAL).unwrap();
         assert_eq!(sc.name, "t");
+        assert_eq!(sc.history, None, "history is opt-in");
         assert_eq!(sc.exp.label, "t");
         assert_eq!(sc.mode, DuetMode::Ab);
         assert_eq!(sc.repeats, RepeatPolicy::Fixed);
@@ -491,6 +545,57 @@ mod tests {
         // Untouched fields keep the PROFILE's value, not the default.
         assert_eq!(sc.platform.billing_granularity_s, 0.1);
         assert_eq!(sc.platform.concurrency_limit, 100);
+    }
+
+    #[test]
+    fn history_section_parses_with_defaults_and_overrides() {
+        let sc = Scenario::from_toml(
+            "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\n[history]\nrecord = true",
+        )
+        .unwrap();
+        let h = sc.history.expect("history spec");
+        assert_eq!(h.store, crate::history::DEFAULT_STORE_DIR);
+        assert!(h.record);
+        assert_eq!(h.window, 3);
+        assert_eq!(h.threshold_pct, 3.0);
+
+        let sc = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "t"
+            profile = "aws-lambda"
+            [history]
+            store = "/tmp/hist"
+            record = false
+            window = 5
+            threshold_pct = 1.5
+            "#,
+        )
+        .unwrap();
+        let h = sc.history.unwrap();
+        assert_eq!(h.store, "/tmp/hist");
+        assert!(!h.record);
+        assert_eq!(h.window, 5);
+        assert_eq!(h.threshold_pct, 1.5);
+    }
+
+    #[test]
+    fn history_section_is_strict() {
+        let err = Scenario::from_toml(
+            "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\n[history]\nstroe = \"x\"",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown key history.stroe"), "{err}");
+        let err = Scenario::from_toml(
+            "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\n[history]\nwindow = 0",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("history.window"), "{err}");
+        let err = Scenario::from_toml(
+            "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\n[history]\nrecord = \"yes\"",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("history.record must be a boolean"), "{err}");
     }
 
     #[test]

@@ -52,6 +52,26 @@ impl ChangeKind {
     pub fn is_change(self) -> bool {
         self != ChangeKind::NoChange
     }
+
+    /// Stable spelling used in JSON exports (matches `{:?}`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ChangeKind::NoChange => "NoChange",
+            ChangeKind::Regression => "Regression",
+            ChangeKind::Improvement => "Improvement",
+        }
+    }
+
+    /// Inverse of [`Self::as_str`] — the history importer's half of the
+    /// round trip through `elastibench.scenario-report.v1`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "NoChange" => Some(ChangeKind::NoChange),
+            "Regression" => Some(ChangeKind::Regression),
+            "Improvement" => Some(ChangeKind::Improvement),
+            _ => None,
+        }
+    }
 }
 
 /// Analysis verdict for one microbenchmark.
@@ -130,6 +150,15 @@ mod tests {
         assert_eq!(ChangeKind::from_output(&out(-3.0, -2.0, -1.0)), ChangeKind::Improvement);
         assert!(ChangeKind::Regression.is_change());
         assert!(!ChangeKind::NoChange.is_change());
+    }
+
+    #[test]
+    fn change_kind_string_roundtrip() {
+        for kind in [ChangeKind::NoChange, ChangeKind::Regression, ChangeKind::Improvement] {
+            assert_eq!(kind.as_str(), format!("{kind:?}"));
+            assert_eq!(ChangeKind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(ChangeKind::parse("regression"), None);
     }
 
     #[test]

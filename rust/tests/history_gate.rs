@@ -1,0 +1,166 @@
+//! End-to-end continuous-benchmarking gate: record real scenario runs
+//! into a store, inject a per-benchmark regression in the newest run,
+//! and assert the gate trips with a nonzero CLI exit code — and that a
+//! single noisy run inside the baseline window does *not* trip it.
+//!
+//! Everything is deterministic: commits are strings set on the report,
+//! timestamps are caller-provided, and the scenario runs from pinned
+//! seeds — the same flow gives byte-identical gate output every time.
+
+use elastibench::cli::{self, Args};
+use elastibench::history::{evaluate, GatePolicy, GateReason, HistoryStore, Timeline};
+use elastibench::runtime::AnalysisOutput;
+use elastibench::scenario::{catalog_entry, run_scenario, ScenarioReport};
+use elastibench::stats::{Analyzer, ChangeKind};
+
+/// A shrunk quick-smoke run (seconds of host time, pinned seeds).
+fn tiny_report() -> ScenarioReport {
+    let mut sc = catalog_entry("quick-smoke").unwrap();
+    sc.sut.benchmark_count = 6;
+    sc.sut.true_changes = 1;
+    sc.sut.faas_incompatible = 1;
+    sc.sut.slow_setup = 0;
+    sc.exp.calls_per_benchmark = 6;
+    sc.exp.parallelism = 8;
+    run_scenario(&sc, &Analyzer::native()).unwrap()
+}
+
+fn temp_store(tag: &str) -> HistoryStore {
+    let dir = std::env::temp_dir().join(format!("elastibench_e2e_gate_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    HistoryStore::open(dir)
+}
+
+/// Index of a benchmark the run classified as NoChange — the victim the
+/// tests inject a regression into.
+fn clean_benchmark(report: &ScenarioReport) -> usize {
+    report
+        .analysis
+        .verdicts
+        .iter()
+        .position(|v| v.change == ChangeKind::NoChange)
+        .expect("quick-smoke has a clean benchmark")
+}
+
+/// Overwrite one verdict with a CI-backed +10% regression.
+fn inject_regression(report: &mut ScenarioReport, idx: usize) {
+    let v = &mut report.analysis.verdicts[idx];
+    v.output = AnalysisOutput {
+        ci_lo_pct: 8.0,
+        boot_median_pct: 10.0,
+        ci_hi_pct: 12.0,
+        median_v1: v.output.median_v1,
+        median_v2: v.output.median_v1 * 1.10,
+        point_pct: 10.0,
+    };
+    v.change = ChangeKind::Regression;
+}
+
+fn gate_exit_code(store: &HistoryStore) -> i32 {
+    let args = Args::parse(
+        [
+            "history".to_string(),
+            "gate".to_string(),
+            "quick-smoke".to_string(),
+            "--store".to_string(),
+            store.root().display().to_string(),
+        ],
+    )
+    .unwrap();
+    cli::run(args).unwrap()
+}
+
+#[test]
+fn injected_regression_trips_the_gate_with_exit_code_1() {
+    let store = temp_store("trip");
+    let mut report = tiny_report();
+    for commit in ["c1", "c2", "c3"] {
+        report.commit = commit.to_string();
+        store.record(&report, commit).unwrap();
+    }
+    let idx = clean_benchmark(&report);
+    let victim = report.analysis.verdicts[idx].name.clone();
+    report.commit = "c4".to_string();
+    inject_regression(&mut report, idx);
+    store.record(&report, "c4").unwrap();
+
+    let tl = Timeline::load(&store, "quick-smoke").unwrap();
+    assert_eq!(tl.len(), 4);
+    let out = evaluate(&tl, &GatePolicy::default()).unwrap();
+    assert!(out.skipped.is_none());
+    assert!(!out.passed(), "injected regression must trip the gate");
+    assert_eq!(out.findings.len(), 1, "{:?}", out.findings);
+    let f = &out.findings[0];
+    assert_eq!(f.benchmark, victim);
+    assert_eq!(f.reason, GateReason::ThresholdExceeded);
+    assert!(f.delta_pct > 5.0, "{}", f.delta_pct);
+    assert_eq!(out.newest_commit, "c4");
+    assert_eq!(out.baseline_runs.len(), 3);
+
+    // Same store, same policy -> byte-identical outcome (no wall clock,
+    // no RNG anywhere in the gate path).
+    let again = evaluate(&Timeline::load(&store, "quick-smoke").unwrap(), &GatePolicy::default())
+        .unwrap();
+    assert_eq!(format!("{out:?}"), format!("{again:?}"));
+
+    // The CLI surfaces the failure as a nonzero exit code for CI.
+    assert_eq!(gate_exit_code(&store), 1);
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn single_noisy_baseline_run_does_not_trip_the_gate() {
+    let store = temp_store("noise");
+    let mut report = tiny_report();
+    let idx = clean_benchmark(&report);
+    let original = report.analysis.verdicts[idx].clone();
+
+    report.commit = "c1".to_string();
+    store.record(&report, "c1").unwrap();
+    // c2 is a one-off noisy run: the same benchmark spikes to +10%...
+    report.commit = "c2".to_string();
+    inject_regression(&mut report, idx);
+    store.record(&report, "c2").unwrap();
+    // ...and settles back for c3 and the gated newest run c4.
+    report.analysis.verdicts[idx] = original;
+    for commit in ["c3", "c4"] {
+        report.commit = commit.to_string();
+        store.record(&report, commit).unwrap();
+    }
+
+    let tl = Timeline::load(&store, "quick-smoke").unwrap();
+    let out = evaluate(&tl, &GatePolicy::default()).unwrap();
+    assert!(out.skipped.is_none());
+    assert!(
+        out.passed(),
+        "a single outlier inside the baseline window tripped the gate: {:?}",
+        out.findings
+    );
+    assert_eq!(gate_exit_code(&store), 0);
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn store_grows_append_only_and_survives_reload() {
+    let store = temp_store("append");
+    let mut report = tiny_report();
+    for (i, commit) in ["a1", "a2", "a3"].iter().enumerate() {
+        report.commit = commit.to_string();
+        let meta = store.record(&report, &format!("build-{i}")).unwrap();
+        assert_eq!(meta.run_id, format!("{:04}-{commit}", i + 1));
+        // Re-opening the store sees exactly the runs recorded so far.
+        let reopened = HistoryStore::open(store.root());
+        assert_eq!(reopened.runs("quick-smoke").unwrap().len(), i + 1);
+    }
+    let runs = store.runs("quick-smoke").unwrap();
+    assert_eq!(runs.len(), 3);
+    assert_eq!(runs[1].timestamp, "build-1");
+    assert_eq!(runs[2].commit, "a3");
+    let loaded = store.load("quick-smoke", &runs[2].run_id).unwrap();
+    assert_eq!(loaded.metadata.commit, "a3");
+    assert_eq!(
+        loaded.analysis.verdicts.len(),
+        report.analysis.verdicts.len()
+    );
+    let _ = std::fs::remove_dir_all(store.root());
+}

@@ -261,3 +261,38 @@ fn prop_vm_and_faas_agree_on_large_effects() {
         assert!(rep.agreement_pct() >= 70.0, "{}", rep.agreement_pct());
     });
 }
+
+// ---------- history importer round trip ----------
+
+#[test]
+fn prop_scenario_report_roundtrips_through_history_loader() {
+    // The store's importer is the inverse of `scenario_report_to_json`:
+    // export -> parse -> re-export must be byte-identical, whatever the
+    // scenario shape (incl. adaptive replays, exclusions, failures).
+    use elastibench::history::{parse_scenario_report, stored_run_to_json};
+    use elastibench::report::scenario_report_to_json;
+    use elastibench::scenario::{catalog_entry, run_scenario, RepeatPolicy};
+    use elastibench::util::json::parse as parse_json;
+
+    let analyzer = Analyzer::native();
+    check("report round trip", 4, |g: &mut Gen| {
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        sc.sut.benchmark_count = g.usize(4..9);
+        sc.sut.true_changes = g.usize(0..3);
+        sc.sut.faas_incompatible = g.usize(0..2);
+        sc.sut.slow_setup = 0;
+        sc.sut.seed = g.u64(0..u64::MAX);
+        sc.exp.seed = g.u64(0..u64::MAX);
+        sc.exp.calls_per_benchmark = g.usize(4..7);
+        sc.exp.parallelism = 8;
+        if g.bool(0.5) {
+            // Exercise the `adaptive` report section too.
+            sc.repeats = RepeatPolicy::Adaptive;
+        }
+        let report = run_scenario(&sc, &analyzer).unwrap();
+        let exported = scenario_report_to_json(&report).to_string();
+        let stored = parse_scenario_report(&parse_json(&exported).unwrap()).unwrap();
+        let reexported = stored_run_to_json(&stored).to_string();
+        assert_eq!(exported, reexported, "history loader round trip is lossy");
+    });
+}

@@ -6,7 +6,9 @@
 //! elastibench scenario list
 //! elastibench scenario run <NAME> [--backend native|xla] [--out-dir DIR]
 //! elastibench scenario run --recipe FILE [--backend native|xla] [--out-dir DIR]
-//! elastibench scenario run-all [--backend native|xla] [--out-dir DIR]
+//! elastibench scenario run-all [--jobs N] [--backend native|xla] [--out-dir DIR]
+//! elastibench scenario sweep <NAME>|--recipe FILE [--jobs N]
+//!                            [--backend native|xla] [--out-dir DIR]
 //! elastibench history record FILE... [--report FILE] [--store DIR] [--timestamp T]
 //! elastibench history list [SCENARIO] [--store DIR]
 //! elastibench history show SCENARIO [--store DIR] [--last N]
@@ -22,10 +24,13 @@ use crate::exp::{self, ExperimentResult, Workbench};
 use crate::history::{self, GatePolicy, HistoryStore, Timeline};
 use crate::report::{
     analysis_to_csv, experiment_summary_table, gate_table, history_runs_table,
-    render_cdf, report_file_name, scenario_report_to_json, trend_table, write_text,
-    HistoryRunRow, SummaryRow, TrendCell,
+    render_cdf, report_file_name, scenario_report_to_json, sweep_summary_table,
+    trend_table, write_text, HistoryRunRow, SummaryRow, SweepRow, TrendCell,
 };
-use crate::scenario::{catalog, catalog_entry, run_scenario, Scenario, ScenarioReport};
+use crate::scenario::{
+    catalog, catalog_entry, default_jobs, run_scenario, run_sweep, Scenario,
+    ScenarioReport,
+};
 use crate::stats::{agreement, coverage, Analyzer, ChangeKind};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -108,10 +113,21 @@ USAGE:
       JSON report NAME-COMMIT.json to DIR (default: results/; --out is
       an accepted alias). Recipes with a [history] section auto-record
       into their store.
-  elastibench scenario run-all [--backend native|xla] [--out-dir DIR]
-      Sweep the whole catalog; one JSON report per scenario. Exits 1
+  elastibench scenario run-all [--jobs N] [--backend native|xla]
+                               [--out-dir DIR]
+      Sweep the whole catalog (matrix recipes contribute every grid
+      point); one JSON report per scenario. --jobs N runs scenarios on a
+      worker pool (default 1); reports are identical for any N. Exits 1
       when any scenario reports a regression verdict (CI gate without
       JSON parsing).
+  elastibench scenario sweep NAME [--jobs N] [--backend native|xla]
+                             [--out-dir DIR]
+  elastibench scenario sweep --recipe FILE [--jobs N] [...]
+      Expand one recipe's [matrix] grid and run every variant on a
+      worker pool (--jobs defaults to all cores). Writes one JSON report
+      per variant, prints the cross-variant summary table, auto-records
+      into the recipe's history store, and exits 1 when any variant
+      reports a regression verdict (same contract as run-all).
   elastibench history record FILE... [--report FILE] [--store DIR]
                              [--timestamp T]
       Append scenario-report JSONs to the run store (default store:
@@ -281,9 +297,22 @@ fn cmd_scenario(args: &Args) -> Result<i32> {
         Some("list") => cmd_scenario_list(args),
         Some("run") => cmd_scenario_run(args),
         Some("run-all") => cmd_scenario_run_all(args),
+        Some("sweep") => cmd_scenario_sweep(args),
         other => bail!(
-            "scenario needs a subcommand: list | run NAME | run-all (got {other:?})"
+            "scenario needs a subcommand: list | run NAME | run-all | sweep (got {other:?})"
         ),
+    }
+}
+
+/// Worker-pool size: `--jobs N` (positive integer) or `default`.
+fn jobs(args: &Args, default: usize) -> Result<usize> {
+    match args.get("jobs") {
+        None => Ok(default),
+        Some(text) => text
+            .parse::<usize>()
+            .ok()
+            .filter(|n| *n >= 1)
+            .with_context(|| format!("--jobs must be a positive integer, got {text:?}")),
     }
 }
 
@@ -295,18 +324,19 @@ fn cmd_scenario_list(args: &Args) -> Result<i32> {
         cat.len()
     );
     println!(
-        "{:<20} {:<20} {:>4} {:>8} {:>6} {:>5}  {}",
-        "name", "profile", "mode", "repeats", "bench", "par", "description"
+        "{:<20} {:<20} {:>4} {:>8} {:>6} {:>5} {:>4}  {}",
+        "name", "profile", "mode", "repeats", "bench", "par", "grid", "description"
     );
     for sc in &cat {
         println!(
-            "{:<20} {:<20} {:>4} {:>8} {:>6} {:>5}  {}",
+            "{:<20} {:<20} {:>4} {:>8} {:>6} {:>5} {:>4}  {}",
             sc.name,
             sc.profile_name,
             sc.mode.as_str(),
             sc.repeats.as_str(),
             sc.sut.benchmark_count,
             sc.exp.parallelism,
+            sc.variant_count(),
             sc.description
         );
     }
@@ -319,19 +349,20 @@ fn out_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get("out-dir").or_else(|| args.get("out")).unwrap_or("results"))
 }
 
-/// Run a scenario, export its JSON report (`NAME-COMMIT.json` under
-/// `--out-dir`, default `results/`), and auto-record it into the run
-/// store when the recipe's `[history]` section asks for it. Returns the
-/// report for summary printing.
-fn execute_scenario(args: &Args, sc: &Scenario) -> Result<ScenarioReport> {
-    let report = run_scenario(sc, &analyzer(args)?)?;
+/// Export a finished run's JSON report (`NAME-COMMIT.json` under
+/// `--out-dir`, default `results/`) and auto-record it into the run
+/// store when the recipe's `[history]` section asks for it. Kept apart
+/// from execution so sweeps can run grid points on a worker pool and
+/// still write files and history records in deterministic catalog order.
+fn export_and_record(args: &Args, report: &ScenarioReport) -> Result<()> {
+    let sc = &report.scenario;
     let path = out_dir(args).join(report_file_name(&sc.name, &report.commit));
-    write_text(&path, &scenario_report_to_json(&report).to_string())?;
+    write_text(&path, &scenario_report_to_json(report).to_string())?;
     println!("wrote {}", path.display());
     if let Some(h) = &sc.history {
         if h.record {
             let store = HistoryStore::open(&h.store);
-            let meta = store.record(&report, args.get_or("timestamp", ""))?;
+            let meta = store.record(report, args.get_or("timestamp", ""))?;
             println!(
                 "recorded {}/{}/{} (run {} of this scenario)",
                 h.store,
@@ -341,6 +372,13 @@ fn execute_scenario(args: &Args, sc: &Scenario) -> Result<ScenarioReport> {
             );
         }
     }
+    Ok(())
+}
+
+/// Run one scenario inline and export/record it.
+fn execute_scenario(args: &Args, sc: &Scenario) -> Result<ScenarioReport> {
+    let report = run_scenario(sc, &analyzer(args)?)?;
+    export_and_record(args, &report)?;
     Ok(report)
 }
 
@@ -365,9 +403,10 @@ fn scenario_summary_row(report: &ScenarioReport) -> SummaryRow {
     }
 }
 
-fn cmd_scenario_run(args: &Args) -> Result<i32> {
-    args.reject_positionals_beyond(2)?;
-    let sc = match (args.get("recipe"), args.positional(1)) {
+/// Resolve the scenario a `scenario run`/`sweep` invocation names:
+/// a catalog NAME positional or a `--recipe FILE`, never both.
+fn selected_scenario(args: &Args, subcommand: &str) -> Result<Scenario> {
+    match (args.get("recipe"), args.positional(1)) {
         (Some(_), Some(name)) => bail!(
             "pass either a catalog NAME or --recipe FILE, not both \
              (got {name:?} and --recipe)"
@@ -375,11 +414,24 @@ fn cmd_scenario_run(args: &Args) -> Result<i32> {
         (Some(path), None) => {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("read recipe {path}"))?;
-            Scenario::from_toml(&text)?
+            Scenario::from_toml(&text)
         }
-        (None, Some(name)) => catalog_entry(name)?,
-        (None, None) => bail!("scenario run needs a catalog NAME or --recipe FILE"),
-    };
+        (None, Some(name)) => catalog_entry(name),
+        (None, None) => bail!("scenario {subcommand} needs a catalog NAME or --recipe FILE"),
+    }
+}
+
+fn cmd_scenario_run(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(2)?;
+    let sc = selected_scenario(args, "run")?;
+    if let Some(m) = &sc.matrix {
+        println!(
+            "note: {} defines a {}-variant [matrix]; `scenario sweep` runs the full grid \
+             — this runs the base configuration only",
+            sc.name,
+            m.variant_count()
+        );
+    }
     let report = execute_scenario(args, &sc)?;
     print!("{}", experiment_summary_table(&[scenario_summary_row(&report)]));
     if let Some(plan) = &report.adaptive {
@@ -393,36 +445,86 @@ fn cmd_scenario_run(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-fn cmd_scenario_run_all(args: &Args) -> Result<i32> {
-    args.reject_positionals_beyond(1)?;
-    let cat = catalog();
-    let mut rows = Vec::with_capacity(cat.len());
-    let mut regressed: Vec<&str> = Vec::new();
-    for sc in &cat {
-        println!(
-            "running {} ({} benchmarks on {})...",
-            sc.name, sc.sut.benchmark_count, sc.profile_name
-        );
-        let report = execute_scenario(args, sc)?;
-        if has_regression(&report) {
-            regressed.push(&sc.name);
+/// Run expanded scenarios on a worker pool, then export/record them in
+/// deterministic input order. Returns the reports (input order) and the
+/// names of variants carrying regression verdicts.
+fn pooled_run(
+    args: &Args,
+    scenarios: &[Scenario],
+    jobs: usize,
+) -> Result<(Vec<ScenarioReport>, Vec<String>)> {
+    let reports = run_sweep(scenarios, jobs, || analyzer(args))?;
+    let mut regressed = Vec::new();
+    for report in &reports {
+        export_and_record(args, report)?;
+        if has_regression(report) {
+            regressed.push(report.scenario.name.clone());
         }
-        rows.push(scenario_summary_row(&report));
     }
-    println!();
-    print!("{}", experiment_summary_table(&rows));
+    Ok((reports, regressed))
+}
+
+/// Shared exit-code contract of `run-all` and `sweep`: a regression
+/// verdict anywhere fails the invocation without the CI pipeline having
+/// to parse report JSON.
+fn regression_exit(regressed: Vec<String>) -> i32 {
     if regressed.is_empty() {
-        Ok(0)
+        0
     } else {
-        // CI contract: a regression verdict anywhere fails the sweep
-        // without the pipeline having to parse report JSON.
         println!(
             "\n{} scenario(s) reported regression verdicts: {}",
             regressed.len(),
             regressed.join(", ")
         );
-        Ok(1)
+        1
     }
+}
+
+fn cmd_scenario_run_all(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(1)?;
+    let jobs = jobs(args, 1)?;
+    let expanded: Vec<Scenario> = catalog().iter().flat_map(Scenario::expand).collect();
+    println!(
+        "running {} scenario(s) on {} worker(s)...",
+        expanded.len(),
+        jobs
+    );
+    let (reports, regressed) = pooled_run(args, &expanded, jobs)?;
+    let rows: Vec<SummaryRow> = reports.iter().map(scenario_summary_row).collect();
+    println!();
+    print!("{}", experiment_summary_table(&rows));
+    Ok(regression_exit(regressed))
+}
+
+fn cmd_scenario_sweep(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(2)?;
+    let sc = selected_scenario(args, "sweep")?;
+    let jobs = jobs(args, default_jobs())?;
+    let variants = sc.expand();
+    println!(
+        "sweeping {}: {} variant(s) on {} worker(s)...",
+        sc.name,
+        variants.len(),
+        jobs
+    );
+    let (reports, regressed) = pooled_run(args, &variants, jobs)?;
+    let rows: Vec<SweepRow> = reports
+        .iter()
+        .map(|r| SweepRow {
+            variant: r.scenario.name.clone(),
+            profile: r.scenario.profile_name.clone(),
+            memory_mb: r.scenario.exp.memory_mb,
+            mode: r.scenario.mode.as_str().to_string(),
+            seed: r.scenario.exp.seed,
+            analyzed: r.analysis.verdicts.len(),
+            changes: r.analysis.change_count(),
+            wall_s: r.run.wall_s,
+            cost_usd: r.run.cost_usd,
+        })
+        .collect();
+    println!();
+    print!("{}", sweep_summary_table(&rows));
+    Ok(regression_exit(regressed))
 }
 
 // ------------------------------------------------------------------
@@ -433,6 +535,18 @@ fn history_store(args: &Args) -> HistoryStore {
     HistoryStore::open(args.get_or("store", history::DEFAULT_STORE_DIR))
 }
 
+/// Catalog lookup that also resolves matrix-variant names: a grid point
+/// `base@mem=1024,...` inherits its base recipe's `[history]` defaults,
+/// so `history gate base@...` works for every point the sweep recorded.
+fn catalog_entry_or_base(scenario: &str) -> Option<Scenario> {
+    catalog_entry(scenario)
+        .ok()
+        .or_else(|| {
+            let base = scenario.split('@').next()?;
+            catalog_entry(base).ok()
+        })
+}
+
 /// Store for a *named* scenario: `--store` wins, else the scenario's
 /// catalog recipe `[history] store` (so the documented auto-record →
 /// gate loop works without repeating the path), else the default.
@@ -440,8 +554,7 @@ fn scenario_store(args: &Args, scenario: &str) -> HistoryStore {
     match args.get("store") {
         Some(dir) => HistoryStore::open(dir),
         None => HistoryStore::open(
-            catalog_entry(scenario)
-                .ok()
+            catalog_entry_or_base(scenario)
                 .and_then(|sc| sc.history)
                 .map(|h| h.store)
                 .unwrap_or_else(|| history::DEFAULT_STORE_DIR.to_string()),
@@ -661,7 +774,7 @@ fn cmd_history_diff(args: &Args) -> Result<i32> {
 /// overlaid with explicit CLI flags.
 fn gate_policy(args: &Args, scenario: &str) -> Result<GatePolicy> {
     let mut policy = GatePolicy::default();
-    if let Some(h) = catalog_entry(scenario).ok().and_then(|sc| sc.history) {
+    if let Some(h) = catalog_entry_or_base(scenario).and_then(|sc| sc.history) {
         policy.window = h.window;
         policy.threshold_pct = h.threshold_pct;
     }
@@ -849,6 +962,7 @@ mod tests {
             vec!["scenario", "list", "extra"],
             vec!["scenario", "run", "quick-smoke", "extra"],
             vec!["scenario", "run-all", "extra"],
+            vec!["scenario", "sweep", "quick-smoke", "extra"],
             vec!["history", "show", "quick-smoke", "extra"],
             vec!["history", "gate", "quick-smoke", "extra"],
         ] {
@@ -861,12 +975,98 @@ mod tests {
 
     #[test]
     fn scenario_run_rejects_conflicting_selectors() {
-        let args = Args::parse(
-            ["scenario", "run", "quick-smoke", "--recipe", "x.toml"].map(String::from),
+        for sub in ["run", "sweep"] {
+            let args = Args::parse(
+                ["scenario", sub, "quick-smoke", "--recipe", "x.toml"].map(String::from),
+            )
+            .unwrap();
+            let err = run(args).unwrap_err();
+            assert!(err.to_string().contains("not both"), "{sub}: {err}");
+        }
+        let args = Args::parse(["scenario", "sweep"].map(String::from)).unwrap();
+        let err = run(args).unwrap_err();
+        assert!(err.to_string().contains("scenario sweep needs"), "{err}");
+    }
+
+    #[test]
+    fn jobs_flag_parses_and_validates() {
+        let args =
+            Args::parse(["scenario", "sweep", "x", "--jobs", "4"].map(String::from)).unwrap();
+        assert_eq!(jobs(&args, 1).unwrap(), 4);
+        let args = Args::parse(["scenario", "sweep", "x"].map(String::from)).unwrap();
+        assert_eq!(jobs(&args, 7).unwrap(), 7, "default applies");
+        for bad in ["0", "-2", "2.5", "many"] {
+            let args = Args::parse(
+                ["scenario", "sweep", "x", "--jobs", bad].map(String::from),
+            )
+            .unwrap();
+            assert!(jobs(&args, 1).is_err(), "--jobs {bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn scenario_sweep_writes_one_report_per_variant() {
+        let base = std::env::temp_dir().join("elastibench_cli_sweep");
+        let _ = std::fs::remove_dir_all(&base);
+        // A small 2x2 grid (mode x seed) over a 6-benchmark SUT: the
+        // whole sweep runs in test time.
+        let recipe = base.join("grid.toml");
+        write_text(
+            &recipe,
+            r#"
+            [scenario]
+            name = "cli-grid"
+            profile = "aws-lambda"
+            [experiment]
+            repeats_per_call = 2
+            calls_per_benchmark = 6
+            parallelism = 8
+            [sut]
+            benchmark_count = 6
+            true_changes = 2
+            faas_incompatible = 1
+            slow_setup = 0
+            [matrix]
+            mode = ["ab", "aa"]
+            seed = [11, 22]
+            "#,
         )
         .unwrap();
-        let err = run(args).unwrap_err();
-        assert!(err.to_string().contains("not both"), "{err}");
+        let out = base.join("reports");
+        let args = Args::parse(
+            [
+                "scenario".to_string(),
+                "sweep".to_string(),
+                "--recipe".to_string(),
+                recipe.display().to_string(),
+                "--jobs".to_string(),
+                "2".to_string(),
+                "--out-dir".to_string(),
+                out.display().to_string(),
+            ],
+        )
+        .unwrap();
+        // Exit code is the regression contract (0 clean / 1 regressed);
+        // either is a successful sweep here.
+        let code = run(args).unwrap();
+        assert!(code == 0 || code == 1, "unexpected exit {code}");
+        let commit = crate::scenario::commit_id();
+        for variant in [
+            "cli-grid@mode=ab,seed=11",
+            "cli-grid@mode=ab,seed=22",
+            "cli-grid@mode=aa,seed=11",
+            "cli-grid@mode=aa,seed=22",
+        ] {
+            let file = out.join(report_file_name(variant, &commit));
+            let text = std::fs::read_to_string(&file)
+                .unwrap_or_else(|e| panic!("missing {}: {e}", file.display()));
+            let parsed = crate::util::json::parse(&text).unwrap();
+            assert_eq!(
+                parsed.get("scenario").unwrap().get("name").unwrap().as_str(),
+                Some(variant)
+            );
+        }
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

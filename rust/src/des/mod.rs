@@ -86,19 +86,27 @@ impl<E> Sim<E> {
     }
 
     /// Schedule `event` after `delay` seconds of virtual time.
+    ///
+    /// Panics on a non-finite or negative delay, naming the offending
+    /// value — a NaN must never reach the event heap, where it would only
+    /// surface later as a context-free ordering panic.
     pub fn schedule(&mut self, delay: Time, event: E) {
+        assert!(delay.is_finite(), "non-finite event delay {delay} (at t={})", self.now);
         assert!(delay >= 0.0, "negative delay {delay}");
         self.schedule_at(self.now + delay, event);
     }
 
     /// Schedule `event` at absolute virtual time `at` (>= now).
+    ///
+    /// Panics on a non-finite `at` (finiteness is checked first so a NaN
+    /// is reported as what it is, not as "scheduling into the past").
     pub fn schedule_at(&mut self, at: Time, event: E) {
+        assert!(at.is_finite(), "non-finite event time {at} (at t={})", self.now);
         assert!(
             at >= self.now,
             "cannot schedule into the past: {at} < {}",
             self.now
         );
-        assert!(at.is_finite(), "non-finite event time");
         self.heap.push(Scheduled {
             at,
             seq: self.seq,
@@ -226,6 +234,27 @@ mod tests {
     fn rejects_negative_delay() {
         let mut sim: Sim<()> = Sim::new();
         sim.schedule(-1.0, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event delay NaN")]
+    fn rejects_nan_delay_at_schedule_time() {
+        let mut sim: Sim<()> = Sim::new();
+        sim.schedule(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time NaN")]
+    fn rejects_nan_absolute_time_at_schedule_time() {
+        let mut sim: Sim<()> = Sim::new();
+        sim.schedule_at(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event delay inf")]
+    fn rejects_infinite_delay_at_schedule_time() {
+        let mut sim: Sim<()> = Sim::new();
+        sim.schedule(f64::INFINITY, ());
     }
 
     #[test]

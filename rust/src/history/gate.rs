@@ -19,6 +19,7 @@
 
 use super::timeline::Timeline;
 use crate::stats::ChangeKind;
+use crate::util::stats::total_cmp_f64;
 use anyhow::Result;
 
 /// Regression-gate policy knobs.
@@ -231,13 +232,27 @@ pub fn evaluate(tl: &Timeline, policy: &GatePolicy) -> Result<GateOutcome> {
             outcome.new_benchmarks.push(name);
             continue;
         }
+        // A non-finite point (a NaN that leaked into a stored report)
+        // must not poison the baseline median, the flip vote or the
+        // change-point scan: drop such baseline points entirely. A
+        // non-finite *newest* value — or an all-non-finite baseline —
+        // leaves nothing comparable, so the benchmark is skipped (not
+        // checked, not failed) rather than gated on garbage.
+        let finite_baseline: Vec<&crate::history::SeriesPoint> = baseline
+            .iter()
+            .copied()
+            .filter(|p| p.boot_median_pct.is_finite())
+            .collect();
+        if finite_baseline.is_empty() || !newest.boot_median_pct.is_finite() {
+            continue;
+        }
         outcome.checked += 1;
 
-        let mut base_vals: Vec<f64> = baseline.iter().map(|p| p.boot_median_pct).collect();
+        let mut base_vals: Vec<f64> =
+            finite_baseline.iter().map(|p| p.boot_median_pct).collect();
+        let mut series_vals: Vec<f64> = base_vals.clone();
         let baseline_median = median(&mut base_vals);
         let delta = newest.boot_median_pct - baseline_median;
-        let mut series_vals: Vec<f64> =
-            baseline.iter().map(|p| p.boot_median_pct).collect();
         series_vals.push(newest.boot_median_pct);
 
         let ci_backed_regression =
@@ -247,14 +262,16 @@ pub fn evaluate(tl: &Timeline, policy: &GatePolicy) -> Result<GateOutcome> {
         }
         let threshold_trip = delta >= policy.threshold_pct
             && shift_at_end(&series_vals, policy.threshold_pct);
-        let non_regressing_baseline = baseline
+        // The flip vote runs over the same finite points as the median:
+        // a dropped NaN point must not keep voting through its verdict.
+        let non_regressing_baseline = finite_baseline
             .iter()
             .filter(|p| p.change != ChangeKind::Regression)
             .count();
         // Flips keep half the threshold as a noise margin: the 99%
         // bootstrap CI has a ~1% per-benchmark false-positive rate, so
         // an unmargined flip gate would flake on any sizeable suite.
-        let flip_trip = non_regressing_baseline * 2 > baseline.len()
+        let flip_trip = non_regressing_baseline * 2 > finite_baseline.len()
             && shift_at_end(&series_vals, policy.threshold_pct / 2.0);
         let reason = if threshold_trip {
             Some(GateReason::ThresholdExceeded)
@@ -275,11 +292,10 @@ pub fn evaluate(tl: &Timeline, policy: &GatePolicy) -> Result<GateOutcome> {
             });
         }
     }
-    // Worst offender first: deterministic order for tables and CI logs.
+    // Worst offender first: deterministic order for tables and CI logs
+    // (total_cmp so even a NaN delta cannot scramble the sort).
     outcome.findings.sort_by(|a, b| {
-        b.delta_pct
-            .partial_cmp(&a.delta_pct)
-            .unwrap_or(std::cmp::Ordering::Equal)
+        total_cmp_f64(b.delta_pct, a.delta_pct)
             .then_with(|| a.benchmark.cmp(&b.benchmark))
     });
     Ok(outcome)
@@ -289,7 +305,7 @@ pub fn evaluate(tl: &Timeline, policy: &GatePolicy) -> Result<GateOutcome> {
 /// for even lengths).
 fn median(vals: &mut [f64]) -> f64 {
     assert!(!vals.is_empty(), "median of empty slice");
-    vals.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    vals.sort_by(|a, b| total_cmp_f64(*a, *b));
     let n = vals.len();
     if n % 2 == 1 {
         vals[n / 2]
@@ -433,6 +449,52 @@ mod tests {
         ]);
         let out = evaluate(&tl, &GatePolicy::default()).unwrap();
         assert!(out.passed(), "spurious flip tripped: {:?}", out.findings);
+    }
+
+    #[test]
+    fn nan_baseline_delta_is_filtered_not_poisoning() {
+        // One stored run carries a NaN bootstrap median (e.g. a corrupted
+        // report). It must be dropped from the baseline median instead of
+        // randomizing the sort: the remaining finite baseline still
+        // catches the genuine +9% regression with a finite delta.
+        let tl = timeline_of(vec![
+            synthetic_run("c1", &[("A", 0.1)]),
+            synthetic_run("c2", &[("A", f64::NAN)]),
+            synthetic_run("c3", &[("A", 0.3)]),
+            synthetic_run("c4", &[("A", 9.0)]),
+        ]);
+        let out = evaluate(&tl, &GatePolicy::default()).unwrap();
+        assert_eq!(out.checked, 1);
+        assert_eq!(out.findings.len(), 1, "{:?}", out.findings);
+        let f = &out.findings[0];
+        assert!(f.baseline_median_pct.is_finite(), "{f:?}");
+        assert!((f.baseline_median_pct - 0.2).abs() < 1e-9, "{f:?}");
+        assert!(f.delta_pct.is_finite() && f.delta_pct > 8.0, "{f:?}");
+
+        // An all-NaN baseline leaves nothing to compare against: the
+        // benchmark is skipped (not checked, not failed).
+        let tl = timeline_of(vec![
+            synthetic_run("c1", &[("A", f64::NAN)]),
+            synthetic_run("c2", &[("A", 9.0)]),
+        ]);
+        let out = evaluate(&tl, &GatePolicy::default()).unwrap();
+        assert_eq!(out.checked, 0);
+        assert!(out.passed(), "{:?}", out.findings);
+
+        // A non-finite NEWEST value is equally incomparable — even with
+        // a (corrupted) regression verdict attached it must be skipped,
+        // not silently counted as checked-and-passed.
+        let mut bad = synthetic_run("c3", &[("A", f64::NAN)]);
+        bad.analysis.verdicts[0].change = ChangeKind::Regression;
+        bad.analysis.verdicts[0].output.ci_lo_pct = 1.0;
+        let tl = timeline_of(vec![
+            synthetic_run("c1", &[("A", 0.1)]),
+            synthetic_run("c2", &[("A", 0.2)]),
+            bad,
+        ]);
+        let out = evaluate(&tl, &GatePolicy::default()).unwrap();
+        assert_eq!(out.checked, 0, "NaN newest must not count as checked");
+        assert!(out.passed(), "{:?}", out.findings);
     }
 
     #[test]

@@ -206,6 +206,53 @@ pub fn gate_table(rows: &[GateRow]) -> String {
     out
 }
 
+/// One grid point of a scenario sweep (`scenario sweep` summary).
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    /// Variant name (`base@mem=...,profile=...`).
+    pub variant: String,
+    /// Platform profile the variant ran on.
+    pub profile: String,
+    /// Function memory size [MB].
+    pub memory_mb: u64,
+    /// Duet mode (`ab` / `aa`).
+    pub mode: String,
+    /// Experiment seed (pinned or derived).
+    pub seed: u64,
+    /// Benchmarks analyzed.
+    pub analyzed: usize,
+    /// Detected performance changes.
+    pub changes: usize,
+    /// End-to-end wall time [s].
+    pub wall_s: f64,
+    /// Cost [USD].
+    pub cost_usd: f64,
+}
+
+/// Render the cross-variant sweep summary: one row per grid point, in
+/// expansion (= catalog) order.
+pub fn sweep_summary_table(rows: &[SweepRow]) -> String {
+    let mut out = String::from(
+        "| variant | profile | mem | mode | seed | analyzed | changes | duration | cost |\n\
+         |---|---|---:|---|---:|---:|---:|---:|---:|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {} | ${:.2} |\n",
+            r.variant,
+            r.profile,
+            r.memory_mb,
+            r.mode,
+            r.seed,
+            r.analyzed,
+            r.changes,
+            fmt_duration(r.wall_s),
+            r.cost_usd
+        ));
+    }
+    out
+}
+
 /// Human-readable duration.
 pub fn fmt_duration(seconds: f64) -> String {
     if seconds >= 3600.0 {
@@ -293,6 +340,26 @@ mod tests {
         assert!(t.contains("| benchmark | 0001-a | 0002-b |"), "{t}");
         assert!(t.contains("| BenchX | +0.50% | +9.31% R |"), "{t}");
         assert!(t.contains("| BenchY | — | -2.00% I |"), "{t}");
+    }
+
+    #[test]
+    fn sweep_summary_table_renders() {
+        let t = sweep_summary_table(&[SweepRow {
+            variant: "base@mem=1024,seed=11".into(),
+            profile: "aws-lambda".into(),
+            memory_mb: 1024,
+            mode: "ab".into(),
+            seed: 11,
+            analyzed: 10,
+            changes: 4,
+            wall_s: 90.0,
+            cost_usd: 0.05,
+        }]);
+        assert!(t.contains("| variant | profile | mem | mode | seed |"), "{t}");
+        assert!(
+            t.contains("| base@mem=1024,seed=11 | aws-lambda | 1024 | ab | 11 | 10 | 4 | 1.5 min | $0.05 |"),
+            "{t}"
+        );
     }
 
     #[test]

@@ -45,6 +45,10 @@ pub const CATALOG_SOURCES: &[(&str, &str)] = &[
         "azure-baseline.toml",
         include_str!("../../../scenarios/azure-baseline.toml"),
     ),
+    (
+        "lambda-sweep.toml",
+        include_str!("../../../scenarios/lambda-sweep.toml"),
+    ),
 ];
 
 /// Load the full shipped catalog, in catalog order.
@@ -109,6 +113,9 @@ mod tests {
         assert!(cat
             .iter()
             .any(|s| s.repeats == crate::scenario::RepeatPolicy::Adaptive));
+        // At least one matrix recipe ships, so `scenario sweep` has a
+        // catalog target (>= 4 grid points, the acceptance floor).
+        assert!(cat.iter().any(|s| s.variant_count() >= 4));
     }
 
     #[test]

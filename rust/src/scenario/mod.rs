@@ -8,17 +8,25 @@
 //! one metadata-rich JSON report per run
 //! ([`crate::report::scenario_report_to_json`]).
 //!
-//! CLI surface: `elastibench scenario list | run <name> | run-all`
-//! (see [`crate::cli`]). Workloads and providers extend the system by
-//! adding a recipe file and, when needed, a
+//! Recipes may carry a `[matrix]` section ([`recipe::MatrixSpec`]) that
+//! expands one file into a grid of variants over memory size, profile,
+//! duet mode and seed; [`sweep::run_sweep`] executes expanded grids on a
+//! deterministic worker pool.
+//!
+//! CLI surface: `elastibench scenario list | run <name> | run-all |
+//! sweep` (see [`crate::cli`]). Workloads and providers extend the
+//! system by adding a recipe file and, when needed, a
 //! [`crate::faas::PlatformProfile`] — no coordinator changes required.
 
 pub mod catalog;
 pub mod recipe;
 pub mod runner;
+pub mod sweep;
 
 pub use catalog::{catalog, catalog_entry, CATALOG_SOURCES};
 pub use recipe::{
-    DuetMode, HistorySpec, RepeatPolicy, Scenario, HISTORY_KEYS, SCENARIO_KEYS,
+    DuetMode, HistorySpec, MatrixSpec, RepeatPolicy, Scenario, HISTORY_KEYS,
+    MATRIX_KEYS, MAX_MATRIX_VARIANTS, SCENARIO_KEYS,
 };
 pub use runner::{commit_id, run_scenario, ScenarioReport};
+pub use sweep::{default_jobs, run_sweep};

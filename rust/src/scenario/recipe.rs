@@ -28,7 +28,21 @@
 //! record = true               # opt-out switch (default true)
 //! window = 3                  # gate baseline window (K prior runs)
 //! threshold_pct = 3.0         # gate noise margin [%]
+//!
+//! [matrix]                    # optional: expand into a grid of variants
+//! memory_mb = [1024, 2048]    # each axis is an array of values
+//! profile   = ["aws-lambda", "gcp-cloud-functions"]
+//! mode      = ["ab", "aa"]
+//! seed      = [60101, 60102]
 //! ```
+//!
+//! A `[matrix]` recipe expands into one variant per grid point
+//! ([`Scenario::expand`]): variant names are
+//! `base@mem=1024,profile=gcp-cloud-functions,mode=aa,seed=60102`
+//! (axes in that fixed order, absent axes omitted), and variants
+//! without a `seed` axis derive `experiment.seed` from the base seed
+//! and the suffix so every grid point sees an independent noise
+//! realization, deterministically.
 
 use crate::config::{
     Document, ExperimentConfig, PlatformConfig, SutConfig, Value, EXPERIMENT_KEYS, FUNCTION_KEYS,
@@ -45,6 +59,13 @@ pub const SCENARIO_KEYS: &[&str] = &["name", "description", "profile", "mode", "
 /// auto-record + gate defaults; see [`crate::history`]).
 pub const HISTORY_KEYS: &[&str] = &["store", "record", "window", "threshold_pct"];
 
+/// Axes recognized in the `[matrix]` section.
+pub const MATRIX_KEYS: &[&str] = &["memory_mb", "profile", "mode", "seed"];
+
+/// Hard cap on the grid size one recipe may expand into: a fat-fingered
+/// axis must fail loudly at parse time, not enqueue thousands of runs.
+pub const MAX_MATRIX_VARIANTS: usize = 64;
+
 /// Sections a recipe may contain.
 const SECTIONS: &[(&str, &[&str])] = &[
     ("scenario", SCENARIO_KEYS),
@@ -53,6 +74,7 @@ const SECTIONS: &[(&str, &[&str])] = &[
     ("sut", SUT_KEYS),
     ("platform", PLATFORM_KEYS),
     ("history", HISTORY_KEYS),
+    ("matrix", MATRIX_KEYS),
 ];
 
 /// Expected value shape of a recipe key (strict type validation: a
@@ -64,6 +86,7 @@ enum Kind {
     Num,
     Bool,
     Tags,
+    Ints,
 }
 
 impl Kind {
@@ -76,6 +99,9 @@ impl Kind {
             Kind::Tags => v
                 .as_array()
                 .is_some_and(|a| a.iter().all(|i| i.as_str().is_some())),
+            Kind::Ints => v
+                .as_array()
+                .is_some_and(|a| a.iter().all(|i| i.as_i64().is_some())),
         }
     }
 
@@ -86,6 +112,7 @@ impl Kind {
             Kind::Num => "a number",
             Kind::Bool => "a boolean",
             Kind::Tags => "an array of strings",
+            Kind::Ints => "an array of integers",
         }
     }
 }
@@ -96,6 +123,8 @@ impl Kind {
 fn expected_kind(section: &str, key: &str) -> Kind {
     match (section, key) {
         ("scenario", "tags") => Kind::Tags,
+        ("matrix", "memory_mb" | "seed") => Kind::Ints,
+        ("matrix", _) => Kind::Tags,
         ("scenario", _) | ("experiment", "label") | ("history", "store") => Kind::Str,
         ("history", "record") => Kind::Bool,
         ("history", "window") => Kind::Int,
@@ -170,6 +199,49 @@ pub struct HistorySpec {
     pub threshold_pct: f64,
 }
 
+/// A validated `[matrix]` section: the axes one recipe sweeps over.
+///
+/// Each axis lists its grid values *exactly* — the base recipe's value
+/// for a swept axis is not implicitly included. Absent axes keep the
+/// base value in every variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixSpec {
+    /// `memory_mb` axis (empty = not swept).
+    pub memory_mb: Vec<u64>,
+    /// `profile` axis, registered profile names (empty = not swept).
+    pub profile: Vec<String>,
+    /// `mode` axis (empty = not swept).
+    pub mode: Vec<DuetMode>,
+    /// `seed` axis; values become `experiment.seed` verbatim (empty =
+    /// not swept, seeds are derived from the variant suffix instead).
+    pub seed: Vec<u64>,
+    /// Whether the recipe pinned `[function] memory_mb`: a pinned size
+    /// survives a profile switch, an unpinned one re-resolves to the
+    /// variant profile's default.
+    memory_pinned: bool,
+    /// The raw recipe document, kept so `[platform]` overrides re-stack
+    /// onto each variant profile's calibration during expansion.
+    overrides: Document,
+}
+
+impl MatrixSpec {
+    /// Grid points this matrix expands into.
+    pub fn variant_count(&self) -> usize {
+        self.memory_mb.len().max(1)
+            * self.profile.len().max(1)
+            * self.mode.len().max(1)
+            * self.seed.len().max(1)
+    }
+}
+
+/// FNV-1a 64-bit over a variant suffix: the deterministic seed-derivation
+/// hash (documented in docs/benchmarks.md — stable across releases).
+fn suffix_hash(text: &str) -> u64 {
+    text.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100_0000_01b3)
+    })
+}
+
 /// A fully resolved, validated scenario: everything needed to execute
 /// and re-execute one benchmark-suite run months apart.
 #[derive(Debug, Clone)]
@@ -197,6 +269,8 @@ pub struct Scenario {
     /// Continuous-benchmarking opt-in (`[history]` section); `None`
     /// when the recipe does not auto-record.
     pub history: Option<HistorySpec>,
+    /// Grid axes (`[matrix]` section); `None` for plain recipes.
+    pub matrix: Option<MatrixSpec>,
 }
 
 impl Scenario {
@@ -348,6 +422,8 @@ impl Scenario {
             Some(spec)
         };
 
+        let matrix = parse_matrix(doc, profile, &exp, &mut errs);
+
         if !errs.is_empty() {
             let label = if name.is_empty() { "<recipe>" } else { name.as_str() };
             return Err(anyhow!("invalid scenario {label}: {}", errs.join("; ")));
@@ -363,7 +439,97 @@ impl Scenario {
             sut,
             platform,
             history,
+            matrix,
         })
+    }
+
+    /// Expand the `[matrix]` grid into concrete variants, in canonical
+    /// axis order (memory, then profile, then mode, then seed — the same
+    /// order the suffix spells them). A plain recipe is its own single
+    /// variant. Expansion is a pure function of the scenario, so variant
+    /// lists — and therefore sweep outputs — are identical across
+    /// processes and worker counts.
+    pub fn expand(&self) -> Vec<Scenario> {
+        let Some(spec) = &self.matrix else {
+            return vec![self.clone()];
+        };
+        let num_axis = |xs: &[u64]| -> Vec<Option<u64>> {
+            if xs.is_empty() {
+                vec![None]
+            } else {
+                xs.iter().copied().map(Some).collect()
+            }
+        };
+        let mems = num_axis(&spec.memory_mb);
+        let seeds = num_axis(&spec.seed);
+        let profiles: Vec<Option<&String>> = if spec.profile.is_empty() {
+            vec![None]
+        } else {
+            spec.profile.iter().map(Some).collect()
+        };
+        let modes: Vec<Option<DuetMode>> = if spec.mode.is_empty() {
+            vec![None]
+        } else {
+            spec.mode.iter().copied().map(Some).collect()
+        };
+
+        let mut out = Vec::with_capacity(spec.variant_count());
+        for &mem in &mems {
+            for profile in &profiles {
+                for &mode in &modes {
+                    for &seed in &seeds {
+                        let mut sc = self.clone();
+                        sc.matrix = None;
+                        if let Some(pname) = profile {
+                            let p = profile_by_name(pname).unwrap_or_else(|| {
+                                panic!("unregistered matrix profile {pname:?}")
+                            });
+                            sc.profile_name = pname.to_string();
+                            sc.platform = p.config().overridden(&spec.overrides);
+                            if mem.is_none() && !spec.memory_pinned {
+                                sc.exp.memory_mb = p.default_memory_mb();
+                            }
+                        }
+                        if let Some(mb) = mem {
+                            sc.exp.memory_mb = mb;
+                        }
+                        if let Some(m) = mode {
+                            sc.mode = m;
+                        }
+                        let mut parts: Vec<String> = Vec::new();
+                        if let Some(mb) = mem {
+                            parts.push(format!("mem={mb}"));
+                        }
+                        if let Some(pname) = profile {
+                            parts.push(format!("profile={pname}"));
+                        }
+                        if let Some(m) = mode {
+                            parts.push(format!("mode={}", m.as_str()));
+                        }
+                        if let Some(s) = seed {
+                            parts.push(format!("seed={s}"));
+                        }
+                        let suffix = parts.join(",");
+                        sc.name = format!("{}@{suffix}", self.name);
+                        sc.exp.label = sc.name.clone();
+                        // An explicit seed axis pins the value; otherwise
+                        // every grid point derives an independent (but
+                        // reproducible) noise realization from its name.
+                        sc.exp.seed = match seed {
+                            Some(s) => s,
+                            None => self.exp.seed ^ suffix_hash(&suffix),
+                        };
+                        out.push(sc);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Grid points this recipe expands into (1 for plain recipes).
+    pub fn variant_count(&self) -> usize {
+        self.matrix.as_ref().map_or(1, MatrixSpec::variant_count)
     }
 
     /// The duet slot contents this scenario runs.
@@ -387,6 +553,173 @@ impl Scenario {
     pub fn planned_calls(&self) -> usize {
         self.sut.benchmark_count * self.exp.calls_per_benchmark
     }
+}
+
+/// Parse and validate the `[matrix]` section (strict, like everything
+/// else: empty axes, duplicate values, unknown profiles, conflicting
+/// pinned values and overlarge grids are all hard errors). Returns
+/// `None` when the recipe has no matrix.
+fn parse_matrix(
+    doc: &Document,
+    base_profile: Option<&'static dyn PlatformProfile>,
+    exp: &ExperimentConfig,
+    errs: &mut Vec<String>,
+) -> Option<MatrixSpec> {
+    let section_present = doc.sections().any(|s| s == "matrix");
+    let keys = doc.keys("matrix");
+    if section_present && keys.is_empty() {
+        errs.push(format!(
+            "empty [matrix] section (define at least one axis of {MATRIX_KEYS:?})"
+        ));
+    }
+    if keys.is_empty() {
+        return None;
+    }
+
+    // Present-but-empty axes are errors: `memory_mb = []` cannot mean
+    // "not swept" without inviting silent no-op grids.
+    for key in &keys {
+        if MATRIX_KEYS.contains(key)
+            && doc
+                .get("matrix", key)
+                .and_then(Value::as_array)
+                .is_some_and(|a| a.is_empty())
+        {
+            errs.push(format!("matrix.{key} must list at least one value"));
+        }
+    }
+
+    let int_axis = |key: &str, errs: &mut Vec<String>| -> Vec<u64> {
+        let Some(items) = doc.get("matrix", key).and_then(Value::as_array) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for v in items {
+            match v.as_i64() {
+                Some(i) if i >= 0 => out.push(i as u64),
+                Some(i) => errs.push(format!("matrix.{key} value {i} must be >= 0")),
+                // Wrong element types were already reported by the
+                // section-wide Kind check.
+                None => {}
+            }
+        }
+        out
+    };
+    let str_axis = |key: &str| -> Vec<String> {
+        doc.get("matrix", key)
+            .and_then(Value::as_array)
+            .map(|items| {
+                items
+                    .iter()
+                    .filter_map(|v| v.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+
+    let memory_mb = int_axis("memory_mb", errs);
+    let seed = int_axis("seed", errs);
+    let profile = str_axis("profile");
+    let mode_raw = str_axis("mode");
+
+    for p in &profile {
+        if profile_by_name(p).is_none() {
+            errs.push(format!(
+                "matrix.profile: unknown platform profile {p:?} (available: {})",
+                profile_names().join(", ")
+            ));
+        }
+    }
+    let mut mode: Vec<DuetMode> = Vec::new();
+    for m in &mode_raw {
+        match m.as_str() {
+            "aa" => mode.push(DuetMode::Aa),
+            "ab" => mode.push(DuetMode::Ab),
+            other => errs.push(format!(
+                "matrix.mode values must be \"aa\" or \"ab\", got {other:?}"
+            )),
+        }
+    }
+
+    // Duplicate axis values would collide on variant names (and silently
+    // double-run grid points).
+    fn has_dup<T: PartialEq>(xs: &[T]) -> bool {
+        xs.iter().enumerate().any(|(i, x)| xs[..i].contains(x))
+    }
+    if has_dup(&memory_mb) {
+        errs.push("matrix.memory_mb has duplicate values".into());
+    }
+    if has_dup(&profile) {
+        errs.push("matrix.profile has duplicate values".into());
+    }
+    if has_dup(&mode_raw) {
+        errs.push("matrix.mode has duplicate values".into());
+    }
+    if has_dup(&seed) {
+        errs.push("matrix.seed has duplicate values".into());
+    }
+
+    // A swept axis owns its value: a pinned single value alongside it
+    // would be dead configuration, which strict parsing never allows.
+    if doc.get("matrix", "memory_mb").is_some() && doc.get("function", "memory_mb").is_some() {
+        errs.push("function.memory_mb conflicts with matrix.memory_mb (the axis owns the value)".into());
+    }
+    if doc.get("matrix", "seed").is_some() && doc.get("experiment", "seed").is_some() {
+        errs.push("experiment.seed conflicts with matrix.seed (the axis owns the value)".into());
+    }
+    if doc.get("matrix", "mode").is_some() && doc.get("scenario", "mode").is_some() {
+        errs.push("scenario.mode conflicts with matrix.mode (the axis owns the value)".into());
+    }
+    // Every variant's label IS its derived name; a pinned label would be
+    // silently clobbered during expansion, so it is rejected like the
+    // other dead-configuration conflicts above.
+    if doc.get("experiment", "label").is_some() {
+        errs.push("experiment.label conflicts with [matrix] (variant names own the label)".into());
+    }
+
+    let count = memory_mb.len().max(1)
+        * profile.len().max(1)
+        * mode_raw.len().max(1)
+        * seed.len().max(1);
+    if count > MAX_MATRIX_VARIANTS {
+        errs.push(format!(
+            "matrix expands to {count} variants, above the cap of {MAX_MATRIX_VARIANTS} \
+             (split the recipe)"
+        ));
+    }
+
+    // Every (memory, profile) grid combination must be a size the
+    // provider actually offers — checked here so the error names the
+    // recipe, not a half-finished sweep.
+    let memory_pinned = doc.get("function", "memory_mb").is_some();
+    let check_profiles: Vec<&'static dyn PlatformProfile> = if profile.is_empty() {
+        base_profile.into_iter().collect()
+    } else {
+        profile.iter().filter_map(|p| profile_by_name(p)).collect()
+    };
+    let check_mems: Vec<u64> = if !memory_mb.is_empty() {
+        memory_mb.clone()
+    } else if memory_pinned {
+        vec![exp.memory_mb]
+    } else {
+        Vec::new() // per-profile defaults, valid by the trait contract
+    };
+    for p in &check_profiles {
+        for &mb in &check_mems {
+            if let Err(e) = p.validate_memory(mb) {
+                errs.push(format!("matrix grid point on {}: {e}", p.name()));
+            }
+        }
+    }
+
+    Some(MatrixSpec {
+        memory_mb,
+        profile,
+        mode,
+        seed,
+        memory_pinned,
+        overrides: doc.clone(),
+    })
 }
 
 #[cfg(test)]
@@ -596,6 +929,208 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("history.record must be a boolean"), "{err}");
+    }
+
+    #[test]
+    fn plain_recipe_expands_to_itself() {
+        let sc = Scenario::from_toml(MINIMAL).unwrap();
+        assert_eq!(sc.matrix, None);
+        assert_eq!(sc.variant_count(), 1);
+        let variants = sc.expand();
+        assert_eq!(variants.len(), 1);
+        assert_eq!(variants[0].name, "t");
+        assert_eq!(variants[0].exp.seed, sc.exp.seed, "no derived seed without a matrix");
+    }
+
+    #[test]
+    fn matrix_expands_grid_with_derived_names_and_seeds() {
+        let sc = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "base"
+            profile = "aws-lambda"
+            [matrix]
+            memory_mb = [1024, 2048]
+            profile = ["aws-lambda", "gcp-cloud-functions"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(sc.variant_count(), 4);
+        let variants = sc.expand();
+        assert_eq!(variants.len(), 4);
+        // Canonical order: memory outermost, then profile; suffix spells
+        // the axes in the same order.
+        let names: Vec<&str> = variants.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "base@mem=1024,profile=aws-lambda",
+                "base@mem=1024,profile=gcp-cloud-functions",
+                "base@mem=2048,profile=aws-lambda",
+                "base@mem=2048,profile=gcp-cloud-functions",
+            ]
+        );
+        for v in &variants {
+            assert_eq!(v.matrix, None, "variants must not re-expand");
+            assert_eq!(v.exp.label, v.name);
+            assert_ne!(v.exp.seed, sc.exp.seed, "{}: derived seed", v.name);
+        }
+        // Axis values land in the right fields, including the profile's
+        // own platform calibration.
+        assert_eq!(variants[1].exp.memory_mb, 1024);
+        assert_eq!(variants[1].profile_name, "gcp-cloud-functions");
+        assert_eq!(variants[1].platform.billing_granularity_s, 0.1);
+        assert_eq!(variants[2].platform, PlatformConfig::default());
+        // Derived seeds differ per grid point but are stable run to run.
+        let seeds: std::collections::BTreeSet<u64> =
+            variants.iter().map(|v| v.exp.seed).collect();
+        assert_eq!(seeds.len(), 4, "seeds must be pairwise distinct");
+        assert_eq!(
+            sc.expand().iter().map(|v| v.exp.seed).collect::<Vec<_>>(),
+            variants.iter().map(|v| v.exp.seed).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn matrix_seed_axis_pins_seeds_and_mode_axis_applies() {
+        let sc = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "base"
+            profile = "aws-lambda"
+            [matrix]
+            mode = ["ab", "aa"]
+            seed = [11, 22]
+            "#,
+        )
+        .unwrap();
+        let variants = sc.expand();
+        assert_eq!(variants.len(), 4);
+        assert_eq!(variants[0].name, "base@mode=ab,seed=11");
+        assert_eq!(variants[0].mode, DuetMode::Ab);
+        assert_eq!(variants[0].exp.seed, 11);
+        assert_eq!(variants[3].name, "base@mode=aa,seed=22");
+        assert_eq!(variants[3].mode, DuetMode::Aa);
+        assert_eq!(variants[3].exp.seed, 22);
+    }
+
+    #[test]
+    fn matrix_profile_switch_reresolves_default_memory_unless_pinned() {
+        let sc = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "base"
+            profile = "aws-lambda"
+            [matrix]
+            profile = ["azure-functions"]
+            "#,
+        )
+        .unwrap();
+        // Unpinned memory follows the variant profile's default (Azure:
+        // 1536), not the base profile's 2048.
+        assert_eq!(sc.expand()[0].exp.memory_mb, 1536);
+
+        let sc = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "base"
+            profile = "aws-lambda"
+            [function]
+            memory_mb = 512
+            [matrix]
+            profile = ["azure-functions", "gcp-cloud-functions"]
+            "#,
+        )
+        .unwrap();
+        // Pinned memory survives the profile switch.
+        assert!(sc.expand().iter().all(|v| v.exp.memory_mb == 512));
+    }
+
+    #[test]
+    fn matrix_platform_overrides_restack_on_variant_profiles() {
+        let sc = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "base"
+            profile = "aws-lambda"
+            [platform]
+            keepalive_s = 42.0
+            [matrix]
+            profile = ["gcp-cloud-functions"]
+            "#,
+        )
+        .unwrap();
+        let v = &sc.expand()[0];
+        // The override applies on TOP of the variant profile's config.
+        assert_eq!(v.platform.keepalive_s, 42.0);
+        assert_eq!(v.platform.billing_granularity_s, 0.1, "gcp base survives");
+    }
+
+    #[test]
+    fn matrix_is_strict() {
+        let err = |toml: &str| Scenario::from_toml(toml).unwrap_err().to_string();
+        let head = "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\n";
+        // Unknown axis.
+        let msg = err(&format!("{head}[matrix]\nmemorymb = [1]"));
+        assert!(msg.contains("unknown key matrix.memorymb"), "{msg}");
+        // Empty section and empty axis.
+        let msg = err(&format!("{head}[matrix]"));
+        assert!(msg.contains("empty [matrix] section"), "{msg}");
+        let msg = err(&format!("{head}[matrix]\nmemory_mb = []"));
+        assert!(msg.contains("matrix.memory_mb must list at least one value"), "{msg}");
+        // Wrong element types.
+        let msg = err(&format!("{head}[matrix]\nmemory_mb = [\"big\"]"));
+        assert!(msg.contains("matrix.memory_mb must be an array of integers"), "{msg}");
+        let msg = err(&format!("{head}[matrix]\nprofile = [1]"));
+        assert!(msg.contains("matrix.profile must be an array of strings"), "{msg}");
+        // Unknown profile / mode values.
+        let msg = err(&format!("{head}[matrix]\nprofile = [\"aws-lamda\"]"));
+        assert!(msg.contains("unknown platform profile"), "{msg}");
+        assert!(msg.contains("aws-lambda"), "lists alternatives: {msg}");
+        let msg = err(&format!("{head}[matrix]\nmode = [\"abba\"]"));
+        assert!(msg.contains("matrix.mode values"), "{msg}");
+        // Duplicates collide on variant names.
+        let msg = err(&format!("{head}[matrix]\nseed = [7, 7]"));
+        assert!(msg.contains("matrix.seed has duplicate values"), "{msg}");
+        // Negative seeds.
+        let msg = err(&format!("{head}[matrix]\nseed = [-1]"));
+        assert!(msg.contains("must be >= 0"), "{msg}");
+        // Invalid (memory, profile) grid points are caught at parse time.
+        let msg = err(&format!(
+            "{head}[matrix]\nmemory_mb = [2048]\nprofile = [\"azure-functions\"]"
+        ));
+        assert!(msg.contains("matrix grid point on azure-functions"), "{msg}");
+    }
+
+    #[test]
+    fn matrix_rejects_conflicting_pins_and_overlarge_grids() {
+        let err = |toml: &str| Scenario::from_toml(toml).unwrap_err().to_string();
+        let head = "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\n";
+        let msg = err(&format!(
+            "{head}[function]\nmemory_mb = 512\n[matrix]\nmemory_mb = [1024]"
+        ));
+        assert!(msg.contains("function.memory_mb conflicts"), "{msg}");
+        let msg = err(&format!(
+            "{head}[experiment]\nseed = 1\n[matrix]\nseed = [2]"
+        ));
+        assert!(msg.contains("experiment.seed conflicts"), "{msg}");
+        let msg = err(&format!(
+            "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\nmode = \"aa\"\n[matrix]\nmode = [\"ab\"]"
+        ));
+        assert!(msg.contains("scenario.mode conflicts"), "{msg}");
+        let msg = err(&format!(
+            "{head}[experiment]\nlabel = \"pinned\"\n[matrix]\nseed = [1, 2]"
+        ));
+        assert!(msg.contains("experiment.label conflicts"), "{msg}");
+        // 9 x 8 = 72 > 64 cap.
+        let mems: Vec<String> = (0..9).map(|i| (1024 + i * 64).to_string()).collect();
+        let seeds: Vec<String> = (0..8).map(|i| i.to_string()).collect();
+        let msg = err(&format!(
+            "{head}[matrix]\nmemory_mb = [{}]\nseed = [{}]",
+            mems.join(", "),
+            seeds.join(", ")
+        ));
+        assert!(msg.contains("72 variants, above the cap of 64"), "{msg}");
     }
 
     #[test]

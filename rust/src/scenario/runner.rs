@@ -38,13 +38,37 @@ impl ScenarioReport {
     }
 }
 
-/// Best-effort commit id for report provenance.
+/// Process-wide commit-id cache: `run-all`/`scenario sweep` execute many
+/// grid points per process, and forking one `git rev-parse` per report
+/// is both slow and nondeterministic under load.
+static COMMIT_ID: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+
+/// Best-effort commit id for report provenance, resolved once per
+/// process: `ELASTIBENCH_COMMIT` env override, else
+/// `git rev-parse --short HEAD`, else `unknown` — with one stderr
+/// warning, so a CI tarball run that silently stamps every report
+/// `unknown` stays diagnosable.
 pub fn commit_id() -> String {
-    if let Ok(c) = std::env::var("ELASTIBENCH_COMMIT") {
-        if !c.is_empty() {
-            return c;
-        }
-    }
+    COMMIT_ID
+        .get_or_init(|| {
+            if let Ok(c) = std::env::var("ELASTIBENCH_COMMIT") {
+                if !c.is_empty() {
+                    return c;
+                }
+            }
+            if let Some(c) = git_short_head() {
+                return c;
+            }
+            eprintln!(
+                "elastibench: warning: commit id unavailable (ELASTIBENCH_COMMIT unset and \
+                 `git rev-parse --short HEAD` failed); reports will carry commit \"unknown\""
+            );
+            "unknown".to_string()
+        })
+        .clone()
+}
+
+fn git_short_head() -> Option<String> {
     std::process::Command::new("git")
         .args(["rev-parse", "--short", "HEAD"])
         .output()
@@ -53,7 +77,6 @@ pub fn commit_id() -> String {
         .and_then(|o| String::from_utf8(o.stdout).ok())
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
-        .unwrap_or_else(|| "unknown".to_string())
 }
 
 /// Seed offset between the run seed and the analysis resample seed
@@ -151,7 +174,11 @@ mod tests {
     }
 
     #[test]
-    fn commit_id_is_nonempty() {
-        assert!(!commit_id().is_empty());
+    fn commit_id_is_nonempty_and_cached() {
+        let first = commit_id();
+        assert!(!first.is_empty());
+        // The OnceLock makes repeat calls free and identical — every
+        // grid point of a sweep stamps the same provenance.
+        assert_eq!(commit_id(), first);
     }
 }

@@ -1,0 +1,206 @@
+//! Work-pool executor for scenario sweeps: run many (expanded) scenarios
+//! on N worker threads with results collected in deterministic catalog
+//! order.
+//!
+//! The harness simulates the paper's elastic fan-out *inside* one run;
+//! this module applies the same idea to the harness itself: expanded
+//! matrix variants are pure functions of their recipe + seed, so they can
+//! execute on any worker in any interleaving without changing a single
+//! output byte. Design rules:
+//!
+//! * **work stealing via an atomic cursor** — workers claim the next
+//!   unstarted scenario index (same pattern as the row-parallel bootstrap
+//!   in [`crate::stats`]'s `bootstrap_native`), so a slow grid point
+//!   never idles the pool;
+//! * **thread-local analyzers** — the XLA backend caches compiled
+//!   engines behind a `RefCell` and is deliberately not `Sync`, so each
+//!   worker constructs its own [`Analyzer`] from the caller's factory;
+//! * **deterministic collection** — each worker tags results with the
+//!   claimed index and the pool reorders them afterwards; `--jobs 1` and
+//!   `--jobs 64` produce byte-identical per-variant reports (asserted in
+//!   `rust/tests/scenario_catalog.rs`).
+
+use super::recipe::Scenario;
+use super::runner::{run_scenario, ScenarioReport};
+use crate::stats::Analyzer;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Default worker count for `scenario sweep`: every core the host offers.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+}
+
+/// Run every scenario in `scenarios` on a pool of `jobs` workers and
+/// return the reports in input order.
+///
+/// `make_analyzer` is invoked once per worker (backends stay
+/// thread-local). Errors fail fast: the first failure stops workers from
+/// claiming further grid points (in-flight points finish), the sweep
+/// returns the lowest-input-index failure among the points that ran, and
+/// every finished report is discarded — callers export reports only
+/// after the whole pool succeeds, so a failed sweep never leaves a
+/// half-written grid behind. (Successful sweeps stay byte-deterministic
+/// for any worker count; only which error is *reported* may vary.)
+pub fn run_sweep<F>(
+    scenarios: &[Scenario],
+    jobs: usize,
+    make_analyzer: F,
+) -> Result<Vec<ScenarioReport>>
+where
+    F: Fn() -> Result<Analyzer> + Sync,
+{
+    if scenarios.is_empty() {
+        return Ok(Vec::new());
+    }
+    let jobs = jobs.max(1).min(scenarios.len());
+    let cursor = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+
+    // Each worker owns a local (index, result) list; merging after the
+    // scope closes keeps the hot path lock-free and the output order a
+    // pure function of the input.
+    let mut tagged: Vec<(usize, Result<ScenarioReport>)> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(jobs);
+        for _ in 0..jobs {
+            handles.push(scope.spawn(|| {
+                let mut local: Vec<(usize, Result<ScenarioReport>)> = Vec::new();
+                let analyzer = match make_analyzer() {
+                    Ok(a) => a,
+                    Err(e) => {
+                        // One Err entry for the next unclaimed index is
+                        // enough to fail the sweep; draining further
+                        // would only duplicate the same message.
+                        abort.store(true, Ordering::Relaxed);
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i < scenarios.len() {
+                            local.push((i, Err(anyhow!("analyzer construction failed: {e:#}"))));
+                        }
+                        return local;
+                    }
+                };
+                loop {
+                    // Fail fast: once any worker hit an error, running
+                    // the remaining grid points would be wasted work —
+                    // their reports get discarded anyway.
+                    if abort.load(Ordering::Relaxed) {
+                        return local;
+                    }
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= scenarios.len() {
+                        return local;
+                    }
+                    let result = run_scenario(&scenarios[i], &analyzer);
+                    if result.is_err() {
+                        abort.store(true, Ordering::Relaxed);
+                    }
+                    local.push((i, result));
+                }
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
+
+    // Claimed indexes are contiguous from 0 (the cursor only moves
+    // forward), so after sorting, walking up to the first error — or to
+    // the end on success — reconstructs input order exactly.
+    tagged.sort_by_key(|(i, _)| *i);
+    let mut out = Vec::with_capacity(scenarios.len());
+    for (i, result) in tagged {
+        let report =
+            result.map_err(|e| anyhow!("scenario {}: {e:#}", scenarios[i].name))?;
+        out.push(report);
+    }
+    debug_assert_eq!(out.len(), scenarios.len());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::catalog_entry;
+
+    fn small(name_suffix: &str, seed: u64) -> Scenario {
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        sc.name = format!("quick-smoke@{name_suffix}");
+        sc.exp.label = sc.name.clone();
+        sc.exp.seed = seed;
+        sc.sut.benchmark_count = 6;
+        sc.sut.true_changes = 1;
+        sc.sut.faas_incompatible = 1;
+        sc.sut.slow_setup = 0;
+        sc.exp.calls_per_benchmark = 6;
+        sc.exp.parallelism = 8;
+        sc
+    }
+
+    #[test]
+    fn empty_sweep_is_empty() {
+        let out = run_sweep(&[], 4, || Ok(Analyzer::native())).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_preserves_input_order_and_contents() {
+        let scenarios: Vec<Scenario> = (0..5)
+            .map(|i| small(&format!("v{i}"), 9000 + i as u64))
+            .collect();
+        let serial = run_sweep(&scenarios, 1, || Ok(Analyzer::native())).unwrap();
+        let pooled = run_sweep(&scenarios, 4, || Ok(Analyzer::native())).unwrap();
+        assert_eq!(serial.len(), 5);
+        assert_eq!(pooled.len(), 5);
+        for (i, (a, b)) in serial.iter().zip(&pooled).enumerate() {
+            assert_eq!(a.scenario.name, scenarios[i].name, "order preserved");
+            assert_eq!(a.scenario.name, b.scenario.name);
+            assert_eq!(a.run.wall_s, b.run.wall_s, "{}", a.scenario.name);
+            assert_eq!(a.run.cost_usd, b.run.cost_usd);
+            for (x, y) in a.analysis.verdicts.iter().zip(&b.analysis.verdicts) {
+                assert_eq!(x.output, y.output, "{}/{}", a.scenario.name, x.name);
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_job_count_is_clamped() {
+        let scenarios = vec![small("solo", 9100)];
+        let out = run_sweep(&scenarios, 64, || Ok(Analyzer::native())).unwrap();
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn analyzer_factory_failure_fails_the_sweep() {
+        let scenarios = vec![small("a", 1), small("b", 2)];
+        let err = run_sweep(&scenarios, 2, || {
+            Err(anyhow!("no artifacts here"))
+        })
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("quick-smoke@"), "names the grid point: {msg}");
+        assert!(msg.contains("no artifacts here"), "{msg}");
+    }
+
+    #[test]
+    fn scenario_error_fails_fast_and_names_the_variant() {
+        // 300 results per benchmark exceeds every supported analyzer
+        // lane width, so the first grid point fails deterministically.
+        let mut broken = small("broken", 3);
+        broken.exp.repeats_per_call = 1;
+        broken.exp.calls_per_benchmark = 300;
+        broken.sut.benchmark_count = 2;
+        let scenarios = vec![broken, small("fine", 4)];
+        let err = run_sweep(&scenarios, 2, || Ok(Analyzer::native())).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("quick-smoke@broken"), "{msg}");
+        assert!(msg.contains("lane width"), "{msg}");
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+}

@@ -24,7 +24,7 @@
 
 use super::fastdiv::FastMod;
 use crate::runtime::AnalysisOutput;
-use crate::util::stats::ci_order_statistics;
+use crate::util::stats::{ci_order_statistics, total_cmp_f32};
 
 /// Analyze `m` benchmarks packed in row-major `[m, n]` matrices.
 ///
@@ -156,7 +156,7 @@ fn median_of(buf: &mut [f32]) -> f32 {
     let n = buf.len();
     let lo_i = (n - 1) / 2;
     let (_, lo, rest) =
-        buf.select_nth_unstable_by(lo_i, |a, b| a.partial_cmp(b).expect("NaN sample"));
+        buf.select_nth_unstable_by(lo_i, |a, b| total_cmp_f32(*a, *b));
     let lo = *lo;
     let hi = if n % 2 == 1 {
         lo
@@ -172,11 +172,7 @@ fn rank_samples(vals: &[f32], order: &mut [u16], rank: &mut [u16], sorted: &mut 
     for (i, o) in order[..nv].iter_mut().enumerate() {
         *o = i as u16;
     }
-    order[..nv].sort_unstable_by(|&a, &b| {
-        vals[a as usize]
-            .partial_cmp(&vals[b as usize])
-            .expect("NaN sample")
-    });
+    order[..nv].sort_unstable_by(|&a, &b| total_cmp_f32(vals[a as usize], vals[b as usize]));
     for (r, &i) in order[..nv].iter().enumerate() {
         rank[i as usize] = r as u16;
         sorted[r] = vals[i as usize];
@@ -215,6 +211,15 @@ fn bootstrap_row(
 ) -> AnalysisOutput {
     let nv = v1.len();
     debug_assert!(nv >= 1 && nv <= n_lanes);
+    // Hard-error on NaN at the boundary (O(nv), negligible next to the
+    // O(B·nv) resample loop): the total_cmp comparators below order NaN
+    // deterministically instead of panicking mid-sort, so without this
+    // check a NaN sample would flow silently into reports and the
+    // history store.
+    assert!(
+        v1.iter().all(|x| x.is_finite()) && v2.iter().all(|x| x.is_finite()),
+        "non-finite sample in bootstrap input"
+    );
 
     rank_samples(v1, &mut scratch.order, &mut scratch.rank1, &mut scratch.sorted1);
     rank_samples(v2, &mut scratch.order, &mut scratch.rank2, &mut scratch.sorted2);
@@ -251,7 +256,7 @@ fn bootstrap_row(
     // (each select partitions only the remaining left segment). Wide
     // alpha or tiny B degenerate to the plain sort.
     let (lo_q, hi_q) = ci_order_statistics(b, alpha);
-    let cmp = |a: &f32, x: &f32| a.partial_cmp(x).expect("NaN rel diff");
+    let cmp = |a: &f32, x: &f32| total_cmp_f32(*a, *x);
     let rel = &mut scratch.rel[..];
     let (lo_v, med_lo_v, med_hi_v, hi_v);
     if b < 8 || hi_q <= b / 2 + 1 {
@@ -306,6 +311,10 @@ pub fn bootstrap_row_reference(
 ) -> AnalysisOutput {
     let nv = v1.len();
     assert!(nv >= 1 && nv <= n_lanes);
+    assert!(
+        v1.iter().all(|x| x.is_finite()) && v2.iter().all(|x| x.is_finite()),
+        "non-finite sample in bootstrap input"
+    );
     let mut resample = vec![0.0f32; nv];
     let mut rel = vec![0.0f32; b];
     let mut sortbuf = vec![0.0f32; nv];
@@ -326,7 +335,7 @@ pub fn bootstrap_row_reference(
             0.0
         };
     }
-    rel.sort_unstable_by(|a, b| a.partial_cmp(b).expect("NaN rel diff"));
+    rel.sort_unstable_by(|a, b| total_cmp_f32(*a, *b));
     let (lo_q, hi_q) = ci_order_statistics(b, alpha);
 
     sortbuf.copy_from_slice(v1);
@@ -418,6 +427,13 @@ mod tests {
         assert_eq!(out.boot_median_pct, 50.0);
         assert_eq!(out.ci_lo_pct, 50.0);
         assert_eq!(out.ci_hi_pct, 50.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite sample in bootstrap input")]
+    fn nan_samples_are_rejected_loudly() {
+        let idx = mk_idx(&mut Rng::new(9), 64, 64);
+        let _ = bootstrap_native_single(&[1.0, f32::NAN], &[1.0, 2.0], &idx, 64, 64, 0.01);
     }
 
     #[test]

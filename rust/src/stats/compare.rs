@@ -8,6 +8,7 @@
 //! experiments' detected changes are (§6.2.2).
 
 use super::suite_result::{ChangeKind, SuiteAnalysis};
+use crate::util::stats::total_cmp_f64;
 
 /// Why two experiments disagree on one microbenchmark.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -103,11 +104,7 @@ pub fn agreement(a: &SuiteAnalysis, b: &SuiteAnalysis) -> AgreementReport {
             max_abs_diff_pct: mag_a.max(mag_b),
         });
     }
-    disagreements.sort_by(|x, y| {
-        y.max_abs_diff_pct
-            .partial_cmp(&x.max_abs_diff_pct)
-            .expect("NaN magnitude")
-    });
+    disagreements.sort_by(|x, y| total_cmp_f64(y.max_abs_diff_pct, x.max_abs_diff_pct));
     AgreementReport {
         common,
         agreeing,

@@ -4,6 +4,24 @@
 //! `python/compile/kernels/ref.py` so the native Rust bootstrap engine and
 //! the XLA artifact agree to float tolerance.
 
+/// Deterministic total-order comparator for `f64` (IEEE-754 `totalOrder`).
+///
+/// Float sorts in this crate must never use
+/// `partial_cmp(..).unwrap_or(Ordering::Equal)`: a NaN comparing `Equal`
+/// to everything makes the sort order depend on the input permutation and
+/// silently poisons downstream medians (the history-gate bug this helper
+/// was introduced for). Under `total_cmp` NaNs order deterministically
+/// after `+inf` (negative NaNs before `-inf`) — callers that cannot
+/// tolerate NaN at all should filter with `is_finite()` first.
+pub fn total_cmp_f64(a: f64, b: f64) -> std::cmp::Ordering {
+    a.total_cmp(&b)
+}
+
+/// `f32` twin of [`total_cmp_f64`] for the bootstrap kernels.
+pub fn total_cmp_f32(a: f32, b: f32) -> std::cmp::Ordering {
+    a.total_cmp(&b)
+}
+
 /// Median as the average of the two central order statistics of a sorted
 /// slice (matches the kernel's convention).
 pub fn median_sorted(sorted: &[f64]) -> f64 {
@@ -93,6 +111,24 @@ pub fn ecdf(xs: &[f64]) -> Vec<(f64, f64)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn total_cmp_orders_nan_deterministically() {
+        use std::cmp::Ordering;
+        assert_eq!(total_cmp_f64(1.0, 2.0), Ordering::Less);
+        assert_eq!(total_cmp_f64(2.0, 2.0), Ordering::Equal);
+        // NaN sorts after +inf instead of collapsing to Equal.
+        assert_eq!(total_cmp_f64(f64::NAN, f64::INFINITY), Ordering::Greater);
+        assert_eq!(total_cmp_f32(f32::NAN, f32::INFINITY), Ordering::Greater);
+        // Sorting a NaN-bearing slice is permutation-independent.
+        let mut a = vec![3.0, f64::NAN, 1.0, 2.0];
+        let mut b = vec![f64::NAN, 2.0, 3.0, 1.0];
+        a.sort_by(|x, y| total_cmp_f64(*x, *y));
+        b.sort_by(|x, y| total_cmp_f64(*x, *y));
+        assert_eq!(&a[..3], &[1.0, 2.0, 3.0]);
+        assert!(a[3].is_nan() && b[3].is_nan());
+        assert_eq!(&a[..3], &b[..3]);
+    }
 
     #[test]
     fn median_odd_even() {

@@ -5,7 +5,8 @@
 
 use elastibench::report::{scenario_report_to_json, SCENARIO_REPORT_SCHEMA};
 use elastibench::scenario::{
-    catalog, catalog_entry, run_scenario, Scenario, CATALOG_SOURCES,
+    catalog, catalog_entry, run_scenario, run_sweep, Scenario, CATALOG_SOURCES,
+    MAX_MATRIX_VARIANTS,
 };
 use elastibench::stats::Analyzer;
 use elastibench::util::json::parse;
@@ -97,6 +98,80 @@ fn catalog_sweep_emits_one_json_report_per_scenario() {
         assert!(j.get("run").unwrap().get("cost_usd").unwrap().as_f64().unwrap() > 0.0);
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A 2x2 matrix recipe over a small SUT: the integration-level sweep
+/// fixture (4 variants, each ~6 benchmarks x 12 calls).
+const GRID_RECIPE: &str = r#"
+    [scenario]
+    name = "grid"
+    profile = "aws-lambda"
+    [experiment]
+    repeats_per_call = 2
+    calls_per_benchmark = 6
+    parallelism = 8
+    [sut]
+    benchmark_count = 6
+    true_changes = 2
+    faas_incompatible = 1
+    slow_setup = 0
+    [matrix]
+    memory_mb = [1024, 2048]
+    seed = [31, 32]
+"#;
+
+#[test]
+fn sweep_reports_are_byte_identical_across_worker_counts() {
+    // The acceptance bar for the parallel executor: a matrix recipe
+    // expands into >= 4 named variants, and running the grid with
+    // --jobs 1 vs --jobs 4 yields byte-identical per-variant reports
+    // in the same (deterministic) order.
+    let sc = Scenario::from_toml(GRID_RECIPE).unwrap();
+    let variants = sc.expand();
+    assert!(variants.len() >= 4, "grid has {} variants", variants.len());
+    let names: BTreeSet<&str> = variants.iter().map(|v| v.name.as_str()).collect();
+    assert_eq!(names.len(), variants.len(), "variant names are unique");
+    assert!(names.contains("grid@mem=1024,seed=31"), "{names:?}");
+
+    let serial = run_sweep(&variants, 1, || Ok(Analyzer::native())).unwrap();
+    let pooled = run_sweep(&variants, 4, || Ok(Analyzer::native())).unwrap();
+    assert_eq!(serial.len(), variants.len());
+    assert_eq!(pooled.len(), variants.len());
+    for (i, (a, b)) in serial.iter().zip(&pooled).enumerate() {
+        assert_eq!(a.scenario.name, variants[i].name, "input order preserved");
+        let ja = scenario_report_to_json(a).to_string();
+        let jb = scenario_report_to_json(b).to_string();
+        assert_eq!(ja, jb, "report {} differs across worker counts", variants[i].name);
+    }
+    // Different grid points really are different workload realizations.
+    assert_ne!(
+        scenario_report_to_json(&serial[0]).to_string(),
+        scenario_report_to_json(&serial[1]).to_string(),
+    );
+}
+
+#[test]
+fn shipped_matrix_recipe_expands_and_is_strictly_parsed() {
+    // The catalog carries a sweepable entry...
+    let sc = catalog_entry("lambda-sweep").unwrap();
+    assert!(sc.matrix.is_some());
+    let variants = sc.expand();
+    assert_eq!(variants.len(), 4);
+    for v in &variants {
+        assert!(v.name.starts_with("lambda-sweep@mem="), "{}", v.name);
+        assert!(v.matrix.is_none(), "variants must not re-expand");
+    }
+
+    // ...and malformed [matrix] sections stay hard errors end to end.
+    let head = "[scenario]\nname = \"x\"\nprofile = \"aws-lambda\"\n";
+    let err = Scenario::from_toml(&format!("{head}[matrix]\nmemorymb = [1]")).unwrap_err();
+    assert!(err.to_string().contains("unknown key matrix.memorymb"), "{err}");
+    let err = Scenario::from_toml(&format!("{head}[matrix]\nseed = []")).unwrap_err();
+    assert!(err.to_string().contains("at least one value"), "{err}");
+    let seeds: Vec<String> = (0..(MAX_MATRIX_VARIANTS as u64 + 1)).map(|i| i.to_string()).collect();
+    let err = Scenario::from_toml(&format!("{head}[matrix]\nseed = [{}]", seeds.join(", ")))
+        .unwrap_err();
+    assert!(err.to_string().contains("above the cap"), "{err}");
 }
 
 #[test]

@@ -2,8 +2,8 @@
 //! AOT-compiled XLA artifact, at the paper's production geometry
 //! (B = 2048 resamples, N = 64 lanes, 45 valid samples per benchmark).
 //!
-//! Reported unit: analyzed benchmark-CIs per second. See EXPERIMENTS.md
-//! §Perf for the recorded numbers and the optimization log.
+//! Reported unit: analyzed benchmark-CIs per second. See `docs/perf.md`
+//! for the recorded numbers and the optimization log.
 //!
 //! Run: `cargo bench --bench perf_analysis`
 
@@ -87,6 +87,6 @@ fn main() {
     println!(
         "\nnote: interpret-mode Pallas lowers to plain HLO, so the XLA path here measures\n\
          the XLA:CPU-compiled kernel; real-TPU numbers are estimated from the VMEM/roofline\n\
-         analysis in EXPERIMENTS.md §Perf."
+         analysis in docs/perf.md."
     );
 }

@@ -1,19 +1,38 @@
 //! §Perf: simulator-side throughput — DES engine event rate and
-//! end-to-end experiment simulation wallclock (the L3 hot paths).
+//! end-to-end experiment simulation wallclock (the L3 hot paths), plus
+//! the pooled-vs-reference instance-scheduler comparison at large fleet
+//! sizes. Numbers are logged in `docs/perf.md`.
 //!
 //! Run: `cargo bench --bench perf_simulator`
+//!
+//! Flags (after `--`):
+//!
+//! * `--smoke`        shortened CI variant (fewer iterations, smaller
+//!                    workload, same shapes);
+//! * `--json PATH`    additionally emit a machine-readable
+//!                    `elastibench.bench-report.v1` document (CI writes
+//!                    `BENCH_simulator.json`; format in
+//!                    `docs/benchmarks.md`).
 
 use elastibench::config::{ExperimentConfig, PlatformConfig, SutConfig};
-use elastibench::coordinator::run_experiment;
+use elastibench::coordinator::{run_experiment, run_experiment_reference};
 use elastibench::des::Sim;
 use elastibench::exp::{baseline, Workbench};
 use elastibench::sut::{generate, Version};
-use elastibench::util::benchkit::time;
+use elastibench::util::benchkit::{time, BenchReport};
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .map(|i| args.get(i + 1).expect("--json needs a PATH").clone());
+    let mut report = BenchReport::new("simulator");
+
     // Raw DES engine: schedule/pop churn with a live heap.
-    let events = 200_000usize;
-    let stats = time(&format!("des: {events} chained events"), 1, 7, || {
+    let events = if smoke { 50_000usize } else { 200_000 };
+    let stats = time(&format!("des: {events} chained events"), 1, if smoke { 3 } else { 7 }, || {
         let mut sim: Sim<u64> = Sim::new();
         for i in 0..64 {
             sim.schedule(1.0 + i as f64, i);
@@ -28,23 +47,115 @@ fn main() {
         fired
     });
     println!("{}", stats.report(Some(events as f64)));
+    report.metric("des_events_per_s", events as f64 / stats.median_s);
+    report.case(&stats, Some(events as f64));
+
+    // DES with fat payloads and a deep heap: the arena keeps sift swaps
+    // on 24-byte keys even when events carry duet-pair vectors.
+    let pending = if smoke { 2_000usize } else { 10_000 };
+    let churn = if smoke { 50_000usize } else { 200_000 };
+    let stats = time(
+        &format!("des: {churn} fat events, {pending} pending"),
+        1,
+        if smoke { 3 } else { 7 },
+        || {
+            let mut sim: Sim<Vec<(f64, f64)>> = Sim::new();
+            for i in 0..pending {
+                sim.schedule(1.0 + (i % 97) as f64, vec![(i as f64, i as f64); 3]);
+            }
+            let mut fired = 0usize;
+            let mut acc = 0.0f64;
+            sim.run(|sim, _, payload| {
+                fired += 1;
+                acc += payload[0].0;
+                if fired + sim.pending() < churn {
+                    sim.schedule(1.0 + (fired % 13) as f64, payload);
+                }
+            });
+            acc
+        },
+    );
+    println!("{}", stats.report(Some(churn as f64)));
+    report.case(&stats, Some(churn as f64));
+
+    // Large-fleet experiment: the full coordinator + platform + benchexec
+    // path at parallelism >= 1000, pooled (slot map + idle deque) vs the
+    // retired O(N)-scan reference pool. Identical seeds and coordinator
+    // code; the wallclock delta is the scheduler's alone. Default 600 s
+    // keepalive: no mid-flight reaping, so the reference stays on the
+    // domain where it is correct and both runs produce identical reports.
+    let sut = SutConfig {
+        benchmark_count: if smoke { 120 } else { 200 },
+        true_changes: 20,
+        faas_incompatible: 5,
+        slow_setup: 3,
+        ..SutConfig::default()
+    };
+    let suite = generate(&sut);
+    let platform = PlatformConfig {
+        concurrency_limit: 4000,
+        ..PlatformConfig::default()
+    };
+    let exp = ExperimentConfig {
+        label: "hyperscale-bench".into(),
+        repeats_per_call: 1,
+        calls_per_benchmark: if smoke { 15 } else { 25 },
+        parallelism: if smoke { 1000 } else { 2000 },
+        ..ExperimentConfig::default()
+    };
+    let calls = suite.len() * exp.calls_per_benchmark;
+    let iters = if smoke { 2 } else { 5 };
+    let pooled = time(
+        &format!("pooled pool: {calls} calls, parallelism {}", exp.parallelism),
+        1,
+        iters,
+        || run_experiment(&suite, &sut, &platform, &exp, (Version::V1, Version::V2)),
+    );
+    println!("{}", pooled.report(Some(calls as f64)));
+    report.case(&pooled, Some(calls as f64));
+    let reference = time(
+        &format!("reference pool: {calls} calls, parallelism {}", exp.parallelism),
+        1,
+        iters,
+        || run_experiment_reference(&suite, &sut, &platform, &exp, (Version::V1, Version::V2)),
+    );
+    println!("{}", reference.report(Some(calls as f64)));
+    report.case(&reference, Some(calls as f64));
+    let speedup = reference.median_s / pooled.median_s;
+    println!(
+        "full-experiment speedup (reference / pooled) at parallelism {}: {speedup:.1}x",
+        exp.parallelism
+    );
+    report.metric("full_experiment_speedup", speedup);
+    report.metric("full_experiment_parallelism", exp.parallelism as f64);
+    report.metric("experiment_wall_s", pooled.median_s);
+    report.metric("experiment_calls_per_s", calls as f64 / pooled.median_s);
 
     // Full experiment simulation (106 benchmarks x 15 calls, parallelism
-    // 150) WITHOUT analysis — the coordinator + platform + benchexec path.
+    // 150) WITHOUT analysis — the paper-scale coordinator path.
     let sut = SutConfig::default();
     let suite = generate(&sut);
     let platform = PlatformConfig::default();
     let exp = ExperimentConfig::default();
-    let stats = time("coordinator: full baseline experiment (no analysis)", 1, 5, || {
+    let stats = time("coordinator: full baseline experiment (no analysis)", 1, if smoke { 2 } else { 5 }, || {
         run_experiment(&suite, &sut, &platform, &exp, (Version::V1, Version::V2))
     });
     let calls = suite.len() * exp.calls_per_benchmark;
     println!("{}", stats.report(Some(calls as f64)));
+    report.case(&stats, Some(calls as f64));
+    report.metric("baseline_experiment_wall_s", stats.median_s);
 
     // Experiment + native analysis (the `elastibench run` path).
     let wb = Workbench::native();
-    let stats = time("end-to-end: baseline experiment + native analysis", 1, 5, || {
+    let stats = time("end-to-end: baseline experiment + native analysis", 1, if smoke { 2 } else { 5 }, || {
         baseline(&wb).expect("baseline")
     });
     println!("{}", stats.report(None));
+    report.case(&stats, None);
+
+    if let Some(path) = json_path {
+        let path = std::path::PathBuf::from(path);
+        report.write(&path).expect("write bench report");
+        println!("wrote {}", path.display());
+    }
 }

@@ -8,8 +8,8 @@
 //! make artifacts && cargo run --release --example full_reproduction
 //! ```
 //!
-//! Prints the paper-vs-measured report (the basis of EXPERIMENTS.md) and
-//! writes it to `out/reproduction.md`.
+//! Prints the paper-vs-measured reproduction report and writes it to
+//! `out/reproduction.md`.
 
 use elastibench::exp::{reproduce_all, Workbench};
 use elastibench::report::write_text;

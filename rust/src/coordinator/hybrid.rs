@@ -86,11 +86,13 @@ pub fn run_hybrid(
     // billing; it keeps the fallback wall time near a single benchmark's
     // own duration — slow-setup benchmarks are intrinsically slow
     // everywhere, that is why they timed out on FaaS).
+    let fallback_set: std::collections::BTreeSet<&str> =
+        fallback.iter().map(String::as_str).collect();
     let sub_suite = Suite {
         benchmarks: suite
             .benchmarks
             .iter()
-            .filter(|b| fallback.contains(&b.name))
+            .filter(|b| fallback_set.contains(b.name.as_str()))
             .cloned()
             .collect(),
         config: sut.clone(),
@@ -104,6 +106,13 @@ pub fn run_hybrid(
     let vm_report = run_vm_baseline(&sub_suite, sut, &fallback_vm);
 
     // Merge: FaaS results where sufficient, VM results for the fallback.
+    // The VM report covers exactly the fallback sub-suite, so index it
+    // once instead of scanning it per benchmark.
+    let vm_by_name: std::collections::BTreeMap<&str, &Measurements> = vm_report
+        .measurements
+        .iter()
+        .map(|m| (m.name.as_str(), m))
+        .collect();
     let measurements: Vec<Measurements> = faas
         .measurements
         .iter()
@@ -111,11 +120,9 @@ pub fn run_hybrid(
             if m.len() >= FALLBACK_THRESHOLD {
                 m.clone()
             } else {
-                vm_report
-                    .measurements
-                    .iter()
-                    .find(|vm| vm.name == m.name)
-                    .cloned()
+                vm_by_name
+                    .get(m.name.as_str())
+                    .map(|vm| (*vm).clone())
                     .unwrap_or_else(|| m.clone())
             }
         })

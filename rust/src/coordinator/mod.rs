@@ -26,4 +26,4 @@ mod runner;
 
 pub use hybrid::{run_hybrid, HybridReport};
 pub use image::{build_image, FunctionImage};
-pub use runner::{run_experiment, CallFailure, RunReport};
+pub use runner::{run_experiment, run_experiment_reference, CallFailure, RunReport};

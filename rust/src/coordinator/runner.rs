@@ -5,7 +5,7 @@ use super::image::build_image;
 use crate::benchexec::{run_duet_call, ExecCtx, RunError};
 use crate::config::{ExperimentConfig, PlatformConfig, SutConfig};
 use crate::des::Sim;
-use crate::faas::{FaasPlatform, PlatformStats};
+use crate::faas::{FaasPlatform, InstancePool, PlatformStats, ReferencePlatform};
 use crate::stats::Measurements;
 use crate::sut::{Suite, Version};
 use crate::util::Rng;
@@ -95,6 +95,40 @@ pub fn run_experiment(
     exp: &ExperimentConfig,
     versions: (Version, Version),
 ) -> RunReport {
+    run_experiment_on(suite, sut, exp, versions, |image_mb| {
+        FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
+    })
+}
+
+/// [`run_experiment`] against the retired O(N)-scan instance pool
+/// ([`ReferencePlatform`]) — the before/after oracle for the slot-map
+/// scheduler. Used by the differential suite in
+/// `rust/tests/platform_pool.rs` and the `perf_simulator` bench; not a
+/// production path (it carries the pool's known reap/index bug, see the
+/// `faas::platform_reference` module docs).
+pub fn run_experiment_reference(
+    suite: &Suite,
+    sut: &SutConfig,
+    platform_cfg: &PlatformConfig,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+) -> RunReport {
+    run_experiment_on(suite, sut, exp, versions, |image_mb| {
+        ReferencePlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
+    })
+}
+
+/// The experiment loop, generic over the instance pool. Both entry
+/// points share this body, so a pooled-vs-reference comparison exercises
+/// the *identical* coordinator path and any report difference is the
+/// pool's alone.
+fn run_experiment_on<P: InstancePool>(
+    suite: &Suite,
+    sut: &SutConfig,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+    deploy: impl FnOnce(f64) -> P,
+) -> RunReport {
     if let Err(errs) = exp.validate() {
         panic!("invalid experiment config: {errs:?}");
     }
@@ -102,13 +136,7 @@ pub fn run_experiment(
 
     // Phase 1+2: build + deploy.
     let image = build_image(sut, &mut rng.fork(0xB01D));
-    let mut platform = FaasPlatform::deploy(
-        platform_cfg,
-        image.size_mb,
-        exp.memory_mb,
-        exp.start_hour_utc,
-        exp.seed,
-    );
+    let mut platform = deploy(image.size_mb);
 
     // Phase 3: plan — calls_per_benchmark calls per benchmark, shuffled
     // globally (randomized order => randomized instance assignment, §4).
@@ -132,8 +160,10 @@ pub fn run_experiment(
         .iter()
         .map(|b| Measurements {
             name: b.name.clone(),
-            v1: Vec::new(),
-            v2: Vec::new(),
+            // Each benchmark collects at most repeats x calls pairs;
+            // reserving up front keeps the collect loop allocation-free.
+            v1: Vec::with_capacity(exp.results_per_benchmark()),
+            v2: Vec::with_capacity(exp.results_per_benchmark()),
         })
         .collect();
     let mut calls_total = 0usize;
@@ -142,7 +172,7 @@ pub fn run_experiment(
     let mut call_seq = 0u64;
 
     let issue = |sim: &mut Sim<CallDone>,
-                     platform: &mut FaasPlatform,
+                     platform: &mut P,
                      plan_item: PlannedCall,
                      calls_total: &mut usize,
                      call_seq: &mut u64,

@@ -9,47 +9,65 @@
 //! Determinism: events at equal timestamps fire in scheduling order
 //! (sequence numbers), and the engine never consults wall-clock time, so a
 //! simulation is a pure function of (initial events, handler, RNG seed).
+//!
+//! ## Arena-backed heap
+//!
+//! Event payloads can be fat (the coordinator's `CallDone` carries a
+//! `Vec<(f64, f64)>` of duet pairs), and a `BinaryHeap<Scheduled<E>>`
+//! moves the whole payload at every sift swap. The heap therefore orders
+//! only compact [`HeapKey`]s — `(time, seq, arena slot)`, 24 bytes —
+//! while payloads sit still in a slot arena and are moved exactly twice:
+//! in at [`Sim::schedule_at`], out at [`Sim::next`]. Freed arena slots
+//! are recycled, so arena capacity is bounded by the *peak pending*
+//! event count, not by total events scheduled. Keys compare via
+//! [`total_cmp_f64`] (the repo-wide NaN policy; schedule-time finiteness
+//! asserts make NaN unreachable here, and for finite times `total_cmp`
+//! orders identically to `partial_cmp`).
 
+use crate::util::stats::total_cmp_f64;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 /// Virtual time in seconds since simulation start.
 pub type Time = f64;
 
-struct Scheduled<E> {
+/// Compact heap entry: ordering fields plus the payload's arena slot.
+struct HeapKey {
     at: Time,
     seq: u64,
-    event: E,
+    slot: u32,
 }
 
-impl<E> PartialEq for Scheduled<E> {
+impl PartialEq for HeapKey {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+        // seq is unique per scheduled event, so it alone decides equality.
+        self.seq == other.seq
     }
 }
-impl<E> Eq for Scheduled<E> {}
+impl Eq for HeapKey {}
 
-impl<E> Ord for Scheduled<E> {
+impl Ord for HeapKey {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
-        other
-            .at
-            .partial_cmp(&self.at)
-            .expect("NaN simulation time")
-            .then_with(|| other.seq.cmp(&self.seq))
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first;
+        // equal times fall back to FIFO scheduling order.
+        total_cmp_f64(other.at, self.at).then_with(|| other.seq.cmp(&self.seq))
     }
 }
-impl<E> PartialOrd for Scheduled<E> {
+impl PartialOrd for HeapKey {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
-/// The simulation core: clock + event heap.
+/// The simulation core: clock + key heap + payload arena.
 pub struct Sim<E> {
     now: Time,
     seq: u64,
-    heap: BinaryHeap<Scheduled<E>>,
+    heap: BinaryHeap<HeapKey>,
+    /// Payload arena indexed by `HeapKey::slot`; `None` = free slot.
+    arena: Vec<Option<E>>,
+    /// Vacated arena slots available for reuse.
+    free: Vec<u32>,
     fired: u64,
 }
 
@@ -66,6 +84,8 @@ impl<E> Sim<E> {
             now: 0.0,
             seq: 0,
             heap: BinaryHeap::new(),
+            arena: Vec::new(),
+            free: Vec::new(),
             fired: 0,
         }
     }
@@ -85,11 +105,17 @@ impl<E> Sim<E> {
         self.heap.len()
     }
 
+    /// Payload-arena capacity (pending + reusable slots): bounded by the
+    /// peak concurrent event count, a diagnostics/perf invariant.
+    pub fn arena_capacity(&self) -> usize {
+        self.arena.len()
+    }
+
     /// Schedule `event` after `delay` seconds of virtual time.
     ///
     /// Panics on a non-finite or negative delay, naming the offending
     /// value — a NaN must never reach the event heap, where it would only
-    /// surface later as a context-free ordering panic.
+    /// surface later as a silent mis-ordering.
     pub fn schedule(&mut self, delay: Time, event: E) {
         assert!(delay.is_finite(), "non-finite event delay {delay} (at t={})", self.now);
         assert!(delay >= 0.0, "negative delay {delay}");
@@ -107,21 +133,40 @@ impl<E> Sim<E> {
             "cannot schedule into the past: {at} < {}",
             self.now
         );
-        self.heap.push(Scheduled {
+        let slot = match self.free.pop() {
+            Some(s) => {
+                debug_assert!(self.arena[s as usize].is_none(), "free arena slot occupied");
+                self.arena[s as usize] = Some(event);
+                s
+            }
+            None => {
+                assert!(
+                    self.arena.len() < u32::MAX as usize,
+                    "event arena overflow (> 4e9 concurrently pending events)"
+                );
+                self.arena.push(Some(event));
+                (self.arena.len() - 1) as u32
+            }
+        };
+        self.heap.push(HeapKey {
             at,
             seq: self.seq,
-            event,
+            slot,
         });
         self.seq += 1;
     }
 
     /// Pop the next event, advancing the clock to its timestamp.
     pub fn next(&mut self) -> Option<(Time, E)> {
-        let s = self.heap.pop()?;
-        debug_assert!(s.at >= self.now);
-        self.now = s.at;
+        let k = self.heap.pop()?;
+        debug_assert!(k.at >= self.now);
+        self.now = k.at;
         self.fired += 1;
-        Some((s.at, s.event))
+        let event = self.arena[k.slot as usize]
+            .take()
+            .expect("heap key points at a filled arena slot");
+        self.free.push(k.slot);
+        Some((k.at, event))
     }
 
     /// Drain the queue through `handler` (which may schedule more events)
@@ -141,8 +186,8 @@ impl<E> Sim<E> {
         deadline: Time,
         mut handler: impl FnMut(&mut Sim<E>, Time, E),
     ) -> Time {
-        while let Some(s) = self.heap.peek() {
-            if s.at > deadline {
+        while let Some(k) = self.heap.peek() {
+            if k.at > deadline {
                 self.now = deadline;
                 break;
             }
@@ -272,5 +317,47 @@ mod tests {
         sim.next();
         assert_eq!(sim.events_fired(), 1);
         assert_eq!(sim.pending(), 1);
+    }
+
+    #[test]
+    fn arena_is_bounded_by_peak_pending_not_total_events() {
+        // A schedule/fire chain of 100k events with at most 8 pending
+        // must not grow the arena past 8 slots.
+        let mut sim: Sim<Vec<u64>> = Sim::new();
+        for i in 0..8u64 {
+            sim.schedule(1.0 + i as f64, vec![i; 4]);
+        }
+        let mut fired = 0u64;
+        let mut max_arena = 0usize;
+        while fired < 100_000 {
+            let (_, payload) = sim.next().expect("events pending");
+            fired += 1;
+            sim.schedule(1.0, payload);
+            max_arena = max_arena.max(sim.arena_capacity());
+        }
+        assert_eq!(sim.pending(), 8, "chain keeps the pending set constant");
+        assert!(
+            max_arena <= 8,
+            "arena grew to {max_arena} slots with only 8 pending"
+        );
+    }
+
+    #[test]
+    fn fat_payloads_round_trip_intact() {
+        // Payload identity survives the slot indirection under heavy
+        // interleaving (distinct sizes so corruption would be visible).
+        let mut sim: Sim<Vec<usize>> = Sim::new();
+        for i in 0..200usize {
+            sim.schedule(((i * 7919) % 100) as f64, vec![i; i % 17]);
+        }
+        let mut seen = 0;
+        sim.run(|_, _, payload| {
+            if let Some(&first) = payload.first() {
+                assert_eq!(payload.len(), first % 17);
+                assert!(payload.iter().all(|&x| x == first));
+            }
+            seen += 1;
+        });
+        assert_eq!(seen, 200);
     }
 }

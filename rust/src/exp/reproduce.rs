@@ -2,7 +2,8 @@
 //! markdown report with paper-vs-measured values for every table/figure.
 //!
 //! Used by `elastibench reproduce`, `examples/full_reproduction.rs`, and
-//! the bench targets; its output is the basis of EXPERIMENTS.md.
+//! the bench targets; its output is the paper-vs-measured reproduction
+//! report (`out/reproduction.md`).
 
 use super::sweep::repeats_sweep;
 use super::{aa, baseline, lower_memory, replication, single_repeat, vm_original, Workbench};

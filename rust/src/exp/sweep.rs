@@ -8,7 +8,7 @@
 //!
 //! This is the analysis-heavy experiment: ~45 prefix points x ~100
 //! benchmarks x B bootstrap resamples, all through the (XLA or native)
-//! bootstrap engine — the hot path profiled in EXPERIMENTS.md §Perf.
+//! bootstrap engine — the hot path profiled in `docs/perf.md`.
 
 use super::Workbench;
 use crate::config::ExperimentConfig;

@@ -1,13 +1,17 @@
 //! FaaS platform simulator and the provider-profile registry.
 //!
 //! See [`platform::FaasPlatform`] for the instance/scheduling/billing
-//! model, [`noise`] for the §3.1 performance-variability model shared
+//! model (an O(1)-per-invocation slot-map pool), [`platform_reference`]
+//! for the retired O(N) scan pool kept as the differential-testing
+//! oracle, [`noise`] for the §3.1 performance-variability model shared
 //! with the VM simulator, and [`profile`] for the named provider
 //! calibrations ([`PlatformProfile`]) that scenarios select platforms by.
 
 pub mod noise;
 mod platform;
+pub mod platform_reference;
 pub mod profile;
 
-pub use platform::{FaasPlatform, Instance, Placement, PlatformStats};
+pub use platform::{FaasPlatform, Instance, InstancePool, Placement, PlatformStats};
+pub use platform_reference::ReferencePlatform;
 pub use profile::{profile_by_name, profile_names, profiles, PlatformProfile};

@@ -14,11 +14,36 @@
 //! * billing follows Lambda: GB-seconds of execution plus a per-request
 //!   fee (cold-start init is not billed, matching managed runtimes);
 //! * optional crash injection for failure testing.
+//!
+//! ## Scheduling cost model
+//!
+//! Experiments at paper scale route thousands of calls over fleets of
+//! 10³–10⁴ instances, so every per-invocation cost here is O(1):
+//!
+//! * the instance table is a **slot map** (`Vec<Option<Instance>>` plus a
+//!   free list). A [`Placement::instance`] handle stays valid for the
+//!   whole life of its instance — reaping another instance never moves
+//!   it. (The previous `Vec::retain` compaction invalidated in-flight
+//!   handles; that scan-based pool survives as
+//!   [`super::platform_reference::ReferencePlatform`] for differential
+//!   testing.)
+//! * warm acquisition pops the front of an **idle FIFO deque**. Releases
+//!   happen in nondecreasing event time (the DES clock is monotone), so
+//!   push-back order *is* `idle_since` order and the front is always the
+//!   longest-idle warm instance — the paper's FIFO-reuse semantics
+//!   without a scan.
+//! * keepalive reaping is **lazy off the deque front**: expired idle
+//!   instances form a prefix of the deque, so popping while the front is
+//!   expired reaps exactly the set the reference's full-table sweep
+//!   would, at the same acquire.
+//! * the busy tally is an incrementally maintained counter, not a
+//!   `filter().count()` pass.
 
 use super::noise::{EnvState, NoiseParams};
 use crate::config::PlatformConfig;
 use crate::des::Time;
 use crate::util::Rng;
+use std::collections::VecDeque;
 
 /// One function instance (a MicroVM in Lambda terms).
 #[derive(Debug)]
@@ -42,7 +67,9 @@ pub struct Instance {
 /// Result of routing an invocation.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Placement {
-    /// Index into the platform's instance table.
+    /// Stable slot handle into the platform's instance table: valid from
+    /// this acquire until the instance itself is reaped, regardless of
+    /// how many *other* instances are reaped in between.
     pub instance: usize,
     /// When the function handler actually starts (after dispatch or cold
     /// start).
@@ -68,12 +95,59 @@ pub struct PlatformStats {
     pub crashes: u64,
 }
 
+/// The instance-pool interface the coordinator schedules against.
+///
+/// Implemented by the production slot-map pool ([`FaasPlatform`]) and by
+/// the O(N)-scan reference pool
+/// ([`super::platform_reference::ReferencePlatform`]); the differential
+/// suite in `rust/tests/platform_pool.rs` drives both through identical
+/// seeded workloads and compares every observable.
+pub trait InstancePool {
+    /// Route an invocation arriving at `t` (see [`FaasPlatform::acquire`]).
+    fn acquire(&mut self, t: Time) -> Option<Placement>;
+    /// Finish an invocation (see [`FaasPlatform::release`]).
+    ///
+    /// Contract: callers must release in nondecreasing `t_end` order
+    /// (the DES clock is monotone, so event-driven callers get this for
+    /// free). The O(1) pool's reaping correctness depends on it — see
+    /// [`FaasPlatform::release`].
+    fn release(&mut self, instance: usize, t_end: Time, billed_s: f64);
+    /// Environment factor of an instance at `t`.
+    fn env_factor(&mut self, instance: usize, t: Time) -> f64;
+    /// Whether the instance's writable cache is populated.
+    fn cache_warm(&self, instance: usize) -> bool;
+    /// Roll the crash die for an invocation.
+    fn maybe_crash(&mut self) -> bool;
+    /// vCPU share of each instance under the current memory config.
+    fn vcpus(&self) -> f64;
+    /// Total cost so far (GB-seconds + per-request fees).
+    fn cost_usd(&self) -> f64;
+    /// Aggregate metrics snapshot.
+    fn stats(&self) -> PlatformStats;
+    /// Live (unreaped) instance count.
+    fn instance_count(&self) -> usize;
+    /// Stable creation id of a live instance (diagnostics + differential
+    /// tests: slot numbering may differ across pool implementations, ids
+    /// never do).
+    fn instance_id(&self, instance: usize) -> u64;
+}
+
 /// The deployed-function platform state.
 pub struct FaasPlatform {
     cfg: PlatformConfig,
     noise: NoiseParams,
     rng: Rng,
-    instances: Vec<Instance>,
+    /// Slot map: `Some` = live instance, `None` = free slot. Indices are
+    /// the stable [`Placement::instance`] handles.
+    slots: Vec<Option<Instance>>,
+    /// Free slots available for reuse (stack: cold starts refill the
+    /// most recently vacated slot first).
+    free: Vec<usize>,
+    /// Idle instances in release order == `idle_since` order; front is
+    /// the longest-idle (next to reuse, first to expire).
+    idle: VecDeque<usize>,
+    /// Instances currently executing an invocation.
+    busy: usize,
     next_id: u64,
     /// Image size [GB] of the deployed function.
     image_gb: f64,
@@ -104,7 +178,10 @@ impl FaasPlatform {
             cfg: cfg.clone(),
             noise,
             rng: Rng::new(seed).fork(0xFAA5),
-            instances: Vec::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            idle: VecDeque::new(),
+            busy: 0,
             next_id: 0,
             image_gb: image_mb / 1024.0,
             memory_mb,
@@ -118,39 +195,33 @@ impl FaasPlatform {
         self.cfg.vcpus(self.memory_mb)
     }
 
-    /// Route an invocation arriving at `t`: reuse an idle warm instance
-    /// or cold-start a new one. Returns `None` when the account
-    /// concurrency limit is exhausted (caller should retry later).
+    /// Route an invocation arriving at `t`: reuse the longest-idle warm
+    /// instance (FIFO reuse, approximating Lambda's behaviour) or
+    /// cold-start a new one. Returns `None` when the account concurrency
+    /// limit is exhausted (caller should retry later). O(1) amortized:
+    /// reaping pops only instances that actually expired, and each
+    /// instance is reaped at most once.
     pub fn acquire(&mut self, t: Time) -> Option<Placement> {
         self.reap(t);
         self.stats.invocations += 1;
-        // Prefer the warm instance that has been idle the longest (FIFO
-        // reuse, approximating Lambda's behaviour).
-        let candidate = self
-            .instances
-            .iter()
-            .enumerate()
-            .filter(|(_, i)| i.busy_until <= t)
-            .min_by(|(_, a), (_, b)| {
-                a.idle_since
-                    .partial_cmp(&b.idle_since)
-                    .expect("NaN idle time")
-            })
-            .map(|(idx, _)| idx);
-        if let Some(idx) = candidate {
-            let inst = &mut self.instances[idx];
+        if let Some(slot) = self.idle.pop_front() {
+            let inst = self.slots[slot].as_mut().expect("idle slot holds an instance");
+            debug_assert!(
+                inst.busy_until == f64::NEG_INFINITY,
+                "instance on the idle deque must be idle"
+            );
             inst.busy_until = f64::INFINITY; // held until release()
+            self.busy += 1;
             return Some(Placement {
-                instance: idx,
+                instance: slot,
                 start_at: t + self.cfg.warm_dispatch_s,
                 cold: false,
             });
         }
-        let busy = self.instances.iter().filter(|i| i.busy_until > t).count();
-        if busy >= self.cfg.concurrency_limit {
+        if self.busy >= self.cfg.concurrency_limit {
             return None;
         }
-        // Cold start: new instance.
+        // Cold start: new instance into a vacated slot (or a fresh one).
         let cold_latency = self.cold_start_latency();
         self.cold_seen += 1;
         self.stats.cold_starts += 1;
@@ -164,9 +235,20 @@ impl FaasPlatform {
             cache_warm: false,
         };
         self.next_id += 1;
-        self.instances.push(inst);
+        self.busy += 1;
+        let slot = match self.free.pop() {
+            Some(s) => {
+                debug_assert!(self.slots[s].is_none(), "free slot occupied");
+                self.slots[s] = Some(inst);
+                s
+            }
+            None => {
+                self.slots.push(Some(inst));
+                self.slots.len() - 1
+            }
+        };
         Some(Placement {
-            instance: self.instances.len() - 1,
+            instance: slot,
             start_at: t + cold_latency,
             cold: true,
         })
@@ -201,27 +283,64 @@ impl FaasPlatform {
     /// Finish an invocation on `instance` at time `t_end`, billing
     /// `billed_s` seconds of execution (metered per
     /// [`FaasPlatform::metered_s`]).
+    ///
+    /// `t_end` values must be nondecreasing across calls: release order
+    /// is what keeps the idle deque sorted by `idle_since`, which in
+    /// turn is what makes expired instances a reapable *prefix* and the
+    /// deque front the longest-idle warm candidate. Out-of-order
+    /// releases would silently skip reaps and break FIFO reuse (debug
+    /// builds assert; event-driven callers satisfy this for free
+    /// because the DES clock is monotone).
     pub fn release(&mut self, instance: usize, t_end: Time, billed_s: f64) {
         let mem_gb = self.memory_mb as f64 / 1024.0;
         self.stats.billed_gb_s += self.metered_s(billed_s) * mem_gb;
-        let inst = &mut self.instances[instance];
+        // Releases arrive in DES-clock order, which is what keeps the
+        // idle deque sorted by idle_since without ever sorting it.
+        debug_assert!(
+            self.idle.back().map_or(true, |&b| {
+                self.slots[b].as_ref().expect("idle slot live").idle_since <= t_end
+            }),
+            "release out of time order would unsort the idle deque"
+        );
+        let inst = self.slots[instance]
+            .as_mut()
+            .expect("release() on a reaped instance: stale Placement handle");
+        debug_assert!(
+            inst.busy_until == f64::INFINITY,
+            "release() on an instance that was not acquired"
+        );
         inst.busy_until = f64::NEG_INFINITY;
         inst.idle_since = t_end;
         inst.invocations += 1;
         inst.cache_warm = true;
+        self.busy -= 1;
+        self.idle.push_back(instance);
     }
 
     /// Environment factor of an instance at time `t` (advances its AR(1)
     /// co-tenancy state).
     pub fn env_factor(&mut self, instance: usize, t: Time) -> f64 {
-        self.instances[instance]
+        self.slots[instance]
+            .as_mut()
+            .expect("env_factor() on a reaped instance: stale Placement handle")
             .env
             .factor(&self.noise, &mut self.rng, t)
     }
 
     /// Whether the instance's writable cache is already populated.
     pub fn cache_warm(&self, instance: usize) -> bool {
-        self.instances[instance].cache_warm
+        self.slots[instance]
+            .as_ref()
+            .expect("cache_warm() on a reaped instance: stale Placement handle")
+            .cache_warm
+    }
+
+    /// Stable creation id of a live instance.
+    pub fn instance_id(&self, instance: usize) -> u64 {
+        self.slots[instance]
+            .as_ref()
+            .expect("instance_id() on a reaped instance: stale Placement handle")
+            .id
     }
 
     /// Roll the crash die for an invocation (failure injection).
@@ -246,16 +365,63 @@ impl FaasPlatform {
 
     /// Live (unreaped) instance count.
     pub fn instance_count(&self) -> usize {
-        self.instances.len()
+        self.slots.len() - self.free.len()
     }
 
-    /// Drop instances idle past the keepalive window.
+    /// Slot-table capacity (live + free slots). Diagnostics: bounded by
+    /// the peak live fleet, not by total instances ever created.
+    pub fn slot_capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Reap instances idle past the keepalive window. Expired instances
+    /// are exactly a prefix of the idle deque (it is sorted by
+    /// `idle_since`), so this pops until the front is still alive.
     fn reap(&mut self, t: Time) {
         let keepalive = self.cfg.keepalive_s;
-        let before = self.instances.len();
-        self.instances
-            .retain(|i| i.busy_until > t || t - i.idle_since <= keepalive);
-        self.stats.instances_reaped += (before - self.instances.len()) as u64;
+        while let Some(&slot) = self.idle.front() {
+            let idle_since = self.slots[slot].as_ref().expect("idle slot live").idle_since;
+            if t - idle_since <= keepalive {
+                break;
+            }
+            self.idle.pop_front();
+            self.slots[slot] = None;
+            self.free.push(slot);
+            self.stats.instances_reaped += 1;
+        }
+    }
+}
+
+impl InstancePool for FaasPlatform {
+    fn acquire(&mut self, t: Time) -> Option<Placement> {
+        FaasPlatform::acquire(self, t)
+    }
+    fn release(&mut self, instance: usize, t_end: Time, billed_s: f64) {
+        FaasPlatform::release(self, instance, t_end, billed_s)
+    }
+    fn env_factor(&mut self, instance: usize, t: Time) -> f64 {
+        FaasPlatform::env_factor(self, instance, t)
+    }
+    fn cache_warm(&self, instance: usize) -> bool {
+        FaasPlatform::cache_warm(self, instance)
+    }
+    fn maybe_crash(&mut self) -> bool {
+        FaasPlatform::maybe_crash(self)
+    }
+    fn vcpus(&self) -> f64 {
+        FaasPlatform::vcpus(self)
+    }
+    fn cost_usd(&self) -> f64 {
+        FaasPlatform::cost_usd(self)
+    }
+    fn stats(&self) -> PlatformStats {
+        FaasPlatform::stats(self)
+    }
+    fn instance_count(&self) -> usize {
+        FaasPlatform::instance_count(self)
+    }
+    fn instance_id(&self, instance: usize) -> u64 {
+        FaasPlatform::instance_id(self, instance)
     }
 }
 
@@ -298,6 +464,19 @@ mod tests {
     }
 
     #[test]
+    fn warm_reuse_is_fifo_longest_idle_first() {
+        let mut p = platform();
+        let a = p.acquire(0.0).unwrap();
+        let b = p.acquire(0.5).unwrap();
+        p.release(a.instance, 10.0, 9.0); // idle since 10
+        p.release(b.instance, 12.0, 11.0); // idle since 12
+        let c = p.acquire(20.0).unwrap();
+        assert_eq!(c.instance, a.instance, "longest-idle instance reused first");
+        let d = p.acquire(21.0).unwrap();
+        assert_eq!(d.instance, b.instance);
+    }
+
+    #[test]
     fn parallel_burst_creates_many_instances() {
         let mut p = platform();
         let placements: Vec<_> = (0..150).map(|i| p.acquire(i as f64 * 0.01).unwrap()).collect();
@@ -314,6 +493,45 @@ mod tests {
         let b = p.acquire(5.0 + 601.0).unwrap();
         assert!(b.cold);
         assert_eq!(p.stats().instances_reaped, 1);
+    }
+
+    #[test]
+    fn reaped_slots_are_reused_with_fresh_ids() {
+        let mut p = platform();
+        let a = p.acquire(0.0).unwrap();
+        let a_id = p.instance_id(a.instance);
+        p.release(a.instance, 5.0, 4.0);
+        let b = p.acquire(5.0 + 601.0).unwrap();
+        // The vacated slot is recycled but the new instance has a new id.
+        assert_eq!(b.instance, a.instance);
+        assert_ne!(p.instance_id(b.instance), a_id);
+        assert_eq!(p.instance_count(), 1);
+        assert_eq!(p.slot_capacity(), 1, "table stays at peak-fleet size");
+    }
+
+    #[test]
+    fn reaping_does_not_move_live_instances() {
+        // The latent bug in the scan-based pool: reaping compacted the
+        // table under in-flight Placement handles. The slot map must keep
+        // a held handle pointing at the same instance across a reap.
+        let cfg = PlatformConfig {
+            keepalive_s: 10.0,
+            ..PlatformConfig::default()
+        };
+        let mut p = FaasPlatform::deploy(&cfg, 1700.0, 2048, 12.0, 5);
+        let a = p.acquire(0.0).unwrap();
+        let b = p.acquire(0.1).unwrap();
+        let b_id = p.instance_id(b.instance);
+        p.release(a.instance, 1.0, 0.9);
+        // a expires at 11.0; acquiring at 20 reaps it while b is held.
+        let c = p.acquire(20.0).unwrap();
+        assert!(c.cold);
+        assert_eq!(p.stats().instances_reaped, 1);
+        assert_eq!(p.instance_id(b.instance), b_id, "held handle survives the reap");
+        // Releasing b lands on b, not on the cold newcomer.
+        p.release(b.instance, 21.0, 20.0);
+        assert!(!p.cache_warm(c.instance), "release must not leak onto c");
+        assert!(p.cache_warm(b.instance));
     }
 
     #[test]
@@ -377,6 +595,10 @@ mod tests {
             assert!(p.acquire(i as f64).is_some());
         }
         assert!(p.acquire(3.0).is_none(), "limit reached");
+        // A release frees exactly one unit of concurrency.
+        p.release(0, 4.0, 1.0);
+        assert!(p.acquire(4.5).is_some());
+        assert!(p.acquire(5.0).is_none());
     }
 
     #[test]
@@ -424,5 +646,44 @@ mod tests {
         let p1024 = FaasPlatform::deploy(&PlatformConfig::default(), 1700.0, 1024, 16.83, 42);
         assert!(p2048.vcpus() > 1.0);
         assert!(p1024.vcpus() < 0.3);
+    }
+
+    #[test]
+    fn churn_keeps_pool_state_consistent() {
+        // Sustained acquire/release/reap churn: the slot map, free list,
+        // idle deque and busy counter must stay mutually consistent.
+        let cfg = PlatformConfig {
+            keepalive_s: 5.0,
+            ..PlatformConfig::default()
+        };
+        let mut p = FaasPlatform::deploy(&cfg, 1700.0, 2048, 12.0, 11);
+        let mut rng = Rng::new(99);
+        let mut t = 0.0;
+        let mut held: Vec<usize> = Vec::new();
+        for step in 0..5000 {
+            t += rng.f64() * 0.5;
+            if step % 17 == 0 {
+                t += 20.0; // periodic gaps past keepalive force reaps
+            }
+            if !held.is_empty() && rng.chance(0.5) {
+                let i = rng.below_usize(held.len());
+                let slot = held.swap_remove(i);
+                p.release(slot, t, 0.1);
+            } else if let Some(pl) = p.acquire(t) {
+                held.push(pl.instance);
+            }
+            assert_eq!(
+                p.instance_count() + p.free.len(),
+                p.slots.len(),
+                "slot accounting"
+            );
+            assert_eq!(p.busy, held.len(), "busy counter");
+            assert_eq!(
+                p.idle.len(),
+                p.instance_count() - held.len(),
+                "idle deque holds exactly the idle instances"
+            );
+        }
+        assert!(p.stats().instances_reaped > 0, "churn must reap");
     }
 }

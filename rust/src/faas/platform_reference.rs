@@ -1,0 +1,240 @@
+//! The original O(live instances)-per-acquire scan-based instance pool,
+//! preserved verbatim as a differential-testing baseline for the slot-map
+//! pool in [`super::platform`] (the `bootstrap_row_reference` pattern:
+//! the replaced implementation stays in-tree as the oracle).
+//!
+//! Per acquire this pool pays a full-table `Vec::retain` reap, an O(N)
+//! `min_by` scan for the longest-idle warm instance and an O(N)
+//! `filter().count()` busy tally — the O(N²)-per-experiment behaviour
+//! the slot map removes (before/after numbers: `docs/perf.md`).
+//!
+//! ## Known bug (kept intentionally)
+//!
+//! `reap()`'s `Vec::retain` *compacts* the instance table. A
+//! [`Placement`] handle held across DES events (every in-flight call
+//! holds one) is a raw index into that table, so reaping a lower-indexed
+//! instance silently redirects the handle: `release()` bills the wrong
+//! instance, `env_factor()` advances the wrong AR(1) state, and — when
+//! the reaped count exceeds the surviving tail — indexes out of bounds.
+//! The regression test `reap_while_in_flight_*` in
+//! `rust/tests/platform_pool.rs` pins this down: it fails against this
+//! pool and passes against [`super::FaasPlatform`]. Differential tests
+//! therefore only drive this pool with workloads that quiesce (no
+//! in-flight calls) before any reap-triggering acquire — the domain
+//! where both pools are correct and must agree exactly.
+
+use super::noise::{EnvState, NoiseParams};
+use super::platform::{InstancePool, Placement, PlatformStats};
+use crate::config::PlatformConfig;
+use crate::des::Time;
+use crate::util::Rng;
+
+/// The scan-based pool (see the module docs for why it still exists).
+pub struct ReferencePlatform {
+    cfg: PlatformConfig,
+    noise: NoiseParams,
+    rng: Rng,
+    instances: Vec<RefInstance>,
+    next_id: u64,
+    image_gb: f64,
+    memory_mb: u64,
+    cold_seen: usize,
+    stats: PlatformStats,
+}
+
+/// Instance record of the reference pool (same fields as
+/// [`super::Instance`]; duplicated because the production struct keeps
+/// its scheduling fields private to the slot map).
+#[derive(Debug)]
+struct RefInstance {
+    id: u64,
+    env: EnvState,
+    busy_until: Time,
+    idle_since: Time,
+    /// Kept for field parity with the production pool; the reference
+    /// exposes no per-instance counters.
+    #[allow(dead_code)]
+    invocations: u64,
+    cache_warm: bool,
+}
+
+impl ReferencePlatform {
+    /// Deploy a function image (size in MB) with the given memory config.
+    /// Same constructor contract (and RNG stream) as
+    /// [`super::FaasPlatform::deploy`].
+    pub fn deploy(
+        cfg: &PlatformConfig,
+        image_mb: f64,
+        memory_mb: u64,
+        start_hour_utc: f64,
+        seed: u64,
+    ) -> Self {
+        let noise = NoiseParams {
+            instance_sigma: cfg.instance_sigma,
+            diurnal_amplitude: cfg.diurnal_amplitude,
+            start_hour_utc,
+            cotenancy_sigma: cfg.cotenancy_sigma,
+            cotenancy_revert: cfg.cotenancy_revert,
+        };
+        ReferencePlatform {
+            cfg: cfg.clone(),
+            noise,
+            rng: Rng::new(seed).fork(0xFAA5),
+            instances: Vec::new(),
+            next_id: 0,
+            image_gb: image_mb / 1024.0,
+            memory_mb,
+            cold_seen: 0,
+            stats: PlatformStats::default(),
+        }
+    }
+
+    fn cold_start_latency(&mut self) -> f64 {
+        let base = self.cfg.cold_start_base_s + self.cfg.cold_start_per_gb_s * self.image_gb;
+        let mult = if self.cold_seen < self.cfg.uncached_cold_count {
+            self.cfg.uncached_cold_multiplier
+        } else {
+            1.0
+        };
+        base * mult * self.rng.lognormal(0.0, 0.15)
+    }
+
+    fn metered_s(&self, raw_s: f64) -> f64 {
+        let g = self.cfg.billing_granularity_s;
+        let s = raw_s.max(self.cfg.billing_min_s);
+        if g <= 0.0 {
+            return s;
+        }
+        (s / g - 1e-9).ceil().max(0.0) * g
+    }
+
+    /// The original eager full-table reap — `Vec::retain` compacts,
+    /// which is both the O(N) cost and the index-invalidation bug.
+    fn reap(&mut self, t: Time) {
+        let keepalive = self.cfg.keepalive_s;
+        let before = self.instances.len();
+        self.instances
+            .retain(|i| i.busy_until > t || t - i.idle_since <= keepalive);
+        self.stats.instances_reaped += (before - self.instances.len()) as u64;
+    }
+}
+
+impl InstancePool for ReferencePlatform {
+    fn acquire(&mut self, t: Time) -> Option<Placement> {
+        self.reap(t);
+        self.stats.invocations += 1;
+        // Prefer the warm instance that has been idle the longest (FIFO
+        // reuse) — a full O(N) scan.
+        let candidate = self
+            .instances
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.busy_until <= t)
+            .min_by(|(_, a), (_, b)| {
+                a.idle_since
+                    .partial_cmp(&b.idle_since)
+                    .expect("NaN idle time")
+            })
+            .map(|(idx, _)| idx);
+        if let Some(idx) = candidate {
+            let inst = &mut self.instances[idx];
+            inst.busy_until = f64::INFINITY; // held until release()
+            return Some(Placement {
+                instance: idx,
+                start_at: t + self.cfg.warm_dispatch_s,
+                cold: false,
+            });
+        }
+        let busy = self.instances.iter().filter(|i| i.busy_until > t).count();
+        if busy >= self.cfg.concurrency_limit {
+            return None;
+        }
+        // Cold start: new instance appended at the end.
+        let cold_latency = self.cold_start_latency();
+        self.cold_seen += 1;
+        self.stats.cold_starts += 1;
+        self.stats.instances_created += 1;
+        let inst = RefInstance {
+            id: self.next_id,
+            env: EnvState::new(&self.noise, &mut self.rng, t),
+            busy_until: f64::INFINITY,
+            idle_since: t,
+            invocations: 0,
+            cache_warm: false,
+        };
+        self.next_id += 1;
+        self.instances.push(inst);
+        Some(Placement {
+            instance: self.instances.len() - 1,
+            start_at: t + cold_latency,
+            cold: true,
+        })
+    }
+
+    fn release(&mut self, instance: usize, t_end: Time, billed_s: f64) {
+        let mem_gb = self.memory_mb as f64 / 1024.0;
+        self.stats.billed_gb_s += self.metered_s(billed_s) * mem_gb;
+        let inst = &mut self.instances[instance];
+        inst.busy_until = f64::NEG_INFINITY;
+        inst.idle_since = t_end;
+        inst.invocations += 1;
+        inst.cache_warm = true;
+    }
+
+    fn env_factor(&mut self, instance: usize, t: Time) -> f64 {
+        self.instances[instance]
+            .env
+            .factor(&self.noise, &mut self.rng, t)
+    }
+
+    fn cache_warm(&self, instance: usize) -> bool {
+        self.instances[instance].cache_warm
+    }
+
+    fn maybe_crash(&mut self) -> bool {
+        let crash = self.cfg.crash_probability > 0.0 && self.rng.chance(self.cfg.crash_probability);
+        if crash {
+            self.stats.crashes += 1;
+        }
+        crash
+    }
+
+    fn vcpus(&self) -> f64 {
+        self.cfg.vcpus(self.memory_mb)
+    }
+
+    fn cost_usd(&self) -> f64 {
+        self.stats.billed_gb_s * self.cfg.usd_per_gb_s
+            + self.stats.invocations as f64 * self.cfg.usd_per_request
+    }
+
+    fn stats(&self) -> PlatformStats {
+        self.stats
+    }
+
+    fn instance_count(&self) -> usize {
+        self.instances.len()
+    }
+
+    fn instance_id(&self, instance: usize) -> u64 {
+        self.instances[instance].id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_matches_old_behaviour_on_the_basics() {
+        let cfg = PlatformConfig::default();
+        let mut p = ReferencePlatform::deploy(&cfg, 1700.0, 2048, 16.83, 42);
+        let a = p.acquire(0.0).unwrap();
+        assert!(a.cold);
+        p.release(a.instance, 10.0, 9.0);
+        let b = p.acquire(20.0).unwrap();
+        assert!(!b.cold);
+        assert_eq!(b.instance, a.instance);
+        assert!((p.stats().billed_gb_s - 18.0).abs() < 1e-9);
+    }
+}

@@ -67,7 +67,7 @@ pub fn agreement_table(rows: &[String]) -> String {
     out
 }
 
-/// One paper-vs-measured row for EXPERIMENTS.md.
+/// One paper-vs-measured row of the reproduction report.
 #[derive(Debug, Clone)]
 pub struct PaperRow {
     /// Metric name (e.g. "baseline agreement").

@@ -49,6 +49,10 @@ pub const CATALOG_SOURCES: &[(&str, &str)] = &[
         "lambda-sweep.toml",
         include_str!("../../../scenarios/lambda-sweep.toml"),
     ),
+    (
+        "lambda-hyperscale.toml",
+        include_str!("../../../scenarios/lambda-hyperscale.toml"),
+    ),
 ];
 
 /// Load the full shipped catalog, in catalog order.

@@ -7,7 +7,7 @@
 //! The artifact-vs-native agreement is enforced by
 //! `rust/tests/runtime_artifact.rs` and the `testkit` property suite.
 //!
-//! ## §Perf optimizations (see EXPERIMENTS.md §Perf for the log)
+//! ## §Perf optimizations (see `docs/perf.md` for the measured log)
 //!
 //! The optimized row kernel ([`bootstrap_row`]) replaces the original
 //! gather + two-quickselect formulation ([`bootstrap_row_reference`],

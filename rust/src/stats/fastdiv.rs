@@ -6,7 +6,7 @@
 //! reduce the `%` itself. This precomputes a Granlund–Montgomery-style
 //! reciprocal once per benchmark row and turns each modulo into a
 //! multiply + shift + multiply-subtract (§Perf optimization #1, see
-//! EXPERIMENTS.md).
+//! `docs/perf.md`).
 //!
 //! Exactness domain: dividend < 2^31 (the index bits are 31-bit by
 //! construction, `Rng::fill_index_bits`) and divisor <= 4096 (lane widths

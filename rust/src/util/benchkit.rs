@@ -2,8 +2,14 @@
 //!
 //! criterion is unavailable in the offline registry, so the bench binaries
 //! (declared `harness = false`) use this: warmup + N timed iterations,
-//! reporting min/median/mean wall time and derived throughput.
+//! reporting min/median/mean wall time and derived throughput. Besides
+//! the human-readable one-liners, [`BenchReport`] serializes the same
+//! numbers as a machine-readable `BENCH_*.json` (schema
+//! [`BENCH_REPORT_SCHEMA`]) so CI can track perf trajectories across
+//! commits — see `docs/perf.md` for the log and
+//! `docs/benchmarks.md` ("Simulator throughput") for the format.
 
+use crate::util::json::{obj, Json};
 use std::time::Instant;
 
 /// Timing summary of one benchmark case.
@@ -46,6 +52,86 @@ fn fmt_s(s: f64) -> String {
         format!("{:.3} ms", s * 1e3)
     } else {
         format!("{:.3} µs", s * 1e6)
+    }
+}
+
+/// Schema tag of the machine-readable bench report.
+pub const BENCH_REPORT_SCHEMA: &str = "elastibench.bench-report.v1";
+
+/// Collects [`TimingStats`] cases plus derived scalar metrics and writes
+/// them as one `BENCH_<name>.json` document:
+///
+/// ```json
+/// {"schema":"elastibench.bench-report.v1","bench":"simulator",
+///  "cases":[{"name":"...","iters":5,"min_s":...,"median_s":...,
+///            "mean_s":...,"items_per_s":...}],
+///  "metrics":{"des_events_per_s":...}}
+/// ```
+///
+/// `items_per_s` is derived from the median (the robust central
+/// tendency, same convention as [`TimingStats::report`]) and omitted
+/// when no item count applies.
+#[derive(Debug, Clone, Default)]
+pub struct BenchReport {
+    /// Bench target name (`simulator`, `analysis`, ...).
+    pub bench: String,
+    cases: Vec<Json>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    /// Empty report for one bench target.
+    pub fn new(bench: &str) -> Self {
+        BenchReport {
+            bench: bench.to_string(),
+            cases: Vec::new(),
+            metrics: Vec::new(),
+        }
+    }
+
+    /// Record one timed case (mirrors [`TimingStats::report`]).
+    pub fn case(&mut self, stats: &TimingStats, items_per_iter: Option<f64>) {
+        let mut pairs = vec![
+            ("name", Json::Str(stats.name.clone())),
+            ("iters", Json::Num(stats.iters as f64)),
+            ("min_s", Json::Num(stats.min_s)),
+            ("median_s", Json::Num(stats.median_s)),
+            ("mean_s", Json::Num(stats.mean_s)),
+        ];
+        if let Some(items) = items_per_iter {
+            pairs.push(("items_per_s", Json::Num(items / stats.median_s)));
+        }
+        self.cases.push(obj(pairs));
+    }
+
+    /// Record a derived scalar metric (throughput, speedup ratio, ...).
+    pub fn metric(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), value));
+    }
+
+    /// Serialize to the `elastibench.bench-report.v1` document.
+    pub fn to_json(&self) -> Json {
+        let metrics: std::collections::BTreeMap<String, Json> = self
+            .metrics
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        obj(vec![
+            ("schema", Json::Str(BENCH_REPORT_SCHEMA.to_string())),
+            ("bench", Json::Str(self.bench.clone())),
+            ("cases", Json::Arr(self.cases.clone())),
+            ("metrics", Json::Obj(metrics)),
+        ])
+    }
+
+    /// Write the document to `path` (creating parent directories).
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
     }
 }
 
@@ -97,5 +183,50 @@ mod tests {
         assert!(fmt_s(2.0).contains(" s"));
         assert!(fmt_s(0.002).contains("ms"));
         assert!(fmt_s(0.000002).contains("µs"));
+    }
+
+    #[test]
+    fn bench_report_round_trips_through_json() {
+        let stats = TimingStats {
+            name: "des: chained events".into(),
+            iters: 5,
+            min_s: 0.5,
+            median_s: 1.0,
+            mean_s: 1.1,
+        };
+        let mut report = BenchReport::new("simulator");
+        report.case(&stats, Some(200_000.0));
+        report.case(&stats, None);
+        report.metric("full_experiment_speedup", 7.5);
+        let text = report.to_json().to_string();
+        let j = crate::util::json::parse(&text).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(BENCH_REPORT_SCHEMA));
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("simulator"));
+        let cases = j.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(
+            cases[0].get("items_per_s").unwrap().as_f64(),
+            Some(200_000.0),
+            "items/s derives from the median"
+        );
+        assert!(cases[1].get("items_per_s").is_none());
+        assert_eq!(
+            j.get("metrics").unwrap().get("full_experiment_speedup").unwrap().as_f64(),
+            Some(7.5)
+        );
+    }
+
+    #[test]
+    fn bench_report_writes_to_disk() {
+        let dir = std::env::temp_dir().join("elastibench_benchkit_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested").join("BENCH_simulator.json");
+        let mut report = BenchReport::new("simulator");
+        report.metric("events_per_s", 1.0e7);
+        report.write(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("simulator"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

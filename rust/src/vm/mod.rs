@@ -69,8 +69,10 @@ pub fn run_vm_baseline(suite: &Suite, sut: &SutConfig, cfg: &VmConfig) -> VmRunR
         .iter()
         .map(|b| Measurements {
             name: b.name.clone(),
-            v1: Vec::new(),
-            v2: Vec::new(),
+            // One duet pair per repetition at most; reserve once so the
+            // RMIT loop never reallocates mid-measurement.
+            v1: Vec::with_capacity(cfg.repetitions),
+            v2: Vec::with_capacity(cfg.repetitions),
         })
         .collect();
 

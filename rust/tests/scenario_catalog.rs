@@ -175,6 +175,37 @@ fn shipped_matrix_recipe_expands_and_is_strictly_parsed() {
 }
 
 #[test]
+fn hyperscale_entry_exercises_pool_churn() {
+    // The large-fleet catalog entry: parallelism at the 1000-instance
+    // scale, thousands of planned calls, and a keepalive short enough
+    // that the pool reaps under load (the slot-map scheduler's target
+    // regime, docs/perf.md).
+    let sc = catalog_entry("lambda-hyperscale").unwrap();
+    assert!(sc.exp.parallelism >= 1000, "parallelism {}", sc.exp.parallelism);
+    assert!(sc.planned_calls() >= 3000, "planned {}", sc.planned_calls());
+    assert!(
+        sc.platform.keepalive_s <= 30.0,
+        "keepalive {} too long to churn",
+        sc.platform.keepalive_s
+    );
+    assert!(sc.tags.iter().any(|t| t == "scale"), "{:?}", sc.tags);
+
+    // A scaled-down run through the same recipe machinery must complete
+    // and burst-cold-start its whole (scaled) fleet.
+    let analyzer = Analyzer::native();
+    let mut small = sc.clone();
+    small.sut.benchmark_count = 10;
+    small.sut.true_changes = 3;
+    small.sut.faas_incompatible = 1;
+    small.sut.slow_setup = 1;
+    small.exp.calls_per_benchmark = 8;
+    small.exp.parallelism = 40;
+    let report = run_scenario(&small, &analyzer).unwrap();
+    assert_eq!(report.run.calls_total, 10 * 8);
+    assert!(report.run.platform.cold_starts >= 40, "burst cold start");
+}
+
+#[test]
 fn profiles_change_run_economics() {
     // The same (small) workload priced on three providers must differ in
     // cost/wall-time — the whole point of multi-provider profiles.

@@ -1,15 +1,31 @@
 //! §Perf: bootstrap-analysis throughput — the native Rust engine vs the
 //! AOT-compiled XLA artifact, at the paper's production geometry
-//! (B = 2048 resamples, N = 64 lanes, 45 valid samples per benchmark).
+//! (B = 2048 resamples, N = 64 lanes, 45 valid samples per benchmark),
+//! plus the streaming-analysis comparisons added with the incremental
+//! engine: per-prefix clone replay vs [`IncrementalBootstrap`], and
+//! per-variant suite analysis vs the batched [`Analyzer::analyze_many`]
+//! pool.
 //!
 //! Reported unit: analyzed benchmark-CIs per second. See `docs/perf.md`
 //! for the recorded numbers and the optimization log.
 //!
 //! Run: `cargo bench --bench perf_analysis`
+//!
+//! Flags (after `--`):
+//!
+//! * `--smoke`        shortened CI variant (fewer iterations, same
+//!                    shapes);
+//! * `--json PATH`    additionally emit a machine-readable
+//!                    `elastibench.bench-report.v1` document (CI writes
+//!                    `BENCH_analysis.json`; format in
+//!                    `docs/benchmarks.md`).
 
 use elastibench::runtime::{AnalysisEngine, Manifest};
-use elastibench::stats::{bootstrap_native, bootstrap_row_reference};
-use elastibench::util::benchkit::time;
+use elastibench::stats::{
+    bootstrap_native, bootstrap_row_reference, Analyzer, IncrementalBootstrap, Measurements,
+    StoppingRule,
+};
+use elastibench::util::benchkit::{time, BenchReport};
 use elastibench::util::Rng;
 
 const B: usize = 2048;
@@ -31,7 +47,79 @@ fn inputs(m: usize) -> (Vec<f32>, Vec<f32>, Vec<i32>, Vec<i32>) {
     (v1, v2, n_valid, idx)
 }
 
+/// Per-benchmark duet sample streams for the streaming-analysis case:
+/// mostly tight streams that hit the CI target at the first checkpoint,
+/// every fifth noisy enough to ride out the whole 45-result budget.
+fn streams(count: usize) -> Vec<(String, Vec<f64>, Vec<f64>)> {
+    let base = Rng::new(0x5EED_50);
+    (0..count)
+        .map(|i| {
+            let mut r = base.fork(i as u64);
+            let sigma = if i % 5 == 4 { 0.2 } else { 0.005 };
+            let v1: Vec<f64> = (0..45).map(|_| r.lognormal(0.0, sigma)).collect();
+            let v2: Vec<f64> = (0..45).map(|_| r.lognormal(0.0, sigma)).collect();
+            (format!("bench-{i:02}"), v1, v2)
+        })
+        .collect()
+}
+
+/// The pre-incremental stopping-point computation: clone every prefix
+/// into a fresh `Measurements` and run the full suite analyzer on it —
+/// one resample-index tile regeneration, argsort and allocation set per
+/// checkpoint (this is what `required_results` did before the §Perf L3
+/// borrowed-window + incremental work, and still does on XLA).
+fn replay_stop(
+    analyzer: &Analyzer,
+    rule: &StoppingRule,
+    name: &str,
+    v1: &[f64],
+    v2: &[f64],
+    seed: u64,
+) -> usize {
+    let have = v1.len().min(rule.max_results);
+    let mut k = rule.min_results.max(analyzer.min_results);
+    while k <= have {
+        let prefix = Measurements {
+            name: name.to_string(),
+            v1: v1[..k].to_vec(),
+            v2: v2[..k].to_vec(),
+        };
+        let analysis = analyzer
+            .analyze("replay", std::slice::from_ref(&prefix), seed)
+            .expect("replay analyze");
+        if analysis.verdicts[0].output.ci_size_pct() <= rule.target_ci_pct {
+            return k;
+        }
+        k += rule.step;
+    }
+    have
+}
+
+/// Stream every sample through one [`IncrementalBootstrap`] (the live
+/// coordinator path) and collect the per-benchmark stop points.
+fn incremental_stops(
+    data: &[(String, Vec<f64>, Vec<f64>)],
+    rule: StoppingRule,
+    seed: u64,
+) -> Vec<usize> {
+    let mut engine = IncrementalBootstrap::new(data.len(), B, 0.01, 10, rule, seed);
+    for (bench, (_, v1, v2)) in data.iter().enumerate() {
+        for (a, b) in v1.iter().zip(v2) {
+            engine.push_sample(bench, *a, *b).expect("push sample");
+        }
+    }
+    (0..data.len()).map(|i| engine.stop_point(i)).collect()
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .map(|i| args.get(i + 1).expect("--json needs a PATH").clone());
+    let mut report = BenchReport::new("analysis");
+
     println!("bootstrap analysis throughput (B={B}, N={N}, n_valid=45)\n");
 
     // Pre-§Perf baseline: the original gather + two-quickselect kernel,
@@ -39,7 +127,7 @@ fn main() {
     {
         let m = 32;
         let (v1, v2, _n_valid, idx) = inputs(m);
-        let stats = time("native REFERENCE (pre-perf), m=32", 1, 5, || {
+        let stats = time("native REFERENCE (pre-perf), m=32", 1, if smoke { 3 } else { 5 }, || {
             (0..m)
                 .map(|row| {
                     bootstrap_row_reference(
@@ -54,14 +142,123 @@ fn main() {
                 .collect::<Vec<_>>()
         });
         println!("{}", stats.report(Some(m as f64)));
+        report.case(&stats, Some(m as f64));
     }
 
     for m in [8usize, 32, 128] {
         let (v1, v2, n_valid, idx) = inputs(m);
-        let stats = time(&format!("native OPTIMIZED,  batch m={m}"), 1, 7, || {
+        let stats = time(&format!("native OPTIMIZED,  batch m={m}"), 1, if smoke { 3 } else { 7 }, || {
             bootstrap_native(&v1, &v2, &n_valid, &idx, m, B, N, 0.01)
         });
         println!("{}", stats.report(Some(m as f64)));
+        report.case(&stats, Some(m as f64));
+        if m == 128 {
+            report.metric("native_m128_cis_per_s", m as f64 / stats.median_s);
+        }
+    }
+
+    // Streaming analysis (§Perf L3): per-prefix clone replay vs the
+    // incremental engine, over a 50-benchmark suite of duet streams.
+    // Both sides apply the identical stopping rule and resample tiles;
+    // their stop points are asserted equal below.
+    {
+        let suite = streams(50);
+        let rule = StoppingRule::default();
+        let seed = 0xA11A ^ 0x5EED_50u64;
+        let analyzer = Analyzer::native();
+        let iters = if smoke { 3 } else { 7 };
+        let replay = time(&format!("replay (per-prefix analyze), {} benches", suite.len()), 1, iters, || {
+            suite
+                .iter()
+                .map(|(name, v1, v2)| replay_stop(&analyzer, &rule, name, v1, v2, seed))
+                .collect::<Vec<_>>()
+        });
+        println!("{}", replay.report(Some(suite.len() as f64)));
+        report.case(&replay, Some(suite.len() as f64));
+        let incremental = time(
+            &format!("incremental streaming,       {} benches", suite.len()),
+            1,
+            iters,
+            || incremental_stops(&suite, rule, seed),
+        );
+        println!("{}", incremental.report(Some(suite.len() as f64)));
+        report.case(&incremental, Some(suite.len() as f64));
+
+        // Differential sanity: the two formulations must land on the
+        // same stop points, or the speedup compares different work.
+        let replay_pts: Vec<usize> = suite
+            .iter()
+            .map(|(name, v1, v2)| replay_stop(&analyzer, &rule, name, v1, v2, seed))
+            .collect();
+        let incr_pts = incremental_stops(&suite, rule, seed);
+        assert_eq!(replay_pts, incr_pts, "stop points must agree");
+
+        let speedup = replay.median_s / incremental.median_s;
+        println!("incremental vs replay speedup ({} benches): {speedup:.1}x", suite.len());
+        report.metric("incremental_vs_replay_speedup", speedup);
+        report.metric("incremental_suite_benchmarks", suite.len() as f64);
+    }
+
+    // Batched multi-variant analysis: a sweep-sized [matrix] expansion
+    // analyzed per variant (one bootstrap pool spin-up each) vs through
+    // one shared row queue (`Analyzer::analyze_many`).
+    {
+        let nvariants = if smoke { 8 } else { 16 };
+        let variants: Vec<(String, Vec<Measurements>)> = (0..nvariants)
+            .map(|v| {
+                let mut r = Rng::new(0xBA7C).fork(v as u64);
+                let ms: Vec<Measurements> = (0..16)
+                    .map(|i| Measurements {
+                        name: format!("b{i:02}"),
+                        v1: (0..45).map(|_| r.lognormal(0.0, 0.05)).collect(),
+                        v2: (0..45).map(|_| r.lognormal(0.01, 0.05)).collect(),
+                    })
+                    .collect();
+                (format!("variant-{v:02}"), ms)
+            })
+            .collect();
+        let jobs: Vec<(String, &[Measurements], u64)> = variants
+            .iter()
+            .enumerate()
+            .map(|(v, (label, ms))| (label.clone(), ms.as_slice(), 500 + v as u64))
+            .collect();
+        let analyzer = Analyzer::native();
+        let iters = if smoke { 3 } else { 5 };
+        let per_variant = time(&format!("per-variant analyze, {nvariants} variants x 16"), 1, iters, || {
+            jobs.iter()
+                .map(|(label, ms, seed)| analyzer.analyze(label, ms, *seed).expect("analyze"))
+                .collect::<Vec<_>>()
+        });
+        println!("{}", per_variant.report(Some((nvariants * 16) as f64)));
+        report.case(&per_variant, Some((nvariants * 16) as f64));
+        let batched = time(&format!("batched analyze_many, {nvariants} variants x 16"), 1, iters, || {
+            analyzer.analyze_many(&jobs)
+        });
+        println!("{}", batched.report(Some((nvariants * 16) as f64)));
+        report.case(&batched, Some((nvariants * 16) as f64));
+
+        // Differential sanity: batched output must match per-variant.
+        let solo: Vec<_> = jobs
+            .iter()
+            .map(|(label, ms, seed)| analyzer.analyze(label, ms, *seed).expect("analyze"))
+            .collect();
+        let many: Vec<_> = analyzer
+            .analyze_many(&jobs)
+            .into_iter()
+            .map(|r| r.expect("batched analyze"))
+            .collect();
+        assert_eq!(solo.len(), many.len());
+        for (a, b) in solo.iter().zip(&many) {
+            assert_eq!(a.verdicts.len(), b.verdicts.len(), "{}", a.label);
+            for (x, y) in a.verdicts.iter().zip(&b.verdicts) {
+                assert_eq!(x.output, y.output, "{}/{}", a.label, x.name);
+            }
+        }
+
+        let speedup = per_variant.median_s / batched.median_s;
+        println!("batched analysis speedup ({nvariants} variants): {speedup:.2}x");
+        report.metric("batched_analysis_speedup", speedup);
+        report.metric("batched_analysis_variants", nvariants as f64);
     }
 
     match Manifest::load(&elastibench::artifacts_dir()) {
@@ -75,10 +272,11 @@ fn main() {
                 let engine = AnalysisEngine::load(&manifest.path_of(info), info.m, info.b, info.n)
                     .expect("compile artifact");
                 let (v1, v2, n_valid, idx) = inputs(m);
-                let stats = time(&format!("xla artifact,     batch m={m}"), 1, 7, || {
+                let stats = time(&format!("xla artifact,     batch m={m}"), 1, if smoke { 3 } else { 7 }, || {
                     engine.analyze(&v1, &v2, &n_valid, &idx).expect("analyze")
                 });
                 println!("{}", stats.report(Some(m as f64)));
+                report.case(&stats, Some(m as f64));
             }
         }
         Err(e) => println!("(skipping XLA engine: {e:#} — run `make artifacts`)"),
@@ -89,4 +287,10 @@ fn main() {
          the XLA:CPU-compiled kernel; real-TPU numbers are estimated from the VMEM/roofline\n\
          analysis in docs/perf.md."
     );
+
+    if let Some(path) = json_path {
+        let path = std::path::PathBuf::from(path);
+        report.write(&path).expect("write bench report");
+        println!("wrote {}", path.display());
+    }
 }

@@ -442,6 +442,29 @@ fn cmd_scenario_run(args: &Args) -> Result<i32> {
             plan.saved_pct()
         );
     }
+    if let Some(live) = &report.live {
+        println!(
+            "live early stopping: {} of {} benchmarks decided, {} calls canceled \
+             ({:.1}% of plan; est. ${:.4} and {} saved)",
+            live.decided,
+            live.stop_points.len(),
+            live.calls_canceled,
+            live.calls_saved_pct,
+            live.est_cost_saved_usd,
+            crate::report::fmt_duration(live.est_wall_saved_s),
+        );
+        let budget = report.scenario.exp.results_per_benchmark().min(45);
+        let rows: Vec<crate::report::LiveStopRow> = live
+            .stop_points
+            .iter()
+            .map(|(name, stop)| crate::report::LiveStopRow {
+                benchmark: name.clone(),
+                stop_at: *stop,
+                budget,
+            })
+            .collect();
+        print!("{}", crate::report::live_stop_table(&rows));
+    }
     Ok(0)
 }
 

@@ -26,4 +26,7 @@ mod runner;
 
 pub use hybrid::{run_hybrid, HybridReport};
 pub use image::{build_image, FunctionImage};
-pub use runner::{run_experiment, run_experiment_reference, CallFailure, RunReport};
+pub use runner::{
+    run_experiment, run_experiment_live, run_experiment_reference, CallFailure, LiveStopConfig,
+    LiveStopReport, RunReport,
+};

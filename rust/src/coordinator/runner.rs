@@ -6,7 +6,7 @@ use crate::benchexec::{run_duet_call, ExecCtx, RunError};
 use crate::config::{ExperimentConfig, PlatformConfig, SutConfig};
 use crate::des::Sim;
 use crate::faas::{FaasPlatform, InstancePool, PlatformStats, ReferencePlatform};
-use crate::stats::Measurements;
+use crate::stats::{IncrementalBootstrap, Measurements, StoppingRule};
 use crate::sut::{Suite, Version};
 use crate::util::Rng;
 
@@ -67,6 +67,40 @@ impl RunReport {
     }
 }
 
+/// Live early-stopping configuration: the analyzer geometry plus the
+/// stopping rule the in-run [`IncrementalBootstrap`] engine applies.
+///
+/// `seed` must be the *analysis* seed (the one a post-hoc
+/// [`required_results`] replay would use) so live stop points match the
+/// replay oracle on the collected sample streams.
+///
+/// [`required_results`]: crate::stats::required_results
+#[derive(Debug, Clone, Copy)]
+pub struct LiveStopConfig {
+    /// Bootstrap resamples (analyzer `b`).
+    pub b: usize,
+    /// CI significance level (analyzer `alpha`).
+    pub alpha: f64,
+    /// Analyzer floor: never decide below this many results.
+    pub min_results: usize,
+    /// Stopping rule (target CI width, checkpoint step, floors).
+    pub rule: StoppingRule,
+    /// Analysis seed for the resample index tiles.
+    pub seed: u64,
+}
+
+/// What live early stopping did during a run.
+#[derive(Debug, Clone)]
+pub struct LiveStopReport {
+    /// `(benchmark, results at decision)` per benchmark, suite order —
+    /// the budget-capped collected count when never decided.
+    pub stop_points: Vec<(String, usize)>,
+    /// Benchmarks whose CI met the target mid-run.
+    pub decided: usize,
+    /// Scheduled calls canceled because their benchmark was decided.
+    pub calls_canceled: usize,
+}
+
 /// One planned function call.
 #[derive(Debug, Clone, Copy)]
 struct PlannedCall {
@@ -95,9 +129,29 @@ pub fn run_experiment(
     exp: &ExperimentConfig,
     versions: (Version, Version),
 ) -> RunReport {
-    run_experiment_on(suite, sut, exp, versions, |image_mb| {
+    run_experiment_on(suite, sut, exp, versions, None, |image_mb| {
         FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
     })
+    .0
+}
+
+/// [`run_experiment`] with **live adaptive early stopping**: every
+/// completed call streams its duet pairs into an [`IncrementalBootstrap`]
+/// engine, and the moment a benchmark's CI width meets the target its
+/// remaining scheduled calls are canceled — the simulated wall clock and
+/// billed cost reflect the savings instead of a hypothetical plan.
+pub fn run_experiment_live(
+    suite: &Suite,
+    sut: &SutConfig,
+    platform_cfg: &PlatformConfig,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+    live: &LiveStopConfig,
+) -> (RunReport, LiveStopReport) {
+    let (report, live) = run_experiment_on(suite, sut, exp, versions, Some(live), |image_mb| {
+        FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
+    });
+    (report, live.expect("live config was passed"))
 }
 
 /// [`run_experiment`] against the retired O(N)-scan instance pool
@@ -113,9 +167,10 @@ pub fn run_experiment_reference(
     exp: &ExperimentConfig,
     versions: (Version, Version),
 ) -> RunReport {
-    run_experiment_on(suite, sut, exp, versions, |image_mb| {
+    run_experiment_on(suite, sut, exp, versions, None, |image_mb| {
         ReferencePlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
     })
+    .0
 }
 
 /// The experiment loop, generic over the instance pool. Both entry
@@ -127,8 +182,9 @@ fn run_experiment_on<P: InstancePool>(
     sut: &SutConfig,
     exp: &ExperimentConfig,
     versions: (Version, Version),
+    live: Option<&LiveStopConfig>,
     deploy: impl FnOnce(f64) -> P,
-) -> RunReport {
+) -> (RunReport, Option<LiveStopReport>) {
     if let Err(errs) = exp.validate() {
         panic!("invalid experiment config: {errs:?}");
     }
@@ -170,6 +226,13 @@ fn run_experiment_on<P: InstancePool>(
     let mut calls_ok = 0usize;
     let mut failures: Vec<(CallFailure, usize)> = Vec::new();
     let mut call_seq = 0u64;
+    // Live early stopping: stream every collected pair into the
+    // incremental engine; a `true` from push_sample means the benchmark
+    // just met its CI target and its remaining calls can be canceled.
+    let mut engine = live.map(|c| {
+        IncrementalBootstrap::new(suite.len(), c.b, c.alpha, c.min_results, c.rule, c.seed)
+    });
+    let mut calls_canceled = 0usize;
 
     let issue = |sim: &mut Sim<CallDone>,
                      platform: &mut P,
@@ -277,9 +340,25 @@ fn run_experiment_on<P: InstancePool>(
             } else {
                 calls_ok += 1;
                 let m = &mut measurements[done.plan.bench_idx];
+                let mut newly_decided = false;
                 for (s1, s2) in done.pairs {
                     m.v1.push(s1);
                     m.v2.push(s2);
+                    if let Some(eng) = engine.as_mut() {
+                        // Geometry errors are impossible here: checkpoints
+                        // stop at rule.max_results <= the largest lane.
+                        newly_decided |= eng
+                            .push_sample(done.plan.bench_idx, s1, s2)
+                            .expect("live analysis geometry");
+                    }
+                }
+                if newly_decided {
+                    // CI target met: cancel the benchmark's remaining
+                    // scheduled calls. In-flight calls still complete and
+                    // their samples land after the pinned stop point.
+                    let before = plan.len();
+                    plan.retain(|p| p.bench_idx != done.plan.bench_idx);
+                    calls_canceled += before - plan.len();
                 }
             }
         } else {
@@ -296,7 +375,17 @@ fn run_experiment_on<P: InstancePool>(
         .filter(|m| m.is_empty())
         .map(|m| m.name.clone())
         .collect();
-    RunReport {
+    let live_report = engine.map(|eng| LiveStopReport {
+        stop_points: suite
+            .benchmarks
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (b.name.clone(), eng.stop_point(i)))
+            .collect(),
+        decided: (0..suite.len()).filter(|&i| eng.is_decided(i)).count(),
+        calls_canceled,
+    });
+    let report = RunReport {
         label: exp.label.clone(),
         wall_s: image.build_s + image.deploy_s + invoke_end,
         invoke_wall_s: invoke_end,
@@ -307,7 +396,8 @@ fn run_experiment_on<P: InstancePool>(
         platform: platform.stats(),
         measurements,
         failed_benchmarks,
-    }
+    };
+    (report, live_report)
 }
 
 #[cfg(test)]
@@ -486,6 +576,88 @@ mod tests {
         exp.memory_mb = 4096;
         let c4096 = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
         assert!(c4096.cost_usd > 1.5 * c2048.cost_usd);
+    }
+
+    fn live_cfg(exp: &ExperimentConfig) -> LiveStopConfig {
+        LiveStopConfig {
+            b: 2048,
+            alpha: 0.01,
+            min_results: 10,
+            rule: StoppingRule {
+                step: exp.repeats_per_call.max(1),
+                ..StoppingRule::default()
+            },
+            seed: exp.seed ^ 0xA11A,
+        }
+    }
+
+    #[test]
+    fn live_early_stopping_saves_calls_cost_and_wall_clock() {
+        // All benchmarks runnable; the majority are stable enough to meet
+        // the CI target well before the 45-result fixed budget.
+        let sut = SutConfig {
+            benchmark_count: 10,
+            true_changes: 2,
+            faas_incompatible: 0,
+            slow_setup: 0,
+            ..SutConfig::default()
+        };
+        let suite = generate(&sut);
+        let exp = ExperimentConfig {
+            parallelism: 10,
+            ..ExperimentConfig::default()
+        };
+        let plat = PlatformConfig::default();
+        let fixed = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        let (live_run, live) =
+            run_experiment_live(&suite, &sut, &plat, &exp, (Version::V1, Version::V2), &live_cfg(&exp));
+        assert!(live.decided > 0, "stable benchmarks decide early");
+        assert!(live.calls_canceled > 0, "decided benchmarks shed calls");
+        assert!(live_run.calls_total < fixed.calls_total);
+        assert!(live_run.cost_usd < fixed.cost_usd, "real billed-cost savings");
+        assert!(live_run.invoke_wall_s < fixed.invoke_wall_s, "real wall-clock savings");
+        assert_eq!(live.stop_points.len(), suite.len());
+        for (name, stop) in &live.stop_points {
+            assert!(*stop <= 45, "{name}: stop point within budget ({stop})");
+        }
+    }
+
+    #[test]
+    fn live_run_is_deterministic() {
+        let (suite, sut, plat, mut exp) = small();
+        exp.calls_per_benchmark = 15;
+        exp.parallelism = 8;
+        let cfg = live_cfg(&exp);
+        let (a_run, a) =
+            run_experiment_live(&suite, &sut, &plat, &exp, (Version::V1, Version::V2), &cfg);
+        let (b_run, b) =
+            run_experiment_live(&suite, &sut, &plat, &exp, (Version::V1, Version::V2), &cfg);
+        assert_eq!(a_run.wall_s, b_run.wall_s);
+        assert_eq!(a_run.calls_total, b_run.calls_total);
+        assert_eq!(a.stop_points, b.stop_points);
+        assert_eq!(a.calls_canceled, b.calls_canceled);
+    }
+
+    #[test]
+    fn live_path_without_decisions_matches_fixed_run() {
+        // An unreachable CI target means no benchmark ever decides, so
+        // the live run must be byte-identical to the fixed run.
+        let (suite, sut, plat, mut exp) = small();
+        exp.parallelism = 8;
+        let mut cfg = live_cfg(&exp);
+        cfg.rule.target_ci_pct = 0.0;
+        let fixed = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
+        let (live_run, live) =
+            run_experiment_live(&suite, &sut, &plat, &exp, (Version::V1, Version::V2), &cfg);
+        assert_eq!(live.decided, 0);
+        assert_eq!(live.calls_canceled, 0);
+        assert_eq!(live_run.wall_s, fixed.wall_s);
+        assert_eq!(live_run.cost_usd, fixed.cost_usd);
+        assert_eq!(live_run.calls_total, fixed.calls_total);
+        for (x, y) in live_run.measurements.iter().zip(&fixed.measurements) {
+            assert_eq!(x.v1, y.v1);
+            assert_eq!(x.v2, y.v2);
+        }
     }
 
     #[test]

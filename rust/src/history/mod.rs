@@ -31,7 +31,7 @@ pub mod timeline;
 pub use gate::{best_split, evaluate, GateFinding, GateOutcome, GatePolicy, GateReason};
 pub use store::{
     parse_scenario_report, stored_run_to_json, HistoryStore, RunMeta, StoredAdaptive,
-    StoredMetadata, StoredPlatform, StoredRun, StoredRunMetrics, StoredScenario,
+    StoredLive, StoredMetadata, StoredPlatform, StoredRun, StoredRunMetrics, StoredScenario,
     DEFAULT_STORE_DIR,
 };
 pub use timeline::{BenchmarkSeries, SeriesPoint, Timeline, TimelineEntry};

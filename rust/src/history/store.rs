@@ -289,6 +289,8 @@ pub struct StoredMetadata {
     pub commit: String,
     pub version: String,
     pub engine: String,
+    /// `fixed` | `adaptive-replay` | `adaptive-live`.
+    pub engine_mode: String,
     pub seed: f64,
     pub sut_seed: f64,
     pub start_hour_utc: f64,
@@ -339,6 +341,18 @@ pub struct StoredAdaptive {
     pub saved_pct: f64,
 }
 
+/// `live` section (in-run adaptive early stopping) when present.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredLive {
+    /// `(benchmark, results at decision)` stop points.
+    pub stop_points: Vec<(String, f64)>,
+    pub decided: f64,
+    pub calls_canceled: f64,
+    pub calls_saved_pct: f64,
+    pub est_cost_saved_usd: f64,
+    pub est_wall_saved_s: f64,
+}
+
 /// A fully parsed stored run: the typed mirror of
 /// `elastibench.scenario-report.v1`.
 #[derive(Debug, Clone)]
@@ -351,6 +365,7 @@ pub struct StoredRun {
     /// Per-benchmark verdicts, reusing the live analysis types.
     pub analysis: SuiteAnalysis,
     pub adaptive: Option<StoredAdaptive>,
+    pub live: Option<StoredLive>,
 }
 
 impl StoredRun {
@@ -421,6 +436,7 @@ pub fn parse_scenario_report(doc: &Json) -> Result<StoredRun> {
         commit: get_str(m, "metadata", "commit")?,
         version: get_str(m, "metadata", "elastibench_version")?,
         engine: get_str(m, "metadata", "engine")?,
+        engine_mode: get_str(m, "metadata", "engine_mode")?,
         seed: get_num(m, "metadata", "seed")?,
         sut_seed: get_num(m, "metadata", "sut_seed")?,
         start_hour_utc: get_num(m, "metadata", "start_hour_utc")?,
@@ -495,6 +511,32 @@ pub fn parse_scenario_report(doc: &Json) -> Result<StoredRun> {
         }),
     };
 
+    let live = match sect(doc, "live")? {
+        Json::Null => None,
+        lv => {
+            let stop_points = lv
+                .get("stop_points")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("report missing array live.stop_points"))?
+                .iter()
+                .map(|s| {
+                    Ok((
+                        get_str(s, "live.stop_points[]", "benchmark")?,
+                        get_num(s, "live.stop_points[]", "results")?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Some(StoredLive {
+                stop_points,
+                decided: get_num(lv, "live", "decided")?,
+                calls_canceled: get_num(lv, "live", "calls_canceled")?,
+                calls_saved_pct: get_num(lv, "live", "calls_saved_pct")?,
+                est_cost_saved_usd: get_num(lv, "live", "est_cost_saved_usd")?,
+                est_wall_saved_s: get_num(lv, "live", "est_wall_saved_s")?,
+            })
+        }
+    };
+
     Ok(StoredRun {
         schema: schema.to_string(),
         scenario,
@@ -503,6 +545,7 @@ pub fn parse_scenario_report(doc: &Json) -> Result<StoredRun> {
         run,
         analysis,
         adaptive,
+        live,
     })
 }
 
@@ -571,6 +614,7 @@ pub fn stored_run_to_json(run: &StoredRun) -> Json {
                 ("commit", Json::Str(m.commit.clone())),
                 ("elastibench_version", Json::Str(m.version.clone())),
                 ("engine", Json::Str(m.engine.clone())),
+                ("engine_mode", Json::Str(m.engine_mode.clone())),
                 ("seed", Json::Num(m.seed)),
                 ("sut_seed", Json::Num(m.sut_seed)),
                 ("start_hour_utc", Json::Num(m.start_hour_utc)),
@@ -632,6 +676,33 @@ pub fn stored_run_to_json(run: &StoredRun) -> Json {
                 ]),
             },
         ),
+        (
+            "live",
+            match &run.live {
+                None => Json::Null,
+                Some(lv) => obj(vec![
+                    (
+                        "stop_points",
+                        Json::Arr(
+                            lv.stop_points
+                                .iter()
+                                .map(|(name, results)| {
+                                    obj(vec![
+                                        ("benchmark", Json::Str(name.clone())),
+                                        ("results", Json::Num(*results)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("decided", Json::Num(lv.decided)),
+                    ("calls_canceled", Json::Num(lv.calls_canceled)),
+                    ("calls_saved_pct", Json::Num(lv.calls_saved_pct)),
+                    ("est_cost_saved_usd", Json::Num(lv.est_cost_saved_usd)),
+                    ("est_wall_saved_s", Json::Num(lv.est_wall_saved_s)),
+                ]),
+            },
+        ),
     ])
 }
 
@@ -673,6 +744,32 @@ mod tests {
             stored_run_to_json(&loaded).to_string(),
             exported.to_string(),
             "export -> import -> re-export must be byte-identical"
+        );
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn adaptive_live_report_roundtrips_losslessly() {
+        let store = temp_store("live");
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        sc.repeats = crate::scenario::RepeatPolicy::Adaptive;
+        sc.sut.benchmark_count = 8;
+        sc.sut.true_changes = 2;
+        sc.sut.faas_incompatible = 1;
+        sc.sut.slow_setup = 1;
+        sc.exp.calls_per_benchmark = 8;
+        sc.exp.parallelism = 8;
+        let report = run_scenario(&sc, &Analyzer::native()).unwrap();
+        let exported = scenario_report_to_json(&report);
+        let meta = store.record(&report, "t-live").unwrap();
+        let loaded = store.load("quick-smoke", &meta.run_id).unwrap();
+        assert_eq!(loaded.metadata.engine_mode, "adaptive-live");
+        let live = loaded.live.as_ref().expect("live section survives");
+        assert!(!live.stop_points.is_empty());
+        assert_eq!(
+            stored_run_to_json(&loaded).to_string(),
+            exported.to_string(),
+            "live reports round-trip byte-identically"
         );
         let _ = std::fs::remove_dir_all(store.root());
     }

@@ -134,6 +134,7 @@ pub fn scenario_report_to_json(r: &ScenarioReport) -> Json {
                 ("commit", Json::Str(r.commit.clone())),
                 ("elastibench_version", Json::Str(r.version.clone())),
                 ("engine", Json::Str(r.engine.clone())),
+                ("engine_mode", Json::Str(r.engine_mode.clone())),
                 ("seed", Json::Num(sc.exp.seed as f64)),
                 ("sut_seed", Json::Num(sc.sut.seed as f64)),
                 ("start_hour_utc", Json::Num(sc.exp.start_hour_utc)),
@@ -199,6 +200,33 @@ pub fn scenario_report_to_json(r: &ScenarioReport) -> Json {
                     ("fixed_total", Json::Num(plan.fixed_total as f64)),
                     ("adaptive_total", Json::Num(plan.adaptive_total as f64)),
                     ("saved_pct", Json::Num(plan.saved_pct())),
+                ]),
+            },
+        ),
+        (
+            "live",
+            match &r.live {
+                None => Json::Null,
+                Some(live) => obj(vec![
+                    (
+                        "stop_points",
+                        Json::Arr(
+                            live.stop_points
+                                .iter()
+                                .map(|(name, results)| {
+                                    obj(vec![
+                                        ("benchmark", Json::Str(name.clone())),
+                                        ("results", Json::Num(*results as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("decided", Json::Num(live.decided as f64)),
+                    ("calls_canceled", Json::Num(live.calls_canceled as f64)),
+                    ("calls_saved_pct", Json::Num(live.calls_saved_pct)),
+                    ("est_cost_saved_usd", Json::Num(live.est_cost_saved_usd)),
+                    ("est_wall_saved_s", Json::Num(live.est_wall_saved_s)),
                 ]),
             },
         ),
@@ -291,6 +319,37 @@ mod tests {
             .unwrap()
             .is_empty());
         assert_eq!(parsed.get("adaptive"), Some(&crate::util::json::Json::Null));
+        assert_eq!(parsed.get("live"), Some(&crate::util::json::Json::Null));
+        assert_eq!(meta.get("engine_mode").unwrap().as_str(), Some("fixed"));
+    }
+
+    #[test]
+    fn adaptive_live_report_exports_stop_points_and_savings() {
+        let mut sc = crate::scenario::catalog_entry("quick-smoke").unwrap();
+        sc.repeats = crate::scenario::RepeatPolicy::Adaptive;
+        let report =
+            crate::scenario::run_scenario(&sc, &crate::stats::Analyzer::native()).unwrap();
+        let parsed = parse(&scenario_report_to_json(&report).to_string()).unwrap();
+        assert_eq!(
+            parsed.get("metadata").unwrap().get("engine_mode").unwrap().as_str(),
+            Some("adaptive-live")
+        );
+        let live = parsed.get("live").unwrap();
+        let stops = live.get("stop_points").unwrap().as_arr().unwrap();
+        assert_eq!(stops.len(), report.run.measurements.len());
+        assert!(stops[0].get("benchmark").unwrap().as_str().is_some());
+        assert!(stops[0].get("results").unwrap().as_f64().is_some());
+        for key in [
+            "decided",
+            "calls_canceled",
+            "calls_saved_pct",
+            "est_cost_saved_usd",
+            "est_wall_saved_s",
+        ] {
+            assert!(live.get(key).unwrap().as_f64().is_some(), "{key}");
+        }
+        // The replay oracle rides along for adaptive-live runs.
+        assert!(parsed.get("adaptive").unwrap().get("fixed_total").is_some());
     }
 
     #[test]

@@ -253,6 +253,40 @@ pub fn sweep_summary_table(rows: &[SweepRow]) -> String {
     out
 }
 
+/// One benchmark's live early-stopping outcome (`repeats = "adaptive"`
+/// scenario runs).
+#[derive(Debug, Clone)]
+pub struct LiveStopRow {
+    /// Benchmark identifier.
+    pub benchmark: String,
+    /// Results collected when the CI target was met (or the budget-capped
+    /// collected count if it never was).
+    pub stop_at: usize,
+    /// Fixed-budget results the benchmark would have collected.
+    pub budget: usize,
+}
+
+/// Render per-benchmark live stop points against the fixed budget.
+pub fn live_stop_table(rows: &[LiveStopRow]) -> String {
+    let mut out = String::from(
+        "| benchmark | stopped at | budget | saved |\n\
+         |---|---:|---:|---:|\n",
+    );
+    for r in rows {
+        let saved = r.budget.saturating_sub(r.stop_at);
+        let saved_pct = if r.budget > 0 {
+            saved as f64 / r.budget as f64 * 100.0
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "| {} | {} | {} | {saved} ({saved_pct:.0}%) |\n",
+            r.benchmark, r.stop_at, r.budget
+        ));
+    }
+    out
+}
+
 /// Human-readable duration.
 pub fn fmt_duration(seconds: f64) -> String {
     if seconds >= 3600.0 {
@@ -281,6 +315,24 @@ mod tests {
         }];
         let t = experiment_summary_table(&rows);
         assert!(t.contains("| baseline | 90 | 19 | 6.7 min | $0.78 | 150 |"));
+    }
+
+    #[test]
+    fn live_stop_table_renders() {
+        let t = live_stop_table(&[
+            LiveStopRow {
+                benchmark: "BenchmarkFast".into(),
+                stop_at: 15,
+                budget: 45,
+            },
+            LiveStopRow {
+                benchmark: "BenchmarkNoisy".into(),
+                stop_at: 45,
+                budget: 45,
+            },
+        ]);
+        assert!(t.contains("| BenchmarkFast | 15 | 45 | 30 (67%) |"), "{t}");
+        assert!(t.contains("| BenchmarkNoisy | 45 | 45 | 0 (0%) |"), "{t}");
     }
 
     #[test]

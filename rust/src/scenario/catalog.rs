@@ -34,6 +34,10 @@ pub const CATALOG_SOURCES: &[(&str, &str)] = &[
         include_str!("../../../scenarios/lambda-adaptive.toml"),
     ),
     (
+        "adaptive-live.toml",
+        include_str!("../../../scenarios/adaptive-live.toml"),
+    ),
+    (
         "gcf-baseline.toml",
         include_str!("../../../scenarios/gcf-baseline.toml"),
     ),
@@ -117,6 +121,16 @@ mod tests {
         assert!(cat
             .iter()
             .any(|s| s.repeats == crate::scenario::RepeatPolicy::Adaptive));
+        assert!(cat
+            .iter()
+            .any(|s| s.repeats == crate::scenario::RepeatPolicy::AdaptiveReplay));
+        // The live adaptive entry runs at fleet parallelism (>= 256).
+        let live = cat
+            .iter()
+            .find(|s| s.repeats == crate::scenario::RepeatPolicy::Adaptive)
+            .expect("adaptive-live entry");
+        assert_eq!(live.name, "adaptive-live");
+        assert!(live.exp.parallelism >= 256, "{}", live.exp.parallelism);
         // At least one matrix recipe ships, so `scenario sweep` has a
         // catalog target (>= 4 grid points, the acceptance floor).
         assert!(cat.iter().any(|s| s.variant_count() >= 4));

@@ -28,5 +28,8 @@ pub use recipe::{
     DuetMode, HistorySpec, MatrixSpec, RepeatPolicy, Scenario, HISTORY_KEYS,
     MATRIX_KEYS, MAX_MATRIX_VARIANTS, SCENARIO_KEYS,
 };
-pub use runner::{commit_id, run_scenario, ScenarioReport};
+pub use runner::{
+    commit_id, finish_scenario, run_scenario, run_scenario_experiment, LiveStopSummary,
+    PendingScenario, ScenarioReport,
+};
 pub use sweep::{default_jobs, run_sweep};

@@ -16,7 +16,8 @@
 //! description = "..."         # optional
 //! profile = "aws-lambda"      # required; a registered PlatformProfile
 //! mode = "ab"                 # "ab" (v1 vs v2, default) | "aa" (A/A)
-//! repeats = "fixed"           # "fixed" (default) | "adaptive"
+//! repeats = "fixed"           # "fixed" (default) | "adaptive" (live early
+//!                             # stopping) | "adaptive-replay" (post-hoc)
 //! tags = ["paper", "ci"]      # optional
 //!
 //! [experiment]                # optional ExperimentConfig overrides
@@ -167,10 +168,18 @@ impl DuetMode {
 pub enum RepeatPolicy {
     /// The paper's fixed budget (`repeats_per_call` × `calls_per_benchmark`).
     Fixed,
+    /// **Live** adaptive early stopping: the coordinator streams samples
+    /// into the incremental engine
+    /// ([`crate::stats::IncrementalBootstrap`]) and cancels a
+    /// benchmark's remaining calls the moment its CI width meets the
+    /// stopping-rule target, so the run reports *real* simulated
+    /// duration and billed-cost savings.
+    Adaptive,
     /// Fixed collection plus a CI-width stopping-rule replay
     /// ([`crate::stats::adaptive_plan`], paper §7.2) reporting how many
-    /// calls an adaptive coordinator would have saved.
-    Adaptive,
+    /// calls an adaptive coordinator would have saved — the differential
+    /// oracle for the live path; nothing is actually canceled.
+    AdaptiveReplay,
 }
 
 impl RepeatPolicy {
@@ -179,6 +188,7 @@ impl RepeatPolicy {
         match self {
             RepeatPolicy::Fixed => "fixed",
             RepeatPolicy::Adaptive => "adaptive",
+            RepeatPolicy::AdaptiveReplay => "adaptive-replay",
         }
     }
 }
@@ -360,9 +370,10 @@ impl Scenario {
             None => RepeatPolicy::Fixed,
             Some("fixed") => RepeatPolicy::Fixed,
             Some("adaptive") => RepeatPolicy::Adaptive,
+            Some("adaptive-replay") => RepeatPolicy::AdaptiveReplay,
             Some(other) => {
                 errs.push(format!(
-                    "scenario.repeats must be \"fixed\" or \"adaptive\", got {other:?}"
+                    "scenario.repeats must be \"fixed\", \"adaptive\" or \"adaptive-replay\", got {other:?}"
                 ));
                 RepeatPolicy::Fixed
             }

@@ -7,10 +7,31 @@
 //! [`crate::report::scenario_report_to_json`] for the export shape.
 
 use super::recipe::{RepeatPolicy, Scenario};
-use crate::coordinator::{run_experiment, RunReport};
+use crate::coordinator::{run_experiment, run_experiment_live, LiveStopConfig, RunReport};
 use crate::exp::Workbench;
 use crate::stats::{adaptive_plan, AdaptivePlan, Analyzer, StoppingRule, SuiteAnalysis};
 use anyhow::Result;
+
+/// What live adaptive early stopping saved during a scenario run
+/// (`repeats = "adaptive"`).
+#[derive(Debug, Clone)]
+pub struct LiveStopSummary {
+    /// `(benchmark, results at decision)` per benchmark, suite order —
+    /// the budget-capped collected count when never decided.
+    pub stop_points: Vec<(String, usize)>,
+    /// Benchmarks whose CI met the target mid-run.
+    pub decided: usize,
+    /// Scheduled calls canceled because their benchmark was decided.
+    pub calls_canceled: usize,
+    /// Canceled fraction of the fixed plan [%].
+    pub calls_saved_pct: f64,
+    /// Billed cost the cancellations avoided [USD], estimated from the
+    /// run's average cost per call.
+    pub est_cost_saved_usd: f64,
+    /// Invocation wall clock the cancellations avoided [s], estimated
+    /// from the run's average per-call share of the wall time.
+    pub est_wall_saved_s: f64,
+}
 
 /// A fully executed scenario with provenance.
 pub struct ScenarioReport {
@@ -20,8 +41,11 @@ pub struct ScenarioReport {
     pub run: RunReport,
     /// Statistical verdicts.
     pub analysis: SuiteAnalysis,
-    /// Stopping-rule replay (only for `repeats = "adaptive"` scenarios).
+    /// Stopping-rule replay over the collected measurements (adaptive
+    /// scenarios; the differential oracle for the live path).
     pub adaptive: Option<AdaptivePlan>,
+    /// Live early-stopping outcome (only `repeats = "adaptive"`).
+    pub live: Option<LiveStopSummary>,
     /// VCS commit the binary was run from (`ELASTIBENCH_COMMIT` env
     /// override, else `git rev-parse --short HEAD`, else `unknown`).
     pub commit: String,
@@ -29,6 +53,9 @@ pub struct ScenarioReport {
     pub version: String,
     /// Analysis backend (`native` or `xla`).
     pub engine: String,
+    /// How repeats were decided: `fixed`, `adaptive-replay` (post-hoc
+    /// plan only) or `adaptive-live` (in-run cancellation).
+    pub engine_mode: String,
 }
 
 impl ScenarioReport {
@@ -83,39 +110,137 @@ fn git_short_head() -> Option<String> {
 /// (matches the experiment drivers in [`crate::exp`]).
 const ANALYSIS_SEED_XOR: u64 = 0xA11A;
 
-/// Run one scenario on a fresh simulated platform and analyze it.
-pub fn run_scenario(sc: &Scenario, analyzer: &Analyzer) -> Result<ScenarioReport> {
+/// Everything about an executed scenario *except* the suite analysis:
+/// the intermediate the batched sweep path ([`super::run_sweep`]) hands
+/// to one shared row-parallel [`Analyzer::analyze_many`] pool instead of
+/// analyzing per variant.
+pub struct PendingScenario {
+    /// The scenario exactly as executed.
+    pub scenario: Scenario,
+    /// Raw run outcome.
+    pub run: RunReport,
+    /// Stopping-rule replay (adaptive scenarios).
+    pub adaptive: Option<AdaptivePlan>,
+    /// Live early-stopping outcome (`repeats = "adaptive"`).
+    pub live: Option<LiveStopSummary>,
+    /// Engine mode the run executed under.
+    pub engine_mode: String,
+}
+
+impl PendingScenario {
+    /// Resample seed the suite analysis must use.
+    pub fn analysis_seed(&self) -> u64 {
+        self.scenario.exp.seed ^ ANALYSIS_SEED_XOR
+    }
+}
+
+/// The stopping rule an adaptive scenario applies: check once per whole
+/// function call (the scheduling unit the coordinator can cancel).
+fn scenario_rule(sc: &Scenario) -> StoppingRule {
+    StoppingRule {
+        step: sc.exp.repeats_per_call.max(1),
+        ..StoppingRule::default()
+    }
+}
+
+/// Execute a scenario's experiment phase: simulate the run (with live
+/// early stopping for `repeats = "adaptive"`) and the adaptive replay,
+/// but *not* the suite analysis — see [`run_scenario`] for the
+/// all-in-one entry point.
+///
+/// Live stopping always evaluates through the native incremental kernel
+/// (it is bit-identical to the analyzer's bootstrap); the `analyzer`
+/// argument supplies the CI geometry and the post-run suite analysis
+/// backend.
+pub fn run_scenario_experiment(sc: &Scenario, analyzer: &Analyzer) -> Result<PendingScenario> {
     // The workbench generates the SUT from the recipe's pinned seed and
     // carries the resolved platform; the analysis backend is the
     // caller's `analyzer`, not the workbench default.
     let wb = Workbench::with_sut_and_platform(sc.sut.clone(), sc.platform.clone());
-    let run = run_experiment(&wb.suite, &wb.sut, &wb.platform, &sc.exp, sc.versions());
-    let analysis = analyzer.analyze(
-        &sc.exp.label,
-        &run.measurements,
-        sc.exp.seed ^ ANALYSIS_SEED_XOR,
-    )?;
+    let analysis_seed = sc.exp.seed ^ ANALYSIS_SEED_XOR;
+    let (run, live) = match sc.repeats {
+        RepeatPolicy::Adaptive => {
+            let cfg = LiveStopConfig {
+                b: analyzer.b,
+                alpha: analyzer.alpha,
+                min_results: analyzer.min_results,
+                rule: scenario_rule(sc),
+                seed: analysis_seed,
+            };
+            let (run, live) =
+                run_experiment_live(&wb.suite, &wb.sut, &wb.platform, &sc.exp, sc.versions(), &cfg);
+            let planned = sc.planned_calls().max(1);
+            let calls = run.calls_total.max(1) as f64;
+            let summary = LiveStopSummary {
+                calls_saved_pct: live.calls_canceled as f64 / planned as f64 * 100.0,
+                est_cost_saved_usd: run.cost_usd / calls * live.calls_canceled as f64,
+                est_wall_saved_s: run.invoke_wall_s / calls * live.calls_canceled as f64,
+                stop_points: live.stop_points,
+                decided: live.decided,
+                calls_canceled: live.calls_canceled,
+            };
+            (run, Some(summary))
+        }
+        RepeatPolicy::Fixed | RepeatPolicy::AdaptiveReplay => (
+            run_experiment(&wb.suite, &wb.sut, &wb.platform, &sc.exp, sc.versions()),
+            None,
+        ),
+    };
     let adaptive = match sc.repeats {
         RepeatPolicy::Fixed => None,
-        RepeatPolicy::Adaptive => Some(adaptive_plan(
+        // The replay over the collected measurements: for live runs it is
+        // the differential oracle (stop points must agree on the streams
+        // the run actually produced).
+        RepeatPolicy::Adaptive | RepeatPolicy::AdaptiveReplay => Some(adaptive_plan(
             analyzer,
             &run.measurements,
-            &StoppingRule {
-                step: sc.exp.repeats_per_call.max(1),
-                ..StoppingRule::default()
-            },
-            sc.exp.seed ^ ANALYSIS_SEED_XOR,
+            &scenario_rule(sc),
+            analysis_seed,
         )?),
     };
-    Ok(ScenarioReport {
+    Ok(PendingScenario {
         scenario: sc.clone(),
         run,
-        analysis,
         adaptive,
+        live,
+        engine_mode: match sc.repeats {
+            RepeatPolicy::Fixed => "fixed",
+            RepeatPolicy::Adaptive => "adaptive-live",
+            RepeatPolicy::AdaptiveReplay => "adaptive-replay",
+        }
+        .to_string(),
+    })
+}
+
+/// Attach a suite analysis (computed by the caller, possibly batched
+/// across variants) to an executed scenario.
+pub fn finish_scenario(
+    pending: PendingScenario,
+    analysis: SuiteAnalysis,
+    analyzer: &Analyzer,
+) -> ScenarioReport {
+    ScenarioReport {
+        scenario: pending.scenario,
+        run: pending.run,
+        analysis,
+        adaptive: pending.adaptive,
+        live: pending.live,
         commit: commit_id(),
         version: crate::version().to_string(),
         engine: if analyzer.is_xla() { "xla" } else { "native" }.to_string(),
-    })
+        engine_mode: pending.engine_mode,
+    }
+}
+
+/// Run one scenario on a fresh simulated platform and analyze it.
+pub fn run_scenario(sc: &Scenario, analyzer: &Analyzer) -> Result<ScenarioReport> {
+    let pending = run_scenario_experiment(sc, analyzer)?;
+    let analysis = analyzer.analyze(
+        &pending.scenario.exp.label,
+        &pending.run.measurements,
+        pending.analysis_seed(),
+    )?;
+    Ok(finish_scenario(pending, analysis, analyzer))
 }
 
 #[cfg(test)]
@@ -171,6 +296,58 @@ mod tests {
         let plan = report.adaptive.expect("adaptive plan present");
         assert!(plan.fixed_total > 0);
         assert!(plan.adaptive_total <= plan.fixed_total);
+    }
+
+    #[test]
+    fn engine_mode_tracks_repeat_policy() {
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        let analyzer = Analyzer::native();
+        let fixed = run_scenario(&sc, &analyzer).unwrap();
+        assert_eq!(fixed.engine_mode, "fixed");
+        assert!(fixed.live.is_none());
+        sc.repeats = RepeatPolicy::AdaptiveReplay;
+        let replay = run_scenario(&sc, &analyzer).unwrap();
+        assert_eq!(replay.engine_mode, "adaptive-replay");
+        assert!(replay.live.is_none());
+        assert!(replay.adaptive.is_some(), "replay keeps the post-hoc plan");
+        // The replay path does not cancel anything: same run as fixed.
+        assert_eq!(replay.run.calls_total, fixed.run.calls_total);
+        assert_eq!(replay.run.wall_s, fixed.run.wall_s);
+        sc.repeats = RepeatPolicy::Adaptive;
+        let live = run_scenario(&sc, &analyzer).unwrap();
+        assert_eq!(live.engine_mode, "adaptive-live");
+        assert!(live.live.is_some());
+    }
+
+    #[test]
+    fn live_stop_points_agree_with_replay_oracle() {
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        sc.repeats = RepeatPolicy::Adaptive;
+        let report = run_scenario(&sc, &Analyzer::native()).unwrap();
+        let live = report.live.expect("live summary present");
+        assert_eq!(live.stop_points.len(), report.run.measurements.len());
+        // Differential oracle: over the sample streams the live run
+        // actually produced, the post-hoc replay must land on exactly
+        // the live engine's stop points.
+        let plan = report.adaptive.expect("replay oracle present");
+        assert!(!plan.per_benchmark.is_empty());
+        for (name, needed) in &plan.per_benchmark {
+            let (_, live_stop) = live
+                .stop_points
+                .iter()
+                .find(|(n, _)| n == name)
+                .expect("stop point covers every analyzed benchmark");
+            assert_eq!(live_stop, needed, "{name}");
+        }
+        // Savings bookkeeping is internally consistent.
+        assert!(live.calls_saved_pct >= 0.0 && live.calls_saved_pct <= 100.0);
+        if live.calls_canceled == 0 {
+            assert_eq!(live.est_cost_saved_usd, 0.0);
+            assert_eq!(live.est_wall_saved_s, 0.0);
+        } else {
+            assert!(live.est_cost_saved_usd > 0.0);
+            assert!(live.est_wall_saved_s > 0.0);
+        }
     }
 
     #[test]

@@ -18,11 +18,19 @@
 //! * **deterministic collection** — each worker tags results with the
 //!   claimed index and the pool reorders them afterwards; `--jobs 1` and
 //!   `--jobs 64` produce byte-identical per-variant reports (asserted in
-//!   `rust/tests/scenario_catalog.rs`).
+//!   `rust/tests/scenario_catalog.rs`);
+//! * **batched analysis** (§Perf L3) — workers run only the *experiment*
+//!   phase ([`run_scenario_experiment`]); the suite analyses of every
+//!   variant then share one row-parallel bootstrap pool
+//!   ([`Analyzer::analyze_many`]) instead of each variant spinning its
+//!   own inside `bootstrap_native`. A `[matrix]` expansion of small
+//!   variants now keeps every core busy through one long row queue.
 
 use super::recipe::Scenario;
-use super::runner::{run_scenario, ScenarioReport};
-use crate::stats::Analyzer;
+use super::runner::{
+    finish_scenario, run_scenario_experiment, PendingScenario, ScenarioReport,
+};
+use crate::stats::{Analyzer, Measurements};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
@@ -37,13 +45,14 @@ pub fn default_jobs() -> usize {
 /// return the reports in input order.
 ///
 /// `make_analyzer` is invoked once per worker (backends stay
-/// thread-local). Errors fail fast: the first failure stops workers from
-/// claiming further grid points (in-flight points finish), the sweep
-/// returns the lowest-input-index failure among the points that ran, and
-/// every finished report is discarded — callers export reports only
-/// after the whole pool succeeds, so a failed sweep never leaves a
-/// half-written grid behind. (Successful sweeps stay byte-deterministic
-/// for any worker count; only which error is *reported* may vary.)
+/// thread-local) plus once for the batched analysis phase. Errors fail
+/// fast: the first failure stops workers from claiming further grid
+/// points (in-flight points finish), the sweep returns the
+/// lowest-input-index failure among the points that ran, and every
+/// finished report is discarded — callers export reports only after the
+/// whole pool succeeds, so a failed sweep never leaves a half-written
+/// grid behind. (Successful sweeps stay byte-deterministic for any
+/// worker count; only which error is *reported* may vary.)
 pub fn run_sweep<F>(
     scenarios: &[Scenario],
     jobs: usize,
@@ -59,14 +68,14 @@ where
     let cursor = AtomicUsize::new(0);
     let abort = AtomicBool::new(false);
 
-    // Each worker owns a local (index, result) list; merging after the
-    // scope closes keeps the hot path lock-free and the output order a
-    // pure function of the input.
-    let mut tagged: Vec<(usize, Result<ScenarioReport>)> = std::thread::scope(|scope| {
+    // Phase 1 — experiments on the worker pool. Each worker owns a local
+    // (index, result) list; merging after the scope closes keeps the hot
+    // path lock-free and the output order a pure function of the input.
+    let mut tagged: Vec<(usize, Result<PendingScenario>)> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(jobs);
         for _ in 0..jobs {
             handles.push(scope.spawn(|| {
-                let mut local: Vec<(usize, Result<ScenarioReport>)> = Vec::new();
+                let mut local: Vec<(usize, Result<PendingScenario>)> = Vec::new();
                 let analyzer = match make_analyzer() {
                     Ok(a) => a,
                     Err(e) => {
@@ -84,7 +93,7 @@ where
                 loop {
                     // Fail fast: once any worker hit an error, running
                     // the remaining grid points would be wasted work —
-                    // their reports get discarded anyway.
+                    // their results get discarded anyway.
                     if abort.load(Ordering::Relaxed) {
                         return local;
                     }
@@ -92,7 +101,7 @@ where
                     if i >= scenarios.len() {
                         return local;
                     }
-                    let result = run_scenario(&scenarios[i], &analyzer);
+                    let result = run_scenario_experiment(&scenarios[i], &analyzer);
                     if result.is_err() {
                         abort.store(true, Ordering::Relaxed);
                     }
@@ -110,11 +119,38 @@ where
     // forward), so after sorting, walking up to the first error — or to
     // the end on success — reconstructs input order exactly.
     tagged.sort_by_key(|(i, _)| *i);
-    let mut out = Vec::with_capacity(scenarios.len());
+    let mut pendings = Vec::with_capacity(scenarios.len());
     for (i, result) in tagged {
-        let report =
+        let pending =
             result.map_err(|e| anyhow!("scenario {}: {e:#}", scenarios[i].name))?;
-        out.push(report);
+        pendings.push(pending);
+    }
+    debug_assert_eq!(pendings.len(), scenarios.len());
+
+    // Phase 2 — one batched suite analysis across the whole grid: every
+    // benchmark row of every variant drains through a single shared
+    // row-parallel pool instead of one pool spin-up per variant.
+    let analyzer =
+        make_analyzer().map_err(|e| anyhow!("analyzer construction failed: {e:#}"))?;
+    let analysis_jobs: Vec<(String, &[Measurements], u64)> = pendings
+        .iter()
+        .map(|p| {
+            (
+                p.scenario.exp.label.clone(),
+                p.run.measurements.as_slice(),
+                p.analysis_seed(),
+            )
+        })
+        .collect();
+    let analyses = analyzer.analyze_many(&analysis_jobs);
+
+    // Phase 3 — attach analyses in input order; a failed slot names its
+    // grid point, matching the phase-1 error shape.
+    let mut out = Vec::with_capacity(scenarios.len());
+    for (pending, analysis) in pendings.into_iter().zip(analyses) {
+        let name = pending.scenario.name.clone();
+        let analysis = analysis.map_err(|e| anyhow!("scenario {name}: {e:#}"))?;
+        out.push(finish_scenario(pending, analysis, &analyzer));
     }
     debug_assert_eq!(out.len(), scenarios.len());
     Ok(out)
@@ -197,6 +233,37 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("quick-smoke@broken"), "{msg}");
         assert!(msg.contains("lane width"), "{msg}");
+    }
+
+    #[test]
+    fn sweep_matches_run_scenario_for_live_variants() {
+        use super::super::recipe::RepeatPolicy;
+        use super::super::runner::run_scenario;
+        // The batched path splits experiment and analysis; every report —
+        // including a live-adaptive one with cancellations — must be
+        // indistinguishable from the all-in-one entry point.
+        let mut live = small("live", 9200);
+        live.repeats = RepeatPolicy::Adaptive;
+        let scenarios = vec![small("plain", 9201), live];
+        let pooled = run_sweep(&scenarios, 2, || Ok(Analyzer::native())).unwrap();
+        for (sc, got) in scenarios.iter().zip(&pooled) {
+            let solo = run_scenario(sc, &Analyzer::native()).unwrap();
+            assert_eq!(got.engine_mode, solo.engine_mode, "{}", sc.name);
+            assert_eq!(got.run.wall_s, solo.run.wall_s);
+            assert_eq!(got.run.cost_usd, solo.run.cost_usd);
+            assert_eq!(got.analysis.verdicts.len(), solo.analysis.verdicts.len());
+            for (x, y) in got.analysis.verdicts.iter().zip(&solo.analysis.verdicts) {
+                assert_eq!(x.output, y.output, "{}/{}", sc.name, x.name);
+            }
+            match (&got.live, &solo.live) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.stop_points, b.stop_points);
+                    assert_eq!(a.calls_canceled, b.calls_canceled);
+                }
+                (None, None) => {}
+                _ => panic!("live summaries disagree for {}", sc.name),
+            }
+        }
     }
 
     #[test]

@@ -7,13 +7,14 @@
 //! the resample-index tile is drawn host-side from the experiment seed and
 //! fed to both engines.
 
-use super::bootstrap_native::bootstrap_native;
+use super::bootstrap_native::{bootstrap_native, bootstrap_row, Scratch};
 use super::suite_result::{BenchmarkVerdict, ChangeKind, Measurements, SuiteAnalysis};
 use crate::runtime::{AnalysisEngine, AnalysisOutput, Manifest};
 use crate::util::Rng;
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Default bootstrap resamples (matches the exported artifacts).
 pub const DEFAULT_B: usize = 2048;
@@ -140,6 +141,188 @@ impl Analyzer {
         }
         analysis.sort();
         Ok(analysis)
+    }
+
+    /// Analyze many labeled measurement sets through **one shared
+    /// row-parallel pool** (§Perf L3).
+    ///
+    /// `jobs` are `(label, measurements, seed)` triples; the result has
+    /// one slot per job, in input order. Semantics match calling
+    /// [`Analyzer::analyze`] per job exactly — same per-job lane
+    /// selection, resample-index tile, exclusion list and verdict order,
+    /// bit-identical outputs — but on the native backend every benchmark
+    /// row of every job lands in a single work queue drained by one
+    /// `std::thread::scope` pool. Per-variant analysis (the old sweep
+    /// path) spun a fresh pool inside `bootstrap_native` for each grid
+    /// point, and small variants could never keep the machine busy;
+    /// batched, the pool sees `sum(rows)` items at once and idles only
+    /// at the very end.
+    ///
+    /// A geometry error (e.g. a sample count beyond every supported lane
+    /// width) fails only that job's slot; the remaining jobs still
+    /// analyze. The XLA backend keeps its compiled-engine cache
+    /// thread-local and loops [`Analyzer::analyze`] sequentially.
+    pub fn analyze_many(
+        &self,
+        jobs: &[(String, &[Measurements], u64)],
+    ) -> Vec<Result<SuiteAnalysis>> {
+        if self.is_xla() {
+            return jobs
+                .iter()
+                .map(|(label, ms, seed)| self.analyze(label, ms, *seed))
+                .collect();
+        }
+
+        // Per-job prep on the caller thread: filtering, lane selection,
+        // index tile and packing — exactly what `analyze` does before
+        // handing off to the engine. `base` is the job's offset into the
+        // flattened row queue.
+        struct Prep<'m> {
+            job: usize,
+            base: usize,
+            kept: Vec<&'m Measurements>,
+            excluded: Vec<String>,
+            lanes: usize,
+            idx: Vec<i32>,
+            v1: Vec<f32>,
+            v2: Vec<f32>,
+            n_valid: Vec<i32>,
+        }
+        let mut slots: Vec<Option<Result<SuiteAnalysis>>> = Vec::new();
+        slots.resize_with(jobs.len(), || None);
+        let mut preps: Vec<Prep> = Vec::new();
+        let mut base = 0usize;
+        for (job, (label, measurements, seed)) in jobs.iter().enumerate() {
+            let mut excluded = Vec::new();
+            let mut kept: Vec<&Measurements> = Vec::new();
+            for m in *measurements {
+                if m.len() < self.min_results {
+                    excluded.push(m.name.clone());
+                } else {
+                    kept.push(m);
+                }
+            }
+            if kept.is_empty() {
+                slots[job] = Some(Ok(SuiteAnalysis {
+                    label: label.clone(),
+                    verdicts: Vec::new(),
+                    excluded,
+                }));
+                continue;
+            }
+            let max_n = kept.iter().map(|m| m.len()).max().expect("non-empty");
+            let lanes = match self.lanes_for(max_n) {
+                Ok(l) => l,
+                Err(e) => {
+                    slots[job] = Some(Err(e.context(format!("analysis for '{label}'"))));
+                    continue;
+                }
+            };
+            let mut idx = vec![0i32; self.b * lanes];
+            Rng::new(*seed).fill_index_bits(&mut idx);
+            let (v1, v2, n_valid) = self.pack(&kept, kept.len(), lanes);
+            let rows = kept.len();
+            preps.push(Prep {
+                job,
+                base,
+                kept,
+                excluded,
+                lanes,
+                idx,
+                v1,
+                v2,
+                n_valid,
+            });
+            base += rows;
+        }
+
+        // One flattened queue over every job's rows; each entry is a pure
+        // function of its prep, so outputs are bit-identical to the
+        // per-job engine and independent of worker count or claim order.
+        let total_rows = base;
+        let row_of: Vec<(usize, usize)> = preps
+            .iter()
+            .enumerate()
+            .flat_map(|(pi, p)| (0..p.kept.len()).map(move |r| (pi, r)))
+            .collect();
+        let max_lanes = preps.iter().map(|p| p.lanes).max().unwrap_or(1);
+        // The XLA engine cache makes `Analyzer` non-Sync, so workers
+        // capture plain copies of the geometry instead of `self`.
+        let (b, alpha) = (self.b, self.alpha);
+        let run_row = |w: usize, scratch: &mut Scratch| -> AnalysisOutput {
+            let (pi, row) = row_of[w];
+            let p = &preps[pi];
+            let nv = (p.n_valid[row].max(1) as usize).min(p.lanes);
+            bootstrap_row(
+                &p.v1[row * p.lanes..row * p.lanes + nv],
+                &p.v2[row * p.lanes..row * p.lanes + nv],
+                &p.idx,
+                b,
+                p.lanes,
+                alpha,
+                scratch,
+            )
+        };
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(total_rows.max(1));
+        let mut flat: Vec<Option<AnalysisOutput>> = vec![None; total_rows];
+        if threads <= 1 || total_rows <= 2 {
+            let mut scratch = Scratch::new(b, max_lanes);
+            for (w, slot) in flat.iter_mut().enumerate() {
+                *slot = Some(run_row(w, &mut scratch));
+            }
+        } else {
+            let cursor = AtomicUsize::new(0);
+            let tagged: Vec<(usize, AnalysisOutput)> = std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(threads);
+                for _ in 0..threads {
+                    handles.push(scope.spawn(|| {
+                        let mut scratch = Scratch::new(b, max_lanes);
+                        let mut local: Vec<(usize, AnalysisOutput)> = Vec::new();
+                        loop {
+                            let w = cursor.fetch_add(1, Ordering::Relaxed);
+                            if w >= total_rows {
+                                return local;
+                            }
+                            local.push((w, run_row(w, &mut scratch)));
+                        }
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("analysis worker panicked"))
+                    .collect()
+            });
+            for (w, out) in tagged {
+                flat[w] = Some(out);
+            }
+        }
+
+        // Per-job assembly, mirroring `analyze` (including sort order).
+        for p in preps {
+            let mut analysis = SuiteAnalysis {
+                label: jobs[p.job].0.clone(),
+                verdicts: Vec::with_capacity(p.kept.len()),
+                excluded: p.excluded,
+            };
+            for (row, m) in p.kept.iter().enumerate() {
+                let output = flat[p.base + row].expect("every row analyzed");
+                analysis.verdicts.push(BenchmarkVerdict {
+                    name: m.name.clone(),
+                    n_results: m.len(),
+                    change: ChangeKind::from_output(&output),
+                    output,
+                });
+            }
+            analysis.sort();
+            slots[p.job] = Some(Ok(analysis));
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every job resolved"))
+            .collect()
     }
 
     fn pack(
@@ -291,6 +474,66 @@ mod tests {
         assert_eq!(a.lanes_for(65).unwrap(), 256);
         assert_eq!(a.lanes_for(200).unwrap(), 256);
         assert!(a.lanes_for(300).is_err());
+    }
+
+    #[test]
+    fn analyze_many_matches_per_job_analyze() {
+        let a = Analyzer::native();
+        // Mixed shapes: several rows, an excluded benchmark, a wide-lane
+        // job and an empty job — the batched pool must reproduce the
+        // per-job path byte for byte on all of them.
+        let j0: Vec<Measurements> = (0..6)
+            .map(|i| {
+                meas(
+                    &format!("b{i}"),
+                    30 + i as u64,
+                    45,
+                    if i % 2 == 0 { 0.15 } else { 0.0 },
+                )
+            })
+            .chain(std::iter::once(meas("tiny", 40, 4, 0.5)))
+            .collect();
+        let j1 = vec![meas("wide", 41, 200, 0.1)];
+        let j2: Vec<Measurements> = Vec::new();
+        let jobs = vec![
+            ("first".to_string(), j0.as_slice(), 7u64),
+            ("second".to_string(), j1.as_slice(), 8u64),
+            ("third".to_string(), j2.as_slice(), 9u64),
+        ];
+        let many = a.analyze_many(&jobs);
+        assert_eq!(many.len(), 3);
+        for ((label, ms, seed), got) in jobs.iter().zip(many) {
+            let got = got.unwrap();
+            let solo = a.analyze(label, ms, *seed).unwrap();
+            assert_eq!(got.label, solo.label);
+            assert_eq!(got.excluded, solo.excluded);
+            assert_eq!(got.verdicts.len(), solo.verdicts.len());
+            for (x, y) in got.verdicts.iter().zip(&solo.verdicts) {
+                assert_eq!(x.name, y.name);
+                assert_eq!(x.n_results, y.n_results);
+                assert_eq!(x.change, y.change);
+                assert_eq!(x.output, y.output, "{label}/{}", x.name);
+            }
+        }
+    }
+
+    #[test]
+    fn analyze_many_isolates_geometry_errors() {
+        let a = Analyzer::native();
+        let good = vec![meas("ok", 21, 45, 0.15)];
+        let bad = vec![meas("huge", 22, 300, 0.0)];
+        let jobs = vec![
+            ("good".to_string(), good.as_slice(), 1u64),
+            ("bad".to_string(), bad.as_slice(), 2u64),
+        ];
+        let mut many = a.analyze_many(&jobs);
+        assert_eq!(many.len(), 2);
+        let msg = format!("{:#}", many.pop().unwrap().unwrap_err());
+        assert!(msg.contains("lane width"), "{msg}");
+        assert!(msg.contains("'bad'"), "names the failed job: {msg}");
+        let good_out = many.pop().unwrap().unwrap();
+        assert_eq!(good_out.verdicts.len(), 1);
+        assert_eq!(good_out.get("ok").unwrap().change, ChangeKind::Regression);
     }
 
     #[test]

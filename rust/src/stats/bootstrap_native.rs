@@ -97,6 +97,11 @@ pub fn bootstrap_native(
 }
 
 /// Analyze a single benchmark given its (unpadded) sample slices.
+///
+/// The scratch buffers live in a thread-local and are recycled across
+/// calls (§Perf L3): repeated single-row invocations — the adaptive
+/// replay and the sweep drivers — no longer pay eight allocations per
+/// call.
 pub fn bootstrap_native_single(
     v1: &[f32],
     v2: &[f32],
@@ -108,8 +113,17 @@ pub fn bootstrap_native_single(
     assert_eq!(v1.len(), v2.len(), "version sample counts must match");
     assert!(!v1.is_empty(), "need at least one sample");
     assert!(v1.len() <= n_lanes, "more samples than index lanes");
-    let mut scratch = Scratch::new(b, n_lanes);
-    bootstrap_row(v1, v2, idx, b, n_lanes, alpha, &mut scratch)
+    SINGLE_SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        scratch.ensure(b, n_lanes);
+        bootstrap_row(v1, v2, idx, b, n_lanes, alpha, &mut scratch)
+    })
+}
+
+thread_local! {
+    /// Recycled scratch for [`bootstrap_native_single`]; grown on demand.
+    static SINGLE_SCRATCH: std::cell::RefCell<Scratch> =
+        std::cell::RefCell::new(Scratch::new(0, 0));
 }
 
 impl AnalysisOutput {
@@ -126,19 +140,23 @@ impl AnalysisOutput {
 }
 
 /// Reusable buffers: keeps the hot loop allocation-free.
-struct Scratch {
-    rel: Vec<f32>,
-    counts1: Vec<u16>,
-    counts2: Vec<u16>,
-    rank1: Vec<u16>,
-    rank2: Vec<u16>,
-    sorted1: Vec<f32>,
-    sorted2: Vec<f32>,
-    order: Vec<u16>,
+///
+/// Crate-visible so the adaptive replay ([`super::adaptive`]) and the
+/// incremental engine ([`super::incremental`]) can recycle one scratch
+/// across many row evaluations instead of reallocating per call.
+pub(crate) struct Scratch {
+    pub(crate) rel: Vec<f32>,
+    pub(crate) counts1: Vec<u16>,
+    pub(crate) counts2: Vec<u16>,
+    pub(crate) rank1: Vec<u16>,
+    pub(crate) rank2: Vec<u16>,
+    pub(crate) sorted1: Vec<f32>,
+    pub(crate) sorted2: Vec<f32>,
+    pub(crate) order: Vec<u16>,
 }
 
 impl Scratch {
-    fn new(b: usize, n: usize) -> Self {
+    pub(crate) fn new(b: usize, n: usize) -> Self {
         Scratch {
             rel: vec![0.0; b],
             counts1: vec![0; n],
@@ -148,6 +166,22 @@ impl Scratch {
             sorted1: vec![0.0; n],
             sorted2: vec![0.0; n],
             order: vec![0; n],
+        }
+    }
+
+    /// Grow (never shrink) to fit a `(b, n)` geometry.
+    pub(crate) fn ensure(&mut self, b: usize, n: usize) {
+        if self.rel.len() < b {
+            self.rel.resize(b, 0.0);
+        }
+        if self.counts1.len() < n {
+            self.counts1.resize(n, 0);
+            self.counts2.resize(n, 0);
+            self.rank1.resize(n, 0);
+            self.rank2.resize(n, 0);
+            self.sorted1.resize(n, 0.0);
+            self.sorted2.resize(n, 0.0);
+            self.order.resize(n, 0);
         }
     }
 }
@@ -199,8 +233,9 @@ fn median_from_counts(counts: &[u16], sorted: &[f32], k1: u32, k2: u32) -> f32 {
     unreachable!("counts must sum to nv > k2");
 }
 
-/// Optimized row kernel (see module docs).
-fn bootstrap_row(
+/// Optimized row kernel (see module docs): ranks both sample vectors,
+/// then delegates the resample loop to [`bootstrap_ranked`].
+pub(crate) fn bootstrap_row(
     v1: &[f32],
     v2: &[f32],
     idx: &[i32],
@@ -223,17 +258,71 @@ fn bootstrap_row(
 
     rank_samples(v1, &mut scratch.order, &mut scratch.rank1, &mut scratch.sorted1);
     rank_samples(v2, &mut scratch.order, &mut scratch.rank2, &mut scratch.sorted2);
-    let (rank1, rank2) = (&scratch.rank1[..nv], &scratch.rank2[..nv]);
-    let (sorted1, sorted2) = (&scratch.sorted1[..nv], &scratch.sorted2[..nv]);
+    let Scratch {
+        rel,
+        counts1,
+        counts2,
+        rank1,
+        rank2,
+        sorted1,
+        sorted2,
+        ..
+    } = scratch;
+    bootstrap_ranked(
+        &rank1[..nv],
+        &rank2[..nv],
+        &sorted1[..nv],
+        &sorted2[..nv],
+        idx,
+        b,
+        n_lanes,
+        alpha,
+        &mut counts1[..nv],
+        &mut counts2[..nv],
+        &mut rel[..b],
+    )
+}
+
+/// Resample-loop core over *pre-ranked* samples.
+///
+/// `rank1[i]` is the rank of arrival-position `i` in `sorted1` (same for
+/// version 2); the slices' common length is the valid sample count. This
+/// is the piece the incremental engine calls directly: it maintains the
+/// rank/sorted state online via sorted insertion, so each CI refresh
+/// skips the O(nv log nv) argsort and every allocation. Tie order inside
+/// the rank arrays does not affect the output (equal values are adjacent
+/// in `sorted*`, and the cumulative-count median walk returns the same
+/// value whichever equal-valued bucket was incremented), so sorted-insert
+/// ranks and argsort ranks give bit-identical results.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn bootstrap_ranked(
+    rank1: &[u16],
+    rank2: &[u16],
+    sorted1: &[f32],
+    sorted2: &[f32],
+    idx: &[i32],
+    b: usize,
+    n_lanes: usize,
+    alpha: f64,
+    counts1: &mut [u16],
+    counts2: &mut [u16],
+    rel: &mut [f32],
+) -> AnalysisOutput {
+    let nv = rank1.len();
+    debug_assert!(nv >= 1 && nv <= n_lanes);
+    debug_assert_eq!(rank2.len(), nv);
+    debug_assert_eq!(sorted1.len(), nv);
+    debug_assert_eq!(sorted2.len(), nv);
+    debug_assert_eq!(counts1.len(), nv);
+    debug_assert_eq!(counts2.len(), nv);
+    debug_assert_eq!(rel.len(), b);
 
     let fm = FastMod::new(nv as u32);
     let k1 = ((nv - 1) / 2) as u32;
     let k2 = (nv / 2) as u32;
 
-    for bi in 0..b {
+    for (bi, rel_slot) in rel.iter_mut().enumerate() {
         let row_idx = &idx[bi * n_lanes..bi * n_lanes + nv];
-        let counts1 = &mut scratch.counts1[..nv];
-        let counts2 = &mut scratch.counts2[..nv];
         counts1.fill(0);
         counts2.fill(0);
         for &bits in row_idx {
@@ -245,7 +334,7 @@ fn bootstrap_row(
         }
         let med1 = median_from_counts(counts1, sorted1, k1, k2);
         let med2 = median_from_counts(counts2, sorted2, k1, k2);
-        scratch.rel[bi] = if med1 != 0.0 {
+        *rel_slot = if med1 != 0.0 {
             (med2 - med1) / med1 * 100.0
         } else {
             0.0
@@ -257,7 +346,6 @@ fn bootstrap_row(
     // alpha or tiny B degenerate to the plain sort.
     let (lo_q, hi_q) = ci_order_statistics(b, alpha);
     let cmp = |a: &f32, x: &f32| total_cmp_f32(*a, *x);
-    let rel = &mut scratch.rel[..];
     let (lo_v, med_lo_v, med_hi_v, hi_v);
     if b < 8 || hi_q <= b / 2 + 1 {
         rel.sort_unstable_by(cmp);

@@ -1,0 +1,485 @@
+//! Streaming analysis engine: incremental bootstrap + live stopping.
+//!
+//! The adaptive replay ([`super::adaptive::required_results`]) decides
+//! stop points *after* a run by re-analyzing every prefix from scratch —
+//! O(K²·B·n) per benchmark with a fresh argsort, scratch allocation and
+//! index tile per prefix. [`IncrementalBootstrap`] holds per-benchmark
+//! online state instead: samples are kept rank-sorted by *sorted
+//! insertion* as they arrive, so when a checkpoint is reached the rank
+//! histogram state the kernel needs already exists and one CI refresh
+//! costs a single O(B·nv) resample pass ([`bootstrap_ranked`]) with no
+//! allocation at all (recycled [`Scratch`], per-lane-width cached index
+//! tiles).
+//!
+//! Checkpoints replicate the replay's schedule exactly — evaluate at
+//! `k = max(rule.min_results, engine.min_results)` and then every
+//! `rule.step` samples up to `rule.max_results` — and, because the
+//! engine evaluates *at the instant the k-th sample is inserted*, its
+//! online state at that moment is exactly the k-prefix the replay would
+//! reconstruct. Live stop points therefore equal [`required_results`] on
+//! identical sample streams (test-asserted here and in
+//! `rust/tests/adaptive_live.rs`), which is what lets the coordinator
+//! cancel a decided benchmark's remaining calls mid-run without changing
+//! any verdict.
+//!
+//! [`required_results`]: super::adaptive::required_results
+
+use super::adaptive::StoppingRule;
+use super::analyzer::SUPPORTED_LANES;
+use super::bootstrap_native::{bootstrap_ranked, Scratch};
+use crate::runtime::AnalysisOutput;
+use crate::util::stats::total_cmp_f32;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+
+/// Smallest supported lane width covering `max_samples` (free-function
+/// twin of the analyzer's private lane selection; must stay in sync).
+pub(crate) fn lanes_for(max_samples: usize) -> Result<usize> {
+    SUPPORTED_LANES
+        .iter()
+        .copied()
+        .find(|&l| l >= max_samples)
+        .with_context(|| {
+            format!("no supported lane width >= {max_samples} (have {SUPPORTED_LANES:?})")
+        })
+}
+
+/// Resample-index tiles cached per lane width.
+///
+/// A tile is a pure function of `(seed, b, lanes)` — the analyzer draws
+/// `b * lanes` index bits from `Rng::new(seed)` — so both the adaptive
+/// replay and the live engine fill each geometry once and reuse it for
+/// every evaluation at that lane width.
+pub(crate) struct IdxTiles {
+    seed: u64,
+    b: usize,
+    tiles: Vec<(usize, Vec<i32>)>,
+}
+
+impl IdxTiles {
+    pub(crate) fn new(seed: u64, b: usize) -> Self {
+        IdxTiles {
+            seed,
+            b,
+            tiles: Vec::new(),
+        }
+    }
+
+    /// Tile (and its lane width) for analyzing `n` samples.
+    pub(crate) fn for_samples(&mut self, n: usize) -> Result<(&[i32], usize)> {
+        let lanes = lanes_for(n)?;
+        if let Some(pos) = self.tiles.iter().position(|(l, _)| *l == lanes) {
+            return Ok((&self.tiles[pos].1, lanes));
+        }
+        let mut idx = vec![0i32; self.b * lanes];
+        Rng::new(self.seed).fill_index_bits(&mut idx);
+        self.tiles.push((lanes, idx));
+        let (l, tile) = self.tiles.last().expect("just pushed");
+        Ok((tile, *l))
+    }
+}
+
+/// Per-benchmark online state: samples in arrival order plus the
+/// rank-sorted view the bootstrap kernel consumes.
+struct BenchState {
+    /// Version-1 samples, arrival order (resample indices address this).
+    v1: Vec<f32>,
+    /// Version-2 samples, arrival order.
+    v2: Vec<f32>,
+    /// `rank1[i]` = rank of arrival-position `i` in `sorted1`.
+    rank1: Vec<u16>,
+    rank2: Vec<u16>,
+    sorted1: Vec<f32>,
+    sorted2: Vec<f32>,
+    /// Next sample count at which to refresh the CI.
+    next_check: usize,
+    /// CI width met the target (the benchmark's verdict is decided).
+    decided: bool,
+    /// Sample count at which the target was met, if it was.
+    stop_at: Option<usize>,
+    /// Most recent checkpoint output and the sample count it was
+    /// computed at.
+    last: Option<(AnalysisOutput, usize)>,
+}
+
+/// Incremental bootstrap engine over a suite of streaming benchmarks.
+pub struct IncrementalBootstrap {
+    b: usize,
+    alpha: f64,
+    rule: StoppingRule,
+    seed: u64,
+    first_check: usize,
+    tiles: IdxTiles,
+    scratch: Scratch,
+    benches: Vec<BenchState>,
+}
+
+impl IncrementalBootstrap {
+    /// Engine for `bench_count` benchmarks with the analyzer geometry
+    /// `(b, alpha, min_results)` and the live stopping rule. `seed` must
+    /// be the analysis seed (the one the post-hoc replay would use) for
+    /// stop points to match it.
+    pub fn new(
+        bench_count: usize,
+        b: usize,
+        alpha: f64,
+        min_results: usize,
+        rule: StoppingRule,
+        seed: u64,
+    ) -> Self {
+        let first_check = rule.min_results.max(min_results);
+        IncrementalBootstrap {
+            b,
+            alpha,
+            rule,
+            seed,
+            first_check,
+            tiles: IdxTiles::new(seed, b),
+            scratch: Scratch::new(b, 0),
+            benches: (0..bench_count)
+                .map(|_| BenchState {
+                    v1: Vec::new(),
+                    v2: Vec::new(),
+                    rank1: Vec::new(),
+                    rank2: Vec::new(),
+                    sorted1: Vec::new(),
+                    sorted2: Vec::new(),
+                    next_check: first_check,
+                    decided: false,
+                    stop_at: None,
+                    last: None,
+                })
+                .collect(),
+        }
+    }
+
+    /// Number of benchmarks the engine tracks.
+    pub fn bench_count(&self) -> usize {
+        self.benches.len()
+    }
+
+    /// Analysis seed the engine resamples with.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Push one duet sample pair for `bench`. Returns `true` iff this
+    /// push *newly decided* the benchmark (its CI width met the target at
+    /// this checkpoint) — the coordinator's signal to cancel the
+    /// benchmark's remaining scheduled calls.
+    pub fn push_sample(&mut self, bench: usize, v1: f64, v2: f64) -> Result<bool> {
+        let v1 = v1 as f32;
+        let v2 = v2 as f32;
+        assert!(
+            v1.is_finite() && v2.is_finite(),
+            "non-finite sample in bootstrap input"
+        );
+        let state = &mut self.benches[bench];
+        sorted_insert(&mut state.sorted1, &mut state.rank1, v1);
+        sorted_insert(&mut state.sorted2, &mut state.rank2, v2);
+        state.v1.push(v1);
+        state.v2.push(v2);
+
+        let len = state.v1.len();
+        if state.decided || len != state.next_check || len > self.rule.max_results {
+            return Ok(false);
+        }
+        // `len == next_check`: the online state *is* the k-prefix state
+        // the replay would build, so this refresh is checkpoint k.
+        let (idx, lanes) = self.tiles.for_samples(len)?;
+        self.scratch.ensure(self.b, lanes);
+        let out = bootstrap_ranked(
+            &state.rank1,
+            &state.rank2,
+            &state.sorted1,
+            &state.sorted2,
+            idx,
+            self.b,
+            lanes,
+            self.alpha,
+            &mut self.scratch.counts1[..len],
+            &mut self.scratch.counts2[..len],
+            &mut self.scratch.rel[..self.b],
+        );
+        state.last = Some((out, len));
+        if out.ci_size_pct() <= self.rule.target_ci_pct {
+            state.decided = true;
+            state.stop_at = Some(len);
+            return Ok(true);
+        }
+        state.next_check += self.rule.step;
+        Ok(false)
+    }
+
+    /// Current verdict for `bench`: the latest analysis output plus
+    /// whether the benchmark is decided (CI target met). Evaluates the
+    /// current sample set on demand when the last checkpoint is stale;
+    /// panics if no sample was ever pushed.
+    pub fn current_verdict(&mut self, bench: usize) -> Result<(AnalysisOutput, bool)> {
+        let state = &self.benches[bench];
+        let len = state.v1.len();
+        assert!(len > 0, "current_verdict before any sample was pushed");
+        if let Some((out, at)) = state.last {
+            if at == len {
+                return Ok((out, state.decided));
+            }
+        }
+        let (idx, lanes) = self.tiles.for_samples(len)?;
+        self.scratch.ensure(self.b, lanes);
+        let state = &self.benches[bench];
+        let out = bootstrap_ranked(
+            &state.rank1,
+            &state.rank2,
+            &state.sorted1,
+            &state.sorted2,
+            idx,
+            self.b,
+            lanes,
+            self.alpha,
+            &mut self.scratch.counts1[..len],
+            &mut self.scratch.counts2[..len],
+            &mut self.scratch.rel[..self.b],
+        );
+        Ok((out, state.decided))
+    }
+
+    /// Whether `bench` is decided (its remaining calls can be canceled).
+    pub fn is_decided(&self, bench: usize) -> bool {
+        self.benches[bench].decided
+    }
+
+    /// Sample count at which `bench` met the CI target, if it did.
+    pub fn stop_at(&self, bench: usize) -> Option<usize> {
+        self.benches[bench].stop_at
+    }
+
+    /// Samples pushed so far for `bench`.
+    pub fn samples(&self, bench: usize) -> usize {
+        self.benches[bench].v1.len()
+    }
+
+    /// Live stop point in [`required_results`] convention: the sample
+    /// count at which the benchmark was decided, or the (budget-capped)
+    /// count it actually collected.
+    ///
+    /// [`required_results`]: super::adaptive::required_results
+    pub fn stop_point(&self, bench: usize) -> usize {
+        let state = &self.benches[bench];
+        state
+            .stop_at
+            .unwrap_or_else(|| state.v1.len().min(self.rule.max_results))
+    }
+}
+
+/// Insert `v` into the sorted view, updating existing ranks.
+///
+/// The new value lands at the leftmost position among equal values; the
+/// resulting rank permutation may differ from an argsort's unstable tie
+/// order, but every bootstrap output is tie-order independent (see
+/// [`bootstrap_ranked`]), so checkpoint results match the replay bit for
+/// bit.
+fn sorted_insert(sorted: &mut Vec<f32>, rank: &mut Vec<u16>, v: f32) {
+    let p = sorted.partition_point(|&x| total_cmp_f32(x, v) == std::cmp::Ordering::Less);
+    sorted.insert(p, v);
+    for r in rank.iter_mut() {
+        if *r as usize >= p {
+            *r += 1;
+        }
+    }
+    rank.push(p as u16);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{required_results, Analyzer, Measurements};
+
+    fn stream(seed: u64, n: usize, sigma: f64, shift: f64) -> (Vec<f64>, Vec<f64>) {
+        let mut r = Rng::new(seed);
+        let v1: Vec<f64> = (0..n).map(|_| r.lognormal(0.0, sigma)).collect();
+        let v2: Vec<f64> = (0..n).map(|_| r.lognormal(0.0, sigma) * (1.0 + shift)).collect();
+        (v1, v2)
+    }
+
+    fn feed(engine: &mut IncrementalBootstrap, bench: usize, v1: &[f64], v2: &[f64]) {
+        for (&a, &b) in v1.iter().zip(v2) {
+            engine.push_sample(bench, a, b).unwrap();
+        }
+    }
+
+    #[test]
+    fn sorted_insert_maintains_rank_invariant() {
+        let mut r = Rng::new(3);
+        let mut sorted = Vec::new();
+        let mut rank = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..50 {
+            // Quantized so ties occur.
+            let v = ((r.lognormal(0.0, 0.3) * 8.0).round() / 8.0) as f32;
+            vals.push(v);
+            sorted_insert(&mut sorted, &mut rank, v);
+            assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+            for (i, &rk) in rank.iter().enumerate() {
+                assert_eq!(sorted[rk as usize], vals[i], "rank points at the value");
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoints_match_replay_bit_for_bit() {
+        // Each checkpoint output must equal analyzing the same prefix
+        // through the analyzer (the lockstep/differential-oracle
+        // contract), including on tie-heavy streams.
+        let analyzer = Analyzer::native();
+        let rule = StoppingRule {
+            target_ci_pct: 0.0, // never decide: visit every checkpoint
+            ..StoppingRule::default()
+        };
+        for case in 0..4u64 {
+            let sigma = if case % 2 == 0 { 0.02 } else { 0.2 };
+            let (mut v1, mut v2) = stream(40 + case, 45, sigma, 0.05);
+            if case == 3 {
+                // quantize to force ties
+                for x in v1.iter_mut().chain(v2.iter_mut()) {
+                    *x = (*x * 8.0).round() / 8.0;
+                }
+            }
+            let mut engine =
+                IncrementalBootstrap::new(1, analyzer.b, analyzer.alpha, analyzer.min_results, rule, 9);
+            let mut k = rule.min_results.max(analyzer.min_results);
+            for i in 0..45 {
+                engine.push_sample(0, v1[i], v2[i]).unwrap();
+                if i + 1 == k {
+                    let (live, _) = engine.current_verdict(0).unwrap();
+                    let prefix = Measurements {
+                        name: "x".into(),
+                        v1: v1[..k].to_vec(),
+                        v2: v2[..k].to_vec(),
+                    };
+                    let replay = analyzer
+                        .analyze("adaptive", std::slice::from_ref(&prefix), 9)
+                        .unwrap();
+                    assert_eq!(
+                        live,
+                        replay.get("x").unwrap().output,
+                        "case {case} checkpoint {k}"
+                    );
+                    k += rule.step;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn live_stop_points_equal_required_results() {
+        let analyzer = Analyzer::native();
+        let rule = StoppingRule::default();
+        for (seed, sigma) in [(1u64, 0.005), (2, 0.15), (7, 0.04), (11, 0.08)] {
+            let (v1, v2) = stream(seed, 45, sigma, 0.10);
+            let m = Measurements {
+                name: "x".into(),
+                v1: v1.clone(),
+                v2: v2.clone(),
+            };
+            let replay = required_results(&analyzer, &m, &rule, 77).unwrap();
+            let mut engine = IncrementalBootstrap::new(
+                1,
+                analyzer.b,
+                analyzer.alpha,
+                analyzer.min_results,
+                rule,
+                77,
+            );
+            feed(&mut engine, 0, &v1, &v2);
+            assert_eq!(engine.stop_point(0), replay, "seed {seed} sigma {sigma}");
+        }
+    }
+
+    #[test]
+    fn push_signals_the_deciding_checkpoint_once() {
+        let analyzer = Analyzer::native();
+        let (v1, v2) = stream(1, 45, 0.005, 0.10);
+        let mut engine = IncrementalBootstrap::new(
+            1,
+            analyzer.b,
+            analyzer.alpha,
+            analyzer.min_results,
+            StoppingRule::default(),
+            77,
+        );
+        let mut signals = 0;
+        for (&a, &b) in v1.iter().zip(&v2) {
+            if engine.push_sample(0, a, b).unwrap() {
+                signals += 1;
+                assert_eq!(engine.stop_at(0), Some(engine.samples(0)));
+            }
+        }
+        assert_eq!(signals, 1, "a tight stream decides exactly once");
+        assert!(engine.is_decided(0));
+        // Samples may keep arriving after the decision (in-flight calls);
+        // the stop point stays pinned.
+        let before = engine.stop_point(0);
+        engine.push_sample(0, 1.0, 1.0).unwrap();
+        assert_eq!(engine.stop_point(0), before);
+    }
+
+    #[test]
+    fn undecided_stream_reports_budget_stop_point() {
+        let analyzer = Analyzer::native();
+        let (v1, v2) = stream(2, 45, 0.15, 0.10);
+        let mut engine = IncrementalBootstrap::new(
+            1,
+            analyzer.b,
+            analyzer.alpha,
+            analyzer.min_results,
+            StoppingRule::default(),
+            77,
+        );
+        feed(&mut engine, 0, &v1, &v2);
+        assert!(!engine.is_decided(0));
+        assert_eq!(engine.stop_at(0), None);
+        assert_eq!(engine.stop_point(0), 45);
+    }
+
+    #[test]
+    fn benchmarks_are_independent() {
+        let analyzer = Analyzer::native();
+        let (t1, t2) = stream(1, 45, 0.005, 0.10);
+        let (n1, n2) = stream(2, 45, 0.15, 0.10);
+        let mut engine = IncrementalBootstrap::new(
+            2,
+            analyzer.b,
+            analyzer.alpha,
+            analyzer.min_results,
+            StoppingRule::default(),
+            77,
+        );
+        // Interleave the two benchmarks' streams.
+        for i in 0..45 {
+            engine.push_sample(0, t1[i], t2[i]).unwrap();
+            engine.push_sample(1, n1[i], n2[i]).unwrap();
+        }
+        assert!(engine.is_decided(0));
+        assert!(!engine.is_decided(1));
+
+        // Same per-benchmark results as two isolated engines.
+        let mut solo = IncrementalBootstrap::new(
+            1,
+            analyzer.b,
+            analyzer.alpha,
+            analyzer.min_results,
+            StoppingRule::default(),
+            77,
+        );
+        feed(&mut solo, 0, &t1, &t2);
+        assert_eq!(engine.stop_at(0), solo.stop_at(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite sample in bootstrap input")]
+    fn non_finite_samples_are_rejected() {
+        let mut engine =
+            IncrementalBootstrap::new(1, 64, 0.01, 10, StoppingRule::default(), 1);
+        let _ = engine.push_sample(0, f64::NAN, 1.0);
+    }
+}

@@ -15,11 +15,13 @@ mod analyzer;
 mod bootstrap_native;
 mod fastdiv;
 mod compare;
+mod incremental;
 mod suite_result;
 
 pub use adaptive::{adaptive_plan, required_results, AdaptivePlan, StoppingRule};
 pub use analyzer::{AnalysisBackend, Analyzer, DEFAULT_B, DEFAULT_MIN_RESULTS, SUPPORTED_LANES};
 pub use bootstrap_native::{bootstrap_native, bootstrap_native_single, bootstrap_row_reference};
+pub use incremental::IncrementalBootstrap;
 pub use fastdiv::FastMod;
 pub use compare::{
     agreement, coverage, possible_changes, AgreementReport, Coverage, Disagreement,

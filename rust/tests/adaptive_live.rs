@@ -1,0 +1,141 @@
+//! Live adaptive early stopping, exercised end-to-end at the coordinator
+//! boundary: the in-run incremental engine must stay in lockstep with the
+//! post-hoc replay oracle on the streams the run actually produced, and
+//! an A/A harness across all three provider calibrations checks that
+//! stopping early does not buy its savings with false positives.
+
+use elastibench::config::{ExperimentConfig, SutConfig};
+use elastibench::coordinator::{run_experiment, run_experiment_live, LiveStopConfig};
+use elastibench::faas::profile_by_name;
+use elastibench::stats::{required_results, Analyzer, StoppingRule};
+use elastibench::sut::{generate, Version};
+
+/// Seed offset between run seed and analysis seed (the convention the
+/// scenario runner and experiment drivers share).
+const ANALYSIS_SEED_XOR: u64 = 0xA11A;
+
+fn live_cfg(exp: &ExperimentConfig, analyzer: &Analyzer) -> LiveStopConfig {
+    LiveStopConfig {
+        b: analyzer.b,
+        alpha: analyzer.alpha,
+        min_results: analyzer.min_results,
+        rule: StoppingRule {
+            step: exp.repeats_per_call.max(1),
+            ..StoppingRule::default()
+        },
+        seed: exp.seed ^ ANALYSIS_SEED_XOR,
+    }
+}
+
+fn small_sut() -> SutConfig {
+    SutConfig {
+        benchmark_count: 12,
+        true_changes: 3,
+        faas_incompatible: 1,
+        slow_setup: 1,
+        ..SutConfig::default()
+    }
+}
+
+/// Strict lockstep: for EVERY benchmark — decided, budget-exhausted,
+/// failed or empty — the live engine's stop point equals
+/// `required_results` replayed over the measurement stream the live run
+/// itself collected. This is the tie-order-independence guarantee of the
+/// incremental kernel surfacing at the system boundary: checkpoint
+/// evaluations on the online rank state are bit-identical to fresh
+/// prefix replays.
+#[test]
+fn live_stop_points_lockstep_with_replay_on_own_streams() {
+    let sut = small_sut();
+    let suite = generate(&sut);
+    // Parallelism far below the planned call count, so there is a
+    // backlog of scheduled-but-unissued calls for decisions to cancel.
+    let exp = ExperimentConfig {
+        parallelism: 12,
+        ..ExperimentConfig::default()
+    };
+    let analyzer = Analyzer::native();
+    let cfg = live_cfg(&exp, &analyzer);
+    let platform = profile_by_name("aws-lambda").expect("profile").config();
+    let (run, live) =
+        run_experiment_live(&suite, &sut, &platform, &exp, (Version::V1, Version::V2), &cfg);
+
+    assert_eq!(live.stop_points.len(), suite.len());
+    assert!(live.decided > 0, "tight benchmarks must decide early");
+    assert!(live.calls_canceled > 0, "decisions must cancel scheduled calls");
+    let mut analyzable = 0usize;
+    for m in &run.measurements {
+        let (_, stop) = live
+            .stop_points
+            .iter()
+            .find(|(n, _)| n == &m.name)
+            .expect("a stop point for every benchmark");
+        let needed = required_results(&analyzer, m, &cfg.rule, cfg.seed).expect("replay");
+        assert_eq!(*stop, needed, "{}", m.name);
+        if m.len() >= cfg.rule.min_results {
+            analyzable += 1;
+        }
+    }
+    assert!(analyzable > 0, "at least one stream reaches the analysis floor");
+}
+
+/// A/A harness across the three provider calibrations: with identical
+/// versions, the live early-stopped run must not report more change
+/// verdicts (false positives) than its fixed-budget twin — shorter
+/// streams are admissible only because they stopped at the CI target.
+/// Early stopping must also engage (decisions + cancellations) and make
+/// the run strictly cheaper.
+#[test]
+fn aa_false_positives_stay_low_across_provider_profiles() {
+    let analyzer = Analyzer::native();
+    for (i, profile) in ["aws-lambda", "gcp-cloud-functions", "azure-functions"]
+        .iter()
+        .enumerate()
+    {
+        let platform = profile_by_name(profile).expect("registered profile").config();
+        let sut = small_sut();
+        let suite = generate(&sut);
+        let exp = ExperimentConfig {
+            parallelism: 12,
+            seed: 0xAA5E_ED00 + i as u64,
+            ..ExperimentConfig::default()
+        };
+        let cfg = live_cfg(&exp, &analyzer);
+        let seed = exp.seed ^ ANALYSIS_SEED_XOR;
+
+        let fixed = run_experiment(&suite, &sut, &platform, &exp, (Version::V1, Version::V1));
+        let (live_run, live) =
+            run_experiment_live(&suite, &sut, &platform, &exp, (Version::V1, Version::V1), &cfg);
+
+        let fp_fixed = analyzer
+            .analyze("aa-fixed", &fixed.measurements, seed)
+            .expect("analyze fixed")
+            .change_count();
+        let fp_live = analyzer
+            .analyze("aa-live", &live_run.measurements, seed)
+            .expect("analyze live")
+            .change_count();
+        // Duet pairing shares per-call noise between the two (identical)
+        // versions, so A/A relative differences sit tightly around zero.
+        assert!(fp_fixed <= 1, "{profile}: fixed A/A reported {fp_fixed} changes");
+        assert!(
+            fp_live <= fp_fixed + 1,
+            "{profile}: live A/A inflates false positives ({fp_live} vs {fp_fixed})"
+        );
+
+        // A/A streams are the easiest to decide: early stopping must
+        // engage and pay off on every provider calibration.
+        assert!(live.decided > 0, "{profile}: nothing decided");
+        assert!(live.calls_canceled > 0, "{profile}: nothing canceled");
+        assert!(
+            live_run.calls_total < fixed.calls_total,
+            "{profile}: live {} vs fixed {} calls",
+            live_run.calls_total,
+            fixed.calls_total
+        );
+        assert!(
+            live_run.cost_usd < fixed.cost_usd,
+            "{profile}: live must be strictly cheaper"
+        );
+    }
+}

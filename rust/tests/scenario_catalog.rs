@@ -206,6 +206,70 @@ fn hyperscale_entry_exercises_pool_churn() {
 }
 
 #[test]
+fn adaptive_live_entry_saves_against_its_fixed_twin() {
+    // The live early-stopping catalog entry: adaptive repeats at fleet
+    // parallelism (>= 256), planning no fewer calls than the smoke run.
+    let sc = catalog_entry("adaptive-live").unwrap();
+    assert_eq!(sc.repeats, elastibench::scenario::RepeatPolicy::Adaptive);
+    assert!(sc.exp.parallelism >= 256, "parallelism {}", sc.exp.parallelism);
+    assert!(sc.tags.iter().any(|t| t == "adaptive"), "{:?}", sc.tags);
+
+    // A scaled-down run (parallelism far below the plan size, so
+    // cancellation has scheduled calls left to shed) against its fixed
+    // twin: the live run must report strictly lower simulated duration
+    // and billed cost.
+    let analyzer = Analyzer::native();
+    let mut small = sc.clone();
+    small.sut.benchmark_count = 10;
+    small.sut.true_changes = 3;
+    small.sut.faas_incompatible = 0;
+    small.sut.slow_setup = 0;
+    small.exp.parallelism = 10;
+    let live = run_scenario(&small, &analyzer).unwrap();
+    let mut fixed_sc = small.clone();
+    fixed_sc.repeats = elastibench::scenario::RepeatPolicy::Fixed;
+    let fixed = run_scenario(&fixed_sc, &analyzer).unwrap();
+
+    let summary = live.live.as_ref().expect("live summary present");
+    assert!(summary.decided > 0, "stable benchmarks decide early");
+    assert!(summary.calls_canceled > 0);
+    assert!(live.run.calls_total < fixed.run.calls_total);
+    assert!(live.run.cost_usd < fixed.run.cost_usd, "billed-cost savings");
+    assert!(
+        live.run.invoke_wall_s < fixed.run.invoke_wall_s,
+        "simulated-duration savings"
+    );
+
+    // Verdict agreement on *decided* benchmarks (stop point below the
+    // full 45-result budget — these are the ones whose CI met the
+    // target). Cancellation perturbs the RNG stream of later calls, so
+    // the two runs see different sample realizations for undecided
+    // borderline benchmarks; decided ones have tight CIs and must agree
+    // directionally, with at most one borderline flip tolerated.
+    let budget = small.exp.results_per_benchmark();
+    let mut compared = 0;
+    let mut flips = 0;
+    for (name, stop) in &summary.stop_points {
+        if *stop >= budget.min(45) {
+            continue; // never decided: ran the full budget
+        }
+        let (Some(a), Some(b)) = (live.analysis.get(name), fixed.analysis.get(name)) else {
+            continue;
+        };
+        compared += 1;
+        use elastibench::stats::ChangeKind;
+        let opposite = (a.change == ChangeKind::Regression && b.change == ChangeKind::Improvement)
+            || (a.change == ChangeKind::Improvement && b.change == ChangeKind::Regression);
+        assert!(!opposite, "{name}: {:?} vs {:?}", a.change, b.change);
+        if a.change != b.change {
+            flips += 1;
+        }
+    }
+    assert!(compared > 0, "at least one decided benchmark to compare");
+    assert!(flips <= 1, "{flips} verdict flips between live and fixed twin");
+}
+
+#[test]
 fn profiles_change_run_economics() {
     // The same (small) workload priced on three providers must differ in
     // cost/wall-time — the whole point of multi-provider profiles.

@@ -196,6 +196,99 @@ pub fn run_duet_call(
     out
 }
 
+/// Outcome of one single-version function call (sequential strategy:
+/// each invocation measures one lane of the comparison).
+#[derive(Debug, Clone, Default)]
+pub struct SingleCallOutcome {
+    /// ns/op samples, one per successful repeat.
+    pub samples: Vec<f64>,
+    /// Wall time of the whole call [s] (also the billed duration).
+    pub wall_s: f64,
+    /// Error that aborted the call, if any.
+    pub error: Option<RunError>,
+}
+
+/// Run `repeats` measurements of a single `version` of one benchmark in
+/// one invocation — the per-call shape of the `sequential` execution
+/// strategy, where v1 and v2 occupy separate calls (and typically
+/// separate wall-clock blocks) instead of a duet.
+pub fn run_single_call(
+    b: &Microbenchmark,
+    version: Version,
+    repeats: usize,
+    t0: Time,
+    cache_warm: bool,
+    ctx: &mut ExecCtx<'_>,
+) -> SingleCallOutcome {
+    let mut out = SingleCallOutcome::default();
+    let mut t = t0;
+    if !cache_warm {
+        let warmup = ctx.rng.lognormal(0.2_f64.ln(), 0.3) / ctx.vcpus.min(1.0);
+        t += warmup;
+        out.wall_s += warmup;
+    }
+    for _ in 0..repeats {
+        match run_once(b, version, t, ctx) {
+            Ok(o) => {
+                t += o.wall_s;
+                out.wall_s += o.wall_s;
+                out.samples.push(o.ns_per_op);
+            }
+            Err((e, w)) => {
+                out.wall_s += w;
+                out.error = Some(e);
+                return out;
+            }
+        }
+    }
+    out
+}
+
+/// Run a full RMIT call: the 2×`repeats` version trials of one benchmark
+/// execute in a per-call *randomized interleaved order* (random multiple
+/// interleaved trials) drawn from `ctx.rng`, instead of the duet's
+/// strict first/second alternation. Samples are paired by repeat index
+/// after the fact; an aborting error keeps the complete pairs collected
+/// so far (the longer lane's tail is dropped).
+pub fn run_rmit_call(
+    b: &Microbenchmark,
+    versions: (Version, Version),
+    repeats: usize,
+    t0: Time,
+    cache_warm: bool,
+    ctx: &mut ExecCtx<'_>,
+) -> CallOutcome {
+    let mut out = CallOutcome::default();
+    let mut t = t0;
+    if !cache_warm {
+        let warmup = ctx.rng.lognormal(0.2_f64.ln(), 0.3) / ctx.vcpus.min(1.0);
+        t += warmup;
+        out.wall_s += warmup;
+    }
+    // `repeats` trials per slot, interleaving randomized per call.
+    let mut order: Vec<u8> = (0..2 * repeats).map(|i| (i % 2) as u8).collect();
+    ctx.rng.shuffle(&mut order);
+    let mut lanes: [Vec<f64>; 2] = [Vec::new(), Vec::new()];
+    for lane in order {
+        let version = if lane == 0 { versions.0 } else { versions.1 };
+        match run_once(b, version, t, ctx) {
+            Ok(o) => {
+                t += o.wall_s;
+                out.wall_s += o.wall_s;
+                lanes[lane as usize].push(o.ns_per_op);
+            }
+            Err((e, w)) => {
+                out.wall_s += w;
+                out.error = Some(e);
+                break;
+            }
+        }
+    }
+    let n = lanes[0].len().min(lanes[1].len());
+    out.pairs = (0..n).map(|i| (lanes[0][i], lanes[1][i])).collect();
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -439,6 +532,73 @@ mod tests {
         assert_eq!(out.error, Some(RunError::RestrictedEnv));
         assert!(out.pairs.is_empty());
         assert!(out.wall_s > 0.0);
+    }
+
+    #[test]
+    fn single_call_collects_one_lane() {
+        let b = normal_bench();
+        let mut rng = Rng::new(11);
+        let mut factor = |_t: Time| 1.0;
+        let mut ctx = ExecCtx {
+            vcpus: 1.29,
+            env_factor: &mut factor,
+            rng: &mut rng,
+            restricted_fs: true,
+            timeout_s: 20.0,
+            on_faas: true,
+            extra_sigma: 0.0,
+        };
+        let out = run_single_call(&b, Version::V1, 3, 0.0, true, &mut ctx);
+        assert!(out.error.is_none());
+        assert_eq!(out.samples.len(), 3);
+        // 3 runs of ~2 s each (half a duet call's budget).
+        assert!(out.wall_s > 3.0 && out.wall_s < 20.0, "{}", out.wall_s);
+        // Restricted-env failure aborts with no samples.
+        let suite = generate(&SutConfig::default());
+        let fsb = suite.benchmarks.iter().find(|b| b.writes_fs).unwrap();
+        let out = run_single_call(fsb, Version::V1, 3, 0.0, true, &mut ctx);
+        assert_eq!(out.error, Some(RunError::RestrictedEnv));
+        assert!(out.samples.is_empty());
+    }
+
+    #[test]
+    fn rmit_call_pairs_by_repeat_index() {
+        // Noise-free: each lane's samples are identical regardless of
+        // interleaving, so pairing by index must reproduce the true
+        // per-version values.
+        let mut b = normal_bench();
+        b.rel_sigma = 0.0;
+        b.setup_s = 0.0;
+        let mut rng = Rng::new(12);
+        let mut factor = |_t: Time| 1.0;
+        let mut ctx = ExecCtx {
+            vcpus: 1.29,
+            env_factor: &mut factor,
+            rng: &mut rng,
+            restricted_fs: true,
+            timeout_s: 20.0,
+            on_faas: true,
+            extra_sigma: 0.0,
+        };
+        let out = run_rmit_call(&b, (Version::V1, Version::V2), 3, 0.0, true, &mut ctx);
+        assert!(out.error.is_none());
+        assert_eq!(out.pairs.len(), 3);
+        for (v1, v2) in out.pairs {
+            assert!((v2 / v1 - 1.0).abs() < 1e-9, "unchanged benchmark");
+        }
+    }
+
+    #[test]
+    fn rmit_interleaving_order_varies_per_call() {
+        // With per-call random interleaving, two calls on different RNG
+        // streams draw different orders; statistically the wall-clock
+        // trajectories diverge. Cheap structural check: the shuffled
+        // order is a permutation with `repeats` of each lane.
+        let mut rng = Rng::new(13);
+        let mut order: Vec<u8> = (0..6).map(|i| (i % 2) as u8).collect();
+        rng.shuffle(&mut order);
+        assert_eq!(order.iter().filter(|&&l| l == 0).count(), 3);
+        assert_eq!(order.iter().filter(|&&l| l == 1).count(), 3);
     }
 
     #[test]

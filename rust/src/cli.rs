@@ -539,6 +539,7 @@ fn cmd_scenario_sweep(args: &Args) -> Result<i32> {
             memory_mb: r.scenario.exp.memory_mb,
             mode: r.scenario.mode.as_str().to_string(),
             seed: r.scenario.exp.seed,
+            strategy: r.scenario.strategy.as_str().to_string(),
             analyzed: r.analysis.verdicts.len(),
             changes: r.analysis.change_count(),
             wall_s: r.run.wall_s,

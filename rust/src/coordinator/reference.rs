@@ -1,0 +1,289 @@
+//! The pre-`ExecutionStrategy` coordinator loop, preserved **verbatim**
+//! as a byte-identity oracle.
+//!
+//! When the strategy axis was extracted into
+//! [`super::strategy::ExecutionStrategy`], the previous hard-coded duet
+//! loop moved here unchanged (same RNG fork tags, same draw order, same
+//! plan construction). The differential suite in
+//! `rust/tests/strategy_lab.rs` and `rust/tests/platform_pool.rs` pins
+//! the extracted `duet` strategy to this loop field-for-field, so any
+//! refactor drift in `runner.rs` surfaces as a test failure instead of a
+//! silent result change.
+//!
+//! Not a production path: use [`super::run_experiment`] /
+//! [`super::run_experiment_live`].
+
+use super::image::build_image;
+use super::runner::{
+    CallFailure, LiveStopConfig, LiveStopReport, RunReport, CLIENT_OVERHEAD_S,
+};
+use crate::benchexec::{run_duet_call, ExecCtx, RunError};
+use crate::config::{ExperimentConfig, PlatformConfig, SutConfig};
+use crate::des::Sim;
+use crate::faas::{FaasPlatform, InstancePool};
+use crate::stats::{IncrementalBootstrap, Measurements};
+use crate::sut::{Suite, Version};
+use crate::util::Rng;
+
+/// One planned function call (pre-strategy shape: always a duet).
+#[derive(Debug, Clone, Copy)]
+struct PlannedCall {
+    bench_idx: usize,
+    /// Retry budget left for crash failures.
+    retries_left: u8,
+}
+
+/// DES event: a call finished.
+struct CallDone {
+    plan: PlannedCall,
+    instance: usize,
+    billed_s: f64,
+    pairs: Vec<(f64, f64)>,
+    failure: Option<CallFailure>,
+}
+
+/// [`super::run_experiment`] as it was before the strategy extraction:
+/// the duet plan, shuffle, fan-out and collection hard-coded in one loop.
+pub fn run_experiment_hardcoded(
+    suite: &Suite,
+    sut: &SutConfig,
+    platform_cfg: &PlatformConfig,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+) -> RunReport {
+    run_hardcoded_on(suite, sut, exp, versions, None, |image_mb| {
+        FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
+    })
+    .0
+}
+
+/// [`super::run_experiment_live`] as it was before the strategy
+/// extraction.
+pub fn run_experiment_live_hardcoded(
+    suite: &Suite,
+    sut: &SutConfig,
+    platform_cfg: &PlatformConfig,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+    live: &LiveStopConfig,
+) -> (RunReport, LiveStopReport) {
+    let (report, live) = run_hardcoded_on(suite, sut, exp, versions, Some(live), |image_mb| {
+        FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
+    });
+    (report, live.expect("live config was passed"))
+}
+
+/// The pre-refactor experiment loop, generic over the instance pool.
+/// Copied verbatim from `runner::run_experiment_on` at the moment the
+/// strategy axis was extracted — do not "fix" or modernize this body;
+/// its value is being frozen.
+fn run_hardcoded_on<P: InstancePool>(
+    suite: &Suite,
+    sut: &SutConfig,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+    live: Option<&LiveStopConfig>,
+    deploy: impl FnOnce(f64) -> P,
+) -> (RunReport, Option<LiveStopReport>) {
+    if let Err(errs) = exp.validate() {
+        panic!("invalid experiment config: {errs:?}");
+    }
+    let mut rng = Rng::new(exp.seed);
+
+    // Phase 1+2: build + deploy.
+    let image = build_image(sut, &mut rng.fork(0xB01D));
+    let mut platform = deploy(image.size_mb);
+
+    // Phase 3: plan — calls_per_benchmark calls per benchmark, shuffled
+    // globally (randomized order => randomized instance assignment, §4).
+    let mut plan: Vec<PlannedCall> = (0..suite.len())
+        .flat_map(|bench_idx| {
+            (0..exp.calls_per_benchmark).map(move |_| PlannedCall {
+                bench_idx,
+                retries_left: 1,
+            })
+        })
+        .collect();
+    if exp.randomize_order {
+        rng.shuffle(&mut plan);
+    }
+    plan.reverse(); // issue order = pop() from the back
+
+    // Phase 4: bounded-parallel fan-out over the DES.
+    let mut sim: Sim<CallDone> = Sim::new();
+    let mut measurements: Vec<Measurements> = suite
+        .benchmarks
+        .iter()
+        .map(|b| Measurements {
+            name: b.name.clone(),
+            v1: Vec::with_capacity(exp.results_per_benchmark()),
+            v2: Vec::with_capacity(exp.results_per_benchmark()),
+        })
+        .collect();
+    let mut calls_total = 0usize;
+    let mut calls_ok = 0usize;
+    let mut failures: Vec<(CallFailure, usize)> = Vec::new();
+    let mut call_seq = 0u64;
+    let mut engine = live.map(|c| {
+        IncrementalBootstrap::new(suite.len(), c.b, c.alpha, c.min_results, c.rule, c.seed)
+    });
+    let mut calls_canceled = 0usize;
+
+    let issue = |sim: &mut Sim<CallDone>,
+                     platform: &mut P,
+                     plan_item: PlannedCall,
+                     calls_total: &mut usize,
+                     call_seq: &mut u64,
+                     rng: &mut Rng| {
+        let t = sim.now();
+        let Some(placement) = platform.acquire(t) else {
+            // Concurrency limit: retry shortly (rare at paper scale).
+            sim.schedule(0.5, CallDone {
+                plan: plan_item,
+                instance: usize::MAX,
+                billed_s: 0.0,
+                pairs: Vec::new(),
+                failure: None,
+            });
+            return;
+        };
+        *calls_total += 1;
+        *call_seq += 1;
+        let bench = &suite.benchmarks[plan_item.bench_idx];
+        let crash = platform.maybe_crash();
+        let vcpus = platform.vcpus();
+        let cache_warm = platform.cache_warm(placement.instance);
+        let mut call_rng = rng.fork(0xCA11_0000 ^ *call_seq);
+        let outcome = {
+            let instance = placement.instance;
+            let mut factor = |tt: f64| platform.env_factor(instance, tt);
+            let mut ctx = ExecCtx {
+                vcpus,
+                env_factor: &mut factor,
+                rng: &mut call_rng,
+                restricted_fs: true,
+                timeout_s: exp.benchmark_timeout_s,
+                on_faas: true,
+                extra_sigma: 0.0,
+            };
+            run_duet_call(
+                bench,
+                versions,
+                exp.repeats_per_call,
+                placement.start_at,
+                cache_warm,
+                exp.randomize_version_order,
+                &mut ctx,
+            )
+        };
+        let (pairs, mut billed_s, mut failure) = if crash {
+            // Crash mid-call: partial billing, no results.
+            (Vec::new(), outcome.wall_s * call_rng.f64(), Some(CallFailure::Crash))
+        } else {
+            let failure = outcome.error.map(|e| match e {
+                RunError::RestrictedEnv => CallFailure::RestrictedEnv,
+                RunError::Timeout => CallFailure::BenchTimeout,
+            });
+            (outcome.pairs, outcome.wall_s, failure)
+        };
+        if billed_s > exp.function_timeout_s {
+            billed_s = exp.function_timeout_s;
+            failure = Some(CallFailure::FunctionTimeout);
+        }
+        let done_at = placement.start_at + billed_s + CLIENT_OVERHEAD_S;
+        sim.schedule_at(
+            done_at,
+            CallDone {
+                plan: plan_item,
+                instance: placement.instance,
+                billed_s,
+                pairs: if failure == Some(CallFailure::FunctionTimeout) {
+                    Vec::new()
+                } else {
+                    pairs
+                },
+                failure,
+            },
+        );
+    };
+
+    // Seed the pipeline with `parallelism` calls.
+    for _ in 0..exp.parallelism {
+        let Some(item) = plan.pop() else { break };
+        issue(&mut sim, &mut platform, item, &mut calls_total, &mut call_seq, &mut rng);
+    }
+
+    // Drain: every completion issues the next planned call.
+    let invoke_end = sim.run(|sim, t, done| {
+        if done.instance != usize::MAX {
+            platform.release(done.instance, t, done.billed_s);
+            if done.pairs.is_empty() {
+                if let Some(kind) = done.failure {
+                    match failures.iter_mut().find(|(k, _)| *k == kind) {
+                        Some((_, c)) => *c += 1,
+                        None => failures.push((kind, 1)),
+                    }
+                    if kind == CallFailure::Crash && done.plan.retries_left > 0 {
+                        plan.push(PlannedCall {
+                            bench_idx: done.plan.bench_idx,
+                            retries_left: done.plan.retries_left - 1,
+                        });
+                    }
+                }
+            } else {
+                calls_ok += 1;
+                let m = &mut measurements[done.plan.bench_idx];
+                let mut newly_decided = false;
+                for (s1, s2) in done.pairs {
+                    m.v1.push(s1);
+                    m.v2.push(s2);
+                    if let Some(eng) = engine.as_mut() {
+                        newly_decided |= eng
+                            .push_sample(done.plan.bench_idx, s1, s2)
+                            .expect("live analysis geometry");
+                    }
+                }
+                if newly_decided {
+                    let before = plan.len();
+                    plan.retain(|p| p.bench_idx != done.plan.bench_idx);
+                    calls_canceled += before - plan.len();
+                }
+            }
+        } else {
+            // Concurrency-limit backoff: reissue the same plan item.
+            plan.push(done.plan);
+        }
+        if let Some(item) = plan.pop() {
+            issue(sim, &mut platform, item, &mut calls_total, &mut call_seq, &mut rng);
+        }
+    });
+
+    let failed_benchmarks = measurements
+        .iter()
+        .filter(|m| m.is_empty())
+        .map(|m| m.name.clone())
+        .collect();
+    let live_report = engine.map(|eng| LiveStopReport {
+        stop_points: suite
+            .benchmarks
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (b.name.clone(), eng.stop_point(i)))
+            .collect(),
+        decided: (0..suite.len()).filter(|&i| eng.is_decided(i)).count(),
+        calls_canceled,
+    });
+    let report = RunReport {
+        label: exp.label.clone(),
+        wall_s: image.build_s + image.deploy_s + invoke_end,
+        invoke_wall_s: invoke_end,
+        cost_usd: platform.cost_usd(),
+        calls_total,
+        calls_ok,
+        failures,
+        platform: platform.stats(),
+        measurements,
+        failed_benchmarks,
+    };
+    (report, live_report)
+}

@@ -2,7 +2,8 @@
 //! platform with bounded parallelism and collect duet measurements.
 
 use super::image::build_image;
-use crate::benchexec::{run_duet_call, ExecCtx, RunError};
+use super::strategy::{CallSamples, Duet, ExecutionStrategy, PlannedCall};
+use crate::benchexec::{ExecCtx, RunError};
 use crate::config::{ExperimentConfig, PlatformConfig, SutConfig};
 use crate::des::Sim;
 use crate::faas::{FaasPlatform, InstancePool, PlatformStats, ReferencePlatform};
@@ -11,7 +12,7 @@ use crate::sut::{Suite, Version};
 use crate::util::Rng;
 
 /// Runner-side overhead per call (request serialization, HTTPS, SDK).
-const CLIENT_OVERHEAD_S: f64 = 0.12;
+pub(crate) const CLIENT_OVERHEAD_S: f64 = 0.12;
 
 /// Why a call produced no (or partial) results.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -101,24 +102,17 @@ pub struct LiveStopReport {
     pub calls_canceled: usize,
 }
 
-/// One planned function call.
-#[derive(Debug, Clone, Copy)]
-struct PlannedCall {
-    bench_idx: usize,
-    /// Retry budget left for crash failures.
-    retries_left: u8,
-}
-
 /// DES event: a call finished.
 struct CallDone {
     plan: PlannedCall,
     instance: usize,
     billed_s: f64,
-    pairs: Vec<(f64, f64)>,
+    samples: CallSamples,
     failure: Option<CallFailure>,
 }
 
-/// Run one ElastiBench experiment over `suite` on a fresh platform.
+/// Run one ElastiBench experiment over `suite` on a fresh platform with
+/// the default [`Duet`] execution strategy.
 ///
 /// `versions` picks the duet contents — `(V1, V2)` normally, `(V1, V1)`
 /// for the A/A experiment.
@@ -129,7 +123,21 @@ pub fn run_experiment(
     exp: &ExperimentConfig,
     versions: (Version, Version),
 ) -> RunReport {
-    run_experiment_on(suite, sut, exp, versions, None, |image_mb| {
+    run_experiment_with(suite, sut, platform_cfg, exp, versions, &Duet)
+}
+
+/// [`run_experiment`] with an explicit [`ExecutionStrategy`] — the
+/// strategy owns call ordering, per-call contents and the placement
+/// hint; everything else (platform, billing, retries) is shared.
+pub fn run_experiment_with(
+    suite: &Suite,
+    sut: &SutConfig,
+    platform_cfg: &PlatformConfig,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+    strategy: &dyn ExecutionStrategy,
+) -> RunReport {
+    run_experiment_on(suite, sut, exp, versions, None, strategy, |image_mb| {
         FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
     })
     .0
@@ -148,9 +156,26 @@ pub fn run_experiment_live(
     versions: (Version, Version),
     live: &LiveStopConfig,
 ) -> (RunReport, LiveStopReport) {
-    let (report, live) = run_experiment_on(suite, sut, exp, versions, Some(live), |image_mb| {
-        FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
-    });
+    run_experiment_live_with(suite, sut, platform_cfg, exp, versions, &Duet, live)
+}
+
+/// [`run_experiment_live`] with an explicit [`ExecutionStrategy`]. The
+/// live engine consumes *completed pairs*: strategies that fill lanes
+/// asymmetrically (sequential) only advance the engine once both lanes
+/// hold a sample at an index.
+pub fn run_experiment_live_with(
+    suite: &Suite,
+    sut: &SutConfig,
+    platform_cfg: &PlatformConfig,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+    strategy: &dyn ExecutionStrategy,
+    live: &LiveStopConfig,
+) -> (RunReport, LiveStopReport) {
+    let (report, live) =
+        run_experiment_on(suite, sut, exp, versions, Some(live), strategy, |image_mb| {
+            FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
+        });
     (report, live.expect("live config was passed"))
 }
 
@@ -167,22 +192,24 @@ pub fn run_experiment_reference(
     exp: &ExperimentConfig,
     versions: (Version, Version),
 ) -> RunReport {
-    run_experiment_on(suite, sut, exp, versions, None, |image_mb| {
+    run_experiment_on(suite, sut, exp, versions, None, &Duet, |image_mb| {
         ReferencePlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
     })
     .0
 }
 
-/// The experiment loop, generic over the instance pool. Both entry
-/// points share this body, so a pooled-vs-reference comparison exercises
-/// the *identical* coordinator path and any report difference is the
-/// pool's alone.
+/// The experiment loop, generic over the instance pool and the
+/// execution strategy. All entry points share this body, so a
+/// pooled-vs-reference or duet-vs-strategy comparison exercises the
+/// *identical* coordinator path and any report difference is the pool's
+/// or the strategy's alone.
 fn run_experiment_on<P: InstancePool>(
     suite: &Suite,
     sut: &SutConfig,
     exp: &ExperimentConfig,
     versions: (Version, Version),
     live: Option<&LiveStopConfig>,
+    strategy: &dyn ExecutionStrategy,
     deploy: impl FnOnce(f64) -> P,
 ) -> (RunReport, Option<LiveStopReport>) {
     if let Err(errs) = exp.validate() {
@@ -194,20 +221,10 @@ fn run_experiment_on<P: InstancePool>(
     let image = build_image(sut, &mut rng.fork(0xB01D));
     let mut platform = deploy(image.size_mb);
 
-    // Phase 3: plan — calls_per_benchmark calls per benchmark, shuffled
-    // globally (randomized order => randomized instance assignment, §4).
-    let mut plan: Vec<PlannedCall> = (0..suite.len())
-        .flat_map(|bench_idx| {
-            (0..exp.calls_per_benchmark).map(move |_| PlannedCall {
-                bench_idx,
-                retries_left: 1,
-            })
-        })
-        .collect();
-    if exp.randomize_order {
-        rng.shuffle(&mut plan);
-    }
-    plan.reverse(); // issue order = pop() from the back
+    // Phase 3: plan — the strategy owns call contents and issue order
+    // (duet: calls_per_benchmark duet calls per benchmark, shuffled
+    // globally so randomized order => randomized instance assignment, §4).
+    let mut plan: Vec<PlannedCall> = strategy.plan(suite.len(), exp, &mut rng);
 
     // Phase 4: bounded-parallel fan-out over the DES.
     let mut sim: Sim<CallDone> = Sim::new();
@@ -229,9 +246,14 @@ fn run_experiment_on<P: InstancePool>(
     // Live early stopping: stream every collected pair into the
     // incremental engine; a `true` from push_sample means the benchmark
     // just met its CI target and its remaining calls can be canceled.
+    // `fed` tracks how many *completed pairs* per benchmark have been
+    // pushed — for duet-shaped calls that is every pair as it lands; for
+    // single-lane strategies a pair completes when the shorter lane
+    // catches up.
     let mut engine = live.map(|c| {
         IncrementalBootstrap::new(suite.len(), c.b, c.alpha, c.min_results, c.rule, c.seed)
     });
+    let mut fed = vec![0usize; suite.len()];
     let mut calls_canceled = 0usize;
 
     let issue = |sim: &mut Sim<CallDone>,
@@ -247,7 +269,7 @@ fn run_experiment_on<P: InstancePool>(
                 plan: plan_item,
                 instance: usize::MAX,
                 billed_s: 0.0,
-                pairs: Vec::new(),
+                samples: CallSamples::none(),
                 failure: None,
             });
             return;
@@ -271,25 +293,28 @@ fn run_experiment_on<P: InstancePool>(
                 on_faas: true,
                 extra_sigma: 0.0,
             };
-            run_duet_call(
+            strategy.run_call(
                 bench,
                 versions,
-                exp.repeats_per_call,
+                exp,
+                plan_item.slot,
                 placement.start_at,
                 cache_warm,
-                exp.randomize_version_order,
                 &mut ctx,
             )
         };
-        let (pairs, mut billed_s, mut failure) = if crash {
-            // Crash mid-call: partial billing, no results.
-            (Vec::new(), outcome.wall_s * call_rng.f64(), Some(CallFailure::Crash))
+        let (samples, mut billed_s, mut failure) = if crash {
+            // Crash mid-call: partial billing, no results. The call ran
+            // before the crash surfaced, so the billing draw follows the
+            // call's RNG consumption (byte-compat with the pre-strategy
+            // loop).
+            (CallSamples::none(), outcome.wall_s * call_rng.f64(), Some(CallFailure::Crash))
         } else {
             let failure = outcome.error.map(|e| match e {
                 RunError::RestrictedEnv => CallFailure::RestrictedEnv,
                 RunError::Timeout => CallFailure::BenchTimeout,
             });
-            (outcome.pairs, outcome.wall_s, failure)
+            (outcome.samples, outcome.wall_s, failure)
         };
         if billed_s > exp.function_timeout_s {
             billed_s = exp.function_timeout_s;
@@ -302,10 +327,10 @@ fn run_experiment_on<P: InstancePool>(
                 plan: plan_item,
                 instance: placement.instance,
                 billed_s,
-                pairs: if failure == Some(CallFailure::FunctionTimeout) {
-                    Vec::new()
+                samples: if failure == Some(CallFailure::FunctionTimeout) {
+                    CallSamples::none()
                 } else {
-                    pairs
+                    samples
                 },
                 failure,
             },
@@ -314,15 +339,15 @@ fn run_experiment_on<P: InstancePool>(
 
     // Seed the pipeline with `parallelism` calls.
     for _ in 0..exp.parallelism {
-        let Some(item) = plan.pop() else { break };
+        let Some(item) = strategy.next_call(&mut plan, None) else { break };
         issue(&mut sim, &mut platform, item, &mut calls_total, &mut call_seq, &mut rng);
     }
 
     // Drain: every completion issues the next planned call.
     let invoke_end = sim.run(|sim, t, done| {
-        if done.instance != usize::MAX {
+        let finished = if done.instance != usize::MAX {
             platform.release(done.instance, t, done.billed_s);
-            if done.pairs.is_empty() {
+            if done.samples.is_empty() {
                 if let Some(kind) = done.failure {
                     match failures.iter_mut().find(|(k, _)| *k == kind) {
                         Some((_, c)) => *c += 1,
@@ -332,40 +357,58 @@ fn run_experiment_on<P: InstancePool>(
                     // failures are deterministic, never retried.
                     if kind == CallFailure::Crash && done.plan.retries_left > 0 {
                         plan.push(PlannedCall {
-                            bench_idx: done.plan.bench_idx,
                             retries_left: done.plan.retries_left - 1,
+                            ..done.plan
                         });
                     }
                 }
             } else {
                 calls_ok += 1;
                 let m = &mut measurements[done.plan.bench_idx];
-                let mut newly_decided = false;
-                for (s1, s2) in done.pairs {
-                    m.v1.push(s1);
-                    m.v2.push(s2);
-                    if let Some(eng) = engine.as_mut() {
+                match done.samples {
+                    CallSamples::Pairs(pairs) => {
+                        for (s1, s2) in pairs {
+                            m.v1.push(s1);
+                            m.v2.push(s2);
+                        }
+                    }
+                    CallSamples::Single { slot, samples } => {
+                        let lane = if slot == 0 { &mut m.v1 } else { &mut m.v2 };
+                        lane.extend(samples);
+                    }
+                }
+                if let Some(eng) = engine.as_mut() {
+                    // Stream every newly *completed* pair. For duet calls
+                    // this is exactly the pairs just pushed, in order.
+                    let idx = done.plan.bench_idx;
+                    let complete = m.v1.len().min(m.v2.len());
+                    let mut newly_decided = false;
+                    while fed[idx] < complete {
                         // Geometry errors are impossible here: checkpoints
                         // stop at rule.max_results <= the largest lane.
                         newly_decided |= eng
-                            .push_sample(done.plan.bench_idx, s1, s2)
+                            .push_sample(idx, m.v1[fed[idx]], m.v2[fed[idx]])
                             .expect("live analysis geometry");
+                        fed[idx] += 1;
+                    }
+                    if newly_decided {
+                        // CI target met: cancel the benchmark's remaining
+                        // scheduled calls. In-flight calls still complete
+                        // and their samples land after the pinned stop
+                        // point.
+                        let before = plan.len();
+                        plan.retain(|p| p.bench_idx != idx);
+                        calls_canceled += before - plan.len();
                     }
                 }
-                if newly_decided {
-                    // CI target met: cancel the benchmark's remaining
-                    // scheduled calls. In-flight calls still complete and
-                    // their samples land after the pinned stop point.
-                    let before = plan.len();
-                    plan.retain(|p| p.bench_idx != done.plan.bench_idx);
-                    calls_canceled += before - plan.len();
-                }
             }
+            Some(done.plan)
         } else {
             // Concurrency-limit backoff: reissue the same plan item.
             plan.push(done.plan);
-        }
-        if let Some(item) = plan.pop() {
+            None
+        };
+        if let Some(item) = strategy.next_call(&mut plan, finished.as_ref()) {
             issue(sim, &mut platform, item, &mut calls_total, &mut call_seq, &mut rng);
         }
     });

@@ -1,0 +1,496 @@
+//! The execution-strategy axis of the coordinator: what a single
+//! function call contains, in what order calls are issued, and how
+//! completions pick the next call (instance-placement hint).
+//!
+//! The paper runs one hard-coded strategy — duet pairs drained at fixed
+//! parallelism. "Increasing Efficiency and Result Reliability of
+//! Continuous Benchmarking for FaaS" (arxiv 2405.15610) shows that this
+//! choice — duet vs sequential placement, randomized interleaving
+//! (RMIT), instance reuse vs spreading — materially changes false
+//! positives and cost, so it is extracted here as a trait the runner is
+//! generic over. Four strategies ship:
+//!
+//! * [`Duet`] — the paper's strategy, extracted verbatim: every call
+//!   runs both versions back to back, the global call order is shuffled.
+//!   Byte-identical to the pre-refactor loop (pinned by
+//!   `rust/tests/strategy_lab.rs` against [`super::reference`]).
+//! * [`Sequential`] — the classic CB layout: all v1 calls first, then
+//!   all v2 calls, on the same fleet. Each call runs ONE version, so
+//!   environment drift between the blocks is *not* canceled.
+//! * [`Rmit`] — duet-shaped calls, but the 2×repeats trials inside a
+//!   call run in per-call randomized interleaved order (RMIT) with
+//!   seeds derived from the call RNG fork.
+//! * [`DuetPinned`] — duet contents with an instance-reuse hint: on
+//!   completion, prefer the next call of the *same* benchmark, which at
+//!   saturation lands on the instance that was just released.
+//!
+//! The recipe front door is `[strategy] name = "..."` in
+//! [`crate::scenario`]; the A/A / A/B accuracy-and-cost scoreboard for
+//! all four lives in `rust/tests/strategy_lab.rs`.
+
+use crate::benchexec::{run_duet_call, run_rmit_call, run_single_call, ExecCtx, RunError};
+use crate::config::ExperimentConfig;
+use crate::des::Time;
+use crate::sut::{Microbenchmark, Version};
+use crate::util::Rng;
+
+/// What one function call executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallSlot {
+    /// Both duet slots (v1 and v2 interleaved inside the call).
+    Duet,
+    /// A single measurement lane: `0` fills `Measurements::v1`,
+    /// `1` fills `Measurements::v2`. Lane, not version — under A/A both
+    /// lanes run v1 yet must stay distinct for the analyzer.
+    Single(u8),
+}
+
+/// One planned function call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedCall {
+    /// Suite index of the benchmark this call measures.
+    pub bench_idx: usize,
+    /// Call contents.
+    pub slot: CallSlot,
+    /// Retry budget left for crash failures.
+    pub retries_left: u8,
+}
+
+/// Samples a completed call contributes to its benchmark.
+#[derive(Debug, Clone)]
+pub enum CallSamples {
+    /// Paired (v1, v2) samples (duet-shaped calls).
+    Pairs(Vec<(f64, f64)>),
+    /// Unpaired samples for one lane (sequential calls).
+    Single {
+        /// Destination lane: `0` => v1, `1` => v2.
+        slot: u8,
+        /// ns/op samples, one per successful repeat.
+        samples: Vec<f64>,
+    },
+}
+
+impl CallSamples {
+    /// An empty pair set (failed / crashed / timed-out call).
+    pub fn none() -> Self {
+        CallSamples::Pairs(Vec::new())
+    }
+
+    /// No sample collected.
+    pub fn is_empty(&self) -> bool {
+        match self {
+            CallSamples::Pairs(p) => p.is_empty(),
+            CallSamples::Single { samples, .. } => samples.is_empty(),
+        }
+    }
+}
+
+/// What a strategy's call execution produced (the strategy-generic
+/// mirror of [`crate::benchexec::CallOutcome`]).
+#[derive(Debug, Clone)]
+pub struct StrategyCallOutcome {
+    /// Collected samples.
+    pub samples: CallSamples,
+    /// Wall time of the whole call [s] (also the billed duration).
+    pub wall_s: f64,
+    /// Error that aborted the call, if any.
+    pub error: Option<RunError>,
+}
+
+/// The strategy axis: call ordering, duet-slot contents, and the
+/// instance-placement hint on completion.
+///
+/// The runner owns everything else — platform acquisition, crash/retry
+/// bookkeeping, billing, the live early-stopping engine — so strategies
+/// only decide *what to run when*, and determinism is inherited: `plan`
+/// draws only on the experiment RNG, `run_call` only on the per-call
+/// fork.
+pub trait ExecutionStrategy: Sync {
+    /// Recipe-facing name (`[strategy] name = ...`).
+    fn name(&self) -> &'static str;
+
+    /// Build the full call plan. Issue order is [`Self::next_call`] over
+    /// this vector, which for the default pop-from-the-back means the
+    /// plan is built in reverse issue order. Draws on the experiment RNG
+    /// (and nothing else) so the schedule is a pure function of
+    /// (seed, recipe).
+    fn plan(&self, suite_len: usize, exp: &ExperimentConfig, rng: &mut Rng) -> Vec<PlannedCall>;
+
+    /// Execute one call's benchmark runs. `ctx.rng` is the per-call
+    /// derived fork; `start_at`/`cache_warm` come from the acquired
+    /// placement.
+    #[allow(clippy::too_many_arguments)]
+    fn run_call(
+        &self,
+        bench: &Microbenchmark,
+        versions: (Version, Version),
+        exp: &ExperimentConfig,
+        slot: CallSlot,
+        start_at: Time,
+        cache_warm: bool,
+        ctx: &mut ExecCtx<'_>,
+    ) -> StrategyCallOutcome;
+
+    /// Pick the next call to issue. `finished` is the call that just
+    /// completed on a real instance (`None` while seeding the pipeline
+    /// and after concurrency-limit backoffs) — the placement hint: at
+    /// saturation the instance released by `finished` is the one the
+    /// returned call will acquire.
+    fn next_call(
+        &self,
+        plan: &mut Vec<PlannedCall>,
+        finished: Option<&PlannedCall>,
+    ) -> Option<PlannedCall> {
+        let _ = finished;
+        plan.pop()
+    }
+}
+
+/// Duet-shaped plan: `calls_per_benchmark` calls per benchmark, globally
+/// shuffled, reversed so `pop()` walks it in issue order. This is the
+/// pre-refactor plan construction verbatim (same RNG draws).
+fn duet_plan(suite_len: usize, exp: &ExperimentConfig, rng: &mut Rng) -> Vec<PlannedCall> {
+    let mut plan: Vec<PlannedCall> = (0..suite_len)
+        .flat_map(|bench_idx| {
+            (0..exp.calls_per_benchmark).map(move |_| PlannedCall {
+                bench_idx,
+                slot: CallSlot::Duet,
+                retries_left: 1,
+            })
+        })
+        .collect();
+    if exp.randomize_order {
+        rng.shuffle(&mut plan);
+    }
+    plan.reverse(); // issue order = pop() from the back
+    plan
+}
+
+/// The paper's strategy: duet pairs, globally shuffled call order.
+pub struct Duet;
+
+impl ExecutionStrategy for Duet {
+    fn name(&self) -> &'static str {
+        "duet"
+    }
+
+    fn plan(&self, suite_len: usize, exp: &ExperimentConfig, rng: &mut Rng) -> Vec<PlannedCall> {
+        duet_plan(suite_len, exp, rng)
+    }
+
+    fn run_call(
+        &self,
+        bench: &Microbenchmark,
+        versions: (Version, Version),
+        exp: &ExperimentConfig,
+        _slot: CallSlot,
+        start_at: Time,
+        cache_warm: bool,
+        ctx: &mut ExecCtx<'_>,
+    ) -> StrategyCallOutcome {
+        let out = run_duet_call(
+            bench,
+            versions,
+            exp.repeats_per_call,
+            start_at,
+            cache_warm,
+            exp.randomize_version_order,
+            ctx,
+        );
+        StrategyCallOutcome {
+            samples: CallSamples::Pairs(out.pairs),
+            wall_s: out.wall_s,
+            error: out.error,
+        }
+    }
+}
+
+/// Sequential placement: the full v1 block, then the full v2 block, on
+/// the same fleet. Blocks are shuffled internally (when
+/// `randomize_order`) but never interleaved, so slow environment drift
+/// lands asymmetrically on the two lanes — the failure mode duet exists
+/// to cancel. Twice the calls of duet for the same per-lane sample
+/// count.
+pub struct Sequential;
+
+impl ExecutionStrategy for Sequential {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn plan(&self, suite_len: usize, exp: &ExperimentConfig, rng: &mut Rng) -> Vec<PlannedCall> {
+        let block = |lane: u8| -> Vec<PlannedCall> {
+            (0..suite_len)
+                .flat_map(|bench_idx| {
+                    (0..exp.calls_per_benchmark).map(move |_| PlannedCall {
+                        bench_idx,
+                        slot: CallSlot::Single(lane),
+                        retries_left: 1,
+                    })
+                })
+                .collect()
+        };
+        let mut first = block(0);
+        let mut second = block(1);
+        if exp.randomize_order {
+            rng.shuffle(&mut first);
+            rng.shuffle(&mut second);
+        }
+        // Issue order = pop() from the back: lane 0 drains before lane 1.
+        let mut plan = second;
+        plan.reverse();
+        first.reverse();
+        plan.extend(first);
+        plan
+    }
+
+    fn run_call(
+        &self,
+        bench: &Microbenchmark,
+        versions: (Version, Version),
+        exp: &ExperimentConfig,
+        slot: CallSlot,
+        start_at: Time,
+        cache_warm: bool,
+        ctx: &mut ExecCtx<'_>,
+    ) -> StrategyCallOutcome {
+        let lane = match slot {
+            CallSlot::Single(l) => l,
+            CallSlot::Duet => unreachable!("sequential plans only Single slots"),
+        };
+        let version = if lane == 0 { versions.0 } else { versions.1 };
+        let out = run_single_call(bench, version, exp.repeats_per_call, start_at, cache_warm, ctx);
+        StrategyCallOutcome {
+            samples: CallSamples::Single {
+                slot: lane,
+                samples: out.samples,
+            },
+            wall_s: out.wall_s,
+            error: out.error,
+        }
+    }
+}
+
+/// Random multiple interleaved trials: duet-shaped calls whose 2×repeats
+/// trials run in a per-call random order (seeded by the call's derived
+/// RNG fork), instead of strict v1/v2 alternation.
+pub struct Rmit;
+
+impl ExecutionStrategy for Rmit {
+    fn name(&self) -> &'static str {
+        "rmit"
+    }
+
+    fn plan(&self, suite_len: usize, exp: &ExperimentConfig, rng: &mut Rng) -> Vec<PlannedCall> {
+        duet_plan(suite_len, exp, rng)
+    }
+
+    fn run_call(
+        &self,
+        bench: &Microbenchmark,
+        versions: (Version, Version),
+        exp: &ExperimentConfig,
+        _slot: CallSlot,
+        start_at: Time,
+        cache_warm: bool,
+        ctx: &mut ExecCtx<'_>,
+    ) -> StrategyCallOutcome {
+        let out = run_rmit_call(bench, versions, exp.repeats_per_call, start_at, cache_warm, ctx);
+        StrategyCallOutcome {
+            samples: CallSamples::Pairs(out.pairs),
+            wall_s: out.wall_s,
+            error: out.error,
+        }
+    }
+}
+
+/// Duet with instance-reuse pinning: identical plan and call contents to
+/// [`Duet`], but on completion the strategy prefers the most recently
+/// planned call of the benchmark that just finished. At saturation the
+/// only idle instance is the one just released (FIFO reuse), so
+/// consecutive calls of one benchmark share an instance — trading the
+/// paper's placement randomization for lower instance heterogeneity
+/// within a benchmark.
+pub struct DuetPinned;
+
+impl ExecutionStrategy for DuetPinned {
+    fn name(&self) -> &'static str {
+        "duet-pinned"
+    }
+
+    fn plan(&self, suite_len: usize, exp: &ExperimentConfig, rng: &mut Rng) -> Vec<PlannedCall> {
+        duet_plan(suite_len, exp, rng)
+    }
+
+    fn run_call(
+        &self,
+        bench: &Microbenchmark,
+        versions: (Version, Version),
+        exp: &ExperimentConfig,
+        _slot: CallSlot,
+        start_at: Time,
+        cache_warm: bool,
+        ctx: &mut ExecCtx<'_>,
+    ) -> StrategyCallOutcome {
+        Duet.run_call(bench, versions, exp, CallSlot::Duet, start_at, cache_warm, ctx)
+    }
+
+    fn next_call(
+        &self,
+        plan: &mut Vec<PlannedCall>,
+        finished: Option<&PlannedCall>,
+    ) -> Option<PlannedCall> {
+        if let Some(f) = finished {
+            // Scan from the back (next-to-issue end) for the same
+            // benchmark; also picks up crash retries, which the runner
+            // pushes to the back.
+            if let Some(pos) = plan.iter().rposition(|p| p.bench_idx == f.bench_idx) {
+                return Some(plan.remove(pos));
+            }
+        }
+        plan.pop()
+    }
+}
+
+/// Recipe-facing strategy identifier, threaded through scenarios, the
+/// report schema (`metadata.strategy`) and the history store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StrategyKind {
+    /// The paper's duet strategy (default).
+    #[default]
+    Duet,
+    /// v1 block then v2 block on the same fleet.
+    Sequential,
+    /// Random multiple interleaved trials inside each call.
+    Rmit,
+    /// Duet with instance-reuse pinning.
+    DuetPinned,
+}
+
+/// Every recipe-selectable strategy name, registry order.
+pub const STRATEGY_NAMES: &[&str] = &["duet", "sequential", "rmit", "duet-pinned"];
+
+impl StrategyKind {
+    /// The recipe / report-schema name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StrategyKind::Duet => "duet",
+            StrategyKind::Sequential => "sequential",
+            StrategyKind::Rmit => "rmit",
+            StrategyKind::DuetPinned => "duet-pinned",
+        }
+    }
+
+    /// Parse a recipe name; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "duet" => Some(StrategyKind::Duet),
+            "sequential" => Some(StrategyKind::Sequential),
+            "rmit" => Some(StrategyKind::Rmit),
+            "duet-pinned" => Some(StrategyKind::DuetPinned),
+            _ => None,
+        }
+    }
+
+    /// The strategy implementation behind the name.
+    pub fn strategy(&self) -> &'static dyn ExecutionStrategy {
+        match self {
+            StrategyKind::Duet => &Duet,
+            StrategyKind::Sequential => &Sequential,
+            StrategyKind::Rmit => &Rmit,
+            StrategyKind::DuetPinned => &DuetPinned,
+        }
+    }
+
+    /// All kinds, registry order (mirrors [`STRATEGY_NAMES`]).
+    pub fn all() -> [StrategyKind; 4] {
+        [
+            StrategyKind::Duet,
+            StrategyKind::Sequential,
+            StrategyKind::Rmit,
+            StrategyKind::DuetPinned,
+        ]
+    }
+}
+
+/// Look up a strategy implementation by recipe name.
+pub fn strategy_by_name(name: &str) -> Option<&'static dyn ExecutionStrategy> {
+    StrategyKind::parse(name).map(|k| k.strategy())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp() -> ExperimentConfig {
+        ExperimentConfig {
+            calls_per_benchmark: 4,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn registry_round_trips_names() {
+        for kind in StrategyKind::all() {
+            assert_eq!(StrategyKind::parse(kind.as_str()), Some(kind));
+            assert_eq!(kind.strategy().name(), kind.as_str());
+            assert!(STRATEGY_NAMES.contains(&kind.as_str()));
+        }
+        assert!(StrategyKind::parse("pairwise").is_none());
+        assert!(strategy_by_name("duet").is_some());
+        assert!(strategy_by_name("nope").is_none());
+        assert_eq!(StrategyKind::default(), StrategyKind::Duet);
+    }
+
+    #[test]
+    fn duet_plan_matches_preextraction_shape() {
+        let exp = exp();
+        let mut rng = Rng::new(42);
+        let plan = Duet.plan(3, &exp, &mut rng);
+        assert_eq!(plan.len(), 3 * exp.calls_per_benchmark);
+        assert!(plan.iter().all(|p| p.slot == CallSlot::Duet && p.retries_left == 1));
+        // Same seed, same schedule.
+        let again = Duet.plan(3, &exp, &mut Rng::new(42));
+        assert_eq!(plan, again);
+    }
+
+    #[test]
+    fn sequential_plan_blocks_lane0_before_lane1() {
+        let exp = exp();
+        let plan = Sequential.plan(3, &exp, &mut Rng::new(42));
+        assert_eq!(plan.len(), 2 * 3 * exp.calls_per_benchmark);
+        // pop() order: the BACK half of the vec is lane 0.
+        let issue_order: Vec<u8> = plan
+            .iter()
+            .rev()
+            .map(|p| match p.slot {
+                CallSlot::Single(l) => l,
+                CallSlot::Duet => panic!("sequential plans Single slots"),
+            })
+            .collect();
+        let n = 3 * exp.calls_per_benchmark;
+        assert!(issue_order[..n].iter().all(|&l| l == 0));
+        assert!(issue_order[n..].iter().all(|&l| l == 1));
+    }
+
+    #[test]
+    fn pinned_next_call_prefers_finished_benchmark() {
+        let mk = |bench_idx| PlannedCall {
+            bench_idx,
+            slot: CallSlot::Duet,
+            retries_left: 1,
+        };
+        let mut plan = vec![mk(2), mk(0), mk(1)];
+        let finished = mk(2);
+        // rposition finds bench 2 even though bench 1 is next-to-pop.
+        let next = DuetPinned.next_call(&mut plan, Some(&finished)).unwrap();
+        assert_eq!(next.bench_idx, 2);
+        assert_eq!(plan.len(), 2);
+        // No match => plain pop; None finished (seeding) => plain pop.
+        let next = DuetPinned.next_call(&mut plan, Some(&finished)).unwrap();
+        assert_eq!(next.bench_idx, 1);
+        let next = DuetPinned.next_call(&mut plan, None).unwrap();
+        assert_eq!(next.bench_idx, 0);
+        assert!(DuetPinned.next_call(&mut plan, None).is_none());
+    }
+}

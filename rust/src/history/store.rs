@@ -291,6 +291,8 @@ pub struct StoredMetadata {
     pub engine: String,
     /// `fixed` | `adaptive-replay` | `adaptive-live`.
     pub engine_mode: String,
+    /// Execution strategy (`duet` | `sequential` | `rmit` | `duet-pinned`).
+    pub strategy: String,
     pub seed: f64,
     pub sut_seed: f64,
     pub start_hour_utc: f64,
@@ -437,6 +439,7 @@ pub fn parse_scenario_report(doc: &Json) -> Result<StoredRun> {
         version: get_str(m, "metadata", "elastibench_version")?,
         engine: get_str(m, "metadata", "engine")?,
         engine_mode: get_str(m, "metadata", "engine_mode")?,
+        strategy: get_str(m, "metadata", "strategy")?,
         seed: get_num(m, "metadata", "seed")?,
         sut_seed: get_num(m, "metadata", "sut_seed")?,
         start_hour_utc: get_num(m, "metadata", "start_hour_utc")?,
@@ -615,6 +618,7 @@ pub fn stored_run_to_json(run: &StoredRun) -> Json {
                 ("elastibench_version", Json::Str(m.version.clone())),
                 ("engine", Json::Str(m.engine.clone())),
                 ("engine_mode", Json::Str(m.engine_mode.clone())),
+                ("strategy", Json::Str(m.strategy.clone())),
                 ("seed", Json::Num(m.seed)),
                 ("sut_seed", Json::Num(m.sut_seed)),
                 ("start_hour_utc", Json::Num(m.start_hour_utc)),

@@ -210,6 +210,8 @@ pub(crate) fn synthetic_run(commit: &str, benches: &[(&str, f64)]) -> StoredRun 
                 commit: commit.to_string(),
                 version: "0.0.0".into(),
                 engine: "native".into(),
+                engine_mode: "fixed".into(),
+                strategy: "duet".into(),
                 seed: 1.0,
                 sut_seed: 9.0,
                 start_hour_utc: 0.0,
@@ -250,6 +252,7 @@ pub(crate) fn synthetic_run(commit: &str, benches: &[(&str, f64)]) -> StoredRun 
                 excluded: vec![],
             },
             adaptive: None,
+            live: None,
         }
     }
 }

@@ -135,6 +135,7 @@ pub fn scenario_report_to_json(r: &ScenarioReport) -> Json {
                 ("elastibench_version", Json::Str(r.version.clone())),
                 ("engine", Json::Str(r.engine.clone())),
                 ("engine_mode", Json::Str(r.engine_mode.clone())),
+                ("strategy", Json::Str(sc.strategy.as_str().into())),
                 ("seed", Json::Num(sc.exp.seed as f64)),
                 ("sut_seed", Json::Num(sc.sut.seed as f64)),
                 ("start_hour_utc", Json::Num(sc.exp.start_hour_utc)),
@@ -321,6 +322,7 @@ mod tests {
         assert_eq!(parsed.get("adaptive"), Some(&crate::util::json::Json::Null));
         assert_eq!(parsed.get("live"), Some(&crate::util::json::Json::Null));
         assert_eq!(meta.get("engine_mode").unwrap().as_str(), Some("fixed"));
+        assert_eq!(meta.get("strategy").unwrap().as_str(), Some("duet"));
     }
 
     #[test]

@@ -219,6 +219,8 @@ pub struct SweepRow {
     pub mode: String,
     /// Experiment seed (pinned or derived).
     pub seed: u64,
+    /// Execution strategy (`duet` / `sequential` / `rmit` / `duet-pinned`).
+    pub strategy: String,
     /// Benchmarks analyzed.
     pub analyzed: usize,
     /// Detected performance changes.
@@ -233,21 +235,90 @@ pub struct SweepRow {
 /// expansion (= catalog) order.
 pub fn sweep_summary_table(rows: &[SweepRow]) -> String {
     let mut out = String::from(
-        "| variant | profile | mem | mode | seed | analyzed | changes | duration | cost |\n\
-         |---|---|---:|---|---:|---:|---:|---:|---:|\n",
+        "| variant | profile | mem | mode | seed | strategy | analyzed | changes | duration | cost |\n\
+         |---|---|---:|---|---:|---|---:|---:|---:|---:|\n",
     );
     for r in rows {
         out.push_str(&format!(
-            "| {} | {} | {} | {} | {} | {} | {} | {} | ${:.2} |\n",
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | ${:.2} |\n",
             r.variant,
             r.profile,
             r.memory_mb,
             r.mode,
             r.seed,
+            r.strategy,
             r.analyzed,
             r.changes,
             fmt_duration(r.wall_s),
             r.cost_usd
+        ));
+    }
+    out
+}
+
+/// One (strategy, profile, noise regime) cell of the reliability-lab
+/// scoreboard (`tests/strategy_lab.rs`): A/A false positives, A/B
+/// detection and billed cost per analyzed verdict.
+#[derive(Debug, Clone)]
+pub struct StrategyScoreRow {
+    /// Execution strategy name.
+    pub strategy: String,
+    /// Platform profile the cell ran on.
+    pub profile: String,
+    /// Noise regime label (`quiet` / `noisy`).
+    pub noise: String,
+    /// A/A verdicts flagged as changes (false positives).
+    pub aa_false_positives: usize,
+    /// A/A verdicts analyzed.
+    pub aa_verdicts: usize,
+    /// Injected regressions the A/B run detected.
+    pub ab_detected: usize,
+    /// Injected regressions present in the A/B run.
+    pub ab_injected: usize,
+    /// Billed cost per analyzed verdict [USD], A/A + A/B combined.
+    pub cost_per_verdict_usd: f64,
+}
+
+impl StrategyScoreRow {
+    /// A/A false-positive rate [%] (0 when nothing was analyzed).
+    pub fn aa_fp_pct(&self) -> f64 {
+        if self.aa_verdicts == 0 {
+            0.0
+        } else {
+            self.aa_false_positives as f64 / self.aa_verdicts as f64 * 100.0
+        }
+    }
+
+    /// A/B detection rate [%] (0 when nothing was injected).
+    pub fn detection_pct(&self) -> f64 {
+        if self.ab_injected == 0 {
+            0.0
+        } else {
+            self.ab_detected as f64 / self.ab_injected as f64 * 100.0
+        }
+    }
+}
+
+/// Render the reliability-strategy scoreboard: one row per
+/// (strategy, profile, noise) cell, in harness order.
+pub fn strategy_scoreboard_table(rows: &[StrategyScoreRow]) -> String {
+    let mut out = String::from(
+        "| strategy | profile | noise | A/A FP | A/B detected | cost/verdict |\n\
+         |---|---|---|---:|---:|---:|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {}/{} ({:.1}%) | {}/{} ({:.1}%) | ${:.4} |\n",
+            r.strategy,
+            r.profile,
+            r.noise,
+            r.aa_false_positives,
+            r.aa_verdicts,
+            r.aa_fp_pct(),
+            r.ab_detected,
+            r.ab_injected,
+            r.detection_pct(),
+            r.cost_per_verdict_usd,
         ));
     }
     out
@@ -402,16 +473,52 @@ mod tests {
             memory_mb: 1024,
             mode: "ab".into(),
             seed: 11,
+            strategy: "duet".into(),
             analyzed: 10,
             changes: 4,
             wall_s: 90.0,
             cost_usd: 0.05,
         }]);
-        assert!(t.contains("| variant | profile | mem | mode | seed |"), "{t}");
+        assert!(t.contains("| variant | profile | mem | mode | seed | strategy |"), "{t}");
         assert!(
-            t.contains("| base@mem=1024,seed=11 | aws-lambda | 1024 | ab | 11 | 10 | 4 | 1.5 min | $0.05 |"),
+            t.contains("| base@mem=1024,seed=11 | aws-lambda | 1024 | ab | 11 | duet | 10 | 4 | 1.5 min | $0.05 |"),
             "{t}"
         );
+    }
+
+    #[test]
+    fn strategy_scoreboard_table_renders() {
+        let row = StrategyScoreRow {
+            strategy: "duet".into(),
+            profile: "aws-lambda".into(),
+            noise: "noisy".into(),
+            aa_false_positives: 1,
+            aa_verdicts: 40,
+            ab_detected: 9,
+            ab_injected: 10,
+            cost_per_verdict_usd: 0.0123,
+        };
+        assert_eq!(row.aa_fp_pct(), 2.5);
+        assert_eq!(row.detection_pct(), 90.0);
+        let t = strategy_scoreboard_table(&[row]);
+        assert!(t.contains("| strategy | profile | noise |"), "{t}");
+        assert!(
+            t.contains("| duet | aws-lambda | noisy | 1/40 (2.5%) | 9/10 (90.0%) | $0.0123 |"),
+            "{t}"
+        );
+        // Degenerate cells render without dividing by zero.
+        let empty = StrategyScoreRow {
+            strategy: "rmit".into(),
+            profile: "azure-functions".into(),
+            noise: "quiet".into(),
+            aa_false_positives: 0,
+            aa_verdicts: 0,
+            ab_detected: 0,
+            ab_injected: 0,
+            cost_per_verdict_usd: 0.0,
+        };
+        assert_eq!(empty.aa_fp_pct(), 0.0);
+        assert_eq!(empty.detection_pct(), 0.0);
     }
 
     #[test]

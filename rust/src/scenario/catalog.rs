@@ -57,6 +57,10 @@ pub const CATALOG_SOURCES: &[(&str, &str)] = &[
         "lambda-hyperscale.toml",
         include_str!("../../../scenarios/lambda-hyperscale.toml"),
     ),
+    (
+        "strategy-lab.toml",
+        include_str!("../../../scenarios/strategy-lab.toml"),
+    ),
 ];
 
 /// Load the full shipped catalog, in catalog order.
@@ -134,6 +138,24 @@ mod tests {
         // At least one matrix recipe ships, so `scenario sweep` has a
         // catalog target (>= 4 grid points, the acceptance floor).
         assert!(cat.iter().any(|s| s.variant_count() >= 4));
+    }
+
+    #[test]
+    fn strategy_lab_sweeps_every_strategy() {
+        use crate::coordinator::StrategyKind;
+        let lab = catalog_entry("strategy-lab").unwrap();
+        let spec = lab.matrix.as_ref().expect("strategy-lab has a matrix");
+        assert_eq!(spec.strategy, StrategyKind::all().to_vec());
+        let variants = lab.expand();
+        assert_eq!(variants.len(), 4);
+        let kinds: Vec<StrategyKind> = variants.iter().map(|v| v.strategy).collect();
+        assert_eq!(kinds, StrategyKind::all().to_vec());
+        // Non-strategy knobs are shared: the grid isolates scheduling.
+        for v in &variants {
+            assert_eq!(v.profile_name, lab.profile_name);
+            assert_eq!(v.exp.memory_mb, lab.exp.memory_mb);
+            assert_eq!(v.mode, lab.mode);
+        }
     }
 
     #[test]

@@ -10,8 +10,8 @@
 //!
 //! Recipes may carry a `[matrix]` section ([`recipe::MatrixSpec`]) that
 //! expands one file into a grid of variants over memory size, profile,
-//! duet mode and seed; [`sweep::run_sweep`] executes expanded grids on a
-//! deterministic worker pool.
+//! duet mode, execution strategy and seed; [`sweep::run_sweep`] executes
+//! expanded grids on a deterministic worker pool.
 //!
 //! CLI surface: `elastibench scenario list | run <name> | run-all |
 //! sweep` (see [`crate::cli`]). Workloads and providers extend the
@@ -26,7 +26,7 @@ pub mod sweep;
 pub use catalog::{catalog, catalog_entry, CATALOG_SOURCES};
 pub use recipe::{
     DuetMode, HistorySpec, MatrixSpec, RepeatPolicy, Scenario, HISTORY_KEYS,
-    MATRIX_KEYS, MAX_MATRIX_VARIANTS, SCENARIO_KEYS,
+    MATRIX_KEYS, MAX_MATRIX_VARIANTS, SCENARIO_KEYS, STRATEGY_KEYS,
 };
 pub use runner::{
     commit_id, finish_scenario, run_scenario, run_scenario_experiment, LiveStopSummary,

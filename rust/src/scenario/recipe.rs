@@ -20,6 +20,10 @@
 //!                             # stopping) | "adaptive-replay" (post-hoc)
 //! tags = ["paper", "ci"]      # optional
 //!
+//! [strategy]                  # optional: execution strategy
+//! name = "duet"               # "duet" (default) | "sequential" | "rmit"
+//!                             # | "duet-pinned"
+//!
 //! [experiment]                # optional ExperimentConfig overrides
 //! [function]                  # optional memory_mb / timeout_s
 //! [sut]                       # optional SutConfig overrides
@@ -34,6 +38,7 @@
 //! memory_mb = [1024, 2048]    # each axis is an array of values
 //! profile   = ["aws-lambda", "gcp-cloud-functions"]
 //! mode      = ["ab", "aa"]
+//! strategy  = ["duet", "rmit"]
 //! seed      = [60101, 60102]
 //! ```
 //!
@@ -49,6 +54,7 @@ use crate::config::{
     Document, ExperimentConfig, PlatformConfig, SutConfig, Value, EXPERIMENT_KEYS, FUNCTION_KEYS,
     PLATFORM_KEYS, SUT_KEYS,
 };
+use crate::coordinator::strategy::{StrategyKind, STRATEGY_NAMES};
 use crate::faas::{profile_by_name, profile_names, PlatformProfile};
 use crate::sut::Version;
 use anyhow::{anyhow, Result};
@@ -60,8 +66,12 @@ pub const SCENARIO_KEYS: &[&str] = &["name", "description", "profile", "mode", "
 /// auto-record + gate defaults; see [`crate::history`]).
 pub const HISTORY_KEYS: &[&str] = &["store", "record", "window", "threshold_pct"];
 
+/// Keys recognized in the `[strategy]` section (execution strategy; see
+/// [`crate::coordinator::strategy`]).
+pub const STRATEGY_KEYS: &[&str] = &["name"];
+
 /// Axes recognized in the `[matrix]` section.
-pub const MATRIX_KEYS: &[&str] = &["memory_mb", "profile", "mode", "seed"];
+pub const MATRIX_KEYS: &[&str] = &["memory_mb", "profile", "mode", "strategy", "seed"];
 
 /// Hard cap on the grid size one recipe may expand into: a fat-fingered
 /// axis must fail loudly at parse time, not enqueue thousands of runs.
@@ -75,6 +85,7 @@ const SECTIONS: &[(&str, &[&str])] = &[
     ("sut", SUT_KEYS),
     ("platform", PLATFORM_KEYS),
     ("history", HISTORY_KEYS),
+    ("strategy", STRATEGY_KEYS),
     ("matrix", MATRIX_KEYS),
 ];
 
@@ -126,7 +137,9 @@ fn expected_kind(section: &str, key: &str) -> Kind {
         ("scenario", "tags") => Kind::Tags,
         ("matrix", "memory_mb" | "seed") => Kind::Ints,
         ("matrix", _) => Kind::Tags,
-        ("scenario", _) | ("experiment", "label") | ("history", "store") => Kind::Str,
+        ("scenario", _) | ("strategy", _) | ("experiment", "label") | ("history", "store") => {
+            Kind::Str
+        }
         ("history", "record") => Kind::Bool,
         ("history", "window") => Kind::Int,
         ("experiment", "randomize_order" | "randomize_version_order") => Kind::Bool,
@@ -222,6 +235,8 @@ pub struct MatrixSpec {
     pub profile: Vec<String>,
     /// `mode` axis (empty = not swept).
     pub mode: Vec<DuetMode>,
+    /// `strategy` axis (empty = not swept).
+    pub strategy: Vec<StrategyKind>,
     /// `seed` axis; values become `experiment.seed` verbatim (empty =
     /// not swept, seeds are derived from the variant suffix instead).
     pub seed: Vec<u64>,
@@ -240,6 +255,7 @@ impl MatrixSpec {
         self.memory_mb.len().max(1)
             * self.profile.len().max(1)
             * self.mode.len().max(1)
+            * self.strategy.len().max(1)
             * self.seed.len().max(1)
     }
 }
@@ -264,6 +280,8 @@ pub struct Scenario {
     pub profile_name: String,
     /// Duet contents (A/A or v1-vs-v2).
     pub mode: DuetMode,
+    /// Execution strategy (`[strategy] name`; duet unless overridden).
+    pub strategy: StrategyKind,
     /// Fixed vs adaptive repeat budget.
     pub repeats: RepeatPolicy,
     /// Free-form tags (`scenario list` filtering, report metadata).
@@ -366,6 +384,26 @@ impl Scenario {
                 DuetMode::Ab
             }
         };
+        let strategy = match doc.get("strategy", "name").and_then(Value::as_str) {
+            None => {
+                if doc.sections().any(|s| s == "strategy") {
+                    errs.push(format!(
+                        "strategy.name is required when [strategy] is present \
+                         (one of {STRATEGY_NAMES:?})"
+                    ));
+                }
+                StrategyKind::Duet
+            }
+            Some(s) => match StrategyKind::parse(s) {
+                Some(k) => k,
+                None => {
+                    errs.push(format!(
+                        "strategy.name must be one of {STRATEGY_NAMES:?}, got {s:?}"
+                    ));
+                    StrategyKind::Duet
+                }
+            },
+        };
         let repeats = match str_key("repeats").as_deref() {
             None => RepeatPolicy::Fixed,
             Some("fixed") => RepeatPolicy::Fixed,
@@ -444,6 +482,7 @@ impl Scenario {
             description,
             profile_name,
             mode,
+            strategy,
             repeats,
             tags,
             exp,
@@ -455,9 +494,9 @@ impl Scenario {
     }
 
     /// Expand the `[matrix]` grid into concrete variants, in canonical
-    /// axis order (memory, then profile, then mode, then seed — the same
-    /// order the suffix spells them). A plain recipe is its own single
-    /// variant. Expansion is a pure function of the scenario, so variant
+    /// axis order (memory, then profile, then mode, then strategy, then
+    /// seed — the same order the suffix spells them). A plain recipe is
+    /// its own single variant. Expansion is a pure function of the scenario, so variant
     /// lists — and therefore sweep outputs — are identical across
     /// processes and worker counts.
     pub fn expand(&self) -> Vec<Scenario> {
@@ -483,54 +522,67 @@ impl Scenario {
         } else {
             spec.mode.iter().copied().map(Some).collect()
         };
+        let strategies: Vec<Option<StrategyKind>> = if spec.strategy.is_empty() {
+            vec![None]
+        } else {
+            spec.strategy.iter().copied().map(Some).collect()
+        };
 
         let mut out = Vec::with_capacity(spec.variant_count());
         for &mem in &mems {
             for profile in &profiles {
                 for &mode in &modes {
-                    for &seed in &seeds {
-                        let mut sc = self.clone();
-                        sc.matrix = None;
-                        if let Some(pname) = profile {
-                            let p = profile_by_name(pname).unwrap_or_else(|| {
-                                panic!("unregistered matrix profile {pname:?}")
-                            });
-                            sc.profile_name = pname.to_string();
-                            sc.platform = p.config().overridden(&spec.overrides);
-                            if mem.is_none() && !spec.memory_pinned {
-                                sc.exp.memory_mb = p.default_memory_mb();
+                    for &strat in &strategies {
+                        for &seed in &seeds {
+                            let mut sc = self.clone();
+                            sc.matrix = None;
+                            if let Some(pname) = profile {
+                                let p = profile_by_name(pname).unwrap_or_else(|| {
+                                    panic!("unregistered matrix profile {pname:?}")
+                                });
+                                sc.profile_name = pname.to_string();
+                                sc.platform = p.config().overridden(&spec.overrides);
+                                if mem.is_none() && !spec.memory_pinned {
+                                    sc.exp.memory_mb = p.default_memory_mb();
+                                }
                             }
+                            if let Some(mb) = mem {
+                                sc.exp.memory_mb = mb;
+                            }
+                            if let Some(m) = mode {
+                                sc.mode = m;
+                            }
+                            if let Some(s) = strat {
+                                sc.strategy = s;
+                            }
+                            let mut parts: Vec<String> = Vec::new();
+                            if let Some(mb) = mem {
+                                parts.push(format!("mem={mb}"));
+                            }
+                            if let Some(pname) = profile {
+                                parts.push(format!("profile={pname}"));
+                            }
+                            if let Some(m) = mode {
+                                parts.push(format!("mode={}", m.as_str()));
+                            }
+                            if let Some(s) = strat {
+                                parts.push(format!("strategy={}", s.as_str()));
+                            }
+                            if let Some(s) = seed {
+                                parts.push(format!("seed={s}"));
+                            }
+                            let suffix = parts.join(",");
+                            sc.name = format!("{}@{suffix}", self.name);
+                            sc.exp.label = sc.name.clone();
+                            // An explicit seed axis pins the value; otherwise
+                            // every grid point derives an independent (but
+                            // reproducible) noise realization from its name.
+                            sc.exp.seed = match seed {
+                                Some(s) => s,
+                                None => self.exp.seed ^ suffix_hash(&suffix),
+                            };
+                            out.push(sc);
                         }
-                        if let Some(mb) = mem {
-                            sc.exp.memory_mb = mb;
-                        }
-                        if let Some(m) = mode {
-                            sc.mode = m;
-                        }
-                        let mut parts: Vec<String> = Vec::new();
-                        if let Some(mb) = mem {
-                            parts.push(format!("mem={mb}"));
-                        }
-                        if let Some(pname) = profile {
-                            parts.push(format!("profile={pname}"));
-                        }
-                        if let Some(m) = mode {
-                            parts.push(format!("mode={}", m.as_str()));
-                        }
-                        if let Some(s) = seed {
-                            parts.push(format!("seed={s}"));
-                        }
-                        let suffix = parts.join(",");
-                        sc.name = format!("{}@{suffix}", self.name);
-                        sc.exp.label = sc.name.clone();
-                        // An explicit seed axis pins the value; otherwise
-                        // every grid point derives an independent (but
-                        // reproducible) noise realization from its name.
-                        sc.exp.seed = match seed {
-                            Some(s) => s,
-                            None => self.exp.seed ^ suffix_hash(&suffix),
-                        };
-                        out.push(sc);
                     }
                 }
             }
@@ -632,6 +684,7 @@ fn parse_matrix(
     let seed = int_axis("seed", errs);
     let profile = str_axis("profile");
     let mode_raw = str_axis("mode");
+    let strategy_raw = str_axis("strategy");
 
     for p in &profile {
         if profile_by_name(p).is_none() {
@@ -651,6 +704,15 @@ fn parse_matrix(
             )),
         }
     }
+    let mut strategy: Vec<StrategyKind> = Vec::new();
+    for s in &strategy_raw {
+        match StrategyKind::parse(s) {
+            Some(k) => strategy.push(k),
+            None => errs.push(format!(
+                "matrix.strategy values must be one of {STRATEGY_NAMES:?}, got {s:?}"
+            )),
+        }
+    }
 
     // Duplicate axis values would collide on variant names (and silently
     // double-run grid points).
@@ -665,6 +727,9 @@ fn parse_matrix(
     }
     if has_dup(&mode_raw) {
         errs.push("matrix.mode has duplicate values".into());
+    }
+    if has_dup(&strategy_raw) {
+        errs.push("matrix.strategy has duplicate values".into());
     }
     if has_dup(&seed) {
         errs.push("matrix.seed has duplicate values".into());
@@ -681,6 +746,9 @@ fn parse_matrix(
     if doc.get("matrix", "mode").is_some() && doc.get("scenario", "mode").is_some() {
         errs.push("scenario.mode conflicts with matrix.mode (the axis owns the value)".into());
     }
+    if doc.get("matrix", "strategy").is_some() && doc.get("strategy", "name").is_some() {
+        errs.push("strategy.name conflicts with matrix.strategy (the axis owns the value)".into());
+    }
     // Every variant's label IS its derived name; a pinned label would be
     // silently clobbered during expansion, so it is rejected like the
     // other dead-configuration conflicts above.
@@ -691,6 +759,7 @@ fn parse_matrix(
     let count = memory_mb.len().max(1)
         * profile.len().max(1)
         * mode_raw.len().max(1)
+        * strategy_raw.len().max(1)
         * seed.len().max(1);
     if count > MAX_MATRIX_VARIANTS {
         errs.push(format!(
@@ -727,6 +796,7 @@ fn parse_matrix(
         memory_mb,
         profile,
         mode,
+        strategy,
         seed,
         memory_pinned,
         overrides: doc.clone(),
@@ -1142,6 +1212,121 @@ mod tests {
             seeds.join(", ")
         ));
         assert!(msg.contains("72 variants, above the cap of 64"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_mode_is_a_hard_error_quoting_the_value() {
+        // Strict parsing: a typoed mode must fail loudly, never warn and
+        // default — and the message must quote the offending value so the
+        // user can spot the typo.
+        let err = Scenario::from_toml(
+            "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\nmode = \"abba\"",
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("scenario.mode must be \"aa\" or \"ab\""),
+            "{msg}"
+        );
+        assert!(msg.contains("got \"abba\""), "quotes the bad value: {msg}");
+    }
+
+    #[test]
+    fn strategy_defaults_to_duet_and_parses_every_name() {
+        let sc = Scenario::from_toml(MINIMAL).unwrap();
+        assert_eq!(sc.strategy, StrategyKind::Duet, "absent section defaults");
+
+        for kind in StrategyKind::all() {
+            let sc = Scenario::from_toml(&format!(
+                "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\n\
+                 [strategy]\nname = \"{}\"",
+                kind.as_str()
+            ))
+            .unwrap();
+            assert_eq!(sc.strategy, kind, "{} round-trips", kind.as_str());
+        }
+    }
+
+    #[test]
+    fn strategy_section_is_strict() {
+        let err = |toml: &str| Scenario::from_toml(toml).unwrap_err().to_string();
+        let head = "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\n";
+        // Unknown strategy name: quoted value plus the valid spellings.
+        let msg = err(&format!("{head}[strategy]\nname = \"rmti\""));
+        assert!(msg.contains("strategy.name must be one of"), "{msg}");
+        assert!(msg.contains("\"rmti\""), "quotes the bad value: {msg}");
+        assert!(msg.contains("duet-pinned"), "lists alternatives: {msg}");
+        // A present-but-nameless section cannot silently mean "duet".
+        let msg = err(&format!("{head}[strategy]"));
+        assert!(msg.contains("strategy.name is required"), "{msg}");
+        // Unknown keys and wrong types are errors like everywhere else.
+        let msg = err(&format!("{head}[strategy]\nnmae = \"duet\""));
+        assert!(msg.contains("unknown key strategy.nmae"), "{msg}");
+        let msg = err(&format!("{head}[strategy]\nname = 3"));
+        assert!(msg.contains("strategy.name must be a string"), "{msg}");
+    }
+
+    #[test]
+    fn matrix_strategy_axis_expands_in_canonical_order() {
+        let sc = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "base"
+            profile = "aws-lambda"
+            [matrix]
+            mode = ["ab"]
+            strategy = ["duet", "sequential", "rmit", "duet-pinned"]
+            seed = [5]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(sc.variant_count(), 4);
+        let variants = sc.expand();
+        let names: Vec<&str> = variants.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "base@mode=ab,strategy=duet,seed=5",
+                "base@mode=ab,strategy=sequential,seed=5",
+                "base@mode=ab,strategy=rmit,seed=5",
+                "base@mode=ab,strategy=duet-pinned,seed=5",
+            ]
+        );
+        assert_eq!(
+            variants.iter().map(|v| v.strategy).collect::<Vec<_>>(),
+            StrategyKind::all().to_vec(),
+        );
+        // Without a seed axis, strategy variants get distinct derived
+        // seeds (they are distinct grid points, not re-runs).
+        let sc = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "base"
+            profile = "aws-lambda"
+            [matrix]
+            strategy = ["duet", "rmit"]
+            "#,
+        )
+        .unwrap();
+        let variants = sc.expand();
+        assert_ne!(variants[0].exp.seed, variants[1].exp.seed);
+    }
+
+    #[test]
+    fn matrix_strategy_axis_is_strict() {
+        let err = |toml: &str| Scenario::from_toml(toml).unwrap_err().to_string();
+        let head = "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\n";
+        let msg = err(&format!("{head}[matrix]\nstrategy = [\"warp\"]"));
+        assert!(msg.contains("matrix.strategy values must be one of"), "{msg}");
+        assert!(msg.contains("\"warp\""), "quotes the bad value: {msg}");
+        let msg = err(&format!(
+            "{head}[matrix]\nstrategy = [\"duet\", \"duet\"]"
+        ));
+        assert!(msg.contains("matrix.strategy has duplicate values"), "{msg}");
+        let msg = err(&format!(
+            "{head}[strategy]\nname = \"rmit\"\n[matrix]\nstrategy = [\"duet\"]"
+        ));
+        assert!(msg.contains("strategy.name conflicts with matrix.strategy"), "{msg}");
     }
 
     #[test]

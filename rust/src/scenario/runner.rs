@@ -7,7 +7,9 @@
 //! [`crate::report::scenario_report_to_json`] for the export shape.
 
 use super::recipe::{RepeatPolicy, Scenario};
-use crate::coordinator::{run_experiment, run_experiment_live, LiveStopConfig, RunReport};
+use crate::coordinator::{
+    run_experiment_live_with, run_experiment_with, LiveStopConfig, RunReport,
+};
 use crate::exp::Workbench;
 use crate::stats::{adaptive_plan, AdaptivePlan, Analyzer, StoppingRule, SuiteAnalysis};
 use anyhow::Result;
@@ -167,8 +169,15 @@ pub fn run_scenario_experiment(sc: &Scenario, analyzer: &Analyzer) -> Result<Pen
                 rule: scenario_rule(sc),
                 seed: analysis_seed,
             };
-            let (run, live) =
-                run_experiment_live(&wb.suite, &wb.sut, &wb.platform, &sc.exp, sc.versions(), &cfg);
+            let (run, live) = run_experiment_live_with(
+                &wb.suite,
+                &wb.sut,
+                &wb.platform,
+                &sc.exp,
+                sc.versions(),
+                sc.strategy.strategy(),
+                &cfg,
+            );
             let planned = sc.planned_calls().max(1);
             let calls = run.calls_total.max(1) as f64;
             let summary = LiveStopSummary {
@@ -182,7 +191,14 @@ pub fn run_scenario_experiment(sc: &Scenario, analyzer: &Analyzer) -> Result<Pen
             (run, Some(summary))
         }
         RepeatPolicy::Fixed | RepeatPolicy::AdaptiveReplay => (
-            run_experiment(&wb.suite, &wb.sut, &wb.platform, &sc.exp, sc.versions()),
+            run_experiment_with(
+                &wb.suite,
+                &wb.sut,
+                &wb.platform,
+                &sc.exp,
+                sc.versions(),
+                sc.strategy.strategy(),
+            ),
             None,
         ),
     };

@@ -57,11 +57,15 @@ fn inject_regression(report: &mut ScenarioReport, idx: usize) {
 }
 
 fn gate_exit_code(store: &HistoryStore) -> i32 {
+    gate_exit_for(store, "quick-smoke")
+}
+
+fn gate_exit_for(store: &HistoryStore, scenario: &str) -> i32 {
     let args = Args::parse(
         [
             "history".to_string(),
             "gate".to_string(),
-            "quick-smoke".to_string(),
+            scenario.to_string(),
             "--store".to_string(),
             store.root().display().to_string(),
         ],
@@ -137,6 +141,88 @@ fn single_noisy_baseline_run_does_not_trip_the_gate() {
         out.findings
     );
     assert_eq!(gate_exit_code(&store), 0);
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+/// A shrunk quick-smoke run executed under a non-default strategy, named
+/// like a `[matrix] strategy` variant so it gets its own store timeline.
+fn tiny_variant_report(strategy: elastibench::coordinator::StrategyKind) -> ScenarioReport {
+    let mut sc = catalog_entry("quick-smoke").unwrap();
+    sc.sut.benchmark_count = 6;
+    sc.sut.true_changes = 1;
+    sc.sut.faas_incompatible = 1;
+    sc.sut.slow_setup = 0;
+    sc.exp.calls_per_benchmark = 6;
+    sc.exp.parallelism = 8;
+    sc.strategy = strategy;
+    sc.name = format!("quick-smoke@strategy={}", strategy.as_str());
+    sc.exp.label = sc.name.clone();
+    run_scenario(&sc, &Analyzer::native()).unwrap()
+}
+
+#[test]
+fn strategy_metadata_roundtrips_losslessly_through_the_store() {
+    use elastibench::coordinator::StrategyKind;
+    use elastibench::history::stored_run_to_json;
+    use elastibench::report::scenario_report_to_json;
+
+    let store = temp_store("strategy_meta");
+    let report = tiny_variant_report(StrategyKind::Rmit);
+    let exported = scenario_report_to_json(&report).to_string();
+    assert!(exported.contains("\"strategy\":\"rmit\""), "export carries the strategy");
+
+    let meta = store.record(&report, "t-1").unwrap();
+    let loaded = store.load(&report.scenario.name, &meta.run_id).unwrap();
+    assert_eq!(loaded.metadata.strategy, "rmit");
+    assert_eq!(
+        stored_run_to_json(&loaded).to_string(),
+        exported,
+        "record -> load -> re-export must preserve metadata.strategy byte-identically"
+    );
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn strategy_variants_gate_independently() {
+    use elastibench::coordinator::StrategyKind;
+
+    // Two timelines in one store: the plain duet scenario and its
+    // pinned-duet strategy variant. A regression recorded on the variant
+    // must trip ONLY the variant's gate — the duet timeline stays green.
+    let store = temp_store("strategy_gate");
+
+    let mut duet = tiny_report();
+    for commit in ["d1", "d2", "d3", "d4"] {
+        duet.commit = commit.to_string();
+        store.record(&duet, commit).unwrap();
+    }
+
+    let mut pinned = tiny_variant_report(StrategyKind::DuetPinned);
+    let pinned_name = pinned.scenario.name.clone();
+    for commit in ["p1", "p2", "p3"] {
+        pinned.commit = commit.to_string();
+        store.record(&pinned, commit).unwrap();
+    }
+    let idx = clean_benchmark(&pinned);
+    inject_regression(&mut pinned, idx);
+    pinned.commit = "p4".to_string();
+    store.record(&pinned, "p4").unwrap();
+
+    assert_eq!(
+        store.scenarios().unwrap(),
+        vec!["quick-smoke".to_string(), pinned_name.clone()],
+        "variants keep separate timelines"
+    );
+
+    let duet_out =
+        evaluate(&Timeline::load(&store, "quick-smoke").unwrap(), &GatePolicy::default()).unwrap();
+    assert!(duet_out.passed(), "duet timeline must stay green: {:?}", duet_out.findings);
+    let pinned_out =
+        evaluate(&Timeline::load(&store, &pinned_name).unwrap(), &GatePolicy::default()).unwrap();
+    assert!(!pinned_out.passed(), "variant regression must trip its own gate");
+
+    assert_eq!(gate_exit_code(&store), 0);
+    assert_eq!(gate_exit_for(&store, &pinned_name), 1);
     let _ = std::fs::remove_dir_all(store.root());
 }
 

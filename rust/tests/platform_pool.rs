@@ -302,6 +302,110 @@ fn full_experiments_match_reference_invocation_for_invocation() {
 }
 
 #[test]
+fn extracted_duet_strategy_matches_preextraction_coordinator_exactly() {
+    // Byte-identity oracle for the ExecutionStrategy refactor: the
+    // coordinator loop pre-extraction survives verbatim as
+    // `coordinator::reference::run_experiment_hardcoded`, and the
+    // trait-dispatched `Duet` strategy must reproduce its reports
+    // field for field — same RNG draw order, same schedule, same
+    // billing — across serial, parallel A/A, crash-retry and
+    // throttled regimes, plus the live early-stopping path.
+    use elastibench::coordinator::reference::{
+        run_experiment_hardcoded, run_experiment_live_hardcoded,
+    };
+    use elastibench::coordinator::LiveStopConfig;
+    use elastibench::stats::{Analyzer, StoppingRule};
+
+    let sut = SutConfig {
+        benchmark_count: 12,
+        true_changes: 3,
+        faas_incompatible: 2,
+        slow_setup: 1,
+        ..SutConfig::default()
+    };
+    let suite = generate(&sut);
+
+    let cases: Vec<(&str, PlatformConfig, ExperimentConfig, (Version, Version))> = vec![
+        (
+            "serial",
+            PlatformConfig::default(),
+            ExperimentConfig {
+                calls_per_benchmark: 5,
+                parallelism: 1,
+                ..ExperimentConfig::default()
+            },
+            (Version::V1, Version::V2),
+        ),
+        (
+            "parallel-aa",
+            PlatformConfig::default(),
+            ExperimentConfig {
+                calls_per_benchmark: 6,
+                parallelism: 40,
+                ..ExperimentConfig::default()
+            },
+            (Version::V1, Version::V1),
+        ),
+        (
+            "crashy",
+            PlatformConfig {
+                crash_probability: 0.15,
+                ..PlatformConfig::default()
+            },
+            ExperimentConfig {
+                calls_per_benchmark: 5,
+                parallelism: 20,
+                seed: 777,
+                ..ExperimentConfig::default()
+            },
+            (Version::V1, Version::V2),
+        ),
+        (
+            "throttled",
+            PlatformConfig {
+                concurrency_limit: 8,
+                ..PlatformConfig::default()
+            },
+            ExperimentConfig {
+                calls_per_benchmark: 5,
+                parallelism: 30,
+                seed: 31337,
+                ..ExperimentConfig::default()
+            },
+            (Version::V1, Version::V2),
+        ),
+    ];
+    for (label, plat, exp, versions) in &cases {
+        let extracted = run_experiment(&suite, &sut, plat, exp, *versions);
+        let frozen = run_experiment_hardcoded(&suite, &sut, plat, exp, *versions);
+        assert_reports_identical(&extracted, &frozen, label);
+    }
+
+    // Live path: strategy-generic engine feed vs the frozen per-pair
+    // push loop, including the cancellation bookkeeping.
+    let analyzer = Analyzer::native();
+    let (_, plat, exp, versions) = &cases[1];
+    let cfg = LiveStopConfig {
+        b: analyzer.b,
+        alpha: analyzer.alpha,
+        min_results: analyzer.min_results,
+        rule: StoppingRule {
+            step: exp.repeats_per_call.max(1),
+            ..StoppingRule::default()
+        },
+        seed: exp.seed ^ 0xA11A,
+    };
+    let (extracted, live_a) =
+        elastibench::coordinator::run_experiment_live(&suite, &sut, plat, exp, *versions, &cfg);
+    let (frozen, live_b) =
+        run_experiment_live_hardcoded(&suite, &sut, plat, exp, *versions, &cfg);
+    assert_reports_identical(&extracted, &frozen, "live-aa");
+    assert_eq!(live_a.stop_points, live_b.stop_points, "live-aa: stop points");
+    assert_eq!(live_a.decided, live_b.decided, "live-aa: decided");
+    assert_eq!(live_a.calls_canceled, live_b.calls_canceled, "live-aa: canceled");
+}
+
+#[test]
 fn short_keepalive_experiment_completes_on_the_slot_map() {
     // Aggressive keepalive churn (the lambda-hyperscale regime, scaled
     // down): only run the pooled platform — the reference would corrupt

@@ -186,6 +186,119 @@ fn prop_coordinator_conserves_results() {
 }
 
 #[test]
+fn prop_strategy_schedules_are_pure_functions_of_seed_and_recipe() {
+    // Every execution strategy's call schedule must be a pure function
+    // of (seed, experiment shape): re-planning from the same seed yields
+    // the identical schedule, different seeds reshuffle it, and the
+    // planned call multiset always covers every benchmark exactly
+    // `calls_per_benchmark` times per lane. Full runs re-executed from
+    // the same inputs must reproduce identical measurements — worker
+    // count never enters the schedule (sweep-level jobs-invariance is
+    // pinned in rust/tests/scenario_catalog.rs).
+    use elastibench::coordinator::strategy::CallSlot;
+    use elastibench::coordinator::{run_experiment_with, StrategyKind};
+    use elastibench::util::Rng;
+
+    check("strategy schedule purity", 6, |g: &mut Gen| {
+        let suite_len = g.usize(4..12);
+        let exp = ExperimentConfig {
+            calls_per_benchmark: g.usize(2..7),
+            repeats_per_call: g.usize(1..4),
+            parallelism: g.usize(1..30),
+            seed: g.u64(0..u64::MAX),
+            ..ExperimentConfig::default()
+        };
+        for kind in StrategyKind::all() {
+            let strategy = kind.strategy();
+            let plan_a = strategy.plan(suite_len, &exp, &mut Rng::new(exp.seed));
+            let plan_b = strategy.plan(suite_len, &exp, &mut Rng::new(exp.seed));
+            assert_eq!(plan_a, plan_b, "{}: same seed, same schedule", kind.as_str());
+
+            let lanes_per_bench = match kind {
+                StrategyKind::Sequential => 2,
+                _ => 1,
+            };
+            assert_eq!(
+                plan_a.len(),
+                suite_len * exp.calls_per_benchmark * lanes_per_bench,
+                "{}: schedule covers the plan exactly",
+                kind.as_str()
+            );
+            for idx in 0..suite_len {
+                let calls = plan_a.iter().filter(|p| p.bench_idx == idx).count();
+                assert_eq!(
+                    calls,
+                    exp.calls_per_benchmark * lanes_per_bench,
+                    "{}: benchmark {idx} call budget",
+                    kind.as_str()
+                );
+            }
+            if kind == StrategyKind::Sequential {
+                for lane in [0u8, 1] {
+                    let n = plan_a
+                        .iter()
+                        .filter(|p| p.slot == CallSlot::Single(lane))
+                        .count();
+                    assert_eq!(n, suite_len * exp.calls_per_benchmark, "lane {lane}");
+                }
+            }
+
+            // A different seed must produce a different shuffle for any
+            // non-trivial plan (astronomically unlikely to collide).
+            if plan_a.len() >= 8 {
+                let other = strategy.plan(suite_len, &exp, &mut Rng::new(exp.seed ^ 0x5EED));
+                assert_ne!(plan_a, other, "{}: seed must drive the order", kind.as_str());
+            }
+        }
+    });
+
+    // Full-run determinism per strategy: identical inputs, identical
+    // measurements — on a smaller budget since this simulates 4 runs.
+    check("strategy run determinism", 2, |g: &mut Gen| {
+        let sut = SutConfig {
+            benchmark_count: 8,
+            true_changes: 2,
+            faas_incompatible: 1,
+            slow_setup: 0,
+            seed: g.u64(0..u64::MAX),
+            ..SutConfig::default()
+        };
+        let suite = generate(&sut);
+        let exp = ExperimentConfig {
+            calls_per_benchmark: 4,
+            parallelism: 12,
+            seed: g.u64(0..u64::MAX),
+            ..ExperimentConfig::default()
+        };
+        for kind in StrategyKind::all() {
+            let strategy = kind.strategy();
+            let a = run_experiment_with(
+                &suite,
+                &sut,
+                &PlatformConfig::default(),
+                &exp,
+                (Version::V1, Version::V2),
+                strategy,
+            );
+            let b = run_experiment_with(
+                &suite,
+                &sut,
+                &PlatformConfig::default(),
+                &exp,
+                (Version::V1, Version::V2),
+                strategy,
+            );
+            assert_eq!(a.wall_s, b.wall_s, "{}", kind.as_str());
+            assert_eq!(a.cost_usd, b.cost_usd, "{}", kind.as_str());
+            for (x, y) in a.measurements.iter().zip(&b.measurements) {
+                assert_eq!(x.v1, y.v1, "{}: {}", kind.as_str(), x.name);
+                assert_eq!(x.v2, y.v2, "{}: {}", kind.as_str(), x.name);
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_experiments_deterministic_across_seeded_reruns() {
     check("determinism", 5, |g: &mut Gen| {
         let sut = SutConfig {

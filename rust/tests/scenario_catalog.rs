@@ -175,6 +175,49 @@ fn shipped_matrix_recipe_expands_and_is_strictly_parsed() {
 }
 
 #[test]
+fn strategy_lab_entry_sweeps_all_strategies_end_to_end() {
+    // The strategy-lab catalog entry expands one recipe into all four
+    // execution strategies; a scaled-down sweep must execute every
+    // variant and stamp each report's metadata with its strategy name.
+    let sc = catalog_entry("strategy-lab").unwrap();
+    assert!(sc.matrix.is_some());
+    let variants = sc.expand();
+    assert_eq!(variants.len(), 4);
+    let expected = ["duet", "sequential", "rmit", "duet-pinned"];
+    for (v, want) in variants.iter().zip(expected) {
+        assert_eq!(v.name, format!("strategy-lab@strategy={want}"), "{}", v.name);
+        assert_eq!(v.strategy.as_str(), want);
+    }
+
+    let small: Vec<Scenario> = variants
+        .iter()
+        .map(|v| {
+            let mut s = v.clone();
+            s.sut.benchmark_count = 8;
+            s.sut.true_changes = 2;
+            s.sut.faas_incompatible = 1;
+            s.sut.slow_setup = 0;
+            s.exp.calls_per_benchmark = 5;
+            s.exp.parallelism = 12;
+            s
+        })
+        .collect();
+    let reports = run_sweep(&small, 2, || Ok(Analyzer::native())).unwrap();
+    assert_eq!(reports.len(), 4);
+    for (r, want) in reports.iter().zip(expected) {
+        let j = parse(&scenario_report_to_json(r).to_string()).unwrap();
+        assert_eq!(
+            j.get("metadata").unwrap().get("strategy").unwrap().as_str(),
+            Some(want),
+            "{}",
+            r.scenario.name
+        );
+        assert!(r.run.calls_ok > 0, "{}: no successful calls", r.scenario.name);
+        assert!(!r.analysis.verdicts.is_empty(), "{}", r.scenario.name);
+    }
+}
+
+#[test]
 fn hyperscale_entry_exercises_pool_churn() {
     // The large-fleet catalog entry: parallelism at the 1000-instance
     // scale, thousands of planned calls, and a keepalive short enough

@@ -15,11 +15,16 @@
 //!                    `docs/benchmarks.md`).
 
 use elastibench::config::{ExperimentConfig, PlatformConfig, SutConfig};
-use elastibench::coordinator::{run_experiment, run_experiment_reference};
+use elastibench::coordinator::{
+    run_experiment, run_experiment_observed, run_experiment_reference, strategy_by_name,
+};
 use elastibench::des::Sim;
 use elastibench::exp::{baseline, Workbench};
 use elastibench::sut::{generate, Version};
+use elastibench::telemetry::{NullSink, SharedSink};
 use elastibench::util::benchkit::{time, BenchReport};
+use std::cell::RefCell;
+use std::rc::Rc;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -130,6 +135,37 @@ fn main() {
     report.metric("full_experiment_parallelism", exp.parallelism as f64);
     report.metric("experiment_wall_s", pooled.median_s);
     report.metric("experiment_calls_per_s", calls as f64 / pooled.median_s);
+
+    // Same hyperscale workload with a NullSink attached: the telemetry
+    // hooks sit on the platform/coordinator hot paths, so this pins
+    // their cost when nobody is listening. Expected to be noise-level.
+    let duet = strategy_by_name("duet").expect("duet strategy");
+    let observed = time(
+        &format!(
+            "pooled pool + NullSink: {calls} calls, parallelism {}",
+            exp.parallelism
+        ),
+        1,
+        iters,
+        || {
+            let sink: SharedSink = Rc::new(RefCell::new(NullSink));
+            run_experiment_observed(
+                &suite,
+                &sut,
+                &platform,
+                &exp,
+                (Version::V1, Version::V2),
+                duet,
+                None,
+                &sink,
+            )
+        },
+    );
+    println!("{}", observed.report(Some(calls as f64)));
+    report.case(&observed, Some(calls as f64));
+    let overhead_pct = (observed.median_s / pooled.median_s - 1.0) * 100.0;
+    println!("sink overhead (NullSink vs untraced, same workload): {overhead_pct:+.1}%");
+    report.metric("sink_overhead_pct", overhead_pct);
 
     // Full experiment simulation (106 benchmarks x 15 calls, parallelism
     // 150) WITHOUT analysis — the paper-scale coordinator path.

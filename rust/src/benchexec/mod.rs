@@ -123,6 +123,10 @@ pub struct CallOutcome {
     pub pairs: Vec<(f64, f64)>,
     /// Wall time of the whole call [s] (also the billed duration).
     pub wall_s: f64,
+    /// Instance-cache warmup included in `wall_s` [s] (0 when the call
+    /// landed on a warm cache) — the cold-attributable billed time the
+    /// telemetry cost attribution splits out.
+    pub warmup_s: f64,
     /// Error that aborted the call, if any.
     pub error: Option<RunError>,
 }
@@ -154,6 +158,7 @@ pub fn run_duet_call(
         let warmup = ctx.rng.lognormal(0.2_f64.ln(), 0.3) / ctx.vcpus.min(1.0);
         t += warmup;
         out.wall_s += warmup;
+        out.warmup_s = warmup;
     }
     for _ in 0..repeats {
         let v1_first = !randomize_version_order || ctx.rng.chance(0.5);
@@ -204,6 +209,8 @@ pub struct SingleCallOutcome {
     pub samples: Vec<f64>,
     /// Wall time of the whole call [s] (also the billed duration).
     pub wall_s: f64,
+    /// Instance-cache warmup included in `wall_s` [s] (0 when warm).
+    pub warmup_s: f64,
     /// Error that aborted the call, if any.
     pub error: Option<RunError>,
 }
@@ -226,6 +233,7 @@ pub fn run_single_call(
         let warmup = ctx.rng.lognormal(0.2_f64.ln(), 0.3) / ctx.vcpus.min(1.0);
         t += warmup;
         out.wall_s += warmup;
+        out.warmup_s = warmup;
     }
     for _ in 0..repeats {
         match run_once(b, version, t, ctx) {
@@ -264,6 +272,7 @@ pub fn run_rmit_call(
         let warmup = ctx.rng.lognormal(0.2_f64.ln(), 0.3) / ctx.vcpus.min(1.0);
         t += warmup;
         out.wall_s += warmup;
+        out.warmup_s = warmup;
     }
     // `repeats` trials per slot, interleaving randomized per call.
     let mut order: Vec<u8> = (0..2 * repeats).map(|i| (i % 2) as u8).collect();

@@ -5,7 +5,9 @@
 //! elastibench run --experiment NAME [--backend native|xla] [--config FILE] [--out DIR]
 //! elastibench scenario list
 //! elastibench scenario run <NAME> [--backend native|xla] [--out-dir DIR]
+//!                                 [--trace-out FILE]
 //! elastibench scenario run --recipe FILE [--backend native|xla] [--out-dir DIR]
+//! elastibench trace summarize FILE
 //! elastibench scenario run-all [--jobs N] [--backend native|xla] [--out-dir DIR]
 //! elastibench scenario sweep <NAME>|--recipe FILE [--jobs N]
 //!                            [--backend native|xla] [--out-dir DIR]
@@ -64,6 +66,11 @@ impl Args {
                 out.positionals.push(arg);
                 continue;
             };
+            // Boolean switches take no value; everything else does.
+            if key == "quiet" {
+                out.flags.insert(key.to_string(), "1".to_string());
+                continue;
+            }
             let value = iter
                 .next()
                 .with_context(|| format!("flag --{key} needs a value"))?;
@@ -108,11 +115,18 @@ USAGE:
   elastibench scenario list
       Show the shipped scenario catalog (recipes under scenarios/).
   elastibench scenario run NAME [--backend native|xla] [--out-dir DIR]
+                                [--trace-out FILE]
   elastibench scenario run --recipe FILE [--backend native|xla] [--out-dir DIR]
       Run one catalog entry (or a recipe file) and write a structured
       JSON report NAME-COMMIT.json to DIR (default: results/; --out is
       an accepted alias). Recipes with a [history] section auto-record
-      into their store.
+      into their store. --trace-out FILE additionally dumps the run's
+      lifecycle spans as Chrome trace-event JSON (load in Perfetto or
+      chrome://tracing); timestamps are simulated time, so traces are
+      deterministic across seeds and --jobs.
+  elastibench trace summarize FILE
+      Print the telemetry summary (cold starts, reuse, queue waits,
+      per-phase cost attribution) embedded in a --trace-out dump.
   elastibench scenario run-all [--jobs N] [--backend native|xla]
                                [--out-dir DIR]
       Sweep the whole catalog (matrix recipes contribute every grid
@@ -158,12 +172,18 @@ USAGE:
   elastibench version
   elastibench help
 
+Every command accepts --quiet (or ELASTIBENCH_QUIET=1) to suppress
+diagnostic warnings on stderr.
+
 See docs/benchmarks.md for the full guide (recipe schema, adding
 platform profiles, JSON report format, CI wiring).
 ";
 
 /// Entry point used by `main.rs`; returns the process exit code.
 pub fn run(args: Args) -> Result<i32> {
+    if args.get("quiet").is_some() {
+        crate::util::diag::set_quiet(true);
+    }
     match args.command.as_str() {
         "" | "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -177,6 +197,7 @@ pub fn run(args: Args) -> Result<i32> {
         "suite" => cmd_suite(&args),
         "run" => cmd_run(&args),
         "scenario" => cmd_scenario(&args),
+        "trace" => cmd_trace(&args),
         "history" => cmd_history(&args),
         "compare" => cmd_compare(&args),
         "reproduce" => cmd_reproduce(&args),
@@ -432,7 +453,26 @@ fn cmd_scenario_run(args: &Args) -> Result<i32> {
             m.variant_count()
         );
     }
-    let report = execute_scenario(args, &sc)?;
+    let report = match args.get("trace-out") {
+        None => execute_scenario(args, &sc)?,
+        Some(trace_path) => {
+            let (report, spans) =
+                crate::scenario::run_scenario_traced(&sc, &analyzer(args)?)?;
+            let metrics = report
+                .telemetry
+                .as_ref()
+                .expect("traced runs always carry telemetry");
+            let trace = crate::telemetry::chrome_trace_json(
+                &report.scenario.name,
+                &spans,
+                metrics,
+            );
+            write_text(&PathBuf::from(trace_path), &trace.to_string())?;
+            println!("wrote {trace_path} ({} span events)", spans.len());
+            export_and_record(args, &report)?;
+            report
+        }
+    };
     print!("{}", experiment_summary_table(&[scenario_summary_row(&report)]));
     if let Some(plan) = &report.adaptive {
         println!(
@@ -544,11 +584,64 @@ fn cmd_scenario_sweep(args: &Args) -> Result<i32> {
             changes: r.analysis.change_count(),
             wall_s: r.run.wall_s,
             cost_usd: r.run.cost_usd,
+            cold_start_pct: r.telemetry.as_ref().map(|t| t.cold_start_rate_pct),
+            reuse_pct: r.telemetry.as_ref().map(|t| t.reuse_rate_pct),
         })
         .collect();
     println!();
     print!("{}", sweep_summary_table(&rows));
     Ok(regression_exit(regressed))
+}
+
+// ------------------------------------------------------------------
+// `trace` — Chrome-trace dumps written by `scenario run --trace-out`.
+// ------------------------------------------------------------------
+
+fn cmd_trace(args: &Args) -> Result<i32> {
+    match args.positional(0) {
+        Some("summarize") => cmd_trace_summarize(args),
+        other => bail!("trace needs a subcommand: summarize FILE (got {other:?})"),
+    }
+}
+
+fn cmd_trace_summarize(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(2)?;
+    let path = args
+        .positional(1)
+        .context("trace summarize needs a trace FILE")?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read trace {path}"))?;
+    let doc = crate::util::json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parse trace {path}: {e}"))?;
+    let eb = doc
+        .get("elastibench")
+        .with_context(|| format!("{path}: not an elastibench trace (missing \"elastibench\")"))?;
+    let schema = eb
+        .get("schema")
+        .and_then(|j| j.as_str())
+        .with_context(|| format!("{path}: trace missing \"elastibench.schema\""))?;
+    if schema != crate::telemetry::TRACE_SCHEMA {
+        bail!(
+            "unsupported trace schema {schema:?} (expected {:?})",
+            crate::telemetry::TRACE_SCHEMA
+        );
+    }
+    let scenario = eb
+        .get("scenario")
+        .and_then(|j| j.as_str())
+        .unwrap_or("?");
+    let metrics = crate::telemetry::run_metrics_from_json(
+        eb.get("metrics")
+            .with_context(|| format!("{path}: trace missing \"elastibench.metrics\""))?,
+    )?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|j| j.as_arr())
+        .map(Vec::len)
+        .unwrap_or(0);
+    println!("{scenario}: {events} trace event(s), all timestamps in simulated time\n");
+    print!("{}", crate::report::telemetry_table(&metrics));
+    Ok(0)
 }
 
 // ------------------------------------------------------------------
@@ -989,6 +1082,7 @@ mod tests {
             vec!["scenario", "sweep", "quick-smoke", "extra"],
             vec!["history", "show", "quick-smoke", "extra"],
             vec!["history", "gate", "quick-smoke", "extra"],
+            vec!["trace", "summarize", "f.json", "extra"],
         ] {
             let args =
                 Args::parse(argv.iter().map(|s| s.to_string())).unwrap();
@@ -1091,6 +1185,65 @@ mod tests {
             );
         }
         let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn quiet_is_a_boolean_switch() {
+        let args = Args::parse(
+            ["scenario", "run", "x", "--quiet", "--out-dir", "/tmp/q"].map(String::from),
+        )
+        .unwrap();
+        assert_eq!(args.get("quiet"), Some("1"));
+        assert_eq!(args.get("out-dir"), Some("/tmp/q"), "--quiet must not eat the next flag");
+    }
+
+    #[test]
+    fn trace_out_writes_chrome_trace_and_summarize_reads_it() {
+        let base = std::env::temp_dir().join("elastibench_cli_trace");
+        let _ = std::fs::remove_dir_all(&base);
+        let trace = base.join("trace.json");
+        let args = Args::parse(
+            [
+                "scenario".to_string(),
+                "run".to_string(),
+                "quick-smoke".to_string(),
+                "--out-dir".to_string(),
+                base.join("reports").display().to_string(),
+                "--trace-out".to_string(),
+                trace.display().to_string(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(run(args).unwrap(), 0);
+        let text = std::fs::read_to_string(&trace).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert!(
+            !parsed.get("traceEvents").unwrap().as_arr().unwrap().is_empty(),
+            "trace must carry events"
+        );
+        assert_eq!(
+            parsed.get("elastibench").unwrap().get("schema").unwrap().as_str(),
+            Some(crate::telemetry::TRACE_SCHEMA)
+        );
+        let args = Args::parse(
+            ["trace".to_string(), "summarize".to_string(), trace.display().to_string()],
+        )
+        .unwrap();
+        assert_eq!(run(args).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn trace_needs_a_subcommand_and_a_real_file() {
+        let args = Args::parse(["trace".to_string()]).unwrap();
+        assert!(run(args).is_err());
+        let args = Args::parse(["trace", "summarize"].map(String::from)).unwrap();
+        assert!(run(args).is_err());
+        let args = Args::parse(
+            ["trace", "summarize", "/nonexistent/trace.json"].map(String::from),
+        )
+        .unwrap();
+        assert!(run(args).is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::des::Sim;
 use crate::faas::{FaasPlatform, InstancePool, PlatformStats, ReferencePlatform};
 use crate::stats::{IncrementalBootstrap, Measurements, StoppingRule};
 use crate::sut::{Suite, Version};
+use crate::telemetry::{SharedSink, Span};
 use crate::util::Rng;
 
 /// Runner-side overhead per call (request serialization, HTTPS, SDK).
@@ -102,13 +103,32 @@ pub struct LiveStopReport {
     pub calls_canceled: usize,
 }
 
-/// DES event: a call finished.
+/// DES event: a call finished. The trailing fields are telemetry
+/// bookkeeping only (plain copies, no behavioural role): they let the
+/// completion handler emit a [`Span::CallCompleted`] without re-deriving
+/// call context.
 struct CallDone {
     plan: PlannedCall,
     instance: usize,
     billed_s: f64,
     samples: CallSamples,
     failure: Option<CallFailure>,
+    /// Coordinator call sequence number (0 for deferred acquires).
+    call: u64,
+    /// When the function handler started [simulated s].
+    start_at: f64,
+    /// Instance-cache warmup the call paid [s].
+    warmup_s: f64,
+}
+
+/// Stable label of a failure kind for span/trace output.
+fn failure_label(kind: CallFailure) -> &'static str {
+    match kind {
+        CallFailure::RestrictedEnv => "restricted-env",
+        CallFailure::BenchTimeout => "bench-timeout",
+        CallFailure::FunctionTimeout => "function-timeout",
+        CallFailure::Crash => "crash",
+    }
 }
 
 /// Run one ElastiBench experiment over `suite` on a fresh platform with
@@ -137,10 +157,35 @@ pub fn run_experiment_with(
     versions: (Version, Version),
     strategy: &dyn ExecutionStrategy,
 ) -> RunReport {
-    run_experiment_on(suite, sut, exp, versions, None, strategy, |image_mb| {
+    run_experiment_on(suite, sut, exp, versions, None, strategy, None, |image_mb| {
         FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
     })
     .0
+}
+
+/// [`run_experiment_with`] with a telemetry sink attached: the platform,
+/// the coordinator and the DES emit lifecycle spans into `sink` as the
+/// run executes (see [`crate::telemetry`]), timestamped in simulated
+/// time. Pass a [`LiveStopConfig`] to combine with live early stopping.
+///
+/// Attaching a sink — recording or null — can never change the run's
+/// results: emission sites read state but draw no RNG values and touch
+/// no scheduling state (differentially asserted in
+/// `rust/tests/telemetry.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_experiment_observed(
+    suite: &Suite,
+    sut: &SutConfig,
+    platform_cfg: &PlatformConfig,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+    strategy: &dyn ExecutionStrategy,
+    live: Option<&LiveStopConfig>,
+    sink: &SharedSink,
+) -> (RunReport, Option<LiveStopReport>) {
+    run_experiment_on(suite, sut, exp, versions, live, strategy, Some(sink), |image_mb| {
+        FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
+    })
 }
 
 /// [`run_experiment`] with **live adaptive early stopping**: every
@@ -173,7 +218,7 @@ pub fn run_experiment_live_with(
     live: &LiveStopConfig,
 ) -> (RunReport, LiveStopReport) {
     let (report, live) =
-        run_experiment_on(suite, sut, exp, versions, Some(live), strategy, |image_mb| {
+        run_experiment_on(suite, sut, exp, versions, Some(live), strategy, None, |image_mb| {
             FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
         });
     (report, live.expect("live config was passed"))
@@ -192,7 +237,7 @@ pub fn run_experiment_reference(
     exp: &ExperimentConfig,
     versions: (Version, Version),
 ) -> RunReport {
-    run_experiment_on(suite, sut, exp, versions, None, &Duet, |image_mb| {
+    run_experiment_on(suite, sut, exp, versions, None, &Duet, None, |image_mb| {
         ReferencePlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
     })
     .0
@@ -203,6 +248,7 @@ pub fn run_experiment_reference(
 /// pooled-vs-reference or duet-vs-strategy comparison exercises the
 /// *identical* coordinator path and any report difference is the pool's
 /// or the strategy's alone.
+#[allow(clippy::too_many_arguments)]
 fn run_experiment_on<P: InstancePool>(
     suite: &Suite,
     sut: &SutConfig,
@@ -210,6 +256,7 @@ fn run_experiment_on<P: InstancePool>(
     versions: (Version, Version),
     live: Option<&LiveStopConfig>,
     strategy: &dyn ExecutionStrategy,
+    sink: Option<&SharedSink>,
     deploy: impl FnOnce(f64) -> P,
 ) -> (RunReport, Option<LiveStopReport>) {
     if let Err(errs) = exp.validate() {
@@ -220,6 +267,9 @@ fn run_experiment_on<P: InstancePool>(
     // Phase 1+2: build + deploy.
     let image = build_image(sut, &mut rng.fork(0xB01D));
     let mut platform = deploy(image.size_mb);
+    if let Some(s) = sink {
+        platform.set_sink(s.clone());
+    }
 
     // Phase 3: plan — the strategy owns call contents and issue order
     // (duet: calls_per_benchmark duet calls per benchmark, shuffled
@@ -271,11 +321,24 @@ fn run_experiment_on<P: InstancePool>(
                 billed_s: 0.0,
                 samples: CallSamples::none(),
                 failure: None,
+                call: 0,
+                start_at: 0.0,
+                warmup_s: 0.0,
             });
             return;
         };
         *calls_total += 1;
         *call_seq += 1;
+        if let Some(s) = sink {
+            s.borrow_mut().emit(Span::CallIssued {
+                t,
+                call: *call_seq,
+                bench: plan_item.bench_idx,
+                instance: platform.instance_id(placement.instance),
+                cold: placement.cold,
+                queue_wait_s: placement.start_at - t,
+            });
+        }
         let bench = &suite.benchmarks[plan_item.bench_idx];
         let crash = platform.maybe_crash();
         let vcpus = platform.vcpus();
@@ -303,6 +366,7 @@ fn run_experiment_on<P: InstancePool>(
                 &mut ctx,
             )
         };
+        let warmup_s = outcome.warmup_s;
         let (samples, mut billed_s, mut failure) = if crash {
             // Crash mid-call: partial billing, no results. The call ran
             // before the crash surfaced, so the billing draw follows the
@@ -333,6 +397,9 @@ fn run_experiment_on<P: InstancePool>(
                     samples
                 },
                 failure,
+                call: *call_seq,
+                start_at: placement.start_at,
+                warmup_s,
             },
         );
     };
@@ -344,8 +411,29 @@ fn run_experiment_on<P: InstancePool>(
     }
 
     // Drain: every completion issues the next planned call.
+    let mut des_events = 0u64;
+    let mut des_peak_pending = 0usize;
     let invoke_end = sim.run(|sim, t, done| {
+        if sink.is_some() {
+            // `sim.run` consumes the simulation, so the end-of-run DES
+            // summary must be snapshotted from inside the handler; the
+            // last event's snapshot is the final tally.
+            des_events = sim.events_fired();
+            des_peak_pending = sim.peak_pending();
+        }
         let finished = if done.instance != usize::MAX {
+            if let Some(s) = sink {
+                s.borrow_mut().emit(Span::CallCompleted {
+                    t_start: done.start_at,
+                    dur_s: t - done.start_at,
+                    call: done.call,
+                    bench: done.plan.bench_idx,
+                    instance: platform.instance_id(done.instance),
+                    warmup_s: done.warmup_s,
+                    billed_s: done.billed_s,
+                    failure: done.failure.map(failure_label),
+                });
+            }
             platform.release(done.instance, t, done.billed_s);
             if done.samples.is_empty() {
                 if let Some(kind) = done.failure {
@@ -398,7 +486,13 @@ fn run_experiment_on<P: InstancePool>(
                         // point.
                         let before = plan.len();
                         plan.retain(|p| p.bench_idx != idx);
-                        calls_canceled += before - plan.len();
+                        let canceled = before - plan.len();
+                        calls_canceled += canceled;
+                        if let Some(s) = sink {
+                            let mut s = s.borrow_mut();
+                            s.emit(Span::LiveStop { t, bench: idx, results: fed[idx] });
+                            s.emit(Span::CallsCanceled { t, bench: idx, count: canceled });
+                        }
                     }
                 }
             }
@@ -412,6 +506,13 @@ fn run_experiment_on<P: InstancePool>(
             issue(sim, &mut platform, item, &mut calls_total, &mut call_seq, &mut rng);
         }
     });
+    if let Some(s) = sink {
+        s.borrow_mut().emit(Span::SimSummary {
+            t: invoke_end,
+            events: des_events,
+            peak_pending: des_peak_pending,
+        });
+    }
 
     let failed_benchmarks = measurements
         .iter()

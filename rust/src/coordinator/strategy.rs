@@ -93,6 +93,8 @@ pub struct StrategyCallOutcome {
     pub samples: CallSamples,
     /// Wall time of the whole call [s] (also the billed duration).
     pub wall_s: f64,
+    /// Instance-cache warmup included in `wall_s` [s] (0 when warm).
+    pub warmup_s: f64,
     /// Error that aborted the call, if any.
     pub error: Option<RunError>,
 }
@@ -200,6 +202,7 @@ impl ExecutionStrategy for Duet {
         StrategyCallOutcome {
             samples: CallSamples::Pairs(out.pairs),
             wall_s: out.wall_s,
+            warmup_s: out.warmup_s,
             error: out.error,
         }
     }
@@ -266,6 +269,7 @@ impl ExecutionStrategy for Sequential {
                 samples: out.samples,
             },
             wall_s: out.wall_s,
+            warmup_s: out.warmup_s,
             error: out.error,
         }
     }
@@ -299,6 +303,7 @@ impl ExecutionStrategy for Rmit {
         StrategyCallOutcome {
             samples: CallSamples::Pairs(out.pairs),
             wall_s: out.wall_s,
+            warmup_s: out.warmup_s,
             error: out.error,
         }
     }

@@ -69,6 +69,8 @@ pub struct Sim<E> {
     /// Vacated arena slots available for reuse.
     free: Vec<u32>,
     fired: u64,
+    /// High-water mark of the pending-event count (telemetry).
+    peak_pending: usize,
 }
 
 impl<E> Default for Sim<E> {
@@ -87,6 +89,7 @@ impl<E> Sim<E> {
             arena: Vec::new(),
             free: Vec::new(),
             fired: 0,
+            peak_pending: 0,
         }
     }
 
@@ -103,6 +106,12 @@ impl<E> Sim<E> {
     /// Pending event count.
     pub fn pending(&self) -> usize {
         self.heap.len()
+    }
+
+    /// Peak pending event count over the run so far (telemetry; equals
+    /// the arena high-water mark that bounds [`Self::arena_capacity`]).
+    pub fn peak_pending(&self) -> usize {
+        self.peak_pending
     }
 
     /// Payload-arena capacity (pending + reusable slots): bounded by the
@@ -153,6 +162,7 @@ impl<E> Sim<E> {
             seq: self.seq,
             slot,
         });
+        self.peak_pending = self.peak_pending.max(self.heap.len());
         self.seq += 1;
     }
 

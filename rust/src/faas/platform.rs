@@ -42,6 +42,7 @@
 use super::noise::{EnvState, NoiseParams};
 use crate::config::PlatformConfig;
 use crate::des::Time;
+use crate::telemetry::{SharedSink, Span};
 use crate::util::Rng;
 use std::collections::VecDeque;
 
@@ -130,6 +131,13 @@ pub trait InstancePool {
     /// tests: slot numbering may differ across pool implementations, ids
     /// never do).
     fn instance_id(&self, instance: usize) -> u64;
+    /// Attach a telemetry sink for lifecycle spans (cold start / warm
+    /// reuse / denial / release / reap). Default: ignore — pools without
+    /// span support (the frozen reference oracle) stay silent, which is
+    /// fine because telemetry never alters observable behaviour.
+    fn set_sink(&mut self, sink: SharedSink) {
+        let _ = sink;
+    }
 }
 
 /// The deployed-function platform state.
@@ -156,6 +164,9 @@ pub struct FaasPlatform {
     /// Cold starts seen since deploy (drives the loader-cache model).
     cold_seen: usize,
     stats: PlatformStats,
+    /// Lifecycle-span sink; `None` (the default) skips all emission with
+    /// a single branch per event and zero behavioural impact.
+    sink: Option<SharedSink>,
 }
 
 impl FaasPlatform {
@@ -187,7 +198,16 @@ impl FaasPlatform {
             memory_mb,
             cold_seen: 0,
             stats: PlatformStats::default(),
+            sink: None,
         }
+    }
+
+    /// Attach a telemetry sink: every acquire/release/reap from now on
+    /// emits a lifecycle span. Spans are pure observations — no RNG
+    /// draws, no scheduling state — so attaching a sink can never change
+    /// placements, billing or stats.
+    pub fn set_sink(&mut self, sink: SharedSink) {
+        self.sink = Some(sink);
     }
 
     /// vCPU share of each instance under the current memory config.
@@ -211,7 +231,11 @@ impl FaasPlatform {
                 "instance on the idle deque must be idle"
             );
             inst.busy_until = f64::INFINITY; // held until release()
+            let (id, idle_s) = (inst.id, t - inst.idle_since);
             self.busy += 1;
+            if let Some(sink) = &self.sink {
+                sink.borrow_mut().emit(Span::WarmReuse { t, instance: id, idle_s });
+            }
             return Some(Placement {
                 instance: slot,
                 start_at: t + self.cfg.warm_dispatch_s,
@@ -219,6 +243,9 @@ impl FaasPlatform {
             });
         }
         if self.busy >= self.cfg.concurrency_limit {
+            if let Some(sink) = &self.sink {
+                sink.borrow_mut().emit(Span::AcquireDenied { t });
+            }
             return None;
         }
         // Cold start: new instance into a vacated slot (or a fresh one).
@@ -247,6 +274,13 @@ impl FaasPlatform {
                 self.slots.len() - 1
             }
         };
+        if let Some(sink) = &self.sink {
+            sink.borrow_mut().emit(Span::ColdStart {
+                t,
+                dur_s: cold_latency,
+                instance: self.next_id - 1,
+            });
+        }
         Some(Placement {
             instance: slot,
             start_at: t + cold_latency,
@@ -293,7 +327,8 @@ impl FaasPlatform {
     /// because the DES clock is monotone).
     pub fn release(&mut self, instance: usize, t_end: Time, billed_s: f64) {
         let mem_gb = self.memory_mb as f64 / 1024.0;
-        self.stats.billed_gb_s += self.metered_s(billed_s) * mem_gb;
+        let metered = self.metered_s(billed_s);
+        self.stats.billed_gb_s += metered * mem_gb;
         // Releases arrive in DES-clock order, which is what keeps the
         // idle deque sorted by idle_since without ever sorting it.
         debug_assert!(
@@ -313,8 +348,17 @@ impl FaasPlatform {
         inst.idle_since = t_end;
         inst.invocations += 1;
         inst.cache_warm = true;
+        let id = inst.id;
         self.busy -= 1;
         self.idle.push_back(instance);
+        if let Some(sink) = &self.sink {
+            sink.borrow_mut().emit(Span::Release {
+                t: t_end,
+                instance: id,
+                raw_s: billed_s,
+                metered_s: metered,
+            });
+        }
     }
 
     /// Environment factor of an instance at time `t` (advances its AR(1)
@@ -380,7 +424,8 @@ impl FaasPlatform {
     fn reap(&mut self, t: Time) {
         let keepalive = self.cfg.keepalive_s;
         while let Some(&slot) = self.idle.front() {
-            let idle_since = self.slots[slot].as_ref().expect("idle slot live").idle_since;
+            let inst = self.slots[slot].as_ref().expect("idle slot live");
+            let (id, idle_since) = (inst.id, inst.idle_since);
             if t - idle_since <= keepalive {
                 break;
             }
@@ -388,6 +433,13 @@ impl FaasPlatform {
             self.slots[slot] = None;
             self.free.push(slot);
             self.stats.instances_reaped += 1;
+            if let Some(sink) = &self.sink {
+                sink.borrow_mut().emit(Span::Reap {
+                    t,
+                    instance: id,
+                    idle_s: t - idle_since,
+                });
+            }
         }
     }
 }
@@ -422,6 +474,9 @@ impl InstancePool for FaasPlatform {
     }
     fn instance_id(&self, instance: usize) -> u64 {
         FaasPlatform::instance_id(self, instance)
+    }
+    fn set_sink(&mut self, sink: SharedSink) {
+        FaasPlatform::set_sink(self, sink)
     }
 }
 

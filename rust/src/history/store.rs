@@ -368,6 +368,9 @@ pub struct StoredRun {
     pub analysis: SuiteAnalysis,
     pub adaptive: Option<StoredAdaptive>,
     pub live: Option<StoredLive>,
+    /// `telemetry` section (span-derived run metrics); `None` for reports
+    /// recorded before telemetry existed.
+    pub telemetry: Option<crate::telemetry::RunMetrics>,
 }
 
 impl StoredRun {
@@ -540,6 +543,15 @@ pub fn parse_scenario_report(doc: &Json) -> Result<StoredRun> {
         }
     };
 
+    // Absent in pre-telemetry documents — optional by design.
+    let telemetry = match doc.get("telemetry") {
+        None => None,
+        Some(t) => Some(
+            crate::telemetry::run_metrics_from_json(t)
+                .context("report section \"telemetry\"")?,
+        ),
+    };
+
     Ok(StoredRun {
         schema: schema.to_string(),
         scenario,
@@ -549,6 +561,7 @@ pub fn parse_scenario_report(doc: &Json) -> Result<StoredRun> {
         analysis,
         adaptive,
         live,
+        telemetry,
     })
 }
 
@@ -595,7 +608,7 @@ pub fn stored_run_to_json(run: &StoredRun) -> Json {
             ])
         })
         .collect();
-    obj(vec![
+    let mut entries = vec![
         ("schema", Json::Str(run.schema.clone())),
         (
             "scenario",
@@ -707,7 +720,11 @@ pub fn stored_run_to_json(run: &StoredRun) -> Json {
                 ]),
             },
         ),
-    ])
+    ];
+    if let Some(t) = &run.telemetry {
+        entries.push(("telemetry", crate::telemetry::run_metrics_to_json(t)));
+    }
+    obj(entries)
 }
 
 #[cfg(test)]
@@ -744,12 +761,30 @@ mod tests {
         assert_eq!(meta.analyzed, report.analysis.verdicts.len());
 
         let loaded = store.load("quick-smoke", &meta.run_id).unwrap();
+        let tel = loaded.telemetry.as_ref().expect("telemetry section survives");
+        assert_eq!(Some(tel), report.telemetry.as_ref());
         assert_eq!(
             stored_run_to_json(&loaded).to_string(),
             exported.to_string(),
             "export -> import -> re-export must be byte-identical"
         );
         let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn pre_telemetry_documents_still_parse_and_reexport_identically() {
+        // Simulate a report recorded before the telemetry section existed
+        // by dropping the key from a fresh export.
+        let report = quick_report();
+        let mut doc = scenario_report_to_json(&report);
+        if let Json::Obj(map) = &mut doc {
+            map.remove("telemetry").expect("fresh reports carry telemetry");
+        } else {
+            panic!("report export must be an object");
+        }
+        let parsed = parse_scenario_report(&doc).unwrap();
+        assert!(parsed.telemetry.is_none());
+        assert_eq!(stored_run_to_json(&parsed).to_string(), doc.to_string());
     }
 
     #[test]

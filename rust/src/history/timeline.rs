@@ -253,6 +253,7 @@ pub(crate) fn synthetic_run(commit: &str, benches: &[(&str, f64)]) -> StoredRun 
             },
             adaptive: None,
             live: None,
+            telemetry: None,
         }
     }
 }

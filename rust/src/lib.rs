@@ -36,6 +36,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod stats;
 pub mod sut;
+pub mod telemetry;
 pub mod testkit;
 pub mod util;
 pub mod vm;

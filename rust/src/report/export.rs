@@ -112,7 +112,7 @@ pub fn scenario_report_to_json(r: &ScenarioReport) -> Json {
             ])
         })
         .collect();
-    obj(vec![
+    let mut entries = vec![
         ("schema", Json::Str(SCENARIO_REPORT_SCHEMA.into())),
         (
             "scenario",
@@ -231,7 +231,13 @@ pub fn scenario_report_to_json(r: &ScenarioReport) -> Json {
                 ]),
             },
         ),
-    ])
+    ];
+    // Absent (not null) when the run predates telemetry, so reports stored
+    // before this section existed re-serialize byte-identically.
+    if let Some(t) = &r.telemetry {
+        entries.push(("telemetry", crate::telemetry::run_metrics_to_json(t)));
+    }
+    obj(entries)
 }
 
 /// Write text to a file, creating parent directories.
@@ -323,6 +329,14 @@ mod tests {
         assert_eq!(parsed.get("live"), Some(&crate::util::json::Json::Null));
         assert_eq!(meta.get("engine_mode").unwrap().as_str(), Some("fixed"));
         assert_eq!(meta.get("strategy").unwrap().as_str(), Some("duet"));
+        let tel = parsed.get("telemetry").unwrap();
+        assert!(tel.get("invocations").unwrap().as_f64().unwrap() > 0.0);
+        let phases = tel.get("cost_requests_usd").unwrap().as_f64().unwrap()
+            + tel.get("cost_cold_start_usd").unwrap().as_f64().unwrap()
+            + tel.get("cost_execution_usd").unwrap().as_f64().unwrap();
+        let rounding = tel.get("cost_rounding_usd").unwrap().as_f64().unwrap();
+        let billed = parsed.get("run").unwrap().get("cost_usd").unwrap().as_f64().unwrap();
+        assert_eq!((phases + rounding).to_bits(), billed.to_bits());
     }
 
     #[test]

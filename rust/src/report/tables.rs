@@ -229,18 +229,24 @@ pub struct SweepRow {
     pub wall_s: f64,
     /// Cost [USD].
     pub cost_usd: f64,
+    /// Cold-start rate [% of placements]; `None` when the run carried no
+    /// telemetry (pre-telemetry history replays).
+    pub cold_start_pct: Option<f64>,
+    /// Warm instance-reuse rate [% of placements]; `None` without telemetry.
+    pub reuse_pct: Option<f64>,
 }
 
 /// Render the cross-variant sweep summary: one row per grid point, in
-/// expansion (= catalog) order.
+/// expansion (= catalog) order. The telemetry columns (`cold`, `reuse`)
+/// stay at the end so header-prefix greps keep working.
 pub fn sweep_summary_table(rows: &[SweepRow]) -> String {
     let mut out = String::from(
-        "| variant | profile | mem | mode | seed | strategy | analyzed | changes | duration | cost |\n\
-         |---|---|---:|---|---:|---|---:|---:|---:|---:|\n",
+        "| variant | profile | mem | mode | seed | strategy | analyzed | changes | duration | cost | cold | reuse |\n\
+         |---|---|---:|---|---:|---|---:|---:|---:|---:|---:|---:|\n",
     );
     for r in rows {
         out.push_str(&format!(
-            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | ${:.2} |\n",
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | ${:.2} | {} | {} |\n",
             r.variant,
             r.profile,
             r.memory_mb,
@@ -250,9 +256,52 @@ pub fn sweep_summary_table(rows: &[SweepRow]) -> String {
             r.analyzed,
             r.changes,
             fmt_duration(r.wall_s),
-            r.cost_usd
+            r.cost_usd,
+            fmt_opt_pct(r.cold_start_pct),
+            fmt_opt_pct(r.reuse_pct),
         ));
     }
+    out
+}
+
+fn fmt_opt_pct(v: Option<f64>) -> String {
+    match v {
+        None => "—".into(),
+        Some(p) => format!("{p:.1}%"),
+    }
+}
+
+/// Render one run's [`crate::telemetry::RunMetrics`] as a two-column
+/// markdown table — the body of `elastibench trace summarize` and of the
+/// per-run telemetry section in scenario reports.
+pub fn telemetry_table(m: &crate::telemetry::RunMetrics) -> String {
+    let mut out = String::from("| metric | value |\n|---|---:|\n");
+    let mut push = |k: &str, v: String| {
+        out.push_str(&format!("| {k} | {v} |\n"));
+    };
+    push("invocations", m.invocations.to_string());
+    push(
+        "cold starts",
+        format!("{} ({:.1}%)", m.cold_starts, m.cold_start_rate_pct),
+    );
+    push(
+        "warm reuses",
+        format!("{} ({:.1}%)", m.warm_reuses, m.reuse_rate_pct),
+    );
+    push("acquires denied", m.acquires_denied.to_string());
+    push("instances reaped", m.instances_reaped.to_string());
+    push("fleet peak", m.fleet_peak.to_string());
+    push("queue wait p50", format!("{:.4} s", m.queue_wait_p50_s));
+    push("queue wait p99", format!("{:.4} s", m.queue_wait_p99_s));
+    push("calls canceled", m.calls_canceled.to_string());
+    push("live stop decisions", m.live_stop_decisions.to_string());
+    push("DES events", m.des_events.to_string());
+    push("DES peak pending", m.des_peak_pending.to_string());
+    push("cost: requests", format!("${:.6}", m.cost_requests_usd));
+    push("cost: cold starts", format!("${:.6}", m.cost_cold_start_usd));
+    push("cost: execution", format!("${:.6}", m.cost_execution_usd));
+    push("cost: billing rounding", format!("${:.6}", m.cost_rounding_usd));
+    push("cost: total (phases)", format!("${:.6}", m.phase_total_usd()));
     out
 }
 
@@ -467,23 +516,75 @@ mod tests {
 
     #[test]
     fn sweep_summary_table_renders() {
-        let t = sweep_summary_table(&[SweepRow {
-            variant: "base@mem=1024,seed=11".into(),
-            profile: "aws-lambda".into(),
-            memory_mb: 1024,
-            mode: "ab".into(),
-            seed: 11,
-            strategy: "duet".into(),
-            analyzed: 10,
-            changes: 4,
-            wall_s: 90.0,
-            cost_usd: 0.05,
-        }]);
+        let t = sweep_summary_table(&[
+            SweepRow {
+                variant: "base@mem=1024,seed=11".into(),
+                profile: "aws-lambda".into(),
+                memory_mb: 1024,
+                mode: "ab".into(),
+                seed: 11,
+                strategy: "duet".into(),
+                analyzed: 10,
+                changes: 4,
+                wall_s: 90.0,
+                cost_usd: 0.05,
+                cold_start_pct: Some(12.5),
+                reuse_pct: Some(87.5),
+            },
+            SweepRow {
+                variant: "old@mem=512".into(),
+                profile: "aws-lambda".into(),
+                memory_mb: 512,
+                mode: "ab".into(),
+                seed: 1,
+                strategy: "duet".into(),
+                analyzed: 2,
+                changes: 0,
+                wall_s: 30.0,
+                cost_usd: 0.01,
+                cold_start_pct: None,
+                reuse_pct: None,
+            },
+        ]);
         assert!(t.contains("| variant | profile | mem | mode | seed | strategy |"), "{t}");
         assert!(
-            t.contains("| base@mem=1024,seed=11 | aws-lambda | 1024 | ab | 11 | duet | 10 | 4 | 1.5 min | $0.05 |"),
+            t.contains(
+                "| base@mem=1024,seed=11 | aws-lambda | 1024 | ab | 11 | duet | 10 | 4 | 1.5 min | $0.05 | 12.5% | 87.5% |"
+            ),
             "{t}"
         );
+        // Runs without telemetry render em-dash placeholders.
+        assert!(t.contains("| 30.0 s | $0.01 | — | — |"), "{t}");
+    }
+
+    #[test]
+    fn telemetry_table_renders_counts_and_phase_costs() {
+        let m = crate::telemetry::RunMetrics {
+            invocations: 100,
+            cold_starts: 10,
+            warm_reuses: 90,
+            cold_start_rate_pct: 10.0,
+            reuse_rate_pct: 90.0,
+            acquires_denied: 0,
+            instances_reaped: 10,
+            fleet_peak: 10,
+            queue_wait_p50_s: 0.5,
+            queue_wait_p99_s: 1.25,
+            calls_canceled: 0,
+            live_stop_decisions: 0,
+            des_events: 321,
+            des_peak_pending: 12,
+            cost_requests_usd: 0.00002,
+            cost_cold_start_usd: 0.001,
+            cost_execution_usd: 0.04,
+            cost_rounding_usd: 0.002,
+        };
+        let t = telemetry_table(&m);
+        assert!(t.contains("| cold starts | 10 (10.0%) |"), "{t}");
+        assert!(t.contains("| warm reuses | 90 (90.0%) |"), "{t}");
+        assert!(t.contains("| queue wait p99 | 1.2500 s |"), "{t}");
+        assert!(t.contains("| cost: execution | $0.040000 |"), "{t}");
+        assert!(t.contains("| cost: total (phases) | $0.043020 |"), "{t}");
     }
 
     #[test]

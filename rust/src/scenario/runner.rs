@@ -7,11 +7,10 @@
 //! [`crate::report::scenario_report_to_json`] for the export shape.
 
 use super::recipe::{RepeatPolicy, Scenario};
-use crate::coordinator::{
-    run_experiment_live_with, run_experiment_with, LiveStopConfig, RunReport,
-};
+use crate::coordinator::{run_experiment_observed, LiveStopConfig, RunReport};
 use crate::exp::Workbench;
 use crate::stats::{adaptive_plan, AdaptivePlan, Analyzer, StoppingRule, SuiteAnalysis};
+use crate::telemetry::{RecordingSink, RunMetrics, SharedSink, Span};
 use anyhow::Result;
 
 /// What live adaptive early stopping saved during a scenario run
@@ -48,6 +47,11 @@ pub struct ScenarioReport {
     pub adaptive: Option<AdaptivePlan>,
     /// Live early-stopping outcome (only `repeats = "adaptive"`).
     pub live: Option<LiveStopSummary>,
+    /// Aggregated run telemetry (fleet metrics + per-phase cost
+    /// attribution), derived from the lifecycle span stream every
+    /// scenario run records. `None` only for reports loaded from
+    /// pre-telemetry history documents.
+    pub telemetry: Option<RunMetrics>,
     /// VCS commit the binary was run from (`ELASTIBENCH_COMMIT` env
     /// override, else `git rev-parse --short HEAD`, else `unknown`).
     pub commit: String,
@@ -88,9 +92,9 @@ pub fn commit_id() -> String {
             if let Some(c) = git_short_head() {
                 return c;
             }
-            eprintln!(
-                "elastibench: warning: commit id unavailable (ELASTIBENCH_COMMIT unset and \
-                 `git rev-parse --short HEAD` failed); reports will carry commit \"unknown\""
+            crate::util::diag::warn(
+                "commit id unavailable (ELASTIBENCH_COMMIT unset and \
+                 `git rev-parse --short HEAD` failed); reports will carry commit \"unknown\"",
             );
             "unknown".to_string()
         })
@@ -125,6 +129,9 @@ pub struct PendingScenario {
     pub adaptive: Option<AdaptivePlan>,
     /// Live early-stopping outcome (`repeats = "adaptive"`).
     pub live: Option<LiveStopSummary>,
+    /// Aggregated run telemetry (always recorded; plain data, so it
+    /// crosses sweep worker threads freely).
+    pub telemetry: Option<RunMetrics>,
     /// Engine mode the run executed under.
     pub engine_mode: String,
 }
@@ -155,11 +162,26 @@ fn scenario_rule(sc: &Scenario) -> StoppingRule {
 /// argument supplies the CI geometry and the post-run suite analysis
 /// backend.
 pub fn run_scenario_experiment(sc: &Scenario, analyzer: &Analyzer) -> Result<PendingScenario> {
+    let (pending, _spans) = run_scenario_experiment_traced(sc, analyzer)?;
+    Ok(pending)
+}
+
+/// [`run_scenario_experiment`] that additionally returns the raw
+/// lifecycle span stream (for Chrome-trace export via `--trace-out`).
+/// Every scenario run records spans either way — the aggregated
+/// [`RunMetrics`] ride in the pending scenario's `telemetry` field — so
+/// a traced run is byte-identical to an untraced one by construction.
+pub fn run_scenario_experiment_traced(
+    sc: &Scenario,
+    analyzer: &Analyzer,
+) -> Result<(PendingScenario, Vec<Span>)> {
     // The workbench generates the SUT from the recipe's pinned seed and
     // carries the resolved platform; the analysis backend is the
     // caller's `analyzer`, not the workbench default.
     let wb = Workbench::with_sut_and_platform(sc.sut.clone(), sc.platform.clone());
     let analysis_seed = sc.exp.seed ^ ANALYSIS_SEED_XOR;
+    let rec = RecordingSink::shared();
+    let sink: SharedSink = rec.clone();
     let (run, live) = match sc.repeats {
         RepeatPolicy::Adaptive => {
             let cfg = LiveStopConfig {
@@ -169,15 +191,17 @@ pub fn run_scenario_experiment(sc: &Scenario, analyzer: &Analyzer) -> Result<Pen
                 rule: scenario_rule(sc),
                 seed: analysis_seed,
             };
-            let (run, live) = run_experiment_live_with(
+            let (run, live) = run_experiment_observed(
                 &wb.suite,
                 &wb.sut,
                 &wb.platform,
                 &sc.exp,
                 sc.versions(),
                 sc.strategy.strategy(),
-                &cfg,
+                Some(&cfg),
+                &sink,
             );
+            let live = live.expect("live config was passed");
             let planned = sc.planned_calls().max(1);
             let calls = run.calls_total.max(1) as f64;
             let summary = LiveStopSummary {
@@ -191,14 +215,17 @@ pub fn run_scenario_experiment(sc: &Scenario, analyzer: &Analyzer) -> Result<Pen
             (run, Some(summary))
         }
         RepeatPolicy::Fixed | RepeatPolicy::AdaptiveReplay => (
-            run_experiment_with(
+            run_experiment_observed(
                 &wb.suite,
                 &wb.sut,
                 &wb.platform,
                 &sc.exp,
                 sc.versions(),
                 sc.strategy.strategy(),
-            ),
+                None,
+                &sink,
+            )
+            .0,
             None,
         ),
     };
@@ -214,18 +241,30 @@ pub fn run_scenario_experiment(sc: &Scenario, analyzer: &Analyzer) -> Result<Pen
             analysis_seed,
         )?),
     };
-    Ok(PendingScenario {
-        scenario: sc.clone(),
-        run,
-        adaptive,
-        live,
-        engine_mode: match sc.repeats {
-            RepeatPolicy::Fixed => "fixed",
-            RepeatPolicy::Adaptive => "adaptive-live",
-            RepeatPolicy::AdaptiveReplay => "adaptive-replay",
-        }
-        .to_string(),
-    })
+    let spans = std::mem::take(&mut rec.borrow_mut().spans);
+    let metrics = RunMetrics::from_spans(
+        &spans,
+        run.cost_usd,
+        sc.exp.memory_mb as f64 / 1024.0,
+        sc.platform.usd_per_gb_s,
+        sc.platform.usd_per_request,
+    );
+    Ok((
+        PendingScenario {
+            scenario: sc.clone(),
+            run,
+            adaptive,
+            live,
+            telemetry: Some(metrics),
+            engine_mode: match sc.repeats {
+                RepeatPolicy::Fixed => "fixed",
+                RepeatPolicy::Adaptive => "adaptive-live",
+                RepeatPolicy::AdaptiveReplay => "adaptive-replay",
+            }
+            .to_string(),
+        },
+        spans,
+    ))
 }
 
 /// Attach a suite analysis (computed by the caller, possibly batched
@@ -241,6 +280,7 @@ pub fn finish_scenario(
         analysis,
         adaptive: pending.adaptive,
         live: pending.live,
+        telemetry: pending.telemetry,
         commit: commit_id(),
         version: crate::version().to_string(),
         engine: if analyzer.is_xla() { "xla" } else { "native" }.to_string(),
@@ -257,6 +297,23 @@ pub fn run_scenario(sc: &Scenario, analyzer: &Analyzer) -> Result<ScenarioReport
         pending.analysis_seed(),
     )?;
     Ok(finish_scenario(pending, analysis, analyzer))
+}
+
+/// [`run_scenario`] that additionally returns the run's raw lifecycle
+/// span stream — the `scenario run --trace-out <path>` entry point. The
+/// returned report is byte-identical to [`run_scenario`]'s (spans are
+/// recorded on every run; this variant merely keeps them).
+pub fn run_scenario_traced(
+    sc: &Scenario,
+    analyzer: &Analyzer,
+) -> Result<(ScenarioReport, Vec<Span>)> {
+    let (pending, spans) = run_scenario_experiment_traced(sc, analyzer)?;
+    let analysis = analyzer.analyze(
+        &pending.scenario.exp.label,
+        &pending.run.measurements,
+        pending.analysis_seed(),
+    )?;
+    Ok((finish_scenario(pending, analysis, analyzer), spans))
 }
 
 #[cfg(test)]

@@ -1,0 +1,844 @@
+//! Deterministic run telemetry: invocation-lifecycle spans, per-phase
+//! cost attribution, and fleet metrics.
+//!
+//! The platform ([`crate::faas`]), the coordinator
+//! ([`crate::coordinator`]) and the DES emit [`Span`] events into a
+//! [`TraceSink`] as the simulation executes. Every span is timestamped in
+//! **simulated seconds**, never wall clock, so a run's span stream is a
+//! pure function of (recipe, seed) — identical across hosts, `--jobs`
+//! worker counts and repeat runs, and byte-diffable like the reports.
+//!
+//! Two sinks ship:
+//!
+//! * [`NullSink`] — discards everything. The emission sites never touch
+//!   RNG streams or scheduling state, so an unobserved run is *provably*
+//!   result-identical to a pre-telemetry run (differentially asserted in
+//!   `rust/tests/telemetry.rs`); the only cost is a `RefCell` borrow and
+//!   a no-op dyn call per event (measured by `benches/perf_simulator.rs`).
+//! * [`RecordingSink`] — appends spans to a vector for aggregation into
+//!   [`RunMetrics`] ([`RunMetrics::from_spans`]) and for Chrome
+//!   trace-event export ([`chrome_trace_json`], loadable in Perfetto /
+//!   `chrome://tracing`).
+//!
+//! ## Per-phase cost attribution
+//!
+//! [`RunMetrics`] splits the run's billed total into four phases that sum
+//! back **bit-exactly** (the Pareto-optimizer prerequisite, see
+//! ROADMAP.md):
+//!
+//! * `cost_requests_usd` — per-request fees for every routed invocation
+//!   (including concurrency-denied attempts, matching the platform's
+//!   request metering);
+//! * `cost_cold_start_usd` — the billed instance-cache warmup seconds of
+//!   cold calls (cold-start *init* latency is not billed on managed
+//!   runtimes and therefore costs nothing);
+//! * `cost_execution_usd` — the remaining billed execution seconds;
+//! * `cost_rounding_usd` — what billing-floor clamping and granularity
+//!   round-up added on top, computed as the residual
+//!   `cost_usd - (requests + cold + execution)` so that
+//!   [`RunMetrics::phase_total_usd`] reproduces the report's `cost_usd`
+//!   to the last bit (no accumulated float dust can leak).
+//!
+//! See `docs/observability.md` for the span schema and the Perfetto
+//! how-to.
+
+use crate::util::json::{obj, Json};
+use crate::util::stats::total_cmp_f64;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Schema identifier stamped into every trace file (`--trace-out`).
+pub const TRACE_SCHEMA: &str = "elastibench.trace.v1";
+
+/// One lifecycle event, timestamped in simulated seconds.
+///
+/// Instance references are the platform's *stable creation ids* (not
+/// slot indices), so streams are comparable across pool implementations
+/// and survive slot reuse.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Span {
+    /// A new instance cold-started: init takes `dur_s` before the handler
+    /// runs (unbilled on managed runtimes).
+    ColdStart {
+        /// Arrival time of the triggering invocation [simulated s].
+        t: f64,
+        /// Cold-start init latency [s].
+        dur_s: f64,
+        /// Stable instance id.
+        instance: u64,
+    },
+    /// An idle warm instance was reused for an invocation.
+    WarmReuse {
+        /// Arrival time [simulated s].
+        t: f64,
+        /// Stable instance id.
+        instance: u64,
+        /// How long the instance had been idle [s].
+        idle_s: f64,
+    },
+    /// An acquire was denied by the account concurrency limit (the
+    /// coordinator backs off and retries).
+    AcquireDenied {
+        /// Arrival time [simulated s].
+        t: f64,
+    },
+    /// An invocation finished on an instance and was billed.
+    Release {
+        /// Completion time [simulated s].
+        t: f64,
+        /// Stable instance id.
+        instance: u64,
+        /// Raw billed duration [s].
+        raw_s: f64,
+        /// Metered duration [s] (billing floor + granularity round-up).
+        metered_s: f64,
+    },
+    /// An instance idle past the keepalive window was reaped.
+    Reap {
+        /// Reap time [simulated s].
+        t: f64,
+        /// Stable instance id.
+        instance: u64,
+        /// Idle time at reap [s].
+        idle_s: f64,
+    },
+    /// The coordinator issued a call to an acquired instance.
+    CallIssued {
+        /// Issue time [simulated s].
+        t: f64,
+        /// Coordinator call sequence number (1-based).
+        call: u64,
+        /// Suite index of the benchmark.
+        bench: usize,
+        /// Stable instance id the call landed on.
+        instance: u64,
+        /// Whether the placement cold-started.
+        cold: bool,
+        /// Delay until the handler starts [s]: warm dispatch or
+        /// cold-start init.
+        queue_wait_s: f64,
+    },
+    /// A call completed (successfully or not) and its instance was
+    /// released.
+    CallCompleted {
+        /// Handler start time [simulated s].
+        t_start: f64,
+        /// Handler start → completion (billed + client overhead) [s].
+        dur_s: f64,
+        /// Coordinator call sequence number.
+        call: u64,
+        /// Suite index of the benchmark.
+        bench: usize,
+        /// Stable instance id.
+        instance: u64,
+        /// Instance-cache warmup the call paid [s] (0 when warm).
+        warmup_s: f64,
+        /// Raw billed duration [s].
+        billed_s: f64,
+        /// Failure label, if the call failed.
+        failure: Option<&'static str>,
+    },
+    /// Live early stopping decided a benchmark mid-run.
+    LiveStop {
+        /// Decision time [simulated s].
+        t: f64,
+        /// Suite index of the decided benchmark.
+        bench: usize,
+        /// Completed results when the CI target was met.
+        results: usize,
+    },
+    /// Scheduled calls of a decided benchmark were canceled.
+    CallsCanceled {
+        /// Cancellation time [simulated s].
+        t: f64,
+        /// Suite index of the decided benchmark.
+        bench: usize,
+        /// Calls removed from the plan.
+        count: usize,
+    },
+    /// End-of-run DES engine summary.
+    SimSummary {
+        /// Final virtual time [simulated s].
+        t: f64,
+        /// Events fired over the whole run.
+        events: u64,
+        /// Peak pending event count (arena high-water mark).
+        peak_pending: usize,
+    },
+}
+
+/// Where lifecycle spans go. Implementations must not feed anything back
+/// into the simulation (no RNG draws, no scheduling) — the zero-impact
+/// contract the differential tests pin.
+pub trait TraceSink {
+    /// Record one span.
+    fn emit(&mut self, span: Span);
+    /// `true` for the discarding default sink (lets holders skip work
+    /// that only exists to feed spans).
+    fn is_null(&self) -> bool {
+        false
+    }
+}
+
+/// Shared sink handle: the platform, coordinator and DES summary all
+/// emit into one sink per run. Runs are single-threaded (sweep workers
+/// each own their run), so `Rc<RefCell<_>>` suffices — only plain-data
+/// spans and [`RunMetrics`] ever cross threads.
+pub type SharedSink = Rc<RefCell<dyn TraceSink>>;
+
+/// The default sink: discards every span.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn emit(&mut self, _span: Span) {}
+    fn is_null(&self) -> bool {
+        true
+    }
+}
+
+/// Records every span in order for aggregation and trace export.
+#[derive(Debug, Default)]
+pub struct RecordingSink {
+    /// The spans, in emission (= simulated-time, FIFO tie-broken) order.
+    pub spans: Vec<Span>,
+}
+
+impl RecordingSink {
+    /// Fresh recording sink behind a [`SharedSink`]-compatible handle.
+    pub fn shared() -> Rc<RefCell<RecordingSink>> {
+        Rc::new(RefCell::new(RecordingSink::default()))
+    }
+}
+
+impl TraceSink for RecordingSink {
+    fn emit(&mut self, span: Span) {
+        self.spans.push(span);
+    }
+}
+
+/// Aggregated run telemetry: fleet behaviour plus the per-phase billed
+/// cost attribution. Exported as the report's `telemetry` section and
+/// embedded in trace files.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunMetrics {
+    /// Invocations routed (cold + warm + concurrency-denied), matching
+    /// the platform's request metering.
+    pub invocations: u64,
+    /// Cold starts.
+    pub cold_starts: u64,
+    /// Warm instance reuses.
+    pub warm_reuses: u64,
+    /// Cold-start share of successful placements [%].
+    pub cold_start_rate_pct: f64,
+    /// Warm-reuse share of successful placements [%]
+    /// (`100 - cold_start_rate_pct` whenever any call placed).
+    pub reuse_rate_pct: f64,
+    /// Acquires denied by the concurrency limit.
+    pub acquires_denied: u64,
+    /// Instances reaped after keepalive expiry.
+    pub instances_reaped: u64,
+    /// Fleet-size high-water mark (live instances).
+    pub fleet_peak: u64,
+    /// Median wait from call arrival to handler start [s].
+    pub queue_wait_p50_s: f64,
+    /// 99th-percentile wait from call arrival to handler start [s].
+    pub queue_wait_p99_s: f64,
+    /// Scheduled calls canceled by live early stopping.
+    pub calls_canceled: u64,
+    /// Benchmarks the live engine decided mid-run.
+    pub live_stop_decisions: u64,
+    /// DES events fired over the run.
+    pub des_events: u64,
+    /// DES peak pending event count.
+    pub des_peak_pending: u64,
+    /// Per-request fees [USD].
+    pub cost_requests_usd: f64,
+    /// Billed instance-cache warmup attributable to cold calls [USD].
+    pub cost_cold_start_usd: f64,
+    /// Billed execution [USD].
+    pub cost_execution_usd: f64,
+    /// Billing-floor + granularity round-up residual [USD]; see the
+    /// module docs for why this is a residual.
+    pub cost_rounding_usd: f64,
+}
+
+impl RunMetrics {
+    /// Aggregate a run's span stream into metrics.
+    ///
+    /// `cost_usd` is the platform's billed total; `mem_gb`,
+    /// `usd_per_gb_s` and `usd_per_request` are the run's billing
+    /// parameters. The four cost phases sum back to `cost_usd`
+    /// bit-exactly ([`Self::phase_total_usd`]).
+    pub fn from_spans(
+        spans: &[Span],
+        cost_usd: f64,
+        mem_gb: f64,
+        usd_per_gb_s: f64,
+        usd_per_request: f64,
+    ) -> RunMetrics {
+        let mut cold_starts = 0u64;
+        let mut warm_reuses = 0u64;
+        let mut acquires_denied = 0u64;
+        let mut instances_reaped = 0u64;
+        let mut fleet = 0u64;
+        let mut fleet_peak = 0u64;
+        let mut queue_waits: Vec<f64> = Vec::new();
+        let mut calls_canceled = 0u64;
+        let mut live_stop_decisions = 0u64;
+        let mut des_events = 0u64;
+        let mut des_peak_pending = 0u64;
+        let mut cold_billed_s = 0.0f64;
+        let mut exec_billed_s = 0.0f64;
+        for span in spans {
+            match *span {
+                Span::ColdStart { .. } => {
+                    cold_starts += 1;
+                    fleet += 1;
+                    fleet_peak = fleet_peak.max(fleet);
+                }
+                Span::WarmReuse { .. } => warm_reuses += 1,
+                Span::AcquireDenied { .. } => acquires_denied += 1,
+                Span::Release { .. } => {}
+                Span::Reap { .. } => {
+                    instances_reaped += 1;
+                    fleet = fleet.saturating_sub(1);
+                }
+                Span::CallIssued { queue_wait_s, .. } => queue_waits.push(queue_wait_s),
+                Span::CallCompleted {
+                    warmup_s, billed_s, ..
+                } => {
+                    // Warmup is the cold-attributable billed time; clamp
+                    // to the billed duration (crash partial billing and
+                    // function-timeout clamps can undercut it).
+                    let cold = warmup_s.min(billed_s);
+                    cold_billed_s += cold;
+                    exec_billed_s += billed_s - cold;
+                }
+                Span::LiveStop { .. } => live_stop_decisions += 1,
+                Span::CallsCanceled { count, .. } => calls_canceled += count as u64,
+                Span::SimSummary {
+                    events,
+                    peak_pending,
+                    ..
+                } => {
+                    des_events = events;
+                    des_peak_pending = peak_pending as u64;
+                }
+            }
+        }
+        queue_waits.sort_by(|a, b| total_cmp_f64(*a, *b));
+        let placed = cold_starts + warm_reuses;
+        let invocations = placed + acquires_denied;
+        let cost_requests_usd = invocations as f64 * usd_per_request;
+        let cost_cold_start_usd = cold_billed_s * mem_gb * usd_per_gb_s;
+        let cost_execution_usd = exec_billed_s * mem_gb * usd_per_gb_s;
+        // Residual, not a sum of per-call round-ups: the rounding phase
+        // is *defined* as whatever makes phase_total_usd() reproduce
+        // cost_usd bit-exactly (same association order there as here).
+        // A plain `cost - partial` residual can still miss by 1 ulp when
+        // metering inflation puts cost far from partial (Sterbenz no
+        // longer applies), so correct iteratively: each pass shrinks the
+        // error below an ulp and the loop settles in <= 2 passes for the
+        // positive, same-scale values billing produces.
+        let partial = cost_requests_usd + cost_cold_start_usd + cost_execution_usd;
+        let mut cost_rounding_usd = cost_usd - partial;
+        for _ in 0..4 {
+            let total = partial + cost_rounding_usd;
+            if total == cost_usd {
+                break;
+            }
+            cost_rounding_usd += cost_usd - total;
+        }
+        RunMetrics {
+            invocations,
+            cold_starts,
+            warm_reuses,
+            cold_start_rate_pct: pct(cold_starts, placed),
+            reuse_rate_pct: pct(warm_reuses, placed),
+            acquires_denied,
+            instances_reaped,
+            fleet_peak,
+            queue_wait_p50_s: percentile(&queue_waits, 50.0),
+            queue_wait_p99_s: percentile(&queue_waits, 99.0),
+            calls_canceled,
+            live_stop_decisions,
+            des_events,
+            des_peak_pending,
+            cost_requests_usd,
+            cost_cold_start_usd,
+            cost_execution_usd,
+            cost_rounding_usd,
+        }
+    }
+
+    /// Sum of the four cost phases — bit-identical to the `cost_usd` the
+    /// metrics were built from (the rounding phase is the exact
+    /// residual).
+    pub fn phase_total_usd(&self) -> f64 {
+        (self.cost_requests_usd + self.cost_cold_start_usd + self.cost_execution_usd)
+            + self.cost_rounding_usd
+    }
+}
+
+fn pct(part: u64, whole: u64) -> f64 {
+    if whole == 0 {
+        0.0
+    } else {
+        part as f64 / whole as f64 * 100.0
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (0.0 on empty).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// JSON shape of a [`RunMetrics`] block (the report's `telemetry`
+/// section and the trace file's embedded `metrics`).
+pub fn run_metrics_to_json(m: &RunMetrics) -> Json {
+    obj(vec![
+        ("invocations", Json::Num(m.invocations as f64)),
+        ("cold_starts", Json::Num(m.cold_starts as f64)),
+        ("warm_reuses", Json::Num(m.warm_reuses as f64)),
+        ("cold_start_rate_pct", Json::Num(m.cold_start_rate_pct)),
+        ("reuse_rate_pct", Json::Num(m.reuse_rate_pct)),
+        ("acquires_denied", Json::Num(m.acquires_denied as f64)),
+        ("instances_reaped", Json::Num(m.instances_reaped as f64)),
+        ("fleet_peak", Json::Num(m.fleet_peak as f64)),
+        ("queue_wait_p50_s", Json::Num(m.queue_wait_p50_s)),
+        ("queue_wait_p99_s", Json::Num(m.queue_wait_p99_s)),
+        ("calls_canceled", Json::Num(m.calls_canceled as f64)),
+        ("live_stop_decisions", Json::Num(m.live_stop_decisions as f64)),
+        ("des_events", Json::Num(m.des_events as f64)),
+        ("des_peak_pending", Json::Num(m.des_peak_pending as f64)),
+        ("cost_requests_usd", Json::Num(m.cost_requests_usd)),
+        ("cost_cold_start_usd", Json::Num(m.cost_cold_start_usd)),
+        ("cost_execution_usd", Json::Num(m.cost_execution_usd)),
+        ("cost_rounding_usd", Json::Num(m.cost_rounding_usd)),
+    ])
+}
+
+/// Parse a `telemetry` section back into [`RunMetrics`] (the history
+/// store's lossless round trip; floats survive via shortest-roundtrip
+/// serialization, so re-export is byte-identical).
+pub fn run_metrics_from_json(j: &Json) -> Result<RunMetrics> {
+    let num = |key: &str| -> Result<f64> {
+        j.get(key)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("telemetry section: missing/non-numeric {key:?}"))
+    };
+    Ok(RunMetrics {
+        invocations: num("invocations")? as u64,
+        cold_starts: num("cold_starts")? as u64,
+        warm_reuses: num("warm_reuses")? as u64,
+        cold_start_rate_pct: num("cold_start_rate_pct")?,
+        reuse_rate_pct: num("reuse_rate_pct")?,
+        acquires_denied: num("acquires_denied")? as u64,
+        instances_reaped: num("instances_reaped")? as u64,
+        fleet_peak: num("fleet_peak")? as u64,
+        queue_wait_p50_s: num("queue_wait_p50_s")?,
+        queue_wait_p99_s: num("queue_wait_p99_s")?,
+        calls_canceled: num("calls_canceled")? as u64,
+        live_stop_decisions: num("live_stop_decisions")? as u64,
+        des_events: num("des_events")? as u64,
+        des_peak_pending: num("des_peak_pending")? as u64,
+        cost_requests_usd: num("cost_requests_usd")?,
+        cost_cold_start_usd: num("cost_cold_start_usd")?,
+        cost_execution_usd: num("cost_execution_usd")?,
+        cost_rounding_usd: num("cost_rounding_usd")?,
+    })
+}
+
+/// Simulated seconds → Chrome trace microseconds.
+fn us(t: f64) -> Json {
+    Json::Num(t * 1e6)
+}
+
+/// Instance tracks are offset by one: tid 0 is the coordinator track.
+fn instance_tid(instance: u64) -> Json {
+    Json::Num((instance + 1) as f64)
+}
+
+fn complete_event(name: &str, ts: f64, dur_s: f64, tid: Json, args: Json) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.into())),
+        ("cat", Json::Str("elastibench".into())),
+        ("ph", Json::Str("X".into())),
+        ("ts", us(ts)),
+        ("dur", us(dur_s)),
+        ("pid", Json::Num(1.0)),
+        ("tid", tid),
+        ("args", args),
+    ])
+}
+
+fn instant_event(name: &str, ts: f64, tid: Json, args: Json) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.into())),
+        ("cat", Json::Str("elastibench".into())),
+        ("ph", Json::Str("i".into())),
+        ("s", Json::Str("t".into())),
+        ("ts", us(ts)),
+        ("pid", Json::Num(1.0)),
+        ("tid", tid),
+        ("args", args),
+    ])
+}
+
+/// Render a span stream as a Chrome trace-event document (Perfetto /
+/// `chrome://tracing` loadable). Timestamps are simulated-time
+/// microseconds; tid 0 is the coordinator, tid N is instance N-1.
+/// The run's [`RunMetrics`] ride along under the `elastibench` key so
+/// `trace summarize` needs only the trace file.
+pub fn chrome_trace_json(scenario: &str, spans: &[Span], metrics: &RunMetrics) -> Json {
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|span| match *span {
+            Span::ColdStart { t, dur_s, instance } => complete_event(
+                "cold-start",
+                t,
+                dur_s,
+                instance_tid(instance),
+                obj(vec![("instance", Json::Num(instance as f64))]),
+            ),
+            Span::WarmReuse { t, instance, idle_s } => instant_event(
+                "warm-reuse",
+                t,
+                instance_tid(instance),
+                obj(vec![("idle_s", Json::Num(idle_s))]),
+            ),
+            Span::AcquireDenied { t } => {
+                instant_event("acquire-denied", t, Json::Num(0.0), obj(vec![]))
+            }
+            Span::Release {
+                t,
+                instance,
+                raw_s,
+                metered_s,
+            } => instant_event(
+                "release",
+                t,
+                instance_tid(instance),
+                obj(vec![
+                    ("raw_s", Json::Num(raw_s)),
+                    ("metered_s", Json::Num(metered_s)),
+                ]),
+            ),
+            Span::Reap { t, instance, idle_s } => instant_event(
+                "reap",
+                t,
+                instance_tid(instance),
+                obj(vec![("idle_s", Json::Num(idle_s))]),
+            ),
+            Span::CallIssued {
+                t,
+                call,
+                bench,
+                instance,
+                cold,
+                queue_wait_s,
+            } => instant_event(
+                "call-issued",
+                t,
+                Json::Num(0.0),
+                obj(vec![
+                    ("call", Json::Num(call as f64)),
+                    ("bench", Json::Num(bench as f64)),
+                    ("instance", Json::Num(instance as f64)),
+                    ("cold", Json::Bool(cold)),
+                    ("queue_wait_s", Json::Num(queue_wait_s)),
+                ]),
+            ),
+            Span::CallCompleted {
+                t_start,
+                dur_s,
+                call,
+                bench,
+                instance,
+                warmup_s,
+                billed_s,
+                failure,
+            } => complete_event(
+                &format!("call b{bench}"),
+                t_start,
+                dur_s,
+                instance_tid(instance),
+                obj(vec![
+                    ("call", Json::Num(call as f64)),
+                    ("bench", Json::Num(bench as f64)),
+                    ("warmup_s", Json::Num(warmup_s)),
+                    ("billed_s", Json::Num(billed_s)),
+                    (
+                        "failure",
+                        match failure {
+                            None => Json::Null,
+                            Some(f) => Json::Str(f.into()),
+                        },
+                    ),
+                ]),
+            ),
+            Span::LiveStop { t, bench, results } => instant_event(
+                "live-stop",
+                t,
+                Json::Num(0.0),
+                obj(vec![
+                    ("bench", Json::Num(bench as f64)),
+                    ("results", Json::Num(results as f64)),
+                ]),
+            ),
+            Span::CallsCanceled { t, bench, count } => instant_event(
+                "calls-canceled",
+                t,
+                Json::Num(0.0),
+                obj(vec![
+                    ("bench", Json::Num(bench as f64)),
+                    ("count", Json::Num(count as f64)),
+                ]),
+            ),
+            Span::SimSummary {
+                t,
+                events,
+                peak_pending,
+            } => instant_event(
+                "sim-summary",
+                t,
+                Json::Num(0.0),
+                obj(vec![
+                    ("events", Json::Num(events as f64)),
+                    ("peak_pending", Json::Num(peak_pending as f64)),
+                ]),
+            ),
+        })
+        .collect();
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        (
+            "elastibench",
+            obj(vec![
+                ("schema", Json::Str(TRACE_SCHEMA.into())),
+                ("scenario", Json::Str(scenario.into())),
+                ("metrics", run_metrics_to_json(metrics)),
+            ]),
+        ),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_spans() -> Vec<Span> {
+        vec![
+            Span::ColdStart { t: 0.0, dur_s: 2.0, instance: 0 },
+            Span::CallIssued {
+                t: 0.0,
+                call: 1,
+                bench: 0,
+                instance: 0,
+                cold: true,
+                queue_wait_s: 2.0,
+            },
+            Span::ColdStart { t: 0.1, dur_s: 2.1, instance: 1 },
+            Span::CallIssued {
+                t: 0.1,
+                call: 2,
+                bench: 1,
+                instance: 1,
+                cold: true,
+                queue_wait_s: 2.1,
+            },
+            Span::AcquireDenied { t: 0.2 },
+            Span::CallCompleted {
+                t_start: 2.0,
+                dur_s: 5.12,
+                call: 1,
+                bench: 0,
+                instance: 0,
+                warmup_s: 0.25,
+                billed_s: 5.0,
+                failure: None,
+            },
+            Span::Release { t: 7.12, instance: 0, raw_s: 5.0, metered_s: 5.0 },
+            Span::WarmReuse { t: 8.0, instance: 0, idle_s: 0.88 },
+            Span::CallIssued {
+                t: 8.0,
+                call: 3,
+                bench: 0,
+                instance: 0,
+                cold: false,
+                queue_wait_s: 0.02,
+            },
+            Span::CallCompleted {
+                t_start: 2.2,
+                dur_s: 4.12,
+                call: 2,
+                bench: 1,
+                instance: 1,
+                warmup_s: 0.2,
+                billed_s: 4.0,
+                failure: Some("crash"),
+            },
+            Span::Release { t: 6.32, instance: 1, raw_s: 4.0, metered_s: 4.0 },
+            Span::CallCompleted {
+                t_start: 8.02,
+                dur_s: 3.12,
+                call: 3,
+                bench: 0,
+                instance: 0,
+                warmup_s: 0.0,
+                billed_s: 3.0,
+                failure: None,
+            },
+            Span::Release { t: 11.14, instance: 0, raw_s: 3.0, metered_s: 3.0 },
+            Span::LiveStop { t: 11.14, bench: 0, results: 10 },
+            Span::CallsCanceled { t: 11.14, bench: 0, count: 4 },
+            Span::Reap { t: 700.0, instance: 1, idle_s: 693.68 },
+            Span::Reap { t: 700.0, instance: 0, idle_s: 688.86 },
+            Span::SimSummary { t: 700.0, events: 6, peak_pending: 3 },
+        ]
+    }
+
+    #[test]
+    fn null_sink_discards_and_recording_sink_records() {
+        let mut null = NullSink;
+        assert!(null.is_null());
+        null.emit(Span::AcquireDenied { t: 1.0 });
+        let mut rec = RecordingSink::default();
+        assert!(!rec.is_null());
+        for s in sample_spans() {
+            rec.emit(s);
+        }
+        assert_eq!(rec.spans.len(), sample_spans().len());
+        assert_eq!(rec.spans, sample_spans());
+    }
+
+    #[test]
+    fn metrics_aggregate_counts_and_rates() {
+        let spans = sample_spans();
+        let m = RunMetrics::from_spans(&spans, 1.0, 2.0, 0.0000166667, 0.0000002);
+        assert_eq!(m.cold_starts, 2);
+        assert_eq!(m.warm_reuses, 1);
+        assert_eq!(m.acquires_denied, 1);
+        assert_eq!(m.invocations, 4);
+        assert_eq!(m.instances_reaped, 2);
+        assert_eq!(m.fleet_peak, 2);
+        assert!((m.cold_start_rate_pct - 200.0 / 3.0).abs() < 1e-12);
+        assert!((m.reuse_rate_pct - 100.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.calls_canceled, 4);
+        assert_eq!(m.live_stop_decisions, 1);
+        assert_eq!(m.des_events, 6);
+        assert_eq!(m.des_peak_pending, 3);
+        // Sorted waits: [0.02, 2.0, 2.1] — p50 is the 2nd, p99 the 3rd.
+        assert_eq!(m.queue_wait_p50_s, 2.0);
+        assert_eq!(m.queue_wait_p99_s, 2.1);
+    }
+
+    #[test]
+    fn phase_costs_sum_bit_exactly_to_the_billed_total() {
+        let spans = sample_spans();
+        // Deliberately awkward floats to provoke rounding dust.
+        for cost_usd in [0.123456789, 7.7e-3, 1234.5678] {
+            let m = RunMetrics::from_spans(&spans, cost_usd, 1.9990234375, 1.666667e-5, 2e-7);
+            assert_eq!(m.phase_total_usd(), cost_usd);
+            assert_eq!(m.phase_total_usd().to_bits(), cost_usd.to_bits());
+        }
+    }
+
+    #[test]
+    fn warmup_is_clamped_to_billed_time() {
+        // A crash can bill less than the warmup the call nominally paid.
+        let spans = vec![Span::CallCompleted {
+            t_start: 0.0,
+            dur_s: 0.22,
+            call: 1,
+            bench: 0,
+            instance: 0,
+            warmup_s: 0.5,
+            billed_s: 0.1,
+            failure: Some("crash"),
+        }];
+        let m = RunMetrics::from_spans(&spans, 1.0, 1.0, 1.0, 0.0);
+        assert_eq!(m.cost_cold_start_usd, 0.1);
+        assert_eq!(m.cost_execution_usd, 0.0);
+    }
+
+    #[test]
+    fn metrics_json_round_trips_bit_exactly() {
+        let spans = sample_spans();
+        let m = RunMetrics::from_spans(&spans, 0.123456789, 2.0, 1.666667e-5, 2e-7);
+        let j = run_metrics_to_json(&m);
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        let back = run_metrics_from_json(&parsed).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.phase_total_usd().to_bits(), m.phase_total_usd().to_bits());
+        // Re-serialization is byte-identical (the history-store contract).
+        assert_eq!(run_metrics_to_json(&back).to_string(), j.to_string());
+    }
+
+    #[test]
+    fn from_json_names_missing_fields() {
+        let err = run_metrics_from_json(&obj(vec![("invocations", Json::Num(1.0))]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cold_starts"), "{err}");
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_events_and_metrics() {
+        let spans = sample_spans();
+        let m = RunMetrics::from_spans(&spans, 1.0, 2.0, 1.666667e-5, 2e-7);
+        let doc = chrome_trace_json("quick-smoke", &spans, &m);
+        let parsed = crate::util::json::parse(&doc.to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), spans.len());
+        for e in events {
+            assert!(e.get("name").unwrap().as_str().is_some());
+            assert!(e.get("ts").unwrap().as_f64().is_some());
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            assert!(ph == "X" || ph == "i", "{ph}");
+            if ph == "X" {
+                assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            }
+        }
+        // Cold start at t=0.1 lands at 100000 us on instance track 2.
+        let cold = events
+            .iter()
+            .find(|e| {
+                e.get("name").unwrap().as_str() == Some("cold-start")
+                    && e.get("ts").unwrap().as_f64() == Some(100000.0)
+            })
+            .unwrap();
+        assert_eq!(cold.get("tid").unwrap().as_f64(), Some(2.0));
+        let embedded = parsed.get("elastibench").unwrap();
+        assert_eq!(embedded.get("schema").unwrap().as_str(), Some(TRACE_SCHEMA));
+        assert_eq!(embedded.get("scenario").unwrap().as_str(), Some("quick-smoke"));
+        let back = run_metrics_from_json(embedded.get("metrics").unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[5.0], 50.0), 5.0);
+        assert_eq!(percentile(&[5.0], 99.0), 5.0);
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 99.0), 99.0);
+    }
+
+    #[test]
+    fn empty_span_stream_yields_zeroed_metrics() {
+        let m = RunMetrics::from_spans(&[], 0.0, 2.0, 1.0, 1.0);
+        assert_eq!(m.invocations, 0);
+        assert_eq!(m.cold_start_rate_pct, 0.0);
+        assert_eq!(m.reuse_rate_pct, 0.0);
+        assert_eq!(m.phase_total_usd(), 0.0);
+    }
+}

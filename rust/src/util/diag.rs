@@ -1,0 +1,64 @@
+//! Diagnostics channel: stderr warnings that honor `--quiet` /
+//! `ELASTIBENCH_QUIET`.
+//!
+//! Machine-parsed pipelines (CI greps, `--jobs N` byte-diffs, report
+//! tooling) read the binary's streams; ad-hoc `eprintln!` warnings from
+//! deep inside the run path can interleave with that output. All
+//! non-fatal warnings route through [`warn`] instead, so one switch
+//! silences them: the `--quiet` CLI flag (see [`crate::cli`]) or the
+//! `ELASTIBENCH_QUIET` environment variable (any non-empty value other
+//! than `0`). Fatal errors and usage messages stay on their own paths —
+//! quiet mode never swallows a failure.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// 0 = unresolved (consult the environment on first use), 1 = loud,
+/// 2 = quiet.
+static QUIET: AtomicU8 = AtomicU8::new(0);
+
+/// Override quiet mode (the `--quiet` flag). Takes precedence over
+/// `ELASTIBENCH_QUIET` from then on.
+pub fn set_quiet(quiet: bool) {
+    QUIET.store(if quiet { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// Whether warnings are currently suppressed; resolves
+/// `ELASTIBENCH_QUIET` lazily on first call when [`set_quiet`] was never
+/// invoked.
+pub fn is_quiet() -> bool {
+    match QUIET.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let quiet = std::env::var("ELASTIBENCH_QUIET")
+                .map(|v| !v.is_empty() && v != "0")
+                .unwrap_or(false);
+            QUIET.store(if quiet { 2 } else { 1 }, Ordering::Relaxed);
+            quiet
+        }
+    }
+}
+
+/// Emit a non-fatal warning to stderr (prefixed `elastibench: warning:`)
+/// unless quiet mode is on.
+pub fn warn(msg: &str) {
+    if !is_quiet() {
+        eprintln!("elastibench: warning: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_quiet_toggles_and_overrides() {
+        // Global state: restore the loud default so parallel tests that
+        // happen to warn stay observable.
+        set_quiet(true);
+        assert!(is_quiet());
+        warn("suppressed warning (must not appear in test output)");
+        set_quiet(false);
+        assert!(!is_quiet());
+    }
+}

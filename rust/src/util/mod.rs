@@ -6,6 +6,7 @@
 //! DESIGN.md "Dependency policy").
 
 pub mod benchkit;
+pub mod diag;
 pub mod json;
 pub mod rng;
 pub mod stats;

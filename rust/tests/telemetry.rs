@@ -1,0 +1,229 @@
+//! Telemetry integration contract:
+//!
+//! * attaching a sink (null or recording) changes NO experiment result —
+//!   the observed run is compared field-for-field against the untraced
+//!   coordinator path, and traced scenario reports are byte-identical to
+//!   plain ones;
+//! * span streams are deterministic: identical across repeat runs and
+//!   across sweep worker counts (`--jobs 1` vs `--jobs 2`);
+//! * per-phase billed-cost attribution sums bit-exactly to the billed
+//!   total on every catalog scenario;
+//! * the Chrome trace-event export parses, carries events, and embeds
+//!   the same metrics the report carries.
+
+use elastibench::config::{ExperimentConfig, PlatformConfig, SutConfig};
+use elastibench::coordinator::{run_experiment_observed, run_experiment_with, strategy_by_name};
+use elastibench::report::scenario_report_to_json;
+use elastibench::scenario::{
+    catalog, catalog_entry, run_scenario, run_scenario_experiment,
+    run_scenario_experiment_traced, run_scenario_traced, run_sweep, Scenario,
+};
+use elastibench::stats::Analyzer;
+use elastibench::sut::{generate, Version};
+use elastibench::telemetry::{chrome_trace_json, NullSink, SharedSink, TRACE_SCHEMA};
+use elastibench::util::json::parse;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn small_workload() -> (SutConfig, PlatformConfig, ExperimentConfig) {
+    let sut = SutConfig {
+        benchmark_count: 12,
+        true_changes: 3,
+        faas_incompatible: 1,
+        slow_setup: 1,
+        ..SutConfig::default()
+    };
+    let platform = PlatformConfig::default();
+    let exp = ExperimentConfig {
+        calls_per_benchmark: 6,
+        parallelism: 8,
+        ..ExperimentConfig::default()
+    };
+    (sut, platform, exp)
+}
+
+/// Scale a catalog entry down to test time while keeping its platform
+/// calibration (billing floors, pricing, keepalive) untouched — the
+/// parts that matter for cost attribution.
+fn scaled(mut sc: Scenario) -> Scenario {
+    sc.sut.benchmark_count = sc.sut.benchmark_count.min(10);
+    sc.sut.true_changes = sc.sut.true_changes.min(3);
+    sc.sut.faas_incompatible = sc.sut.faas_incompatible.min(1);
+    sc.sut.slow_setup = sc.sut.slow_setup.min(1);
+    sc.exp.calls_per_benchmark = sc.exp.calls_per_benchmark.min(6);
+    sc.exp.parallelism = sc.exp.parallelism.min(40);
+    sc
+}
+
+#[test]
+fn sinks_have_zero_result_impact() {
+    let (sut, platform, exp) = small_workload();
+    let suite = generate(&sut);
+    let duet = strategy_by_name("duet").unwrap();
+    let plain = run_experiment_with(
+        &suite,
+        &sut,
+        &platform,
+        &exp,
+        (Version::V1, Version::V2),
+        duet,
+    );
+
+    let null_sink: SharedSink = Rc::new(RefCell::new(NullSink));
+    let (nulled, _) = run_experiment_observed(
+        &suite,
+        &sut,
+        &platform,
+        &exp,
+        (Version::V1, Version::V2),
+        duet,
+        None,
+        &null_sink,
+    );
+    let rec = elastibench::telemetry::RecordingSink::shared();
+    let rec_sink: SharedSink = rec.clone();
+    let (recorded, _) = run_experiment_observed(
+        &suite,
+        &sut,
+        &platform,
+        &exp,
+        (Version::V1, Version::V2),
+        duet,
+        None,
+        &rec_sink,
+    );
+
+    // Debug formatting round-trips every f64 exactly, so string equality
+    // here is full-report equality.
+    let want = format!("{plain:?}");
+    assert_eq!(format!("{nulled:?}"), want, "NullSink changed the run");
+    assert_eq!(format!("{recorded:?}"), want, "RecordingSink changed the run");
+    assert!(
+        !rec.borrow().spans.is_empty(),
+        "recording run must actually capture spans"
+    );
+}
+
+#[test]
+fn traced_scenario_report_is_byte_identical_to_plain_run() {
+    let sc = catalog_entry("quick-smoke").unwrap();
+    let analyzer = Analyzer::native();
+    let plain = run_scenario(&sc, &analyzer).unwrap();
+    let (traced, spans) = run_scenario_traced(&sc, &analyzer).unwrap();
+    assert!(!spans.is_empty());
+    assert_eq!(
+        scenario_report_to_json(&traced).to_string(),
+        scenario_report_to_json(&plain).to_string(),
+        "tracing must not perturb the exported report"
+    );
+}
+
+#[test]
+fn span_streams_are_identical_across_repeat_runs_and_threads() {
+    let sc = catalog_entry("quick-smoke").unwrap();
+    let analyzer = Analyzer::native();
+    let (_, first) = run_scenario_experiment_traced(&sc, &analyzer).unwrap();
+    let (_, second) = run_scenario_experiment_traced(&sc, &analyzer).unwrap();
+    assert_eq!(first, second, "span stream must be deterministic");
+    // Simulated-time determinism also holds on a fresh thread (sweep
+    // workers run scenarios off the main thread).
+    let sc2 = sc.clone();
+    let threaded = std::thread::spawn(move || {
+        run_scenario_experiment_traced(&sc2, &Analyzer::native())
+            .unwrap()
+            .1
+    })
+    .join()
+    .unwrap();
+    assert_eq!(first, threaded, "span stream must not depend on the thread");
+}
+
+#[test]
+fn sweep_reports_with_telemetry_are_identical_across_jobs() {
+    let base = catalog_entry("quick-smoke").unwrap();
+    let mut other = base.clone();
+    other.name = "quick-smoke-b".into();
+    other.exp.seed += 1;
+    let scenarios = vec![base, other];
+    let one = run_sweep(&scenarios, 1, || Ok(Analyzer::native())).unwrap();
+    let two = run_sweep(&scenarios, 2, || Ok(Analyzer::native())).unwrap();
+    assert_eq!(one.len(), two.len());
+    for (a, b) in one.iter().zip(&two) {
+        assert!(a.telemetry.is_some(), "{}: sweep runs carry telemetry", a.scenario.name);
+        assert_eq!(
+            scenario_report_to_json(a).to_string(),
+            scenario_report_to_json(b).to_string(),
+            "{}: --jobs must not change the report",
+            a.scenario.name
+        );
+    }
+}
+
+#[test]
+fn phase_costs_sum_bit_exactly_on_every_catalog_scenario() {
+    let analyzer = Analyzer::native();
+    for sc in catalog() {
+        let sc = scaled(sc);
+        let pending = run_scenario_experiment(&sc, &analyzer).unwrap();
+        let m = pending
+            .telemetry
+            .as_ref()
+            .unwrap_or_else(|| panic!("{}: experiment runs carry telemetry", sc.name));
+        let billed = pending.run.cost_usd;
+        assert_eq!(
+            m.phase_total_usd().to_bits(),
+            billed.to_bits(),
+            "{}: requests {} + cold {} + exec {} + rounding {} != billed {}",
+            sc.name,
+            m.cost_requests_usd,
+            m.cost_cold_start_usd,
+            m.cost_execution_usd,
+            m.cost_rounding_usd,
+            billed
+        );
+        assert_eq!(
+            m.cold_starts, pending.run.platform.cold_starts,
+            "{}: span-derived cold starts disagree with platform stats",
+            sc.name
+        );
+        assert_eq!(
+            m.invocations, pending.run.platform.invocations,
+            "{}: span-derived invocations disagree with platform stats",
+            sc.name
+        );
+    }
+}
+
+#[test]
+fn chrome_trace_export_is_valid_and_embeds_matching_metrics() {
+    let sc = catalog_entry("quick-smoke").unwrap();
+    let (report, spans) = run_scenario_traced(&sc, &Analyzer::native()).unwrap();
+    let metrics = report.telemetry.as_ref().expect("traced report has telemetry");
+    let trace = chrome_trace_json(&report.scenario.name, &spans, metrics);
+    let parsed = parse(&trace.to_string()).expect("trace must be valid JSON");
+
+    assert_eq!(parsed.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    let eb = parsed.get("elastibench").unwrap();
+    assert_eq!(eb.get("schema").unwrap().as_str(), Some(TRACE_SCHEMA));
+    assert_eq!(eb.get("scenario").unwrap().as_str(), Some("quick-smoke"));
+    let embedded =
+        elastibench::telemetry::run_metrics_from_json(eb.get("metrics").unwrap()).unwrap();
+    assert_eq!(&embedded, metrics, "embedded metrics must match the report");
+
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), spans.len(), "one trace event per span");
+    for ev in events {
+        assert!(ev.get("name").unwrap().as_str().is_some());
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        assert!(ph == "X" || ph == "i", "unexpected phase {ph:?}");
+        assert!(ev.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+        if ph == "X" {
+            assert!(ev.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    }
+    // Cold starts show up as complete events on instance tracks.
+    assert!(
+        events.iter().any(|e| e.get("name").unwrap().as_str() == Some("cold-start")),
+        "trace must contain cold-start events"
+    );
+}

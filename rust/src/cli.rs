@@ -12,10 +12,13 @@
 //! elastibench scenario sweep <NAME>|--recipe FILE [--jobs N]
 //!                            [--backend native|xla] [--out-dir DIR]
 //! elastibench history record FILE... [--report FILE] [--store DIR] [--timestamp T]
-//! elastibench history list [SCENARIO] [--store DIR]
-//! elastibench history show SCENARIO [--store DIR] [--last N]
-//! elastibench history diff SCENARIO --a RUN --b RUN [--store DIR]
+//! elastibench history list [SCENARIO] [--store DIR] [--limit N] [--page P] [--json]
+//! elastibench history show SCENARIO [--store DIR] [--last N] [--json]
+//! elastibench history diff SCENARIO --a RUN --b RUN [--store DIR] [--json]
 //! elastibench history gate SCENARIO [--store DIR] [--window K] [--threshold PCT]
+//!                          [--json]
+//! elastibench history compact [--store DIR] [--dest DIR]
+//! elastibench serve [--addr HOST:PORT] [--store DIR]
 //! elastibench reproduce [--backend native|xla] [--out DIR]
 //! elastibench compare --a NAME --b NAME [--backend native|xla]
 //! elastibench version | help
@@ -26,8 +29,9 @@ use crate::exp::{self, ExperimentResult, Workbench};
 use crate::history::{self, GatePolicy, HistoryStore, Timeline};
 use crate::report::{
     analysis_to_csv, experiment_summary_table, gate_table, history_runs_table,
-    render_cdf, report_file_name, scenario_report_to_json, sweep_summary_table,
-    trend_table, write_text, HistoryRunRow, SummaryRow, SweepRow, TrendCell,
+    render_cdf, report_file_name, run_list_footer, scenario_report_to_json,
+    sweep_summary_table, trend_table, write_text, HistoryRunRow, SummaryRow, SweepRow,
+    TrendCell,
 };
 use crate::scenario::{
     catalog, catalog_entry, default_jobs, run_scenario, run_sweep, Scenario,
@@ -67,7 +71,7 @@ impl Args {
                 continue;
             };
             // Boolean switches take no value; everything else does.
-            if key == "quiet" {
+            if key == "quiet" || key == "json" {
                 out.flags.insert(key.to_string(), "1".to_string());
                 continue;
             }
@@ -148,16 +152,29 @@ USAGE:
       results/history) — globs over several files record them all.
       Timestamps are opaque strings you pass in — never wall clock —
       so records stay deterministic.
-  elastibench history list [SCENARIO] [--store DIR]
-      List recorded scenarios, or the runs of one scenario.
-  elastibench history show SCENARIO [--store DIR] [--last N]
+  elastibench history list [SCENARIO] [--store DIR] [--limit N] [--page P]
+                           [--json]
+      List recorded scenarios, or the runs of one scenario. --limit N
+      pages the run listing (--page P, 1-based, selects the page);
+      --json emits the canonical JSON the serve endpoints return.
+  elastibench history show SCENARIO [--store DIR] [--last N] [--json]
       Cross-commit trend table over the last N recorded runs (default 8).
-  elastibench history diff SCENARIO --a RUN --b RUN [--store DIR]
+  elastibench history diff SCENARIO --a RUN --b RUN [--store DIR] [--json]
       Compare two recorded runs benchmark by benchmark.
   elastibench history gate SCENARIO [--store DIR] [--window K]
-                           [--threshold PCT] [--min-baseline N]
+                           [--threshold PCT] [--min-baseline N] [--json]
       Regression-gate the newest recorded run against a baseline window
       of K prior runs (default 3, threshold 3%). Exits 1 on findings.
+  elastibench history compact [--store DIR] [--dest DIR]
+      Migrate an fs-layout store into the compact segment-file layout
+      built for very large archives (default dest: STORE-compact).
+      Verifies a byte-lossless round trip before reporting success;
+      every history/serve command auto-detects the layout from then on.
+  elastibench serve [--addr HOST:PORT] [--store DIR]
+      Serve the history store over HTTP (default 127.0.0.1:7878):
+      GET /scenarios | /runs/{scenario} | /run/{scenario}/{id} | /diff
+      | /gate | /timeline, POST /record. Response bodies are
+      byte-identical to the CLI's --json output; see docs/service.md.
   elastibench suite [--config FILE]
       Print the generated SUT inventory (ground truth).
   elastibench run --experiment NAME [--backend native|xla]
@@ -199,6 +216,7 @@ pub fn run(args: Args) -> Result<i32> {
         "scenario" => cmd_scenario(&args),
         "trace" => cmd_trace(&args),
         "history" => cmd_history(&args),
+        "serve" => cmd_serve(&args),
         "compare" => cmd_compare(&args),
         "reproduce" => cmd_reproduce(&args),
         other => {
@@ -686,8 +704,9 @@ fn cmd_history(args: &Args) -> Result<i32> {
         Some("show") => cmd_history_show(args),
         Some("diff") => cmd_history_diff(args),
         Some("gate") => cmd_history_gate(args),
+        Some("compact") => cmd_history_compact(args),
         other => bail!(
-            "history needs a subcommand: record | list | show | diff | gate (got {other:?})"
+            "history needs a subcommand: record | list | show | diff | gate | compact (got {other:?})"
         ),
     }
 }
@@ -728,6 +747,10 @@ fn cmd_history_list(args: &Args) -> Result<i32> {
     let store = history_store(args);
     match args.positional(1) {
         None => {
+            if args.get("json").is_some() {
+                println!("{}", history::view::scenarios_json(&store)?.to_string());
+                return Ok(0);
+            }
             let scenarios = store.scenarios()?;
             if scenarios.is_empty() {
                 println!(
@@ -752,15 +775,51 @@ fn cmd_history_list(args: &Args) -> Result<i32> {
         }
         Some(scenario) => {
             let store = scenario_store(args, scenario);
-            let runs = store.runs(scenario)?;
-            if runs.is_empty() {
+            let parse_min_1 = |key: &str| -> Result<Option<usize>> {
+                match args.get(key) {
+                    None => Ok(None),
+                    Some(text) => text
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|n| *n >= 1)
+                        .map(Some)
+                        .with_context(|| {
+                            format!("--{key} must be a positive integer, got {text:?}")
+                        }),
+                }
+            };
+            let limit = parse_min_1("limit")?;
+            let page_no = parse_min_1("page")?.unwrap_or(1);
+            if limit.is_none() && args.get("page").is_some() {
+                bail!("--page needs --limit N to define the page size");
+            }
+            let total = store.runs_total(scenario)?;
+            if total == 0 {
                 bail!(
                     "no recorded runs for {scenario:?} under {}",
                     store.root().display()
                 );
             }
-            let rows: Vec<HistoryRunRow> = runs.iter().map(run_row).collect();
+            // Without --limit the whole listing is one page (the
+            // pre-pagination behavior, and what --json reports as the
+            // effective page size).
+            let per_page = limit.unwrap_or(total);
+            let page = store.runs_page(scenario, (page_no - 1) * per_page, per_page)?;
+            if args.get("json").is_some() {
+                println!(
+                    "{}",
+                    history::view::runs_page_json(scenario, &page, per_page).to_string()
+                );
+                return Ok(0);
+            }
+            let rows: Vec<HistoryRunRow> = page.runs.iter().map(run_row).collect();
             print!("{}", history_runs_table(&rows));
+            if limit.is_some() {
+                print!(
+                    "{}",
+                    run_list_footer(page.offset, page.runs.len(), page.total, per_page)
+                );
+            }
             Ok(0)
         }
     }
@@ -800,6 +859,10 @@ fn cmd_history_show(args: &Args) -> Result<i32> {
             "no recorded runs for {scenario:?} under {}",
             store.root().display()
         );
+    }
+    if args.get("json").is_some() {
+        println!("{}", history::view::timeline_json(&tl).to_string());
+        return Ok(0);
     }
     let metas: Vec<HistoryRunRow> =
         tl.entries.iter().map(|e| run_row(&e.meta)).collect();
@@ -842,6 +905,13 @@ fn cmd_history_diff(args: &Args) -> Result<i32> {
     let store = scenario_store(args, scenario);
     let a = store.load(scenario, id_a)?;
     let b = store.load(scenario, id_b)?;
+    if args.get("json").is_some() {
+        println!(
+            "{}",
+            history::view::diff_json(scenario, id_a, id_b, &a, &b).to_string()
+        );
+        return Ok(0);
+    }
     println!(
         "{scenario}: {id_a} (commit {}) vs {id_b} (commit {})\n",
         a.metadata.commit, b.metadata.commit
@@ -886,15 +956,23 @@ fn cmd_history_diff(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// Gate policy for one scenario: built-in defaults, overlaid with the
-/// catalog recipe's `[history]` section when the scenario ships one,
-/// overlaid with explicit CLI flags.
-fn gate_policy(args: &Args, scenario: &str) -> Result<GatePolicy> {
+/// Gate policy baseline for one scenario: built-in defaults overlaid
+/// with the catalog recipe's `[history]` section when the scenario
+/// ships one. Shared by the CLI flags path below and `GET /gate` (so
+/// both surfaces resolve recipes identically).
+pub(crate) fn scenario_gate_policy(scenario: &str) -> GatePolicy {
     let mut policy = GatePolicy::default();
     if let Some(h) = catalog_entry_or_base(scenario).and_then(|sc| sc.history) {
         policy.window = h.window;
         policy.threshold_pct = h.threshold_pct;
     }
+    policy
+}
+
+/// Gate policy for one scenario: [`scenario_gate_policy`] overlaid with
+/// explicit CLI flags.
+fn gate_policy(args: &Args, scenario: &str) -> Result<GatePolicy> {
+    let mut policy = scenario_gate_policy(scenario);
     let parse_usize = |key: &str| -> Result<Option<usize>> {
         match args.get(key) {
             None => Ok(None),
@@ -935,15 +1013,21 @@ fn cmd_history_gate(args: &Args) -> Result<i32> {
         .context("history gate needs a SCENARIO name")?;
     let policy = gate_policy(args, scenario)?;
     let store = scenario_store(args, scenario);
-    // Only the newest window + 1 runs matter; never parse the archive.
-    let tl = Timeline::load_last(&store, scenario, policy.window + 1)?;
-    if tl.is_empty() {
+    if store.runs_total(scenario)? == 0 {
         bail!(
             "no recorded runs for {scenario:?} under {}",
             store.root().display()
         );
     }
-    let outcome = history::evaluate(&tl, &policy)?;
+    // Only the newest window + 1 runs matter; never parse the archive.
+    let outcome = history::evaluate_latest(&store, scenario, &policy)?;
+    if args.get("json").is_some() {
+        println!(
+            "{}",
+            history::view::gate_json(&policy, &outcome).to_string()
+        );
+        return Ok(if outcome.passed() { 0 } else { 1 });
+    }
     if let Some(why) = &outcome.skipped {
         println!("gate SKIPPED for {scenario}: {why}");
         return Ok(0);
@@ -976,6 +1060,49 @@ fn cmd_history_gate(args: &Args) -> Result<i32> {
         outcome.baseline_runs.len()
     );
     Ok(1)
+}
+
+fn cmd_history_compact(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(1)?;
+    let src_dir = args.get_or("store", history::DEFAULT_STORE_DIR);
+    let src = HistoryStore::open(src_dir);
+    if src.backend_kind() == history::BackendKind::Compact {
+        bail!("{src_dir} is already a compact store");
+    }
+    let dest = match args.get("dest") {
+        Some(dir) => PathBuf::from(dir),
+        None => PathBuf::from(format!("{}-compact", src_dir.trim_end_matches('/'))),
+    };
+    let report = history::compact::migrate(&src, &dest)?;
+    println!(
+        "compacted {} -> {}: {} scenario(s), {} run(s), {} document byte(s) verified identical",
+        src.root().display(),
+        dest.display(),
+        report.scenarios,
+        report.runs,
+        report.verified_bytes
+    );
+    println!("round trip OK; point --store at {} to use it", dest.display());
+    Ok(0)
+}
+
+// ------------------------------------------------------------------
+// `serve` — the history store as an HTTP service (crate::serve).
+// ------------------------------------------------------------------
+
+fn cmd_serve(args: &Args) -> Result<i32> {
+    args.reject_positionals_beyond(0)?;
+    let store = history_store(args);
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let server = crate::serve::Server::bind(addr, store.clone())?;
+    println!(
+        "elastibench serve: {} store {} on http://{}/ (Ctrl-C to stop)",
+        store.backend_kind().as_str(),
+        store.root().display(),
+        server.local_addr()?
+    );
+    server.serve_forever()?;
+    Ok(0)
 }
 
 fn maybe_export(args: &Args, analysis: &crate::stats::SuiteAnalysis) -> Result<()> {

@@ -1,0 +1,313 @@
+//! Storage backends behind [`super::store::HistoryStore`].
+//!
+//! The store API the rest of the crate sees (record / list / load) is a
+//! thin wrapper over the [`StorageBackend`] trait so the on-disk layout
+//! can scale without touching gate, timeline, CLI or serve code:
+//!
+//! * [`FsBackend`] — the original per-scenario-dir + `index.jsonl`
+//!   layout, kept byte-compatible so every existing store on disk keeps
+//!   working. It doubles as the differential oracle for other backends.
+//! * [`crate::history::compact::CompactBackend`] — per-scenario segment
+//!   files with a fixed-width binary offset index, built for 10⁵–10⁶
+//!   runs (see that module for the format).
+//!
+//! Everything is paged: [`StorageBackend::runs_page`] returns one slice
+//! of the run listing plus the total, so gate/timeline/serve never have
+//! to materialize an entire archive to look at its tail.
+
+use super::store::{parse_scenario_report, RunMeta, StoredRun};
+use crate::report::{short_commit, write_text};
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which on-disk layout a store uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Per-scenario directory of JSON files plus `index.jsonl`.
+    Fs,
+    /// Segment files plus a fixed-width binary offset index.
+    Compact,
+}
+
+impl BackendKind {
+    /// Short label for logs and the `serve` banner.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Fs => "fs",
+            BackendKind::Compact => "compact",
+        }
+    }
+}
+
+/// One page of a scenario's run listing, oldest first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunsPage {
+    /// Total recorded runs of the scenario (not just this page).
+    pub total: usize,
+    /// Offset of the first returned run inside the full listing.
+    pub offset: usize,
+    /// The page itself (at most the requested limit).
+    pub runs: Vec<RunMeta>,
+}
+
+/// The storage contract of a history store. Implementations must be
+/// safe to share across threads: `elastibench serve` answers reads
+/// concurrently while a single writer records (readers may never see a
+/// torn run, and totals/seqs must only ever grow).
+pub trait StorageBackend: Send + Sync + std::fmt::Debug {
+    /// The store root directory.
+    fn root(&self) -> &Path;
+
+    /// Which layout this backend implements.
+    fn kind(&self) -> BackendKind;
+
+    /// Scenarios with at least one recorded run, sorted by name.
+    fn scenarios(&self) -> Result<Vec<String>>;
+
+    /// Sequence number of the newest recorded run (0 when the scenario
+    /// has none). Run ids embed this 1-based recording order.
+    fn latest_seq(&self, scenario: &str) -> Result<usize>;
+
+    /// One page of the run listing: up to `limit` entries starting at
+    /// `offset` (0-based, oldest first) plus the total count. An
+    /// unrecorded scenario yields an empty page with `total == 0`, not
+    /// an error; `runs_page(s, 0, 0)` is the cheap total-only probe.
+    fn runs_page(&self, scenario: &str, offset: usize, limit: usize) -> Result<RunsPage>;
+
+    /// Load one recorded run back into typed structs.
+    fn load(&self, scenario: &str, run_id: &str) -> Result<StoredRun>;
+
+    /// The stored report document of one run, byte-identical to what
+    /// was recorded (what `GET /run/{scenario}/{id}` returns and what
+    /// migrations copy).
+    fn load_doc(&self, scenario: &str, run_id: &str) -> Result<String>;
+
+    /// Record a `elastibench.scenario-report.v1` document. Validates the
+    /// full shape through the typed importer and returns the new run's
+    /// metadata.
+    fn record_json(&self, doc: &Json, timestamp: &str) -> Result<RunMeta>;
+}
+
+/// Scenario names become path components; refuse anything that could
+/// escape the store root.
+pub(crate) fn check_scenario_name(scenario: &str) -> Result<()> {
+    if scenario.is_empty()
+        || scenario.contains(&['/', '\\'][..])
+        || scenario.starts_with('.')
+    {
+        bail!("unsafe scenario name {scenario:?} for a store path");
+    }
+    Ok(())
+}
+
+/// Run ids become file stems (fs) and index keys (compact); same rules.
+pub(crate) fn check_run_id(run_id: &str) -> Result<()> {
+    if run_id.is_empty() || run_id.contains(&['/', '\\'][..]) || run_id.starts_with('.') {
+        bail!("unsafe run id {run_id:?}");
+    }
+    Ok(())
+}
+
+/// The `SEQ` half of a `SEQ-COMMIT` run id.
+pub(crate) fn seq_of(run_id: &str) -> Result<usize> {
+    let (seq, _) = run_id
+        .split_once('-')
+        .ok_or_else(|| anyhow!("run id {run_id:?} is not SEQ-COMMIT shaped"))?;
+    seq.parse::<usize>()
+        .map_err(|_| anyhow!("run id {run_id:?} has a non-numeric SEQ"))
+}
+
+/// The `COMMIT` half of a `SEQ-COMMIT` run id.
+pub(crate) fn commit_of(run_id: &str) -> Result<&str> {
+    run_id
+        .split_once('-')
+        .map(|(_, commit)| commit)
+        .ok_or_else(|| anyhow!("run id {run_id:?} is not SEQ-COMMIT shaped"))
+}
+
+/// The original filesystem layout (one directory per scenario, one JSON
+/// file per run, a compact `index.jsonl` of run metadata), extracted
+/// verbatim from the pre-trait `HistoryStore` so existing stores keep
+/// working unchanged.
+///
+/// Index appends are atomic: the index is rebuilt and renamed over
+/// (`index.jsonl.tmp` → `index.jsonl`), so a crash mid-record can never
+/// leave a truncated line behind. Stores written before that fix may
+/// still carry one; the reader tolerates a torn *final* line (warn and
+/// drop) while malformed interior lines stay hard errors.
+#[derive(Debug)]
+pub struct FsBackend {
+    root: PathBuf,
+}
+
+impl FsBackend {
+    /// Open (lazily — nothing is created until the first record) a
+    /// filesystem store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Self {
+        FsBackend { root: root.into() }
+    }
+
+    fn scenario_dir(&self, scenario: &str) -> Result<PathBuf> {
+        check_scenario_name(scenario)?;
+        Ok(self.root.join(scenario))
+    }
+
+    /// Parse `index.jsonl` into run metadata, tolerating (with a
+    /// warning) a truncated final line — the debris of a crash
+    /// mid-append under the old non-atomic append path.
+    fn read_index(&self, scenario: &str) -> Result<Vec<RunMeta>> {
+        let index = self.scenario_dir(scenario)?.join("index.jsonl");
+        let text = match std::fs::read_to_string(&index) {
+            Ok(t) => t,
+            Err(_) => return Ok(Vec::new()),
+        };
+        let lines: Vec<(usize, &str)> = text
+            .lines()
+            .enumerate()
+            .filter(|(_, line)| !line.trim().is_empty())
+            .collect();
+        let mut out = Vec::with_capacity(lines.len());
+        for (pos, (lineno, line)) in lines.iter().enumerate() {
+            let parsed = parse(line)
+                .map_err(|e| anyhow!("{}:{}: {e}", index.display(), lineno + 1))
+                .and_then(|j| {
+                    RunMeta::from_json(&j)
+                        .with_context(|| format!("{}:{}", index.display(), lineno + 1))
+                });
+            match parsed {
+                Ok(meta) => out.push(meta),
+                Err(e) if pos + 1 == lines.len() => {
+                    // The last line is exactly what a crash mid-append
+                    // truncates; its run file (if fully written) is
+                    // re-linked by the next record's rebuild.
+                    crate::util::diag::warn(&format!(
+                        "dropping truncated final index line: {e:#}"
+                    ));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl StorageBackend for FsBackend {
+    fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Fs
+    }
+
+    fn scenarios(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&self.root) {
+            Ok(e) => e,
+            Err(_) => return Ok(out), // absent root = empty store
+        };
+        for entry in entries {
+            let entry = entry.with_context(|| format!("read {}", self.root.display()))?;
+            if entry.path().join("index.jsonl").is_file() {
+                if let Some(name) = entry.file_name().to_str() {
+                    out.push(name.to_string());
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn latest_seq(&self, scenario: &str) -> Result<usize> {
+        match self.read_index(scenario)?.last() {
+            None => Ok(0),
+            Some(meta) => seq_of(&meta.run_id),
+        }
+    }
+
+    fn runs_page(&self, scenario: &str, offset: usize, limit: usize) -> Result<RunsPage> {
+        let metas = self.read_index(scenario)?;
+        let total = metas.len();
+        let runs = metas.into_iter().skip(offset).take(limit).collect();
+        Ok(RunsPage { total, offset, runs })
+    }
+
+    fn load(&self, scenario: &str, run_id: &str) -> Result<StoredRun> {
+        let text = self.load_doc(scenario, run_id)?;
+        let path = self.scenario_dir(scenario)?.join(format!("{run_id}.json"));
+        let doc = parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        parse_scenario_report(&doc).with_context(|| path.display().to_string())
+    }
+
+    fn load_doc(&self, scenario: &str, run_id: &str) -> Result<String> {
+        check_run_id(run_id)?;
+        let path = self.scenario_dir(scenario)?.join(format!("{run_id}.json"));
+        std::fs::read_to_string(&path).with_context(|| format!("read {}", path.display()))
+    }
+
+    fn record_json(&self, doc: &Json, timestamp: &str) -> Result<RunMeta> {
+        let run = parse_scenario_report(doc)?;
+        let scenario = run.scenario.name.clone();
+        let dir = self.scenario_dir(&scenario)?;
+        let metas = self.read_index(&scenario)?;
+        // Next sequence number: one past the index, skipping forward if
+        // a run file already occupies the slot (e.g. an index line was
+        // lost or another writer got there first). Never overwrite a
+        // recorded run — the store is append-only.
+        let mut seq = metas.len() + 1;
+        let run_id = loop {
+            let candidate = format!("{seq:04}-{}", short_commit(&run.metadata.commit));
+            if !dir.join(format!("{candidate}.json")).exists() {
+                break candidate;
+            }
+            seq += 1;
+        };
+        let meta = RunMeta::from_run(&run, &run_id, timestamp);
+        write_text(&dir.join(format!("{run_id}.json")), &doc.to_string())?;
+        // Atomic index update: rebuild the whole listing and rename it
+        // over the old one, so readers always see a complete file and a
+        // crash can never leave a half-written line. Metadata lines are
+        // canonical JSON, so intact lines rebuild byte-identically.
+        let index = dir.join("index.jsonl");
+        let mut text = String::new();
+        for m in &metas {
+            text.push_str(&m.to_json().to_string());
+            text.push('\n');
+        }
+        text.push_str(&meta.to_json().to_string());
+        text.push('\n');
+        let tmp = dir.join("index.jsonl.tmp");
+        write_text(&tmp, &text)?;
+        std::fs::rename(&tmp, &index)
+            .with_context(|| format!("replace {}", index.display()))?;
+        Ok(meta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_id_halves_parse() {
+        assert_eq!(seq_of("0007-abc").unwrap(), 7);
+        assert_eq!(commit_of("0007-abc").unwrap(), "abc");
+        // Commits may themselves contain dashes; only the first one splits.
+        assert_eq!(seq_of("0012-c-one").unwrap(), 12);
+        assert_eq!(commit_of("0012-c-one").unwrap(), "c-one");
+        assert!(seq_of("no-seq").is_err());
+        assert!(seq_of("plain").is_err());
+        assert!(commit_of("plain").is_err());
+    }
+
+    #[test]
+    fn name_checks_reject_path_escapes() {
+        for bad in ["", "../x", "a/b", "a\\b", ".hidden"] {
+            assert!(check_scenario_name(bad).is_err(), "{bad:?}");
+            assert!(check_run_id(bad).is_err(), "{bad:?}");
+        }
+        assert!(check_scenario_name("quick-smoke").is_ok());
+        assert!(check_run_id("0001-abc").is_ok());
+    }
+}

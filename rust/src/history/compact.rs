@@ -1,0 +1,480 @@
+//! Compact storage backend: per-scenario segment files plus a
+//! fixed-width binary offset index, built for archives of 10⁵–10⁶ runs.
+//!
+//! Layout:
+//!
+//! ```text
+//! <root>/
+//!   compact.marker           # format marker; how `HistoryStore::open`
+//!                            # auto-detects the backend
+//!   <scenario>/
+//!     runs.seg               # concatenated payload bytes: for each run
+//!                            # its index-metadata JSON line followed by
+//!                            # the full report document, verbatim
+//!     runs.idx               # one fixed-width record per run
+//! ```
+//!
+//! Each `runs.idx` record is [`IDX_RECORD_LEN`] bytes, little-endian:
+//! `seq u64 | meta_off u64 | meta_len u64 | doc_off u64 | doc_len u64 |
+//! commit [16]u8` (the run id's commit half, NUL-padded). Records are
+//! appended in recording order, so seqs are strictly increasing and a
+//! run lookup is a binary search by seq — verified against the commit
+//! bytes — followed by two bounded reads; `runs_page` reads exactly the
+//! index slice plus the page's metadata lines, never a whole archive.
+//! The design mirrors a memory-mapped index (offset arithmetic over
+//! fixed-width records) without needing any dependency beyond `std`.
+//!
+//! Writer/reader protocol: segment bytes are appended and flushed
+//! *before* the index record, and the record is one small append-mode
+//! write. Readers trust only whole records (`idx_len / RECORD_LEN`
+//! floors away a torn tail), so every visible record points at fully
+//! written payload bytes — concurrent readers see old-or-new state,
+//! never a torn run, and totals/seqs grow monotonically. In-process
+//! writers additionally serialize on a mutex (the `serve` write path).
+
+use super::backend::{
+    check_run_id, check_scenario_name, commit_of, seq_of, BackendKind, RunsPage,
+    StorageBackend,
+};
+use super::store::{parse_scenario_report, HistoryStore, RunMeta, StoredRun};
+use crate::report::{short_commit, write_text};
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Marker file (at the store root) identifying a compact store.
+pub const COMPACT_MARKER: &str = "compact.marker";
+
+/// Marker file content; versioned so a future format bump can refuse
+/// cleanly instead of misreading.
+pub const COMPACT_FORMAT: &str = "elastibench.compact-store.v1";
+
+/// Bytes reserved for the commit half of a run id inside an index
+/// record. `short_commit` caps run-id commits at 12 characters, so 16
+/// NUL-padded bytes hold every id this crate writes; longer foreign
+/// commits compare by prefix.
+const COMMIT_BYTES: usize = 16;
+
+/// Fixed width of one `runs.idx` record: five `u64` fields plus the
+/// commit bytes.
+pub const IDX_RECORD_LEN: usize = 5 * 8 + COMMIT_BYTES;
+
+/// One decoded `runs.idx` record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct IdxRecord {
+    seq: u64,
+    meta_off: u64,
+    meta_len: u64,
+    doc_off: u64,
+    doc_len: u64,
+    commit: [u8; COMMIT_BYTES],
+}
+
+impl IdxRecord {
+    fn encode(&self) -> [u8; IDX_RECORD_LEN] {
+        let mut out = [0u8; IDX_RECORD_LEN];
+        out[0..8].copy_from_slice(&self.seq.to_le_bytes());
+        out[8..16].copy_from_slice(&self.meta_off.to_le_bytes());
+        out[16..24].copy_from_slice(&self.meta_len.to_le_bytes());
+        out[24..32].copy_from_slice(&self.doc_off.to_le_bytes());
+        out[32..40].copy_from_slice(&self.doc_len.to_le_bytes());
+        out[40..40 + COMMIT_BYTES].copy_from_slice(&self.commit);
+        out
+    }
+
+    fn decode(buf: &[u8]) -> IdxRecord {
+        let u = |lo: usize| -> u64 {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&buf[lo..lo + 8]);
+            u64::from_le_bytes(b)
+        };
+        let mut commit = [0u8; COMMIT_BYTES];
+        commit.copy_from_slice(&buf[40..40 + COMMIT_BYTES]);
+        IdxRecord {
+            seq: u(0),
+            meta_off: u(8),
+            meta_len: u(16),
+            doc_off: u(24),
+            doc_len: u(32),
+            commit,
+        }
+    }
+}
+
+/// The commit half of a run id as NUL-padded (or truncated) index bytes.
+fn encode_commit(commit: &str) -> [u8; COMMIT_BYTES] {
+    let mut out = [0u8; COMMIT_BYTES];
+    let bytes = commit.as_bytes();
+    let n = bytes.len().min(COMMIT_BYTES);
+    out[..n].copy_from_slice(&bytes[..n]);
+    out
+}
+
+/// The segment-file backend. See the module docs for the format.
+#[derive(Debug)]
+pub struct CompactBackend {
+    root: PathBuf,
+    /// In-process single-writer guard; readers never take it.
+    write_lock: Mutex<()>,
+}
+
+impl CompactBackend {
+    /// Open (lazily — nothing is created until the first record) a
+    /// compact store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Self {
+        CompactBackend {
+            root: root.into(),
+            write_lock: Mutex::new(()),
+        }
+    }
+
+    fn scenario_dir(&self, scenario: &str) -> Result<PathBuf> {
+        check_scenario_name(scenario)?;
+        Ok(self.root.join(scenario))
+    }
+
+    /// Write the format marker if it is not there yet (first record or
+    /// migration target).
+    fn ensure_marker(&self) -> Result<()> {
+        let marker = self.root.join(COMPACT_MARKER);
+        if !marker.is_file() {
+            write_text(&marker, &format!("{COMPACT_FORMAT}\n"))?;
+        }
+        Ok(())
+    }
+
+    /// Decode every complete index record of a scenario; a torn tail
+    /// (crash or concurrent append in flight) is floored away, never an
+    /// error. Absent index = unrecorded scenario = empty.
+    fn read_records(&self, scenario: &str) -> Result<Vec<IdxRecord>> {
+        let idx = self.scenario_dir(scenario)?.join("runs.idx");
+        let bytes = match std::fs::read(&idx) {
+            Ok(b) => b,
+            Err(_) => return Ok(Vec::new()),
+        };
+        let whole = bytes.len() / IDX_RECORD_LEN;
+        let mut out = Vec::with_capacity(whole);
+        for i in 0..whole {
+            out.push(IdxRecord::decode(&bytes[i * IDX_RECORD_LEN..(i + 1) * IDX_RECORD_LEN]));
+        }
+        Ok(out)
+    }
+
+    /// Read `len` payload bytes at `off` from a scenario's segment file.
+    fn read_slice(&self, scenario: &str, off: u64, len: u64) -> Result<Vec<u8>> {
+        let seg = self.scenario_dir(scenario)?.join("runs.seg");
+        let mut file = std::fs::File::open(&seg)
+            .with_context(|| format!("open {}", seg.display()))?;
+        file.seek(SeekFrom::Start(off))
+            .with_context(|| format!("seek {} in {}", off, seg.display()))?;
+        let mut buf = vec![0u8; len as usize];
+        file.read_exact(&mut buf)
+            .with_context(|| format!("read {len}B at {off} from {}", seg.display()))?;
+        Ok(buf)
+    }
+
+    fn meta_at(&self, scenario: &str, rec: &IdxRecord) -> Result<RunMeta> {
+        let bytes = self.read_slice(scenario, rec.meta_off, rec.meta_len)?;
+        let text = String::from_utf8(bytes)
+            .map_err(|_| anyhow!("{scenario}: index metadata for seq {} is not UTF-8", rec.seq))?;
+        let j = parse(&text)
+            .map_err(|e| anyhow!("{scenario}: index metadata for seq {}: {e}", rec.seq))?;
+        RunMeta::from_json(&j)
+            .with_context(|| format!("{scenario}: index metadata for seq {}", rec.seq))
+    }
+
+    /// Binary-search a run by the seq embedded in its id, then verify
+    /// the commit half matches the index record.
+    fn find(&self, scenario: &str, run_id: &str) -> Result<IdxRecord> {
+        check_run_id(run_id)?;
+        let seq = seq_of(run_id)? as u64;
+        let commit = commit_of(run_id)?;
+        let records = self.read_records(scenario)?;
+        let rec = records
+            .binary_search_by(|r| r.seq.cmp(&seq))
+            .ok()
+            .map(|i| records[i])
+            .ok_or_else(|| {
+                anyhow!(
+                    "run {run_id:?} not recorded for {scenario:?} under {}",
+                    self.root.display()
+                )
+            })?;
+        if rec.commit != encode_commit(commit) {
+            bail!(
+                "run {run_id:?} does not match the recorded commit at seq {} for {scenario:?}",
+                seq
+            );
+        }
+        Ok(rec)
+    }
+
+    /// Append one run verbatim, preserving its metadata (run id, seq,
+    /// timestamp, verdict counts) — the migration primitive behind
+    /// `history compact`. Seqs must keep strictly increasing; the store
+    /// stays append-only. The document text is stored byte-for-byte.
+    pub fn import(&self, meta: &RunMeta, doc_text: &str) -> Result<()> {
+        let _guard = self.write_lock.lock().unwrap_or_else(|e| e.into_inner());
+        let seq = seq_of(&meta.run_id)?;
+        let latest = self.latest_seq(&meta.scenario)?;
+        if seq <= latest {
+            bail!(
+                "cannot import run {:?}: seq {seq} is not past the newest recorded seq {latest}",
+                meta.run_id
+            );
+        }
+        self.append_run(&meta.scenario, meta, doc_text)
+    }
+
+    /// The append protocol: payload bytes first (flushed), index record
+    /// last. Callers must hold `write_lock`.
+    fn append_run(&self, scenario: &str, meta: &RunMeta, doc_text: &str) -> Result<()> {
+        let dir = self.scenario_dir(scenario)?;
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("mkdir -p {}", dir.display()))?;
+        self.ensure_marker()?;
+        let seg_path = dir.join("runs.seg");
+        let idx_path = dir.join("runs.idx");
+        let meta_line = meta.to_json().to_string();
+        let rec = {
+            let mut seg = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&seg_path)
+                .with_context(|| format!("open {}", seg_path.display()))?;
+            let meta_off = seg
+                .metadata()
+                .with_context(|| format!("stat {}", seg_path.display()))?
+                .len();
+            seg.write_all(meta_line.as_bytes())
+                .and_then(|_| seg.write_all(doc_text.as_bytes()))
+                .and_then(|_| seg.flush())
+                .with_context(|| format!("append {}", seg_path.display()))?;
+            IdxRecord {
+                seq: seq_of(&meta.run_id)? as u64,
+                meta_off,
+                meta_len: meta_line.len() as u64,
+                doc_off: meta_off + meta_line.len() as u64,
+                doc_len: doc_text.len() as u64,
+                commit: encode_commit(commit_of(&meta.run_id)?),
+            }
+        };
+        let mut idx = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&idx_path)
+            .with_context(|| format!("open {}", idx_path.display()))?;
+        idx.write_all(&rec.encode())
+            .and_then(|_| idx.flush())
+            .with_context(|| format!("append {}", idx_path.display()))?;
+        Ok(())
+    }
+}
+
+impl StorageBackend for CompactBackend {
+    fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Compact
+    }
+
+    fn scenarios(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&self.root) {
+            Ok(e) => e,
+            Err(_) => return Ok(out), // absent root = empty store
+        };
+        for entry in entries {
+            let entry = entry.with_context(|| format!("read {}", self.root.display()))?;
+            if entry.path().join("runs.idx").is_file() {
+                if let Some(name) = entry.file_name().to_str() {
+                    out.push(name.to_string());
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn latest_seq(&self, scenario: &str) -> Result<usize> {
+        Ok(self
+            .read_records(scenario)?
+            .last()
+            .map(|r| r.seq as usize)
+            .unwrap_or(0))
+    }
+
+    fn runs_page(&self, scenario: &str, offset: usize, limit: usize) -> Result<RunsPage> {
+        let records = self.read_records(scenario)?;
+        let total = records.len();
+        let hi = offset.saturating_add(limit).min(total);
+        let lo = offset.min(hi);
+        let mut runs = Vec::with_capacity(hi - lo);
+        for rec in &records[lo..hi] {
+            runs.push(self.meta_at(scenario, rec)?);
+        }
+        Ok(RunsPage { total, offset, runs })
+    }
+
+    fn load(&self, scenario: &str, run_id: &str) -> Result<StoredRun> {
+        let text = self.load_doc(scenario, run_id)?;
+        let doc = parse(&text)
+            .map_err(|e| anyhow!("{scenario}/{run_id} in {}: {e}", self.root.display()))?;
+        parse_scenario_report(&doc)
+            .with_context(|| format!("{scenario}/{run_id} in {}", self.root.display()))
+    }
+
+    fn load_doc(&self, scenario: &str, run_id: &str) -> Result<String> {
+        let rec = self.find(scenario, run_id)?;
+        let bytes = self.read_slice(scenario, rec.doc_off, rec.doc_len)?;
+        String::from_utf8(bytes)
+            .map_err(|_| anyhow!("{scenario}/{run_id}: stored document is not UTF-8"))
+    }
+
+    fn record_json(&self, doc: &Json, timestamp: &str) -> Result<RunMeta> {
+        let run = parse_scenario_report(doc)?;
+        let scenario = run.scenario.name.clone();
+        check_scenario_name(&scenario)?;
+        let _guard = self.write_lock.lock().unwrap_or_else(|e| e.into_inner());
+        // The index is the single source of truth here, so the next seq
+        // is simply one past the newest — no slot-collision scan like
+        // the fs backend needs.
+        let seq = self.latest_seq(&scenario)? + 1;
+        let run_id = format!("{seq:04}-{}", short_commit(&run.metadata.commit));
+        let meta = RunMeta::from_run(&run, &run_id, timestamp);
+        self.append_run(&scenario, &meta, &doc.to_string())?;
+        Ok(meta)
+    }
+}
+
+/// Outcome of a `history compact` migration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompactReport {
+    /// Scenarios migrated.
+    pub scenarios: usize,
+    /// Runs migrated.
+    pub runs: usize,
+    /// Total report-document bytes verified identical on read-back.
+    pub verified_bytes: u64,
+}
+
+/// Page size used when walking the source store during migration.
+const MIGRATE_CHUNK: usize = 256;
+
+/// Migrate every run of `src` into a new compact store at `dest_root`,
+/// preserving run ids, seqs, timestamps and document bytes verbatim,
+/// then verify the round trip: all run metadata must compare equal
+/// field-for-field and every stored document must read back
+/// byte-identical through the compact backend. The destination must not
+/// already exist (or must be empty) — migration never merges.
+pub fn migrate(src: &HistoryStore, dest_root: &Path) -> Result<CompactReport> {
+    if let Ok(mut entries) = std::fs::read_dir(dest_root) {
+        if entries.next().is_some() {
+            bail!(
+                "destination {} is not empty — refusing to migrate into an existing store",
+                dest_root.display()
+            );
+        }
+    }
+    let dest = CompactBackend::open(dest_root);
+    let scenarios = src.scenarios()?;
+    let mut runs_total = 0usize;
+
+    for scenario in &scenarios {
+        let mut offset = 0usize;
+        loop {
+            let page = src.runs_page(scenario, offset, MIGRATE_CHUNK)?;
+            if page.runs.is_empty() {
+                break;
+            }
+            let got = page.runs.len();
+            for meta in page.runs {
+                let doc = src.load_doc(scenario, &meta.run_id)?;
+                dest.import(&meta, &doc)?;
+                runs_total += 1;
+            }
+            offset += got;
+            if offset >= page.total {
+                break;
+            }
+        }
+    }
+
+    // Byte-lossless round-trip check: walk the source again and compare
+    // everything the compact store now claims to hold.
+    let mut verified_bytes = 0u64;
+    for scenario in &scenarios {
+        let mut offset = 0usize;
+        loop {
+            let src_page = src.runs_page(scenario, offset, MIGRATE_CHUNK)?;
+            if src_page.runs.is_empty() {
+                break;
+            }
+            let dst_page = dest.runs_page(scenario, offset, src_page.runs.len())?;
+            if dst_page.total != src_page.total {
+                bail!(
+                    "round-trip mismatch for {scenario:?}: {} migrated run(s) vs {} in the source",
+                    dst_page.total,
+                    src_page.total
+                );
+            }
+            if dst_page.runs != src_page.runs {
+                bail!("round-trip metadata mismatch for {scenario:?} at offset {offset}");
+            }
+            for meta in &src_page.runs {
+                let a = src.load_doc(scenario, &meta.run_id)?;
+                let b = dest.load_doc(scenario, &meta.run_id)?;
+                if a != b {
+                    bail!(
+                        "round-trip document mismatch for {scenario}/{}",
+                        meta.run_id
+                    );
+                }
+                verified_bytes += a.len() as u64;
+            }
+            offset += src_page.runs.len();
+            if offset >= src_page.total {
+                break;
+            }
+        }
+    }
+
+    Ok(CompactReport {
+        scenarios: scenarios.len(),
+        runs: runs_total,
+        verified_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idx_record_roundtrips_at_fixed_width() {
+        let rec = IdxRecord {
+            seq: 123_456,
+            meta_off: 7,
+            meta_len: 88,
+            doc_off: 95,
+            doc_len: 4096,
+            commit: encode_commit("8c99d17aa0b1"),
+        };
+        let bytes = rec.encode();
+        assert_eq!(bytes.len(), IDX_RECORD_LEN);
+        assert_eq!(IdxRecord::decode(&bytes), rec);
+    }
+
+    #[test]
+    fn commit_bytes_pad_and_truncate() {
+        assert_eq!(&encode_commit("abc")[..3], b"abc");
+        assert!(encode_commit("abc")[3..].iter().all(|b| *b == 0));
+        // Longer than the field: truncated, still deterministic.
+        let long = "0123456789abcdef0123";
+        assert_eq!(&encode_commit(long)[..], &long.as_bytes()[..COMMIT_BYTES]);
+    }
+}

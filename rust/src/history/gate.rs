@@ -174,6 +174,19 @@ fn shift_at_end(series: &[f64], min_shift: f64) -> bool {
     }
 }
 
+/// Evaluate the gate against the newest runs of `scenario` in `store`,
+/// loading only the `window + 1` runs the policy needs (paged — never
+/// the whole archive). The convenience entry point shared by the CLI
+/// and `GET /gate`.
+pub fn evaluate_latest(
+    store: &super::store::HistoryStore,
+    scenario: &str,
+    policy: &GatePolicy,
+) -> Result<GateOutcome> {
+    let tl = Timeline::load_last(store, scenario, policy.window + 1)?;
+    evaluate(&tl, policy)
+}
+
 /// Evaluate the gate over a timeline: newest run vs. the policy's
 /// baseline window.
 pub fn evaluate(tl: &Timeline, policy: &GatePolicy) -> Result<GateOutcome> {

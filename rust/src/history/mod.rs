@@ -6,29 +6,40 @@
 //! "did commit N regress benchmark B relative to its recorded history?".
 //! Three layers:
 //!
-//! * [`store`] — an append-only on-disk archive of
-//!   `elastibench.scenario-report.v1` documents (one directory per
-//!   scenario, one JSON file per run, a compact `index.jsonl` of run
-//!   metadata) plus the typed importer/re-exporter that round-trips the
-//!   report schema losslessly;
+//! * [`store`] — an append-only archive of
+//!   `elastibench.scenario-report.v1` documents over a pluggable
+//!   [`backend`] (the original per-scenario-dir + `index.jsonl` layout,
+//!   or the [`compact`] segment-file layout for 10⁵–10⁶-run archives)
+//!   plus the typed importer/re-exporter that round-trips the report
+//!   schema losslessly;
 //! * [`timeline`] — runs in recording order and sparse per-benchmark
 //!   series that survive benchmark appearance/disappearance across
 //!   commits;
 //! * [`gate`] — a deterministic regression policy: newest run vs. a
 //!   baseline window of K prior runs, median-robust thresholds, and a
-//!   change-point pass so one noisy run never blocks a merge.
+//!   change-point pass so one noisy run never blocks a merge;
+//! * [`view`] — canonical JSON views shared by the CLI `--json` flags
+//!   and the [`crate::serve`] HTTP endpoints (byte-identical output by
+//!   construction).
 //!
-//! CLI surface: `elastibench history record | list | show | diff | gate`
-//! (see [`crate::cli`]); scenarios opt into auto-recording with a
-//! `[history]` recipe section. Everything is deterministic: commits and
-//! timestamps come from flags, recipe fields or the environment — never
-//! from the wall clock.
+//! CLI surface: `elastibench history record | list | show | diff | gate
+//! | compact` plus `elastibench serve` (see [`crate::cli`]); scenarios
+//! opt into auto-recording with a `[history]` recipe section.
+//! Everything is deterministic: commits and timestamps come from flags,
+//! recipe fields or the environment — never from the wall clock.
 
+pub mod backend;
+pub mod compact;
 pub mod gate;
 pub mod store;
 pub mod timeline;
+pub mod view;
 
-pub use gate::{best_split, evaluate, GateFinding, GateOutcome, GatePolicy, GateReason};
+pub use backend::{BackendKind, FsBackend, RunsPage, StorageBackend};
+pub use compact::{CompactBackend, CompactReport};
+pub use gate::{
+    best_split, evaluate, evaluate_latest, GateFinding, GateOutcome, GatePolicy, GateReason,
+};
 pub use store::{
     parse_scenario_report, stored_run_to_json, HistoryStore, RunMeta, StoredAdaptive,
     StoredLive, StoredMetadata, StoredPlatform, StoredRun, StoredRunMetrics, StoredScenario,

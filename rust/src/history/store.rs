@@ -1,35 +1,37 @@
-//! Append-only on-disk archive of scenario runs — the durable half of
+//! Append-only archive of scenario runs — the durable half of
 //! *continuous* benchmarking.
 //!
-//! Layout (one directory per scenario, one JSON file per run):
+//! [`HistoryStore`] is a thin, cloneable handle over a
+//! [`StorageBackend`] (see [`super::backend`]); the two shipped layouts
+//! are:
 //!
-//! ```text
-//! <root>/
-//!   <scenario>/
-//!     index.jsonl        # one compact metadata line per recorded run
-//!     0001-8c99d17.json  # full elastibench.scenario-report.v1 document
-//!     0002-b35d986.json
-//! ```
+//! * [`super::backend::FsBackend`] — one directory per scenario, one
+//!   JSON file per run, an `index.jsonl` of compact metadata lines (the
+//!   original layout; `HistoryStore::open` picks it by default).
+//! * [`super::compact::CompactBackend`] — per-scenario segment files
+//!   plus a fixed-width binary offset index, for 10⁵–10⁶-run archives.
+//!   `open` auto-detects it via the store's `compact.marker` file.
 //!
-//! The `index.jsonl` is the cheap path: `history list` and run ordering
-//! never parse full reports. Run ids are `SEQ-COMMIT` where `SEQ` is the
-//! 1-based recording order — recording order *is* timeline order, and
-//! timestamps are opaque caller-provided strings (a CI run number, an
-//! ISO date, anything), never read from the wall clock, so every store
-//! operation is deterministic.
+//! Run ids are `SEQ-COMMIT` where `SEQ` is the 1-based recording order —
+//! recording order *is* timeline order, and timestamps are opaque
+//! caller-provided strings (a CI run number, an ISO date, anything),
+//! never read from the wall clock, so every store operation is
+//! deterministic.
 //!
 //! [`parse_scenario_report`] is the importer half of
 //! [`crate::report::scenario_report_to_json`]: it parses a v1 report
 //! back into typed structs ([`StoredRun`]), and [`stored_run_to_json`]
 //! re-exports them losslessly (round-trip asserted by property tests).
 
-use crate::report::{scenario_report_to_json, short_commit, write_text, SCENARIO_REPORT_SCHEMA};
+use super::backend::{BackendKind, FsBackend, RunsPage, StorageBackend};
+use super::compact::{CompactBackend, COMPACT_MARKER};
+use crate::report::{scenario_report_to_json, SCENARIO_REPORT_SCHEMA};
 use crate::scenario::ScenarioReport;
 use crate::stats::{BenchmarkVerdict, ChangeKind, SuiteAnalysis};
-use crate::util::json::{obj, parse, Json};
+use crate::util::json::{obj, Json};
 use anyhow::{anyhow, bail, Context, Result};
-use std::io::Write as _;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Default store root used by the CLI and `[history]` recipe sections.
 pub const DEFAULT_STORE_DIR: &str = "results/history";
@@ -66,6 +68,27 @@ pub struct RunMeta {
 }
 
 impl RunMeta {
+    /// Derive the index metadata of a freshly recorded run. Every
+    /// backend builds its metadata through here so the fields stay
+    /// identical across layouts (the differential-oracle invariant).
+    pub fn from_run(run: &StoredRun, run_id: &str, timestamp: &str) -> RunMeta {
+        RunMeta {
+            run_id: run_id.to_string(),
+            scenario: run.scenario.name.clone(),
+            commit: run.metadata.commit.clone(),
+            profile: run.scenario.profile.clone(),
+            engine: run.metadata.engine.clone(),
+            seed: run.metadata.seed,
+            timestamp: timestamp.to_string(),
+            analyzed: run.analysis.verdicts.len(),
+            regressions: count(&run.analysis, ChangeKind::Regression),
+            improvements: count(&run.analysis, ChangeKind::Improvement),
+            excluded: run.analysis.excluded.len(),
+            wall_s: run.run.wall_s,
+            cost_usd: run.run.cost_usd,
+        }
+    }
+
     /// Serialize as one `index.jsonl` line (without trailing newline).
     pub fn to_json(&self) -> Json {
         obj(vec![
@@ -116,74 +139,81 @@ impl RunMeta {
     }
 }
 
-/// The append-only run archive rooted at one directory.
+/// The append-only run archive: a cloneable handle over one storage
+/// backend. Shared freely across threads (`elastibench serve` clones it
+/// into every connection handler).
 #[derive(Debug, Clone)]
 pub struct HistoryStore {
-    root: PathBuf,
+    backend: Arc<dyn StorageBackend>,
 }
 
 impl HistoryStore {
-    /// Open (lazily — nothing is created until the first record) a store
-    /// rooted at `root`.
+    /// Open a store rooted at `root`, auto-detecting the layout: a
+    /// `compact.marker` file selects the compact backend, anything else
+    /// (including a store that does not exist yet) the filesystem one.
+    /// Nothing is created until the first record.
     pub fn open(root: impl Into<PathBuf>) -> Self {
-        HistoryStore { root: root.into() }
+        let root = root.into();
+        if root.join(COMPACT_MARKER).is_file() {
+            Self::open_compact(root)
+        } else {
+            Self::open_fs(root)
+        }
+    }
+
+    /// Open `root` explicitly as a filesystem-layout store.
+    pub fn open_fs(root: impl Into<PathBuf>) -> Self {
+        Self::from_backend(Arc::new(FsBackend::open(root)))
+    }
+
+    /// Open `root` explicitly as a compact-layout store.
+    pub fn open_compact(root: impl Into<PathBuf>) -> Self {
+        Self::from_backend(Arc::new(CompactBackend::open(root)))
+    }
+
+    /// Wrap an already constructed backend.
+    pub fn from_backend(backend: Arc<dyn StorageBackend>) -> Self {
+        HistoryStore { backend }
+    }
+
+    /// Which on-disk layout this store uses.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
     }
 
     /// The store root directory.
     pub fn root(&self) -> &std::path::Path {
-        &self.root
-    }
-
-    fn scenario_dir(&self, scenario: &str) -> Result<PathBuf> {
-        if scenario.is_empty()
-            || scenario.contains(&['/', '\\'][..])
-            || scenario.starts_with('.')
-        {
-            bail!("unsafe scenario name {scenario:?} for a store path");
-        }
-        Ok(self.root.join(scenario))
+        self.backend.root()
     }
 
     /// Scenarios with at least one recorded run, sorted by name.
     pub fn scenarios(&self) -> Result<Vec<String>> {
-        let mut out = Vec::new();
-        let entries = match std::fs::read_dir(&self.root) {
-            Ok(e) => e,
-            Err(_) => return Ok(out), // absent root = empty store
-        };
-        for entry in entries {
-            let entry = entry.with_context(|| format!("read {}", self.root.display()))?;
-            if entry.path().join("index.jsonl").is_file() {
-                if let Some(name) = entry.file_name().to_str() {
-                    out.push(name.to_string());
-                }
-            }
-        }
-        out.sort();
-        Ok(out)
+        self.backend.scenarios()
     }
 
     /// Recorded runs of one scenario, in recording (= timeline) order.
     /// An unrecorded scenario yields an empty list, not an error.
+    /// Materializes the whole listing — prefer [`Self::runs_page`] on
+    /// stores that may hold many runs.
     pub fn runs(&self, scenario: &str) -> Result<Vec<RunMeta>> {
-        let index = self.scenario_dir(scenario)?.join("index.jsonl");
-        let text = match std::fs::read_to_string(&index) {
-            Ok(t) => t,
-            Err(_) => return Ok(Vec::new()),
-        };
-        let mut out = Vec::new();
-        for (i, line) in text.lines().enumerate() {
-            if line.trim().is_empty() {
-                continue;
-            }
-            let j = parse(line)
-                .map_err(|e| anyhow!("{}:{}: {e}", index.display(), i + 1))?;
-            out.push(
-                RunMeta::from_json(&j)
-                    .with_context(|| format!("{}:{}", index.display(), i + 1))?,
-            );
-        }
-        Ok(out)
+        Ok(self.backend.runs_page(scenario, 0, usize::MAX)?.runs)
+    }
+
+    /// One page of a scenario's run listing (see
+    /// [`StorageBackend::runs_page`]).
+    pub fn runs_page(&self, scenario: &str, offset: usize, limit: usize) -> Result<RunsPage> {
+        self.backend.runs_page(scenario, offset, limit)
+    }
+
+    /// Total recorded runs of a scenario without materializing any
+    /// metadata page.
+    pub fn runs_total(&self, scenario: &str) -> Result<usize> {
+        Ok(self.backend.runs_page(scenario, 0, 0)?.total)
+    }
+
+    /// Sequence number of the newest recorded run (0 when none).
+    pub fn latest_seq(&self, scenario: &str) -> Result<usize> {
+        self.backend.latest_seq(scenario)
     }
 
     /// Record a freshly executed scenario run.
@@ -193,65 +223,27 @@ impl HistoryStore {
 
     /// Record a `elastibench.scenario-report.v1` document (the CLI path
     /// for report files produced elsewhere). Validates the full shape by
-    /// round-tripping it through the typed importer, appends an index
-    /// line and writes the run file. Returns the new run's metadata.
+    /// round-tripping it through the typed importer. Returns the new
+    /// run's metadata.
     pub fn record_json(&self, doc: &Json, timestamp: &str) -> Result<RunMeta> {
-        let run = parse_scenario_report(doc)?;
-        let scenario = run.scenario.name.clone();
-        let dir = self.scenario_dir(&scenario)?;
-        // Next sequence number: one past the index, skipping forward if
-        // a run file already occupies the slot (e.g. an index line was
-        // lost or another writer got there first). Never overwrite a
-        // recorded run — the store is append-only.
-        let mut seq = self.runs(&scenario)?.len() + 1;
-        let run_id = loop {
-            let candidate = format!("{seq:04}-{}", short_commit(&run.metadata.commit));
-            if !dir.join(format!("{candidate}.json")).exists() {
-                break candidate;
-            }
-            seq += 1;
-        };
-        let meta = RunMeta {
-            run_id: run_id.clone(),
-            scenario: scenario.clone(),
-            commit: run.metadata.commit.clone(),
-            profile: run.scenario.profile.clone(),
-            engine: run.metadata.engine.clone(),
-            seed: run.metadata.seed,
-            timestamp: timestamp.to_string(),
-            analyzed: run.analysis.verdicts.len(),
-            regressions: count(&run.analysis, ChangeKind::Regression),
-            improvements: count(&run.analysis, ChangeKind::Improvement),
-            excluded: run.analysis.excluded.len(),
-            wall_s: run.run.wall_s,
-            cost_usd: run.run.cost_usd,
-        };
-        write_text(&dir.join(format!("{run_id}.json")), &doc.to_string())?;
-        let index = dir.join("index.jsonl");
-        let mut file = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&index)
-            .with_context(|| format!("open {}", index.display()))?;
-        writeln!(file, "{}", meta.to_json().to_string())
-            .with_context(|| format!("append {}", index.display()))?;
-        Ok(meta)
+        self.backend.record_json(doc, timestamp)
     }
 
     /// Load one recorded run back into typed structs.
     pub fn load(&self, scenario: &str, run_id: &str) -> Result<StoredRun> {
-        if run_id.is_empty() || run_id.contains(&['/', '\\'][..]) || run_id.starts_with('.') {
-            bail!("unsafe run id {run_id:?}");
-        }
-        let path = self.scenario_dir(scenario)?.join(format!("{run_id}.json"));
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("read {}", path.display()))?;
-        let doc = parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
-        parse_scenario_report(&doc).with_context(|| path.display().to_string())
+        self.backend.load(scenario, run_id)
+    }
+
+    /// The stored report document of one run, byte-identical to what was
+    /// recorded.
+    pub fn load_doc(&self, scenario: &str, run_id: &str) -> Result<String> {
+        self.backend.load_doc(scenario, run_id)
     }
 
     /// Load every run of a scenario in timeline order, paired with its
-    /// index metadata.
+    /// index metadata. O(all runs) by definition — the paged
+    /// [`super::Timeline`] loaders are the scalable path; this survives
+    /// as their differential oracle in tests.
     pub fn load_all(&self, scenario: &str) -> Result<Vec<(RunMeta, StoredRun)>> {
         let metas = self.runs(scenario)?;
         let mut out = Vec::with_capacity(metas.len());
@@ -732,6 +724,7 @@ mod tests {
     use super::*;
     use crate::scenario::{catalog_entry, run_scenario};
     use crate::stats::Analyzer;
+    use crate::util::json::parse;
 
     fn temp_store(tag: &str) -> HistoryStore {
         let dir = std::env::temp_dir().join(format!("elastibench_history_{tag}"));
@@ -834,6 +827,28 @@ mod tests {
             .count();
         assert_eq!(runs[0].regressions, regressions);
         assert_eq!(store.scenarios().unwrap(), vec!["quick-smoke".to_string()]);
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn pagination_slices_the_listing() {
+        let store = temp_store("paging");
+        let mut report = quick_report();
+        for commit in ["c-one", "c-two", "c-three"] {
+            report.commit = commit.to_string();
+            store.record(&report, commit).unwrap();
+        }
+        assert_eq!(store.runs_total("quick-smoke").unwrap(), 3);
+        assert_eq!(store.latest_seq("quick-smoke").unwrap(), 3);
+        let page = store.runs_page("quick-smoke", 1, 1).unwrap();
+        assert_eq!(page.total, 3);
+        assert_eq!(page.offset, 1);
+        assert_eq!(page.runs.len(), 1);
+        assert_eq!(page.runs[0].run_id, "0002-c-two");
+        // Past-the-end offsets yield an empty page, not an error.
+        let past = store.runs_page("quick-smoke", 10, 5).unwrap();
+        assert_eq!(past.total, 3);
+        assert!(past.runs.is_empty());
         let _ = std::fs::remove_dir_all(store.root());
     }
 

@@ -81,31 +81,52 @@ impl BenchmarkSeries {
     }
 }
 
+/// Page size for walking a store's run listing; bounds peak metadata
+/// memory to one chunk regardless of archive size.
+const LOAD_CHUNK: usize = 256;
+
 impl Timeline {
-    /// Load every recorded run of `scenario` from the store.
+    /// Load every recorded run of `scenario` from the store, paging
+    /// through the listing in bounded chunks.
     pub fn load(store: &HistoryStore, scenario: &str) -> Result<Timeline> {
-        let entries = store
-            .load_all(scenario)?
-            .into_iter()
-            .map(|(meta, run)| TimelineEntry { meta, run })
-            .collect();
-        Ok(Timeline {
-            scenario: scenario.to_string(),
-            entries,
-        })
+        Self::load_range(store, scenario, 0, usize::MAX)
     }
 
     /// Load only the newest `n` recorded runs — the cheap path for the
-    /// gate (`window + 1` runs) and bounded trend views: the index is
-    /// read once and only the needed report files are parsed, keeping
-    /// the PR-blocking path O(window) instead of O(archive).
+    /// gate (`window + 1` runs) and bounded trend views: only one total
+    /// probe plus the needed index/report slice is read, keeping the
+    /// PR-blocking path O(window) instead of O(archive).
     pub fn load_last(store: &HistoryStore, scenario: &str, n: usize) -> Result<Timeline> {
-        let metas = store.runs(scenario)?;
-        let skip = metas.len().saturating_sub(n);
-        let mut entries = Vec::with_capacity(metas.len() - skip);
-        for meta in metas.into_iter().skip(skip) {
-            let run = store.load(scenario, &meta.run_id)?;
-            entries.push(TimelineEntry { meta, run });
+        let total = store.runs_total(scenario)?;
+        Self::load_range(store, scenario, total.saturating_sub(n), n)
+    }
+
+    /// Load up to `limit` runs starting at `offset` via the paged
+    /// backend API.
+    fn load_range(
+        store: &HistoryStore,
+        scenario: &str,
+        offset: usize,
+        limit: usize,
+    ) -> Result<Timeline> {
+        let mut entries = Vec::new();
+        let mut at = offset;
+        let mut left = limit;
+        loop {
+            let page = store.runs_page(scenario, at, left.min(LOAD_CHUNK))?;
+            if page.runs.is_empty() {
+                break;
+            }
+            let got = page.runs.len();
+            for meta in page.runs {
+                let run = store.load(scenario, &meta.run_id)?;
+                entries.push(TimelineEntry { meta, run });
+            }
+            at += got;
+            left = left.saturating_sub(got);
+            if left == 0 || at >= page.total {
+                break;
+            }
         }
         Ok(Timeline {
             scenario: scenario.to_string(),

@@ -1,0 +1,187 @@
+//! Canonical JSON views of the history store.
+//!
+//! Every machine-readable surface — `history list/show/diff/gate
+//! --json` on the CLI and the corresponding `elastibench serve`
+//! endpoints — renders through these builders, so the two surfaces are
+//! byte-identical by construction (asserted by the `serve_api`
+//! integration tests and the `serve-smoke` CI job). Keys are
+//! alphabetically ordered by the canonical [`Json`] writer, which makes
+//! the output stable enough to diff, hash, or ETag.
+
+use super::gate::{GateOutcome, GatePolicy};
+use super::store::{HistoryStore, StoredRun};
+use super::timeline::Timeline;
+use crate::util::json::{obj, Json};
+use anyhow::Result;
+
+fn str_arr(items: &[String]) -> Json {
+    Json::Arr(items.iter().map(|s| Json::Str(s.clone())).collect())
+}
+
+/// The scenario summary: every recorded scenario with its run count and
+/// commit chain (what `history list` prints as a table).
+pub fn scenarios_json(store: &HistoryStore) -> Result<Json> {
+    let mut items = Vec::new();
+    for name in store.scenarios()? {
+        let runs = store.runs(&name)?;
+        let commits: Vec<String> = runs.iter().map(|r| r.commit.clone()).collect();
+        items.push(obj(vec![
+            ("name", Json::Str(name)),
+            ("runs", Json::Num(runs.len() as f64)),
+            ("commits", str_arr(&commits)),
+        ]));
+    }
+    Ok(obj(vec![("scenarios", Json::Arr(items))]))
+}
+
+/// One page of a scenario's run listing. `per_page` is the *effective*
+/// page size the caller used (a concrete number even when the CLI
+/// listed everything), so clients can compute page counts.
+pub fn runs_page_json(scenario: &str, page: &super::backend::RunsPage, per_page: usize) -> Json {
+    let runs: Vec<Json> = page.runs.iter().map(|m| m.to_json()).collect();
+    obj(vec![
+        ("scenario", Json::Str(scenario.to_string())),
+        ("total", Json::Num(page.total as f64)),
+        ("offset", Json::Num(page.offset as f64)),
+        ("per_page", Json::Num(per_page as f64)),
+        ("runs", Json::Arr(runs)),
+    ])
+}
+
+/// Benchmark-by-benchmark diff of two stored runs — the JSON mirror of
+/// the `history diff` table, row for row: union of benchmark names
+/// (sorted), absent sides are `null`, and the verdict strings match the
+/// table (`"appeared"`, `"disappeared"`, a single change kind, or
+/// `"a -> b"` on a flip).
+pub fn diff_json(scenario: &str, id_a: &str, id_b: &str, a: &StoredRun, b: &StoredRun) -> Json {
+    let mut names: Vec<String> = a
+        .analysis
+        .verdicts
+        .iter()
+        .chain(&b.analysis.verdicts)
+        .map(|v| v.name.clone())
+        .collect();
+    names.sort();
+    names.dedup();
+    let mut rows = Vec::new();
+    for name in &names {
+        let (a_pct, b_pct, delta, verdict) = match (a.verdict(name), b.verdict(name)) {
+            (Some(va), Some(vb)) => {
+                let pa = va.output.boot_median_pct as f64;
+                let pb = vb.output.boot_median_pct as f64;
+                let verdict = if va.change == vb.change {
+                    va.change.as_str().to_string()
+                } else {
+                    format!("{} -> {}", va.change.as_str(), vb.change.as_str())
+                };
+                (Json::Num(pa), Json::Num(pb), Json::Num(pb - pa), verdict)
+            }
+            (Some(va), None) => (
+                Json::Num(va.output.boot_median_pct as f64),
+                Json::Null,
+                Json::Null,
+                "disappeared".to_string(),
+            ),
+            (None, Some(vb)) => (
+                Json::Null,
+                Json::Num(vb.output.boot_median_pct as f64),
+                Json::Null,
+                "appeared".to_string(),
+            ),
+            (None, None) => continue,
+        };
+        rows.push(obj(vec![
+            ("benchmark", Json::Str(name.clone())),
+            ("a_pct", a_pct),
+            ("b_pct", b_pct),
+            ("delta_pct", delta),
+            ("verdict", Json::Str(verdict)),
+        ]));
+    }
+    obj(vec![
+        ("scenario", Json::Str(scenario.to_string())),
+        ("a", Json::Str(id_a.to_string())),
+        ("a_commit", Json::Str(a.metadata.commit.clone())),
+        ("b", Json::Str(id_b.to_string())),
+        ("b_commit", Json::Str(b.metadata.commit.clone())),
+        ("benchmarks", Json::Arr(rows)),
+    ])
+}
+
+/// Gate outcome plus the policy it was evaluated under (the JSON mirror
+/// of `history gate`'s report; `passed` carries the exit-code verdict).
+pub fn gate_json(policy: &GatePolicy, outcome: &GateOutcome) -> Json {
+    let findings: Vec<Json> = outcome
+        .findings
+        .iter()
+        .map(|f| {
+            obj(vec![
+                ("benchmark", Json::Str(f.benchmark.clone())),
+                ("reason", Json::Str(f.reason.as_str().to_string())),
+                ("newest_pct", Json::Num(f.newest_pct)),
+                ("newest_ci_lo_pct", Json::Num(f.newest_ci_lo_pct)),
+                ("newest_ci_hi_pct", Json::Num(f.newest_ci_hi_pct)),
+                ("baseline_median_pct", Json::Num(f.baseline_median_pct)),
+                ("delta_pct", Json::Num(f.delta_pct)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("scenario", Json::Str(outcome.scenario.clone())),
+        ("newest_run", Json::Str(outcome.newest_run.clone())),
+        ("newest_commit", Json::Str(outcome.newest_commit.clone())),
+        ("baseline_runs", str_arr(&outcome.baseline_runs)),
+        (
+            "policy",
+            obj(vec![
+                ("window", Json::Num(policy.window as f64)),
+                ("threshold_pct", Json::Num(policy.threshold_pct)),
+                ("min_baseline", Json::Num(policy.min_baseline as f64)),
+            ]),
+        ),
+        ("checked", Json::Num(outcome.checked as f64)),
+        ("passed", Json::Bool(outcome.passed())),
+        (
+            "skipped",
+            match &outcome.skipped {
+                None => Json::Null,
+                Some(why) => Json::Str(why.clone()),
+            },
+        ),
+        ("new_benchmarks", str_arr(&outcome.new_benchmarks)),
+        ("missing_benchmarks", str_arr(&outcome.missing_benchmarks)),
+        ("findings", Json::Arr(findings)),
+    ])
+}
+
+/// A loaded timeline: run metadata in order plus every benchmark's
+/// sparse series (the JSON mirror of the `history show` trend table).
+pub fn timeline_json(tl: &Timeline) -> Json {
+    let runs: Vec<Json> = tl.entries.iter().map(|e| e.meta.to_json()).collect();
+    let mut benchmarks = Vec::new();
+    for name in tl.benchmark_names() {
+        let series = tl.series(&name);
+        let points: Vec<Json> = series
+            .points
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("run_idx", Json::Num(p.run_idx as f64)),
+                    ("change", Json::Str(p.change.as_str().to_string())),
+                    ("boot_median_pct", Json::Num(p.boot_median_pct)),
+                    ("ci_lo_pct", Json::Num(p.ci_lo_pct)),
+                    ("ci_hi_pct", Json::Num(p.ci_hi_pct)),
+                ])
+            })
+            .collect();
+        benchmarks.push(obj(vec![
+            ("name", Json::Str(name)),
+            ("points", Json::Arr(points)),
+        ]));
+    }
+    obj(vec![
+        ("scenario", Json::Str(tl.scenario.clone())),
+        ("runs", Json::Arr(runs)),
+        ("benchmarks", Json::Arr(benchmarks)),
+    ])
+}

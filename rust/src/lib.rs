@@ -34,6 +34,7 @@ pub mod history;
 pub mod report;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod stats;
 pub mod sut;
 pub mod telemetry;

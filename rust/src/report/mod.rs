@@ -16,7 +16,8 @@ pub use export::{
 pub use tables::{
     agreement_table, comparison_row, experiment_summary_table, fmt_duration,
     gate_table, history_runs_table, live_stop_table, paper_vs_measured_table,
-    strategy_scoreboard_table, sweep_summary_table, telemetry_table, trend_table,
+    run_list_footer, strategy_scoreboard_table, sweep_summary_table,
+    telemetry_table, trend_table,
     GateRow, HistoryRunRow, LiveStopRow, PaperRow, StrategyScoreRow, SummaryRow,
     SweepRow, TrendCell,
 };

@@ -130,6 +130,24 @@ pub fn history_runs_table(rows: &[HistoryRunRow]) -> String {
     out
 }
 
+/// Pagination footer under a paged run listing (`history list SCENARIO
+/// --limit N`): which slice of the archive is shown and how to get the
+/// rest.
+pub fn run_list_footer(offset: usize, shown: usize, total: usize, per_page: usize) -> String {
+    let pages = total.div_ceil(per_page.max(1));
+    let page = offset / per_page.max(1) + 1;
+    if shown == 0 {
+        return format!(
+            "\nno runs on page {page} of {pages} ({total} run(s) total; --page up to {pages})\n"
+        );
+    }
+    let lo = offset + 1;
+    let hi = offset + shown;
+    format!(
+        "\nruns {lo}-{hi} of {total} (page {page} of {pages}; --limit {per_page}, --page to navigate)\n"
+    )
+}
+
 /// One cell of the cross-run trend table: bootstrap median difference
 /// [%] plus a verdict marker (`R` regression, `I` improvement, empty for
 /// no change). `None` = benchmark absent from that run.
@@ -484,6 +502,20 @@ mod tests {
         assert!(row.contains("4.20%"));
         let table = agreement_table(&[row]);
         assert!(table.contains("| pair |"));
+    }
+
+    #[test]
+    fn run_list_footer_reports_slice_and_pages() {
+        let f = run_list_footer(20, 10, 47, 10);
+        assert!(f.contains("runs 21-30 of 47"), "{f}");
+        assert!(f.contains("page 3 of 5"), "{f}");
+        // A page past the end shows the navigation hint instead of a range.
+        let empty = run_list_footer(50, 0, 47, 10);
+        assert!(empty.contains("no runs on page 6 of 5"), "{empty}");
+        // One exact page: the whole listing.
+        let all = run_list_footer(0, 47, 47, 47);
+        assert!(all.contains("runs 1-47 of 47"), "{all}");
+        assert!(all.contains("page 1 of 1"), "{all}");
     }
 
     #[test]

@@ -1,0 +1,407 @@
+//! Request routing and endpoint handlers for `elastibench serve`.
+//!
+//! Every read endpoint renders through [`crate::history::view`] — the
+//! same builders behind the CLI's `--json` flags — so a curl of an
+//! endpoint is byte-identical to the corresponding CLI command
+//! (asserted by the `serve_api` tests and the `serve-smoke` CI job).
+//!
+//! Concurrency: handlers take a process-wide read/write lock —
+//! many concurrent readers, one writer (`POST /record`) — on top of the
+//! backends' own crash-safe append protocols, so a poll can never
+//! observe a half-recorded run.
+//!
+//! Caching: run documents are commit-addressed (a run id embeds its seq
+//! and commit and is never rewritten), so `GET /run/...` carries a
+//! strong ETag and honors `If-None-Match` with an empty `304`. Gate and
+//! timeline responses are pure functions of (newest run id, run count,
+//! parameters); their ETags are built from exactly that, which lets CI
+//! pollers revalidate without the server re-evaluating anything.
+
+use crate::history::{evaluate_latest, view, GatePolicy, HistoryStore};
+use crate::serve::http::{Request, Response};
+use crate::util::json::{obj, Json};
+use std::sync::RwLock;
+
+/// Shared server state: the store handle plus the reader/writer lock.
+#[derive(Debug)]
+pub struct ServeState {
+    store: HistoryStore,
+    lock: RwLock<()>,
+}
+
+impl ServeState {
+    pub fn new(store: HistoryStore) -> ServeState {
+        ServeState {
+            store,
+            lock: RwLock::new(()),
+        }
+    }
+
+    /// The store this server answers for.
+    pub fn store(&self) -> &HistoryStore {
+        &self.store
+    }
+}
+
+/// Route one request to its handler. Never panics the connection
+/// thread: parameter problems are `400`, missing resources `404`,
+/// wrong methods `405`, store failures `500`.
+pub fn handle(state: &ServeState, req: &Request) -> Response {
+    let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    let get = req.method == "GET";
+    match segments.as_slice() {
+        [] if get => index(state),
+        ["scenarios"] if get => locked_read(state, |s| scenarios(s)),
+        ["runs", scenario] if get => locked_read(state, |s| runs(s, scenario, req)),
+        ["run", scenario, id] if get => locked_read(state, |s| run_doc(s, scenario, id, req)),
+        ["diff"] if get => locked_read(state, |s| diff(s, req)),
+        ["gate"] if get => locked_read(state, |s| gate(s, req)),
+        ["timeline"] if get => locked_read(state, |s| timeline(s, req)),
+        ["record"] if req.method == "POST" => record(state, req),
+        [] | ["scenarios"] | ["runs", _] | ["run", _, _] | ["diff"] | ["gate"]
+        | ["timeline"] | ["record"] => {
+            Response::error(405, &format!("method {} not allowed here", req.method))
+        }
+        _ => Response::error(404, &format!("no such endpoint {:?}", req.path)),
+    }
+}
+
+/// Run a read handler under the shared read lock. A poisoned lock (a
+/// handler thread panicked) still serves: the data underneath is
+/// crash-safe by construction.
+fn locked_read(state: &ServeState, f: impl FnOnce(&ServeState) -> Response) -> Response {
+    let _guard = state.lock.read().unwrap_or_else(|e| e.into_inner());
+    f(state)
+}
+
+fn index(state: &ServeState) -> Response {
+    let endpoints = [
+        "GET /scenarios",
+        "GET /runs/{scenario}?page=&per_page=",
+        "GET /run/{scenario}/{id}",
+        "GET /diff?scenario=&a=&b=",
+        "GET /gate?scenario=&window=&threshold=&min_baseline=",
+        "GET /timeline?scenario=&last=",
+        "POST /record?timestamp=",
+    ];
+    let doc = obj(vec![
+        ("service", Json::Str("elastibench".into())),
+        (
+            "store",
+            Json::Str(state.store.root().display().to_string()),
+        ),
+        (
+            "backend",
+            Json::Str(state.store.backend_kind().as_str().into()),
+        ),
+        (
+            "endpoints",
+            Json::Arr(endpoints.iter().map(|e| Json::Str((*e).into())).collect()),
+        ),
+    ]);
+    Response::json(200, &doc.to_string())
+}
+
+fn scenarios(state: &ServeState) -> Response {
+    match view::scenarios_json(&state.store) {
+        Ok(doc) => Response::json(200, &doc.to_string()),
+        Err(e) => Response::error(500, &format!("{e:#}")),
+    }
+}
+
+/// Parse an optional non-negative integer query parameter.
+fn usize_param(req: &Request, key: &str) -> Result<Option<usize>, Response> {
+    match req.query_get(key) {
+        None => Ok(None),
+        Some(text) => text.parse::<usize>().map(Some).map_err(|_| {
+            Response::error(
+                400,
+                &format!("query parameter {key:?} must be a non-negative integer, got {text:?}"),
+            )
+        }),
+    }
+}
+
+fn required_param<'a>(req: &'a Request, key: &str) -> Result<&'a str, Response> {
+    req.query_get(key)
+        .ok_or_else(|| Response::error(400, &format!("query parameter {key:?} is required")))
+}
+
+fn runs(state: &ServeState, scenario: &str, req: &Request) -> Response {
+    let page = match usize_param(req, "page") {
+        Ok(p) => p.unwrap_or(1),
+        Err(resp) => return resp,
+    };
+    let per_page = match usize_param(req, "per_page") {
+        Ok(p) => p.unwrap_or(50),
+        Err(resp) => return resp,
+    };
+    if page == 0 {
+        return Response::error(400, "query parameter \"page\" is 1-based");
+    }
+    if per_page == 0 || per_page > 500 {
+        return Response::error(400, "query parameter \"per_page\" must be in 1..=500");
+    }
+    let listing = match state.store.runs_page(scenario, (page - 1) * per_page, per_page) {
+        Ok(l) => l,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    if listing.total == 0 {
+        return Response::error(404, &format!("no recorded runs for {scenario:?}"));
+    }
+    Response::json(
+        200,
+        &view::runs_page_json(scenario, &listing, per_page).to_string(),
+    )
+}
+
+fn run_doc(state: &ServeState, scenario: &str, id: &str, req: &Request) -> Response {
+    let etag = format!("\"{scenario}/{id}\"");
+    if etag_matches(req.header("if-none-match"), &etag) {
+        return Response::not_modified(&etag);
+    }
+    match state.store.load_doc(scenario, id) {
+        Ok(doc) => Response::raw(200, doc.into_bytes()).with_header("ETag", &etag),
+        Err(e) => Response::error(404, &format!("{e:#}")),
+    }
+}
+
+fn diff(state: &ServeState, req: &Request) -> Response {
+    let (scenario, id_a, id_b) = match (
+        required_param(req, "scenario"),
+        required_param(req, "a"),
+        required_param(req, "b"),
+    ) {
+        (Ok(s), Ok(a), Ok(b)) => (s, a, b),
+        (Err(r), _, _) | (_, Err(r), _) | (_, _, Err(r)) => return r,
+    };
+    let a = match state.store.load(scenario, id_a) {
+        Ok(run) => run,
+        Err(e) => return Response::error(404, &format!("{e:#}")),
+    };
+    let b = match state.store.load(scenario, id_b) {
+        Ok(run) => run,
+        Err(e) => return Response::error(404, &format!("{e:#}")),
+    };
+    let etag = format!("\"diff/{scenario}/{id_a}/{id_b}\"");
+    if etag_matches(req.header("if-none-match"), &etag) {
+        return Response::not_modified(&etag);
+    }
+    Response::json(
+        200,
+        &view::diff_json(scenario, id_a, id_b, &a, &b).to_string(),
+    )
+    .with_header("ETag", &etag)
+}
+
+/// Gate policy for a served scenario: recipe-overlaid defaults (same
+/// resolution as the CLI), then query-parameter overrides.
+fn gate_params(req: &Request, scenario: &str) -> Result<GatePolicy, Response> {
+    let mut policy = crate::cli::scenario_gate_policy(scenario);
+    if let Some(w) = usize_param(req, "window")? {
+        if w == 0 {
+            return Err(Response::error(400, "query parameter \"window\" must be >= 1"));
+        }
+        policy.window = w;
+    }
+    if let Some(m) = usize_param(req, "min_baseline")? {
+        if m == 0 {
+            return Err(Response::error(
+                400,
+                "query parameter \"min_baseline\" must be >= 1",
+            ));
+        }
+        policy.min_baseline = m;
+    }
+    if let Some(text) = req.query_get("threshold") {
+        match text.parse::<f64>() {
+            Ok(t) if t >= 0.0 => policy.threshold_pct = t,
+            _ => {
+                return Err(Response::error(
+                    400,
+                    &format!("query parameter \"threshold\" must be >= 0, got {text:?}"),
+                ))
+            }
+        }
+    }
+    Ok(policy)
+}
+
+/// The newest run id of a scenario, or a 404/500 response.
+fn newest_run_id(store: &HistoryStore, scenario: &str) -> Result<(String, usize), Response> {
+    let total = match store.runs_total(scenario) {
+        Ok(t) => t,
+        Err(e) => return Err(Response::error(400, &format!("{e:#}"))),
+    };
+    if total == 0 {
+        return Err(Response::error(
+            404,
+            &format!("no recorded runs for {scenario:?}"),
+        ));
+    }
+    match store.runs_page(scenario, total - 1, 1) {
+        Ok(page) => match page.runs.into_iter().next() {
+            Some(meta) => Ok((meta.run_id, total)),
+            None => Err(Response::error(500, "run listing shrank mid-request")),
+        },
+        Err(e) => Err(Response::error(500, &format!("{e:#}"))),
+    }
+}
+
+fn gate(state: &ServeState, req: &Request) -> Response {
+    let scenario = match required_param(req, "scenario") {
+        Ok(s) => s,
+        Err(r) => return r,
+    };
+    let policy = match gate_params(req, scenario) {
+        Ok(p) => p,
+        Err(r) => return r,
+    };
+    // The outcome is a pure function of (newest run, total, policy), so
+    // the ETag is too — a matching If-None-Match skips evaluation.
+    let (newest, total) = match newest_run_id(&state.store, scenario) {
+        Ok(pair) => pair,
+        Err(r) => return r,
+    };
+    let etag = format!(
+        "\"gate/{scenario}/{newest}/{total}/{}-{}-{}\"",
+        policy.window, policy.threshold_pct, policy.min_baseline
+    );
+    if etag_matches(req.header("if-none-match"), &etag) {
+        return Response::not_modified(&etag);
+    }
+    match evaluate_latest(&state.store, scenario, &policy) {
+        Ok(outcome) => Response::json(200, &view::gate_json(&policy, &outcome).to_string())
+            .with_header("ETag", &etag),
+        Err(e) => Response::error(500, &format!("{e:#}")),
+    }
+}
+
+fn timeline(state: &ServeState, req: &Request) -> Response {
+    let scenario = match required_param(req, "scenario") {
+        Ok(s) => s,
+        Err(r) => return r,
+    };
+    let last = match usize_param(req, "last") {
+        Ok(l) => l,
+        Err(r) => return r,
+    };
+    let (newest, total) = match newest_run_id(&state.store, scenario) {
+        Ok(pair) => pair,
+        Err(r) => return r,
+    };
+    let n = last.unwrap_or(total);
+    let etag = format!("\"timeline/{scenario}/{newest}/{total}/{n}\"");
+    if etag_matches(req.header("if-none-match"), &etag) {
+        return Response::not_modified(&etag);
+    }
+    match crate::history::Timeline::load_last(&state.store, scenario, n) {
+        Ok(tl) => {
+            Response::json(200, &view::timeline_json(&tl).to_string()).with_header("ETag", &etag)
+        }
+        Err(e) => Response::error(500, &format!("{e:#}")),
+    }
+}
+
+fn record(state: &ServeState, req: &Request) -> Response {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(400, "request body is not UTF-8"),
+    };
+    let doc = match crate::util::json::parse(text) {
+        Ok(d) => d,
+        Err(e) => return Response::error(400, &format!("parse report body: {e}")),
+    };
+    let timestamp = req.query_get("timestamp").unwrap_or("");
+    // The single writer: exclusive lock for the whole append.
+    let _guard = state.lock.write().unwrap_or_else(|e| e.into_inner());
+    match state.store.record_json(&doc, timestamp) {
+        Ok(meta) => Response::json(201, &meta.to_json().to_string()),
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    }
+}
+
+/// `If-None-Match` comparison: a comma-separated list of entity tags,
+/// `*` matching anything, weak (`W/`) prefixes compared weakly.
+fn etag_matches(header: Option<&str>, etag: &str) -> bool {
+    let Some(header) = header else {
+        return false;
+    };
+    header.split(',').map(str::trim).any(|candidate| {
+        candidate == "*"
+            || candidate == etag
+            || candidate.strip_prefix("W/") == Some(etag)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(path: &str, query: &[(&str, &str)]) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.into(),
+            query: query
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn etag_list_matching() {
+        assert!(etag_matches(Some("\"a\""), "\"a\""));
+        assert!(etag_matches(Some("\"x\", \"a\""), "\"a\""));
+        assert!(etag_matches(Some("*"), "\"a\""));
+        assert!(etag_matches(Some("W/\"a\""), "\"a\""));
+        assert!(!etag_matches(Some("\"b\""), "\"a\""));
+        assert!(!etag_matches(None, "\"a\""));
+    }
+
+    #[test]
+    fn unknown_paths_and_methods_are_refused() {
+        let state = ServeState::new(HistoryStore::open(
+            std::env::temp_dir().join("elastibench_serve_handlers_404"),
+        ));
+        let resp = handle(&state, &get("/nope", &[]));
+        assert_eq!(resp.status, 404);
+        let mut post = get("/scenarios", &[]);
+        post.method = "POST".into();
+        assert_eq!(handle(&state, &post).status, 405);
+    }
+
+    #[test]
+    fn parameter_validation_is_a_400() {
+        let state = ServeState::new(HistoryStore::open(
+            std::env::temp_dir().join("elastibench_serve_handlers_400"),
+        ));
+        let resp = handle(&state, &get("/runs/x", &[("page", "zero")]));
+        assert_eq!(resp.status, 400);
+        let resp = handle(&state, &get("/runs/x", &[("page", "0")]));
+        assert_eq!(resp.status, 400);
+        let resp = handle(&state, &get("/gate", &[]));
+        assert_eq!(resp.status, 400, "scenario is required");
+        let resp = handle(&state, &get("/gate", &[("scenario", "x"), ("window", "0")]));
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn empty_store_is_a_404() {
+        let dir = std::env::temp_dir().join("elastibench_serve_handlers_empty");
+        let _ = std::fs::remove_dir_all(&dir);
+        let state = ServeState::new(HistoryStore::open(dir));
+        assert_eq!(handle(&state, &get("/runs/x", &[])).status, 404);
+        assert_eq!(
+            handle(&state, &get("/gate", &[("scenario", "x")])).status,
+            404
+        );
+        assert_eq!(
+            handle(&state, &get("/timeline", &[("scenario", "x")])).status,
+            404
+        );
+        assert_eq!(handle(&state, &get("/run/x/0001-a", &[])).status, 404);
+    }
+}

@@ -1,0 +1,317 @@
+//! Minimal HTTP/1.1 plumbing for `elastibench serve` — request parsing
+//! and response writing over `std` only (no hyper, matching the crate's
+//! anyhow-only dependency policy).
+//!
+//! Scope is deliberately small: one request per connection
+//! (`Connection: close` on every response), `Content-Length` bodies
+//! only (no chunked encoding), and bounded reads — 64 KiB of request
+//! head, 16 MiB of body — so a misbehaving client cannot balloon the
+//! server. That is exactly what `curl`, CI jobs and dashboard pollers
+//! need, and nothing more.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, Read, Write};
+
+/// Upper bound on the request line + headers, in bytes.
+const MAX_HEAD_BYTES: usize = 64 * 1024;
+/// Upper bound on a request body (`POST /record` documents), in bytes.
+pub const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Method verbatim (`GET`, `POST`, ...).
+    pub method: String,
+    /// Percent-decoded path (`/runs/quick-smoke`), query stripped.
+    pub path: String,
+    /// Decoded query parameters in request order.
+    pub query: Vec<(String, String)>,
+    /// Headers with lowercased names, values trimmed.
+    pub headers: Vec<(String, String)>,
+    /// Body bytes (empty unless `Content-Length` said otherwise).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Read one request off `reader`. `Ok(None)` means the client
+    /// closed the connection cleanly before sending anything.
+    pub fn read_from(reader: &mut impl BufRead) -> Result<Option<Request>> {
+        let mut head_bytes = 0usize;
+        let mut line = String::new();
+        if reader.read_line(&mut line).context("read request line")? == 0 {
+            return Ok(None);
+        }
+        head_bytes += line.len();
+        let request_line = line.trim_end_matches(['\r', '\n']).to_string();
+        let mut parts = request_line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let target = parts.next().unwrap_or("").to_string();
+        let version = parts.next().unwrap_or("");
+        if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+            bail!("malformed request line {request_line:?}");
+        }
+
+        let mut headers = Vec::new();
+        loop {
+            let mut hline = String::new();
+            if reader.read_line(&mut hline).context("read header")? == 0 {
+                bail!("connection closed mid-headers");
+            }
+            head_bytes += hline.len();
+            if head_bytes > MAX_HEAD_BYTES {
+                bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
+            }
+            let hline = hline.trim_end_matches(['\r', '\n']);
+            if hline.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = hline.split_once(':') {
+                headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+            }
+        }
+
+        let content_length = headers
+            .iter()
+            .find(|(n, _)| n == "content-length")
+            .map(|(_, v)| {
+                v.parse::<usize>()
+                    .with_context(|| format!("bad Content-Length {v:?}"))
+            })
+            .transpose()?
+            .unwrap_or(0);
+        if content_length > MAX_BODY_BYTES {
+            bail!("request body of {content_length} bytes exceeds {MAX_BODY_BYTES}");
+        }
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body).context("read request body")?;
+
+        let (raw_path, raw_query) = match target.split_once('?') {
+            Some((p, q)) => (p, Some(q)),
+            None => (target.as_str(), None),
+        };
+        let path = percent_decode(raw_path, false);
+        let mut query = Vec::new();
+        if let Some(q) = raw_query {
+            for pair in q.split('&').filter(|p| !p.is_empty()) {
+                let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+                query.push((percent_decode(k, true), percent_decode(v, true)));
+            }
+        }
+
+        Ok(Some(Request {
+            method,
+            path,
+            query,
+            headers,
+            body,
+        }))
+    }
+
+    /// Header lookup by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// First query parameter with the given key.
+    pub fn query_get(&self, key: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Decode `%XX` escapes (and, in query strings, `+` as space). Invalid
+/// escapes pass through literally; invalid UTF-8 is replaced.
+pub fn percent_decode(text: &str, plus_as_space: bool) -> String {
+    let bytes = text.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' => {
+                let hex = bytes.get(i + 1..i + 3).and_then(|h| {
+                    std::str::from_utf8(h)
+                        .ok()
+                        .and_then(|h| u8::from_str_radix(h, 16).ok())
+                });
+                match hex {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b'+' if plus_as_space => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// One HTTP response, ready to serialize.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Status code.
+    pub status: u16,
+    /// Extra headers (Content-Type / Content-Length / Connection are
+    /// managed by the constructors and writer).
+    pub headers: Vec<(String, String)>,
+    /// Body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON body. Appends the trailing newline `println!` would, so
+    /// endpoint bodies are byte-identical to the CLI's `--json` output.
+    pub fn json(status: u16, text: &str) -> Response {
+        let mut body = text.as_bytes().to_vec();
+        body.push(b'\n');
+        Response {
+            status,
+            headers: vec![("Content-Type".into(), "application/json".into())],
+            body,
+        }
+    }
+
+    /// A verbatim body (no added newline) — `GET /run/...` returns the
+    /// stored document bytes exactly as recorded.
+    pub fn raw(status: u16, body: Vec<u8>) -> Response {
+        Response {
+            status,
+            headers: vec![("Content-Type".into(), "application/json".into())],
+            body,
+        }
+    }
+
+    /// A JSON error envelope: `{"error": "..."}`.
+    pub fn error(status: u16, message: &str) -> Response {
+        let doc = crate::util::json::obj(vec![(
+            "error",
+            crate::util::json::Json::Str(message.to_string()),
+        )]);
+        Response::json(status, &doc.to_string())
+    }
+
+    /// An empty `304 Not Modified` carrying the matched ETag.
+    pub fn not_modified(etag: &str) -> Response {
+        Response {
+            status: 304,
+            headers: vec![("ETag".into(), etag.to_string())],
+            body: Vec::new(),
+        }
+    }
+
+    /// Add a header (builder style).
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    /// Serialize onto a stream (always `Connection: close`).
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        write!(w, "HTTP/1.1 {} {}\r\n", self.status, reason(self.status))
+            .context("write status line")?;
+        for (name, value) in &self.headers {
+            write!(w, "{name}: {value}\r\n").context("write header")?;
+        }
+        write!(w, "Content-Length: {}\r\n", self.body.len()).context("write header")?;
+        write!(w, "Connection: close\r\n\r\n").context("write header")?;
+        w.write_all(&self.body).context("write body")?;
+        w.flush().context("flush response")
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        304 => "Not Modified",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        _ => "",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn parses_request_line_query_and_headers() {
+        let raw = b"GET /runs/quick-smoke?page=2&per_page=10 HTTP/1.1\r\n\
+                    Host: localhost\r\n\
+                    If-None-Match: \"abc\"\r\n\
+                    \r\n";
+        let req = Request::read_from(&mut BufReader::new(&raw[..]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/runs/quick-smoke");
+        assert_eq!(req.query_get("page"), Some("2"));
+        assert_eq!(req.query_get("per_page"), Some("10"));
+        assert_eq!(req.header("if-none-match"), Some("\"abc\""));
+        assert_eq!(req.header("If-None-Match"), Some("\"abc\""));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn reads_content_length_body_and_decodes_escapes() {
+        let raw = b"POST /record?timestamp=run+7%2Fa HTTP/1.1\r\n\
+                    Content-Length: 4\r\n\
+                    \r\nbody";
+        let req = Request::read_from(&mut BufReader::new(&raw[..]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"body");
+        assert_eq!(req.query_get("timestamp"), Some("run 7/a"));
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_garbage_is_error() {
+        assert!(Request::read_from(&mut BufReader::new(&b""[..]))
+            .unwrap()
+            .is_none());
+        assert!(Request::read_from(&mut BufReader::new(&b"nonsense\r\n\r\n"[..])).is_err());
+    }
+
+    #[test]
+    fn percent_decoding_edge_cases() {
+        assert_eq!(percent_decode("a%20b", false), "a b");
+        assert_eq!(percent_decode("a+b", false), "a+b");
+        assert_eq!(percent_decode("a+b", true), "a b");
+        // Truncated / invalid escapes pass through literally.
+        assert_eq!(percent_decode("100%", false), "100%");
+        assert_eq!(percent_decode("%zz", false), "%zz");
+    }
+
+    #[test]
+    fn response_serializes_with_length_and_close() {
+        let mut out = Vec::new();
+        Response::json(200, "{}").write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 3\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}\n"), "{text}");
+    }
+}

@@ -1,0 +1,103 @@
+//! `elastibench serve` — a std-only HTTP/1.1 service over the history
+//! store, turning the run archive into what the paper assumes exists: a
+//! benchmarking service CI gates and dashboards can poll.
+//!
+//! Three layers, smallest possible surface:
+//!
+//! * [`http`] — request parsing / response writing (bounded, no
+//!   dependencies beyond `std` + `anyhow`);
+//! * [`handlers`] — routing, pagination, ETag revalidation, and the
+//!   single-writer/multi-reader lock;
+//! * [`Server`] — the TCP accept loop, one thread per connection, one
+//!   request per connection (`Connection: close`).
+//!
+//! Every JSON body is byte-identical to the corresponding CLI `--json`
+//! command because both render through [`crate::history::view`].
+
+pub mod handlers;
+pub mod http;
+
+pub use handlers::{handle, ServeState};
+pub use http::{Request, Response};
+
+use anyhow::{Context, Result};
+use crate::history::HistoryStore;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-connection socket timeout: a stalled client cannot pin its
+/// thread forever.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A bound (but not yet serving) history service.
+#[derive(Debug)]
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServeState>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:7878`; port 0 picks a free port)
+    /// over `store`.
+    pub fn bind(addr: &str, store: HistoryStore) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        Ok(Server {
+            listener,
+            state: Arc::new(ServeState::new(store)),
+        })
+    }
+
+    /// The actually bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("local_addr")
+    }
+
+    /// Accept and serve connections forever (the CLI foreground path).
+    /// Each connection gets its own thread; accept errors on one
+    /// connection never take the listener down.
+    pub fn serve_forever(self) -> Result<()> {
+        for conn in self.listener.incoming() {
+            match conn {
+                Ok(stream) => {
+                    let state = Arc::clone(&self.state);
+                    std::thread::spawn(move || handle_connection(stream, &state));
+                }
+                Err(e) => crate::util::diag::warn(&format!("accept failed: {e}")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Spawn the accept loop on a background thread and return the
+    /// bound address — the integration-test path.
+    pub fn spawn(self) -> Result<(SocketAddr, std::thread::JoinHandle<()>)> {
+        let addr = self.local_addr()?;
+        let handle = std::thread::spawn(move || {
+            let _ = self.serve_forever();
+        });
+        Ok((addr, handle))
+    }
+}
+
+/// Serve one connection: parse one request, answer it, close. Parse
+/// failures get a `400` back on a best-effort basis.
+fn handle_connection(stream: TcpStream, state: &ServeState) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut stream = stream;
+    let response = match Request::read_from(&mut reader) {
+        Ok(Some(request)) => handle(state, &request),
+        Ok(None) => return, // client connected and left
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    };
+    if let Err(e) = response.write_to(&mut stream) {
+        crate::util::diag::warn(&format!("write response: {e:#}"));
+    }
+}

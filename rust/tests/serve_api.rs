@@ -1,0 +1,289 @@
+//! End-to-end tests of `elastibench serve` over real TCP: spawn the
+//! server on an ephemeral port against a seeded store, speak raw
+//! HTTP/1.1, and assert every endpoint's body is byte-identical to the
+//! canonical `history::view` builders the CLI `--json` flags print —
+//! plus pagination limits, ETag/If-None-Match revalidation, and the
+//! `POST /record` write path.
+
+use elastibench::history::{evaluate_latest, view, GatePolicy, HistoryStore, Timeline};
+use elastibench::runtime::AnalysisOutput;
+use elastibench::scenario::{catalog_entry, run_scenario, ScenarioReport};
+use elastibench::serve::Server;
+use elastibench::stats::{Analyzer, ChangeKind};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// A shrunk quick-smoke run (seconds of host time, pinned seeds).
+fn tiny_report() -> ScenarioReport {
+    let mut sc = catalog_entry("quick-smoke").unwrap();
+    sc.sut.benchmark_count = 6;
+    sc.sut.true_changes = 1;
+    sc.sut.faas_incompatible = 1;
+    sc.sut.slow_setup = 0;
+    sc.exp.calls_per_benchmark = 6;
+    sc.exp.parallelism = 8;
+    run_scenario(&sc, &Analyzer::native()).unwrap()
+}
+
+/// Overwrite one NoChange verdict with a CI-backed +10% regression.
+fn inject_regression(report: &mut ScenarioReport) {
+    let idx = report
+        .analysis
+        .verdicts
+        .iter()
+        .position(|v| v.change == ChangeKind::NoChange)
+        .expect("quick-smoke has a clean benchmark");
+    let v = &mut report.analysis.verdicts[idx];
+    v.output = AnalysisOutput {
+        ci_lo_pct: 8.0,
+        boot_median_pct: 10.0,
+        ci_hi_pct: 12.0,
+        median_v1: v.output.median_v1,
+        median_v2: v.output.median_v1 * 1.10,
+        point_pct: 10.0,
+    };
+    v.change = ChangeKind::Regression;
+}
+
+/// Seed a store with 4 runs (newest carries the regression) and spawn a
+/// server over it on an ephemeral port.
+fn spawn_seeded(tag: &str) -> (SocketAddr, HistoryStore) {
+    let dir = std::env::temp_dir().join(format!("elastibench_serve_api_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = HistoryStore::open(&dir);
+    let mut report = tiny_report();
+    for commit in ["s1", "s2", "s3"] {
+        report.commit = commit.to_string();
+        store.record(&report, commit).unwrap();
+    }
+    report.commit = "s4".to_string();
+    inject_regression(&mut report);
+    store.record(&report, "s4").unwrap();
+    let (addr, _handle) = Server::bind("127.0.0.1:0", store.clone()).unwrap().spawn().unwrap();
+    (addr, store)
+}
+
+struct Reply {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Reply {
+    fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn text(&self) -> &str {
+        std::str::from_utf8(&self.body).expect("UTF-8 body")
+    }
+}
+
+/// One raw HTTP/1.1 exchange (the server closes after each response).
+fn exchange(addr: SocketAddr, raw: &str) -> Reply {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut bytes = Vec::new();
+    stream.read_to_end(&mut bytes).unwrap();
+    let split = bytes
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("header/body separator");
+    let head = std::str::from_utf8(&bytes[..split]).unwrap();
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line {status_line:?}"));
+    let headers = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    Reply {
+        status,
+        headers,
+        body: bytes[split + 4..].to_vec(),
+    }
+}
+
+fn get(addr: SocketAddr, path: &str) -> Reply {
+    exchange(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+}
+
+fn get_if_none_match(addr: SocketAddr, path: &str, etag: &str) -> Reply {
+    exchange(
+        addr,
+        &format!("GET {path} HTTP/1.1\r\nHost: t\r\nIf-None-Match: {etag}\r\n\r\n"),
+    )
+}
+
+/// The policy every gate request in these tests pins via query
+/// parameters (so the expected body does not depend on recipe files).
+fn pinned_policy() -> GatePolicy {
+    GatePolicy {
+        window: 3,
+        threshold_pct: 3.0,
+        min_baseline: 1,
+    }
+}
+
+const GATE_QUERY: &str = "/gate?scenario=quick-smoke&window=3&threshold=3&min_baseline=1";
+
+#[test]
+fn read_endpoints_are_byte_identical_to_the_cli_views() {
+    let (addr, store) = spawn_seeded("views");
+
+    let reply = get(addr, "/scenarios");
+    assert_eq!(reply.status, 200);
+    assert_eq!(
+        reply.text(),
+        format!("{}\n", view::scenarios_json(&store).unwrap())
+    );
+
+    let listing = store.runs_page("quick-smoke", 0, 2).unwrap();
+    let reply = get(addr, "/runs/quick-smoke?page=1&per_page=2");
+    assert_eq!(reply.status, 200);
+    assert_eq!(
+        reply.text(),
+        format!("{}\n", view::runs_page_json("quick-smoke", &listing, 2))
+    );
+
+    let runs = store.runs("quick-smoke").unwrap();
+    let (first, last) = (&runs[0].run_id, &runs[3].run_id);
+    let a = store.load("quick-smoke", first).unwrap();
+    let b = store.load("quick-smoke", last).unwrap();
+    let reply = get(
+        addr,
+        &format!("/diff?scenario=quick-smoke&a={first}&b={last}"),
+    );
+    assert_eq!(reply.status, 200);
+    assert_eq!(
+        reply.text(),
+        format!("{}\n", view::diff_json("quick-smoke", first, last, &a, &b))
+    );
+
+    let policy = pinned_policy();
+    let outcome = evaluate_latest(&store, "quick-smoke", &policy).unwrap();
+    assert!(!outcome.passed(), "seeded regression must show up");
+    let reply = get(addr, GATE_QUERY);
+    assert_eq!(reply.status, 200, "gate failures are data, not HTTP errors");
+    assert_eq!(
+        reply.text(),
+        format!("{}\n", view::gate_json(&policy, &outcome))
+    );
+
+    let tl = Timeline::load_last(&store, "quick-smoke", 4).unwrap();
+    let reply = get(addr, "/timeline?scenario=quick-smoke");
+    assert_eq!(reply.status, 200);
+    assert_eq!(reply.text(), format!("{}\n", view::timeline_json(&tl)));
+    let tl2 = Timeline::load_last(&store, "quick-smoke", 2).unwrap();
+    let reply = get(addr, "/timeline?scenario=quick-smoke&last=2");
+    assert_eq!(reply.text(), format!("{}\n", view::timeline_json(&tl2)));
+
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn run_documents_are_served_verbatim_with_strong_etags() {
+    let (addr, store) = spawn_seeded("etag");
+    let id = store.runs("quick-smoke").unwrap()[0].run_id.clone();
+
+    let reply = get(addr, &format!("/run/quick-smoke/{id}"));
+    assert_eq!(reply.status, 200);
+    assert_eq!(
+        reply.body,
+        store.load_doc("quick-smoke", &id).unwrap().into_bytes(),
+        "document bytes must round-trip unmodified"
+    );
+    let etag = reply.header("etag").expect("run responses carry an ETag").to_string();
+    assert_eq!(etag, format!("\"quick-smoke/{id}\""));
+
+    // Revalidation: matching tag -> empty 304; W/ and * match too.
+    for tag in [etag.clone(), format!("W/{etag}"), "*".to_string()] {
+        let reply = get_if_none_match(addr, &format!("/run/quick-smoke/{id}"), &tag);
+        assert_eq!(reply.status, 304, "If-None-Match: {tag}");
+        assert!(reply.body.is_empty());
+        assert_eq!(reply.header("etag"), Some(etag.as_str()));
+    }
+    let reply = get_if_none_match(addr, &format!("/run/quick-smoke/{id}"), "\"stale\"");
+    assert_eq!(reply.status, 200);
+
+    // Gate and timeline revalidate the same way.
+    for path in [GATE_QUERY.to_string(), "/timeline?scenario=quick-smoke".to_string()] {
+        let first = get(addr, &path);
+        let etag = first.header("etag").expect("cacheable endpoint").to_string();
+        let revalidated = get_if_none_match(addr, &path, &etag);
+        assert_eq!(revalidated.status, 304, "{path}");
+        assert!(revalidated.body.is_empty());
+    }
+
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn record_appends_through_the_write_lock() {
+    let (addr, store) = spawn_seeded("record");
+    let doc = store
+        .load_doc("quick-smoke", &store.runs("quick-smoke").unwrap()[0].run_id)
+        .unwrap();
+
+    let raw = format!(
+        "POST /record?timestamp=t5 HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{doc}",
+        doc.len()
+    );
+    let reply = exchange(addr, &raw);
+    assert_eq!(reply.status, 201, "{}", reply.text());
+    assert_eq!(store.runs_total("quick-smoke").unwrap(), 5);
+    let newest = store.runs("quick-smoke").unwrap().pop().unwrap();
+    assert!(newest.run_id.starts_with("0005-"));
+    assert_eq!(newest.timestamp, "t5");
+    assert_eq!(reply.text(), format!("{}\n", newest.to_json()));
+
+    // A non-JSON body is refused and records nothing.
+    let reply = exchange(
+        addr,
+        "POST /record HTTP/1.1\r\nHost: t\r\nContent-Length: 8\r\n\r\nnot json",
+    );
+    assert_eq!(reply.status, 400);
+    assert_eq!(store.runs_total("quick-smoke").unwrap(), 5);
+
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn http_errors_cover_the_wire_protocol() {
+    let (addr, store) = spawn_seeded("errors");
+
+    assert_eq!(get(addr, "/nope").status, 404);
+    assert_eq!(get(addr, "/runs/never-recorded").status, 404);
+    assert_eq!(get(addr, "/runs/quick-smoke?page=0").status, 400);
+    assert_eq!(get(addr, "/runs/quick-smoke?per_page=0").status, 400);
+    assert_eq!(get(addr, "/runs/quick-smoke?per_page=501").status, 400);
+    assert_eq!(get(addr, "/gate").status, 400, "scenario is required");
+
+    // Wrong method on a known path.
+    let reply = exchange(addr, "DELETE /scenarios HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(reply.status, 405);
+
+    // A malformed request line gets a best-effort 400, not a hang.
+    let reply = exchange(addr, "NOT-HTTP\r\n\r\n");
+    assert_eq!(reply.status, 400);
+
+    // The index page lists the endpoints.
+    let reply = get(addr, "/");
+    assert_eq!(reply.status, 200);
+    assert!(reply.text().contains("\"endpoints\""));
+    assert!(reply.text().contains("GET /scenarios"));
+
+    let _ = std::fs::remove_dir_all(store.root());
+}

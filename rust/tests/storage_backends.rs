@@ -1,0 +1,345 @@
+//! Differential tests over the two storage backends: the filesystem
+//! layout (the original, kept verbatim — the oracle) and the compact
+//! segment-file layout, plus the `history compact` migration, the
+//! torn-index tolerance of the fs reader, paged-vs-load_all byte
+//! identity, and concurrent reader/writer safety on both backends.
+
+use elastibench::cli::{self, Args};
+use elastibench::history::{
+    evaluate, evaluate_latest, stored_run_to_json, BackendKind, GatePolicy, HistoryStore,
+    Timeline, TimelineEntry,
+};
+use elastibench::runtime::AnalysisOutput;
+use elastibench::scenario::{catalog_entry, run_scenario, ScenarioReport};
+use elastibench::stats::{Analyzer, ChangeKind};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// A shrunk quick-smoke run (seconds of host time, pinned seeds).
+fn tiny_report() -> ScenarioReport {
+    let mut sc = catalog_entry("quick-smoke").unwrap();
+    sc.sut.benchmark_count = 6;
+    sc.sut.true_changes = 1;
+    sc.sut.faas_incompatible = 1;
+    sc.sut.slow_setup = 0;
+    sc.exp.calls_per_benchmark = 6;
+    sc.exp.parallelism = 8;
+    run_scenario(&sc, &Analyzer::native()).unwrap()
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("elastibench_backends_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Overwrite one NoChange verdict with a CI-backed +10% regression.
+fn inject_regression(report: &mut ScenarioReport) {
+    let idx = report
+        .analysis
+        .verdicts
+        .iter()
+        .position(|v| v.change == ChangeKind::NoChange)
+        .expect("quick-smoke has a clean benchmark");
+    let v = &mut report.analysis.verdicts[idx];
+    v.output = AnalysisOutput {
+        ci_lo_pct: 8.0,
+        boot_median_pct: 10.0,
+        ci_hi_pct: 12.0,
+        median_v1: v.output.median_v1,
+        median_v2: v.output.median_v1 * 1.10,
+        point_pct: 10.0,
+    };
+    v.change = ChangeKind::Regression;
+}
+
+#[test]
+fn compact_backend_is_field_identical_to_fs() {
+    let fs = HistoryStore::open_fs(temp_dir("diff_fs"));
+    let compact = HistoryStore::open_compact(temp_dir("diff_compact"));
+    assert_eq!(fs.backend_kind(), BackendKind::Fs);
+    assert_eq!(compact.backend_kind(), BackendKind::Compact);
+
+    let mut report = tiny_report();
+    for commit in ["c1", "c2", "c3", "c4"] {
+        report.commit = commit.to_string();
+        let a = fs.record(&report, commit).unwrap();
+        let b = compact.record(&report, commit).unwrap();
+        assert_eq!(a, b, "record must return identical RunMeta on both backends");
+    }
+
+    assert_eq!(fs.scenarios().unwrap(), compact.scenarios().unwrap());
+    assert_eq!(
+        fs.latest_seq("quick-smoke").unwrap(),
+        compact.latest_seq("quick-smoke").unwrap()
+    );
+    assert_eq!(
+        fs.runs("quick-smoke").unwrap(),
+        compact.runs("quick-smoke").unwrap()
+    );
+    // Paged slices agree too, including the total and a past-end page.
+    for (offset, limit) in [(0, 2), (1, 2), (3, 10), (99, 5), (0, 0)] {
+        assert_eq!(
+            fs.runs_page("quick-smoke", offset, limit).unwrap(),
+            compact.runs_page("quick-smoke", offset, limit).unwrap(),
+            "page offset={offset} limit={limit}"
+        );
+    }
+    // Stored runs come back field-for-field identical (compare through
+    // the lossless re-export) and documents byte-for-byte.
+    for meta in fs.runs("quick-smoke").unwrap() {
+        let a = fs.load("quick-smoke", &meta.run_id).unwrap();
+        let b = compact.load("quick-smoke", &meta.run_id).unwrap();
+        assert_eq!(
+            stored_run_to_json(&a).to_string(),
+            stored_run_to_json(&b).to_string()
+        );
+        assert_eq!(
+            fs.load_doc("quick-smoke", &meta.run_id).unwrap(),
+            compact.load_doc("quick-smoke", &meta.run_id).unwrap()
+        );
+    }
+    // Both reject what the other rejects.
+    assert!(compact.runs("../evil").is_err());
+    assert!(compact.load("quick-smoke", "0001-wrong-commit").is_err());
+    assert!(compact.load("quick-smoke", "9999-c1").is_err());
+
+    let _ = std::fs::remove_dir_all(fs.root());
+    let _ = std::fs::remove_dir_all(compact.root());
+}
+
+#[test]
+fn history_compact_migration_round_trips_and_gates_identically() {
+    let src_dir = temp_dir("migrate_src");
+    let src = HistoryStore::open(&src_dir);
+    let mut report = tiny_report();
+    for commit in ["m1", "m2", "m3"] {
+        report.commit = commit.to_string();
+        src.record(&report, commit).unwrap();
+    }
+    report.commit = "m4".to_string();
+    inject_regression(&mut report);
+    src.record(&report, "m4").unwrap();
+
+    // Migrate through the CLI surface.
+    let dest_dir = temp_dir("migrate_dest");
+    let code = cli::run(
+        Args::parse(
+            [
+                "history",
+                "compact",
+                "--store",
+                src_dir.to_str().unwrap(),
+                "--dest",
+                dest_dir.to_str().unwrap(),
+            ]
+            .map(String::from),
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(code, 0);
+
+    // `open` auto-detects the compact layout from the marker.
+    let dest = HistoryStore::open(&dest_dir);
+    assert_eq!(dest.backend_kind(), BackendKind::Compact);
+    assert_eq!(src.runs("quick-smoke").unwrap(), dest.runs("quick-smoke").unwrap());
+    for meta in src.runs("quick-smoke").unwrap() {
+        assert_eq!(
+            src.load_doc("quick-smoke", &meta.run_id).unwrap(),
+            dest.load_doc("quick-smoke", &meta.run_id).unwrap(),
+            "migration must preserve document bytes"
+        );
+    }
+    // The gate reaches the same verdict on both layouts.
+    let policy = GatePolicy::default();
+    let a = evaluate_latest(&src, "quick-smoke", &policy).unwrap();
+    let b = evaluate_latest(&dest, "quick-smoke", &policy).unwrap();
+    assert!(!a.passed(), "injected regression must trip the gate");
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+
+    // Migration never merges into an existing store.
+    let err = elastibench::history::compact::migrate(&src, &dest_dir).unwrap_err();
+    assert!(err.to_string().contains("not empty"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&src_dir);
+    let _ = std::fs::remove_dir_all(&dest_dir);
+}
+
+#[test]
+fn truncated_final_index_line_is_tolerated_and_healed() {
+    let dir = temp_dir("torn");
+    let store = HistoryStore::open(&dir);
+    let mut report = tiny_report();
+    for commit in ["t1", "t2", "t3"] {
+        report.commit = commit.to_string();
+        store.record(&report, commit).unwrap();
+    }
+    let index = dir.join("quick-smoke").join("index.jsonl");
+
+    // A crash mid-append under the old writer leaves half a line behind.
+    let intact = std::fs::read_to_string(&index).unwrap();
+    std::fs::write(&index, format!("{intact}{{\"run_id\":\"0004-t4\",\"scen")).unwrap();
+    let runs = store.runs("quick-smoke").unwrap();
+    assert_eq!(runs.len(), 3, "torn final line is dropped, not fatal");
+    assert_eq!(runs[2].run_id, "0003-t3");
+
+    // The next record rebuilds the index atomically: the debris is gone
+    // and the new run is appended cleanly.
+    report.commit = "t4".to_string();
+    let meta = store.record(&report, "t4").unwrap();
+    assert_eq!(meta.run_id, "0004-t4");
+    let healed = std::fs::read_to_string(&index).unwrap();
+    assert_eq!(healed.lines().count(), 4);
+    assert!(healed.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+    assert_eq!(store.runs("quick-smoke").unwrap().len(), 4);
+
+    // Interior corruption is NOT waved through: that is data loss, not
+    // append debris.
+    let mut lines: Vec<String> = healed.lines().map(String::from).collect();
+    lines[1] = "{\"run_id\":\"0002-t2\",\"scen".to_string();
+    std::fs::write(&index, format!("{}\n", lines.join("\n"))).unwrap();
+    assert!(store.runs("quick-smoke").is_err());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn paged_loading_matches_the_load_all_oracle() {
+    let dir = temp_dir("paged_oracle");
+    let store = HistoryStore::open(&dir);
+    let mut report = tiny_report();
+    for commit in ["o1", "o2", "o3", "o4", "o5"] {
+        report.commit = commit.to_string();
+        store.record(&report, commit).unwrap();
+    }
+    report.commit = "o6".to_string();
+    inject_regression(&mut report);
+    store.record(&report, "o6").unwrap();
+
+    // Oracle: the pre-refactor full-archive path.
+    let oracle_entries: Vec<TimelineEntry> = store
+        .load_all("quick-smoke")
+        .unwrap()
+        .into_iter()
+        .map(|(meta, run)| TimelineEntry { meta, run })
+        .collect();
+    let oracle = Timeline {
+        scenario: "quick-smoke".to_string(),
+        entries: oracle_entries,
+    };
+
+    // Paged full load is byte-identical to the oracle.
+    let paged = Timeline::load(&store, "quick-smoke").unwrap();
+    assert_eq!(format!("{paged:?}"), format!("{oracle:?}"));
+
+    // Paged tail load equals the oracle's tail.
+    let policy = GatePolicy::default();
+    let tail = Timeline::load_last(&store, "quick-smoke", policy.window + 1).unwrap();
+    let oracle_tail = Timeline {
+        scenario: oracle.scenario.clone(),
+        entries: oracle.entries[oracle.entries.len() - (policy.window + 1)..].to_vec(),
+    };
+    assert_eq!(format!("{tail:?}"), format!("{oracle_tail:?}"));
+
+    // And the gate over the paged tail equals the gate over the oracle
+    // tail — the refactor changed how runs are fetched, not the verdict.
+    let a = evaluate(&oracle_tail, &policy).unwrap();
+    let b = evaluate_latest(&store, "quick-smoke", &policy).unwrap();
+    assert!(!b.passed());
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn list_pagination_flags_page_the_listing() {
+    let dir = temp_dir("list_flags");
+    let store = HistoryStore::open(&dir);
+    let mut report = tiny_report();
+    for commit in ["p1", "p2", "p3"] {
+        report.commit = commit.to_string();
+        store.record(&report, commit).unwrap();
+    }
+    let run = |extra: &[&str]| -> anyhow::Result<i32> {
+        let mut argv = vec![
+            "history".to_string(),
+            "list".to_string(),
+            "quick-smoke".to_string(),
+            "--store".to_string(),
+            dir.display().to_string(),
+        ];
+        argv.extend(extra.iter().map(|s| s.to_string()));
+        cli::run(Args::parse(argv).unwrap())
+    };
+    assert_eq!(run(&[]).unwrap(), 0);
+    assert_eq!(run(&["--limit", "2"]).unwrap(), 0);
+    assert_eq!(run(&["--limit", "2", "--page", "2"]).unwrap(), 0);
+    assert_eq!(run(&["--limit", "2", "--json"]).unwrap(), 0);
+    assert!(run(&["--page", "2"]).is_err(), "--page requires --limit");
+    assert!(run(&["--limit", "0"]).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// N readers hammer `runs_page`/`load` while one writer records:
+/// every read must succeed (no torn reads) and the observed totals and
+/// newest seqs must be monotone.
+fn hammer(store: &HistoryStore, tag: &str) {
+    let mut report = tiny_report();
+    report.commit = "w0".to_string();
+    store.record(&report, "w0").unwrap();
+
+    const WRITES: usize = 12;
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for reader in 0..3 {
+            let store = store.clone();
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut last_total = 0usize;
+                let mut last_seq = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let page = store.runs_page("quick-smoke", 0, usize::MAX).unwrap();
+                    assert!(
+                        page.total >= last_total,
+                        "[{tag} reader {reader}] total shrank: {} -> {}",
+                        last_total,
+                        page.total
+                    );
+                    last_total = page.total;
+                    let newest = page.runs.last().expect("at least the seed run");
+                    let seq: usize = newest.run_id.split('-').next().unwrap().parse().unwrap();
+                    assert!(
+                        seq >= last_seq,
+                        "[{tag} reader {reader}] newest seq went backwards"
+                    );
+                    last_seq = seq;
+                    // Any listed run must load fully — a torn read here
+                    // would fail the parse or the schema check.
+                    let run = store.load("quick-smoke", &newest.run_id).unwrap();
+                    assert_eq!(run.scenario.name, "quick-smoke");
+                }
+            });
+        }
+        for i in 1..=WRITES {
+            report.commit = format!("w{i}");
+            store.record(&report, &format!("w{i}")).unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    assert_eq!(store.runs_total("quick-smoke").unwrap(), WRITES + 1);
+    assert_eq!(store.latest_seq("quick-smoke").unwrap(), WRITES + 1);
+}
+
+#[test]
+fn concurrent_readers_and_writer_fs_backend() {
+    let dir = temp_dir("concurrent_fs");
+    hammer(&HistoryStore::open_fs(&dir), "fs");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_readers_and_writer_compact_backend() {
+    let dir = temp_dir("concurrent_compact");
+    hammer(&HistoryStore::open_compact(&dir), "compact");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -5,7 +5,7 @@
 //! elastibench run --experiment NAME [--backend native|xla] [--config FILE] [--out DIR]
 //! elastibench scenario list
 //! elastibench scenario run <NAME> [--backend native|xla] [--out-dir DIR]
-//!                                 [--trace-out FILE]
+//!                                 [--trace-out FILE] [--faults REGIME[+POLICY]]
 //! elastibench scenario run --recipe FILE [--backend native|xla] [--out-dir DIR]
 //! elastibench trace summarize FILE
 //! elastibench scenario run-all [--jobs N] [--backend native|xla] [--out-dir DIR]
@@ -26,6 +26,7 @@
 
 use crate::config::{Document, SutConfig};
 use crate::exp::{self, ExperimentResult, Workbench};
+use crate::faas::{FaultSpec, FAULT_REGIMES};
 use crate::history::{self, GatePolicy, HistoryStore, Timeline};
 use crate::report::{
     analysis_to_csv, experiment_summary_table, gate_table, history_runs_table,
@@ -119,7 +120,7 @@ USAGE:
   elastibench scenario list
       Show the shipped scenario catalog (recipes under scenarios/).
   elastibench scenario run NAME [--backend native|xla] [--out-dir DIR]
-                                [--trace-out FILE]
+                                [--trace-out FILE] [--faults REGIME[+POLICY]]
   elastibench scenario run --recipe FILE [--backend native|xla] [--out-dir DIR]
       Run one catalog entry (or a recipe file) and write a structured
       JSON report NAME-COMMIT.json to DIR (default: results/; --out is
@@ -127,7 +128,10 @@ USAGE:
       into their store. --trace-out FILE additionally dumps the run's
       lifecycle spans as Chrome trace-event JSON (load in Perfetto or
       chrome://tracing); timestamps are simulated time, so traces are
-      deterministic across seeds and --jobs.
+      deterministic across seeds and --jobs. --faults overrides the
+      recipe's [faults] section with a deterministic fault regime
+      (docs/robustness.md); REGIME+POLICY also picks the recovery
+      policy (standard | legacy).
   elastibench trace summarize FILE
       Print the telemetry summary (cold starts, reuse, queue waits,
       per-phase cost attribution) embedded in a --trace-out dump.
@@ -363,12 +367,17 @@ fn cmd_scenario_list(args: &Args) -> Result<i32> {
         cat.len()
     );
     println!(
-        "{:<20} {:<20} {:>4} {:>8} {:>6} {:>5} {:>4}  {}",
-        "name", "profile", "mode", "repeats", "bench", "par", "grid", "description"
+        "{:<20} {:<20} {:>4} {:>8} {:>6} {:>5} {:>4} {:<16}  {}",
+        "name", "profile", "mode", "repeats", "bench", "par", "grid", "faults", "description"
     );
     for sc in &cat {
+        let faults = match (&sc.faults, &sc.matrix) {
+            (Some(f), _) => f.axis_label(),
+            (None, Some(m)) if !m.faults.is_empty() => format!("axis({})", m.faults.len()),
+            _ => "-".to_string(),
+        };
         println!(
-            "{:<20} {:<20} {:>4} {:>8} {:>6} {:>5} {:>4}  {}",
+            "{:<20} {:<20} {:>4} {:>8} {:>6} {:>5} {:>4} {:<16}  {}",
             sc.name,
             sc.profile_name,
             sc.mode.as_str(),
@@ -376,6 +385,7 @@ fn cmd_scenario_list(args: &Args) -> Result<i32> {
             sc.sut.benchmark_count,
             sc.exp.parallelism,
             sc.variant_count(),
+            faults,
             sc.description
         );
     }
@@ -460,9 +470,37 @@ fn selected_scenario(args: &Args, subcommand: &str) -> Result<Scenario> {
     }
 }
 
+/// Apply a `--faults REGIME[+POLICY]` override to a resolved scenario
+/// (same spellings as a `matrix.faults` axis value; `none` disables an
+/// inherited `[faults]` section but keeps the named recovery policy).
+fn apply_faults_flag(args: &Args, sc: &mut Scenario) -> Result<()> {
+    let Some(value) = args.get("faults") else {
+        return Ok(());
+    };
+    match FaultSpec::parse_axis(value) {
+        Some(spec) => {
+            sc.faults = Some(spec);
+            Ok(())
+        }
+        None => bail!(
+            "--faults must be REGIME or REGIME+POLICY with REGIME one of \
+             {FAULT_REGIMES:?} and POLICY \"standard\" | \"legacy\", got {value:?}"
+        ),
+    }
+}
+
 fn cmd_scenario_run(args: &Args) -> Result<i32> {
     args.reject_positionals_beyond(2)?;
-    let sc = selected_scenario(args, "run")?;
+    let mut sc = selected_scenario(args, "run")?;
+    apply_faults_flag(args, &mut sc)?;
+    if let Some(f) = &sc.faults {
+        if f.is_active() {
+            println!(
+                "injecting faults: regime {} under the {} recovery policy",
+                f.regime, f.policy
+            );
+        }
+    }
     if let Some(m) = &sc.matrix {
         println!(
             "note: {} defines a {}-variant [matrix]; `scenario sweep` runs the full grid \
@@ -1246,6 +1284,35 @@ mod tests {
             )
             .unwrap();
             assert!(jobs(&args, 1).is_err(), "--jobs {bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn faults_flag_overrides_and_rejects_unknown_spellings() {
+        let args = Args::parse(
+            ["scenario", "run", "quick-smoke", "--faults", "spot-chaos+legacy"]
+                .map(String::from),
+        )
+        .unwrap();
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        apply_faults_flag(&args, &mut sc).unwrap();
+        let f = sc.faults.expect("override applied");
+        assert_eq!(f.regime, "spot-chaos");
+        assert_eq!(f.policy, "legacy");
+
+        let args = Args::parse(["scenario", "run", "quick-smoke"].map(String::from)).unwrap();
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        apply_faults_flag(&args, &mut sc).unwrap();
+        assert!(sc.faults.is_none(), "no flag, no change");
+
+        for bad in ["warp", "standard+lgacy", "standard+legacy+x"] {
+            let args = Args::parse(
+                ["scenario", "run", "quick-smoke", "--faults", bad].map(String::from),
+            )
+            .unwrap();
+            let mut sc = catalog_entry("quick-smoke").unwrap();
+            let err = apply_faults_flag(&args, &mut sc).unwrap_err();
+            assert!(err.to_string().contains("--faults must be"), "{bad}: {err}");
         }
     }
 

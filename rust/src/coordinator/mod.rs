@@ -23,14 +23,16 @@
 mod hybrid;
 mod image;
 pub mod reference;
+pub mod retry;
 mod runner;
 pub mod strategy;
 
 pub use hybrid::{run_hybrid, HybridReport};
 pub use image::{build_image, FunctionImage};
+pub use retry::RetryPolicy;
 pub use runner::{
-    run_experiment, run_experiment_live, run_experiment_live_with, run_experiment_observed,
-    run_experiment_reference, run_experiment_with, CallFailure, LiveStopConfig, LiveStopReport,
-    RunReport,
+    run_experiment, run_experiment_chaos, run_experiment_live, run_experiment_live_with,
+    run_experiment_observed, run_experiment_reference, run_experiment_with, CallFailure,
+    LiveStopConfig, LiveStopReport, RunReport,
 };
 pub use strategy::{strategy_by_name, ExecutionStrategy, StrategyKind, STRATEGY_NAMES};

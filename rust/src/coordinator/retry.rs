@@ -1,0 +1,230 @@
+//! Recovery policies for the coordinator: per-failure-class retry
+//! budgets, exponential backoff with deterministic jitter, straggler
+//! hedging and the minimum-sample quorum behind the `degraded` report
+//! section.
+//!
+//! Two shipped policies:
+//!
+//! * [`RetryPolicy::legacy`] reproduces the pre-policy coordinator
+//!   byte-for-byte: crashes retried exactly once with no delay,
+//!   concurrency denials re-scheduled forever at a fixed 0.5 s, no
+//!   hedging, no quorum. Runs without a `[faults]` section use this
+//!   policy, which is what keeps their reports bit-identical.
+//! * [`RetryPolicy::standard`] is the chaos design point: bounded
+//!   denial retries with exponential backoff + deterministic jitter,
+//!   multi-attempt crash budgets, hedged re-issue for straggler cold
+//!   starts, and a minimum-sample quorum that quarantines starved
+//!   benchmarks into the `degraded` report section.
+//!
+//! Every delay is a pure function of (policy, failure class, attempt,
+//! call identity): jitter is derived by hashing the jitter key through
+//! the deterministic [`Rng`] stream, never by consuming shared RNG
+//! state — so retry schedules are byte-identical across hosts, repeats
+//! and sweep `--jobs` values.
+
+use super::runner::CallFailure;
+use crate::util::Rng;
+
+/// Fixed legacy denial re-schedule interval [s] (the pre-policy
+/// hardcoded constant; kept exact for byte-compatibility).
+pub const LEGACY_DENIAL_DELAY_S: f64 = 0.5;
+
+/// A recovery policy: what the coordinator does when a call fails or
+/// the platform denies an acquire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Policy name ("legacy" | "standard" | custom).
+    pub name: String,
+    /// Retry budget for crashed calls (attempts after the first).
+    pub crash_retries: u32,
+    /// Retry budget for function-timeout kills.
+    pub timeout_retries: u32,
+    /// Retry budget for concurrency/throttle denials per planned call
+    /// (`u32::MAX` = unbounded, the legacy behaviour).
+    pub denial_retries: u32,
+    /// Base backoff delay [s] for denial re-schedules.
+    pub denial_base_delay_s: f64,
+    /// Base backoff delay [s] for failed-call retries (0 = re-plan
+    /// immediately, the legacy behaviour).
+    pub retry_base_delay_s: f64,
+    /// Exponential backoff multiplier per attempt (1.0 = fixed delay).
+    pub backoff_mult: f64,
+    /// Backoff cap [s].
+    pub max_delay_s: f64,
+    /// Jitter fraction in [0, 1): each delay is scaled by a
+    /// deterministic factor in `[1 - jitter/2, 1 + jitter/2)`.
+    pub jitter_frac: f64,
+    /// Hedge threshold [s]: a call whose dispatch latency (cold start +
+    /// queueing) exceeds this is re-issued on a second instance — first
+    /// finisher wins, the loser is canceled and billed. 0 = off.
+    pub hedge_after_s: f64,
+    /// Minimum paired samples a benchmark must keep after budgets are
+    /// exhausted; benchmarks below the quorum are quarantined into the
+    /// `degraded` report section. 0 = off.
+    pub min_quorum: usize,
+}
+
+impl RetryPolicy {
+    /// The pre-policy coordinator behaviour, exactly.
+    pub fn legacy() -> Self {
+        RetryPolicy {
+            name: "legacy".into(),
+            crash_retries: 1,
+            timeout_retries: 0,
+            denial_retries: u32::MAX,
+            denial_base_delay_s: LEGACY_DENIAL_DELAY_S,
+            retry_base_delay_s: 0.0,
+            backoff_mult: 1.0,
+            max_delay_s: LEGACY_DENIAL_DELAY_S,
+            jitter_frac: 0.0,
+            hedge_after_s: 0.0,
+            min_quorum: 0,
+        }
+    }
+
+    /// The chaos-lab design point (gated in `rust/tests/chaos_lab.rs`).
+    pub fn standard() -> Self {
+        RetryPolicy {
+            name: "standard".into(),
+            crash_retries: 3,
+            timeout_retries: 1,
+            denial_retries: 24,
+            denial_base_delay_s: 0.4,
+            retry_base_delay_s: 0.2,
+            backoff_mult: 2.0,
+            max_delay_s: 8.0,
+            jitter_frac: 0.5,
+            hedge_after_s: 15.0,
+            min_quorum: 10,
+        }
+    }
+
+    /// Resolve a policy by name (the `[faults] policy` recipe key).
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "legacy" => Some(Self::legacy()),
+            "standard" => Some(Self::standard()),
+            _ => None,
+        }
+    }
+
+    /// Whether this is the byte-compatible legacy policy (suppresses
+    /// the retry/hedge telemetry spans so pre-policy span streams stay
+    /// identical).
+    pub fn is_legacy(&self) -> bool {
+        self.name == "legacy"
+    }
+
+    /// Retry budget for a failure class (attempts after the first).
+    pub fn budget(&self, kind: CallFailure) -> u32 {
+        match kind {
+            CallFailure::Crash => self.crash_retries,
+            CallFailure::FunctionTimeout => self.timeout_retries,
+            CallFailure::AcquireDenied => self.denial_retries,
+            // Deterministic workload outcomes: retrying cannot help.
+            CallFailure::RestrictedEnv | CallFailure::BenchTimeout => 0,
+        }
+    }
+
+    /// Whether attempt `attempt` (0-based: the attempt that just
+    /// failed) may be retried for `kind`.
+    pub fn should_retry(&self, kind: CallFailure, attempt: u32) -> bool {
+        attempt < self.budget(kind)
+    }
+
+    /// Backoff delay [s] before re-scheduling a denied acquire whose
+    /// `attempt`-th try was just denied. `key` seeds the deterministic
+    /// jitter (callers pass a stable per-call identity).
+    pub fn denial_delay(&self, attempt: u32, key: u64) -> f64 {
+        self.backoff(self.denial_base_delay_s, attempt, key)
+    }
+
+    /// Backoff delay [s] before re-issuing a failed call (0 = re-plan
+    /// immediately in the drain loop, preserving legacy scheduling).
+    pub fn retry_delay(&self, attempt: u32, key: u64) -> f64 {
+        if self.retry_base_delay_s <= 0.0 {
+            return 0.0;
+        }
+        self.backoff(self.retry_base_delay_s, attempt, key)
+    }
+
+    fn backoff(&self, base: f64, attempt: u32, key: u64) -> f64 {
+        let exp = self.backoff_mult.powi(attempt.min(24) as i32);
+        let delay = (base * exp).min(self.max_delay_s);
+        delay * self.jitter_factor(key)
+    }
+
+    /// Deterministic jitter factor in `[1 - j/2, 1 + j/2)` derived from
+    /// `key` alone — never from shared RNG state, so jitter cannot
+    /// perturb any other stream.
+    fn jitter_factor(&self, key: u64) -> f64 {
+        if self.jitter_frac <= 0.0 {
+            return 1.0;
+        }
+        let u = Rng::new(key ^ 0xBACC_0FF5).f64();
+        1.0 + self.jitter_frac * (u - 0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_policy_reproduces_the_hardcoded_constants() {
+        let p = RetryPolicy::legacy();
+        assert!(p.is_legacy());
+        // Crash: exactly one immediate retry.
+        assert!(p.should_retry(CallFailure::Crash, 0));
+        assert!(!p.should_retry(CallFailure::Crash, 1));
+        assert_eq!(p.retry_delay(0, 123), 0.0);
+        // Denials: forever, at exactly 0.5 s, no jitter, no growth.
+        assert!(p.should_retry(CallFailure::AcquireDenied, 1_000_000));
+        for attempt in [0, 1, 7, 31] {
+            assert_eq!(p.denial_delay(attempt, 99), LEGACY_DENIAL_DELAY_S);
+        }
+        // No hedging, no quorum, nothing for deterministic failures.
+        assert_eq!(p.hedge_after_s, 0.0);
+        assert_eq!(p.min_quorum, 0);
+        assert!(!p.should_retry(CallFailure::BenchTimeout, 0));
+        assert!(!p.should_retry(CallFailure::RestrictedEnv, 0));
+    }
+
+    #[test]
+    fn standard_policy_backs_off_exponentially_with_bounded_jitter() {
+        let p = RetryPolicy::standard();
+        let d0 = p.denial_delay(0, 7);
+        let d1 = p.denial_delay(1, 7);
+        let d2 = p.denial_delay(2, 7);
+        assert!(d0 < d1 && d1 < d2, "{d0} {d1} {d2}");
+        // Jitter stays within the configured band around base * 2^k.
+        for attempt in 0..6 {
+            let nominal = (0.4 * 2f64.powi(attempt)).min(p.max_delay_s);
+            for key in 0..50u64 {
+                let d = p.denial_delay(attempt as u32, key);
+                assert!(d >= nominal * 0.75 && d < nominal * 1.25, "{d} vs {nominal}");
+            }
+        }
+        // The cap holds whatever the attempt count.
+        assert!(p.denial_delay(30, 1) <= p.max_delay_s * 1.25);
+        // Bounded: gives up eventually.
+        assert!(!p.should_retry(CallFailure::AcquireDenied, p.denial_retries));
+    }
+
+    #[test]
+    fn jitter_is_a_pure_function_of_the_key() {
+        let p = RetryPolicy::standard();
+        assert_eq!(p.denial_delay(3, 42), p.denial_delay(3, 42));
+        assert_ne!(p.denial_delay(3, 42), p.denial_delay(3, 43));
+    }
+
+    #[test]
+    fn policies_resolve_by_name() {
+        assert_eq!(RetryPolicy::from_name("legacy").unwrap(), RetryPolicy::legacy());
+        assert_eq!(
+            RetryPolicy::from_name("standard").unwrap(),
+            RetryPolicy::standard()
+        );
+        assert!(RetryPolicy::from_name("nope").is_none());
+    }
+}

@@ -2,11 +2,14 @@
 //! platform with bounded parallelism and collect duet measurements.
 
 use super::image::build_image;
+use super::retry::RetryPolicy;
 use super::strategy::{CallSamples, Duet, ExecutionStrategy, PlannedCall};
 use crate::benchexec::{ExecCtx, RunError};
 use crate::config::{ExperimentConfig, PlatformConfig, SutConfig};
 use crate::des::Sim;
-use crate::faas::{FaasPlatform, InstancePool, PlatformStats, ReferencePlatform};
+use crate::faas::{
+    FaasPlatform, FaultPlan, FaultSpec, InstancePool, Placement, PlatformStats, ReferencePlatform,
+};
 use crate::stats::{IncrementalBootstrap, Measurements, StoppingRule};
 use crate::sut::{Suite, Version};
 use crate::telemetry::{SharedSink, Span};
@@ -26,6 +29,9 @@ pub enum CallFailure {
     FunctionTimeout,
     /// Injected instance crash.
     Crash,
+    /// The platform denied an instance (concurrency limit or throttle
+    /// storm) more times than the retry policy's denial budget allows.
+    AcquireDenied,
 }
 
 /// Full report of one ElastiBench experiment run.
@@ -119,6 +125,8 @@ struct CallDone {
     start_at: f64,
     /// Instance-cache warmup the call paid [s].
     warmup_s: f64,
+    /// Hedge-pair id (index into the hedge book + 1; 0 = not hedged).
+    hedge_group: u64,
 }
 
 /// Stable label of a failure kind for span/trace output.
@@ -128,7 +136,16 @@ fn failure_label(kind: CallFailure) -> &'static str {
         CallFailure::BenchTimeout => "bench-timeout",
         CallFailure::FunctionTimeout => "function-timeout",
         CallFailure::Crash => "crash",
+        CallFailure::AcquireDenied => "acquire-denied",
     }
+}
+
+/// Bookkeeping for one hedged call pair: the two coordinator call ids,
+/// whether a winner has been declared, and how many legs have arrived.
+struct HedgeGroup {
+    calls: [u64; 2],
+    resolved: bool,
+    arrivals: u8,
 }
 
 /// Run one ElastiBench experiment over `suite` on a fresh platform with
@@ -157,9 +174,19 @@ pub fn run_experiment_with(
     versions: (Version, Version),
     strategy: &dyn ExecutionStrategy,
 ) -> RunReport {
-    run_experiment_on(suite, sut, exp, versions, None, strategy, None, |image_mb| {
-        FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
-    })
+    run_experiment_on(
+        suite,
+        sut,
+        exp,
+        versions,
+        None,
+        strategy,
+        None,
+        &RetryPolicy::legacy(),
+        |image_mb| {
+            FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
+        },
+    )
     .0
 }
 
@@ -183,8 +210,48 @@ pub fn run_experiment_observed(
     live: Option<&LiveStopConfig>,
     sink: &SharedSink,
 ) -> (RunReport, Option<LiveStopReport>) {
-    run_experiment_on(suite, sut, exp, versions, live, strategy, Some(sink), |image_mb| {
-        FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
+    run_experiment_on(
+        suite,
+        sut,
+        exp,
+        versions,
+        live,
+        strategy,
+        Some(sink),
+        &RetryPolicy::legacy(),
+        |image_mb| {
+            FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
+        },
+    )
+}
+
+/// [`run_experiment_observed`] with chaos controls: an optional
+/// deterministic fault plan installed on the platform and an explicit
+/// [`RetryPolicy`]. With no faults and the legacy policy this path is
+/// byte-identical to [`run_experiment_observed`], which is why the
+/// scenario runner can call it unconditionally.
+#[allow(clippy::too_many_arguments)]
+pub fn run_experiment_chaos(
+    suite: &Suite,
+    sut: &SutConfig,
+    platform_cfg: &PlatformConfig,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+    strategy: &dyn ExecutionStrategy,
+    faults: Option<&FaultSpec>,
+    policy: &RetryPolicy,
+    live: Option<&LiveStopConfig>,
+    sink: Option<&SharedSink>,
+) -> (RunReport, Option<LiveStopReport>) {
+    run_experiment_on(suite, sut, exp, versions, live, strategy, sink, policy, |image_mb| {
+        let mut platform =
+            FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed);
+        if let Some(spec) = faults {
+            if spec.is_active() {
+                platform.install_faults(FaultPlan::new(spec, exp.seed));
+            }
+        }
+        platform
     })
 }
 
@@ -217,10 +284,19 @@ pub fn run_experiment_live_with(
     strategy: &dyn ExecutionStrategy,
     live: &LiveStopConfig,
 ) -> (RunReport, LiveStopReport) {
-    let (report, live) =
-        run_experiment_on(suite, sut, exp, versions, Some(live), strategy, None, |image_mb| {
+    let (report, live) = run_experiment_on(
+        suite,
+        sut,
+        exp,
+        versions,
+        Some(live),
+        strategy,
+        None,
+        &RetryPolicy::legacy(),
+        |image_mb| {
             FaasPlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
-        });
+        },
+    );
     (report, live.expect("live config was passed"))
 }
 
@@ -237,9 +313,25 @@ pub fn run_experiment_reference(
     exp: &ExperimentConfig,
     versions: (Version, Version),
 ) -> RunReport {
-    run_experiment_on(suite, sut, exp, versions, None, &Duet, None, |image_mb| {
-        ReferencePlatform::deploy(platform_cfg, image_mb, exp.memory_mb, exp.start_hour_utc, exp.seed)
-    })
+    run_experiment_on(
+        suite,
+        sut,
+        exp,
+        versions,
+        None,
+        &Duet,
+        None,
+        &RetryPolicy::legacy(),
+        |image_mb| {
+            ReferencePlatform::deploy(
+                platform_cfg,
+                image_mb,
+                exp.memory_mb,
+                exp.start_hour_utc,
+                exp.seed,
+            )
+        },
+    )
     .0
 }
 
@@ -257,6 +349,7 @@ fn run_experiment_on<P: InstancePool>(
     live: Option<&LiveStopConfig>,
     strategy: &dyn ExecutionStrategy,
     sink: Option<&SharedSink>,
+    policy: &RetryPolicy,
     deploy: impl FnOnce(f64) -> P,
 ) -> (RunReport, Option<LiveStopReport>) {
     if let Err(errs) = exp.validate() {
@@ -305,28 +398,21 @@ fn run_experiment_on<P: InstancePool>(
     });
     let mut fed = vec![0usize; suite.len()];
     let mut calls_canceled = 0usize;
+    // Hedge book: one entry per hedged pair, indexed by `hedge_group - 1`.
+    let mut hedges: Vec<HedgeGroup> = Vec::new();
 
-    let issue = |sim: &mut Sim<CallDone>,
-                     platform: &mut P,
-                     plan_item: PlannedCall,
-                     calls_total: &mut usize,
-                     call_seq: &mut u64,
-                     rng: &mut Rng| {
+    // Execute one call on an already-acquired placement and schedule its
+    // completion. Split out of `issue` so a hedged call can run the same
+    // body twice (primary + twin) against two placements.
+    let execute = |sim: &mut Sim<CallDone>,
+                   platform: &mut P,
+                   plan_item: PlannedCall,
+                   placement: Placement,
+                   calls_total: &mut usize,
+                   call_seq: &mut u64,
+                   rng: &mut Rng,
+                   hedge_group: u64| {
         let t = sim.now();
-        let Some(placement) = platform.acquire(t) else {
-            // Concurrency limit: retry shortly (rare at paper scale).
-            sim.schedule(0.5, CallDone {
-                plan: plan_item,
-                instance: usize::MAX,
-                billed_s: 0.0,
-                samples: CallSamples::none(),
-                failure: None,
-                call: 0,
-                start_at: 0.0,
-                warmup_s: 0.0,
-            });
-            return;
-        };
         *calls_total += 1;
         *call_seq += 1;
         if let Some(s) = sink {
@@ -337,6 +423,8 @@ fn run_experiment_on<P: InstancePool>(
                 instance: platform.instance_id(placement.instance),
                 cold: placement.cold,
                 queue_wait_s: placement.start_at - t,
+                attempt: plan_item.attempt as u32,
+                hedge: hedge_group != 0,
             });
         }
         let bench = &suite.benchmarks[plan_item.bench_idx];
@@ -400,14 +488,96 @@ fn run_experiment_on<P: InstancePool>(
                 call: *call_seq,
                 start_at: placement.start_at,
                 warmup_s,
+                hedge_group,
             },
         );
+    };
+
+    let issue = |sim: &mut Sim<CallDone>,
+                     platform: &mut P,
+                     plan_item: PlannedCall,
+                     calls_total: &mut usize,
+                     call_seq: &mut u64,
+                     rng: &mut Rng,
+                     hedges: &mut Vec<HedgeGroup>| {
+        let t = sim.now();
+        let Some(placement) = platform.acquire(t) else {
+            // Concurrency limit or throttle storm: the policy decides
+            // whether this call waits again and for how long. The legacy
+            // policy reproduces the pre-policy loop exactly: unbounded
+            // re-schedules at a fixed 0.5 s, no tally, no span.
+            let denials = plan_item.denials as u32;
+            if policy.should_retry(CallFailure::AcquireDenied, denials) {
+                let key = exp.seed ^ t.to_bits() ^ ((plan_item.bench_idx as u64) << 1);
+                let delay = policy.denial_delay(denials, key);
+                if let Some(s) = sink {
+                    if !policy.is_legacy() {
+                        s.borrow_mut().emit(Span::RetryScheduled {
+                            t,
+                            bench: plan_item.bench_idx,
+                            call: 0,
+                            kind: failure_label(CallFailure::AcquireDenied),
+                            attempt: denials,
+                            delay_s: delay,
+                        });
+                    }
+                }
+                sim.schedule(delay, CallDone {
+                    plan: PlannedCall {
+                        denials: plan_item.denials.saturating_add(1),
+                        ..plan_item
+                    },
+                    instance: usize::MAX,
+                    billed_s: 0.0,
+                    samples: CallSamples::none(),
+                    failure: None,
+                    call: 0,
+                    start_at: 0.0,
+                    warmup_s: 0.0,
+                    hedge_group: 0,
+                });
+            } else {
+                // Denial budget exhausted: abandon the call and surface
+                // it as an `AcquireDenied` failure in the tally.
+                sim.schedule(0.0, CallDone {
+                    plan: plan_item,
+                    instance: usize::MAX,
+                    billed_s: 0.0,
+                    samples: CallSamples::none(),
+                    failure: Some(CallFailure::AcquireDenied),
+                    call: 0,
+                    start_at: 0.0,
+                    warmup_s: 0.0,
+                    hedge_group: 0,
+                });
+            }
+            return;
+        };
+        // Straggler hedging: a cold dispatch whose latency crosses the
+        // policy threshold is re-issued on a second instance. The first
+        // leg to finish with samples wins; the loser is billed in full
+        // but contributes nothing.
+        if policy.hedge_after_s > 0.0
+            && placement.cold
+            && placement.start_at - t >= policy.hedge_after_s
+        {
+            if let Some(twin) = platform.acquire(t) {
+                hedges.push(HedgeGroup { calls: [0; 2], resolved: false, arrivals: 0 });
+                let group = hedges.len() as u64;
+                execute(sim, platform, plan_item, placement, calls_total, call_seq, rng, group);
+                hedges[group as usize - 1].calls[0] = *call_seq;
+                execute(sim, platform, plan_item, twin, calls_total, call_seq, rng, group);
+                hedges[group as usize - 1].calls[1] = *call_seq;
+                return;
+            }
+        }
+        execute(sim, platform, plan_item, placement, calls_total, call_seq, rng, 0);
     };
 
     // Seed the pipeline with `parallelism` calls.
     for _ in 0..exp.parallelism {
         let Some(item) = strategy.next_call(&mut plan, None) else { break };
-        issue(&mut sim, &mut platform, item, &mut calls_total, &mut call_seq, &mut rng);
+        issue(&mut sim, &mut platform, item, &mut calls_total, &mut call_seq, &mut rng, &mut hedges);
     }
 
     // Drain: every completion issues the next planned call.
@@ -435,19 +605,85 @@ fn run_experiment_on<P: InstancePool>(
                 });
             }
             platform.release(done.instance, t, done.billed_s);
-            if done.samples.is_empty() {
+            // Hedge resolution: the first leg to finish with samples
+            // wins its pair; every later leg is a canceled loser —
+            // billed in full, but it contributes no samples, tallies no
+            // failure and is never retried. A failed leg whose twin is
+            // still in flight defers the retry decision to the twin.
+            let mut hedge_loser = false;
+            let mut hedge_twin_pending = false;
+            if done.hedge_group != 0 {
+                let g = &mut hedges[done.hedge_group as usize - 1];
+                g.arrivals += 1;
+                if g.resolved {
+                    hedge_loser = true;
+                } else if !done.samples.is_empty() {
+                    g.resolved = true;
+                    if let Some(s) = sink {
+                        let loser =
+                            if g.calls[0] == done.call { g.calls[1] } else { g.calls[0] };
+                        s.borrow_mut().emit(Span::HedgeWon {
+                            t,
+                            bench: done.plan.bench_idx,
+                            winner: done.call,
+                            loser,
+                        });
+                    }
+                } else {
+                    hedge_twin_pending = g.arrivals < 2;
+                }
+            }
+            if hedge_loser {
+                // Canceled hedge loser: already billed via release().
+            } else if done.samples.is_empty() {
                 if let Some(kind) = done.failure {
                     match failures.iter_mut().find(|(k, _)| *k == kind) {
                         Some((_, c)) => *c += 1,
                         None => failures.push((kind, 1)),
                     }
-                    // Retry crashed calls once (transient); environment
-                    // failures are deterministic, never retried.
-                    if kind == CallFailure::Crash && done.plan.retries_left > 0 {
-                        plan.push(PlannedCall {
-                            retries_left: done.plan.retries_left - 1,
+                    // Transient failures re-enter the plan while the
+                    // policy's per-class budget lasts; deterministic
+                    // workload failures have a zero budget and are never
+                    // retried. The legacy policy retries crashes exactly
+                    // once with no delay — the pre-policy behaviour.
+                    if !hedge_twin_pending
+                        && policy.should_retry(kind, done.plan.attempt as u32)
+                    {
+                        let next = PlannedCall {
+                            attempt: done.plan.attempt + 1,
                             ..done.plan
-                        });
+                        };
+                        let key = exp.seed
+                            ^ done.call
+                            ^ ((done.plan.attempt as u64) << 48);
+                        let delay = policy.retry_delay(done.plan.attempt as u32, key);
+                        if delay > 0.0 {
+                            if let Some(s) = sink {
+                                if !policy.is_legacy() {
+                                    s.borrow_mut().emit(Span::RetryScheduled {
+                                        t,
+                                        bench: done.plan.bench_idx,
+                                        call: done.call,
+                                        kind: failure_label(kind),
+                                        attempt: done.plan.attempt as u32,
+                                        delay_s: delay,
+                                    });
+                                }
+                            }
+                            sim.schedule(delay, CallDone {
+                                plan: next,
+                                instance: usize::MAX,
+                                billed_s: 0.0,
+                                samples: CallSamples::none(),
+                                failure: None,
+                                call: 0,
+                                start_at: 0.0,
+                                warmup_s: 0.0,
+                                hedge_group: 0,
+                            });
+                        } else {
+                            plan.push(next);
+                        }
                     }
                 }
             } else {
@@ -497,13 +733,23 @@ fn run_experiment_on<P: InstancePool>(
                 }
             }
             Some(done.plan)
+        } else if let Some(kind) = done.failure {
+            // A call abandoned after exhausting its denial budget: it
+            // never acquired an instance, so there is nothing to bill or
+            // release — only the failure tally sees it.
+            match failures.iter_mut().find(|(k, _)| *k == kind) {
+                Some((_, c)) => *c += 1,
+                None => failures.push((kind, 1)),
+            }
+            None
         } else {
-            // Concurrency-limit backoff: reissue the same plan item.
+            // Concurrency-limit backoff or delayed retry: reissue the
+            // same plan item.
             plan.push(done.plan);
             None
         };
         if let Some(item) = strategy.next_call(&mut plan, finished.as_ref()) {
-            issue(sim, &mut platform, item, &mut calls_total, &mut call_seq, &mut rng);
+            issue(sim, &mut platform, item, &mut calls_total, &mut call_seq, &mut rng, &mut hedges);
         }
     });
     if let Some(s) = sink {
@@ -811,5 +1057,155 @@ mod tests {
         exp.repeats_per_call = 3;
         let report = run_experiment(&suite, &sut, &plat, &exp, (Version::V1, Version::V2));
         assert!(report.failure_count(CallFailure::FunctionTimeout) > 0);
+    }
+
+    /// A chaos run with recorded telemetry: returns the report plus its
+    /// span-derived metrics.
+    fn chaos_with_metrics(
+        suite: &Suite,
+        sut: &SutConfig,
+        plat: &PlatformConfig,
+        exp: &ExperimentConfig,
+        faults: &FaultSpec,
+        policy: &RetryPolicy,
+    ) -> (RunReport, crate::telemetry::RunMetrics) {
+        let rec = crate::telemetry::RecordingSink::shared();
+        let sink: SharedSink = rec.clone();
+        let (report, _) = run_experiment_chaos(
+            suite,
+            sut,
+            plat,
+            exp,
+            (Version::V1, Version::V2),
+            &Duet,
+            Some(faults),
+            policy,
+            None,
+            Some(&sink),
+        );
+        let spans = std::mem::take(&mut rec.borrow_mut().spans);
+        let metrics = crate::telemetry::RunMetrics::from_spans(
+            &spans,
+            report.cost_usd,
+            exp.memory_mb as f64 / 1024.0,
+            plat.usd_per_gb_s,
+            plat.usd_per_request,
+        );
+        (report, metrics)
+    }
+
+    /// All benchmarks FaaS-runnable, so fault-induced losses are the
+    /// only reason a call fails.
+    fn clean_lab() -> (Suite, SutConfig, PlatformConfig, ExperimentConfig) {
+        let sut = SutConfig {
+            benchmark_count: 8,
+            true_changes: 2,
+            faas_incompatible: 0,
+            slow_setup: 0,
+            ..SutConfig::default()
+        };
+        let suite = generate(&sut);
+        let exp = ExperimentConfig {
+            calls_per_benchmark: 6,
+            repeats_per_call: 2,
+            parallelism: 24,
+            ..ExperimentConfig::default()
+        };
+        (suite, sut, PlatformConfig::default(), exp)
+    }
+
+    #[test]
+    fn throttle_storms_deny_acquires_but_the_policy_rides_them_out() {
+        let (suite, sut, plat, exp) = clean_lab();
+        // A dense storm: 4 s of every 8 s throttled. The run lasts well
+        // past one period, so denials are certain; the standard denial
+        // budget (24 re-schedules, backoff capped at 8 s) spans minutes,
+        // so every call outlives the 4 s windows.
+        let faults = FaultSpec {
+            regime: "custom".into(),
+            throttle_every_s: 8.0,
+            throttle_len_s: 4.0,
+            ..FaultSpec::none()
+        };
+        let policy = RetryPolicy::standard();
+        let (report, m) = chaos_with_metrics(&suite, &sut, &plat, &exp, &faults, &policy);
+        assert!(m.acquires_denied > 0, "storm must deny acquires");
+        assert!(m.retries_scheduled > 0, "denials re-schedule through the policy");
+        assert!(m.faults_injected > 0);
+        // Bounded recovery, not an unbounded denial loop: the planned
+        // calls all resolve and no budget was exhausted.
+        assert_eq!(report.failure_count(CallFailure::AcquireDenied), 0);
+        for mm in &report.measurements {
+            assert_eq!(mm.len(), exp.results_per_benchmark(), "{}", mm.name);
+        }
+    }
+
+    #[test]
+    fn denial_budget_exhaustion_abandons_and_tallies_the_call() {
+        let (suite, sut, plat, exp) = clean_lab();
+        let faults = FaultSpec {
+            regime: "custom".into(),
+            throttle_every_s: 8.0,
+            throttle_len_s: 4.0,
+            ..FaultSpec::none()
+        };
+        // A policy with a starvation-level denial budget: one immediate
+        // re-try, no backoff — any call that lands in a window twice is
+        // abandoned and must surface in the failure tally.
+        let mut policy = RetryPolicy::standard();
+        policy.name = "tight".into();
+        policy.denial_retries = 1;
+        policy.denial_base_delay_s = 0.1;
+        policy.backoff_mult = 1.0;
+        policy.max_delay_s = 0.1;
+        let (report, m) = chaos_with_metrics(&suite, &sut, &plat, &exp, &faults, &policy);
+        assert!(m.acquires_denied > 0);
+        assert!(
+            report.failure_count(CallFailure::AcquireDenied) > 0,
+            "exhausted denial budgets must be tallied, failures: {:?}",
+            report.failures
+        );
+        // Abandoned calls lose samples but the run still terminates
+        // with partial measurements.
+        assert!(report.calls_ok > 0);
+    }
+
+    #[test]
+    fn hedging_races_cold_stragglers_and_bills_the_loser() {
+        let (suite, sut, plat, exp) = clean_lab();
+        // Every cold start is a straggler: x20 on a ~3.5 s cold start
+        // dwarfs the 2 s hedge threshold, so cold placements hedge.
+        let faults = FaultSpec {
+            regime: "custom".into(),
+            straggler_rate: 1.0,
+            straggler_mult: 20.0,
+            ..FaultSpec::none()
+        };
+        let mut policy = RetryPolicy::standard();
+        policy.name = "eager-hedge".into();
+        policy.hedge_after_s = 2.0;
+        let (report, m) = chaos_with_metrics(&suite, &sut, &plat, &exp, &faults, &policy);
+        assert!(m.hedges_won > 0, "stragglers must trigger winning hedges");
+        assert!(m.cost_hedge_usd > 0.0, "the losing leg is billed");
+        // First finisher wins: results stay complete, not duplicated.
+        for mm in &report.measurements {
+            assert_eq!(mm.len(), exp.results_per_benchmark(), "{}", mm.name);
+        }
+        // Hedge losers are billed calls on top of the plan.
+        assert!(report.calls_total > suite.len() * exp.calls_per_benchmark);
+    }
+
+    #[test]
+    fn chaos_runs_are_deterministic_per_policy() {
+        let (suite, sut, plat, exp) = clean_lab();
+        let faults = FaultSpec::regime("standard").expect("regime");
+        for policy in [RetryPolicy::legacy(), RetryPolicy::standard()] {
+            let (a, am) = chaos_with_metrics(&suite, &sut, &plat, &exp, &faults, &policy);
+            let (b, bm) = chaos_with_metrics(&suite, &sut, &plat, &exp, &faults, &policy);
+            assert_eq!(format!("{a:?}"), format!("{b:?}"), "policy {}", policy.name);
+            assert_eq!(am.faults_injected, bm.faults_injected);
+            assert_eq!(am.cost_retry_usd.to_bits(), bm.cost_retry_usd.to_bits());
+            assert_eq!(am.cost_hedge_usd.to_bits(), bm.cost_hedge_usd.to_bits());
+        }
     }
 }

@@ -52,8 +52,14 @@ pub struct PlannedCall {
     pub bench_idx: usize,
     /// Call contents.
     pub slot: CallSlot,
-    /// Retry budget left for crash failures.
-    pub retries_left: u8,
+    /// How many issued attempts of this call have already failed
+    /// (0 = first attempt). The retry budget lives in
+    /// [`crate::coordinator::retry::RetryPolicy`], per failure class.
+    pub attempt: u8,
+    /// How many times the platform has denied this call an instance
+    /// (concurrency limit or throttle storm); bounded by the policy's
+    /// denial budget.
+    pub denials: u16,
 }
 
 /// Samples a completed call contributes to its benchmark.
@@ -157,7 +163,8 @@ fn duet_plan(suite_len: usize, exp: &ExperimentConfig, rng: &mut Rng) -> Vec<Pla
             (0..exp.calls_per_benchmark).map(move |_| PlannedCall {
                 bench_idx,
                 slot: CallSlot::Duet,
-                retries_left: 1,
+                attempt: 0,
+                denials: 0,
             })
         })
         .collect();
@@ -228,7 +235,8 @@ impl ExecutionStrategy for Sequential {
                     (0..exp.calls_per_benchmark).map(move |_| PlannedCall {
                         bench_idx,
                         slot: CallSlot::Single(lane),
-                        retries_left: 1,
+                        attempt: 0,
+                        denials: 0,
                     })
                 })
                 .collect()
@@ -453,7 +461,7 @@ mod tests {
         let mut rng = Rng::new(42);
         let plan = Duet.plan(3, &exp, &mut rng);
         assert_eq!(plan.len(), 3 * exp.calls_per_benchmark);
-        assert!(plan.iter().all(|p| p.slot == CallSlot::Duet && p.retries_left == 1));
+        assert!(plan.iter().all(|p| p.slot == CallSlot::Duet && p.attempt == 0 && p.denials == 0));
         // Same seed, same schedule.
         let again = Duet.plan(3, &exp, &mut Rng::new(42));
         assert_eq!(plan, again);
@@ -483,7 +491,8 @@ mod tests {
         let mk = |bench_idx| PlannedCall {
             bench_idx,
             slot: CallSlot::Duet,
-            retries_left: 1,
+            attempt: 0,
+            denials: 0,
         };
         let mut plan = vec![mk(2), mk(0), mk(1)];
         let finished = mk(2);

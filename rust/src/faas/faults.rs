@@ -1,0 +1,413 @@
+//! Deterministic fault injection for the FaaS platform simulator.
+//!
+//! A [`FaultSpec`] describes a fault *regime* — crash rate, correlated
+//! burst-throttle windows, cold-start straggler tail amplification,
+//! mid-keepalive instance eviction (spot reclaim) and timed brownout
+//! windows (correlated latency inflation). A [`FaultPlan`] is the
+//! runtime realization of a spec for one experiment: every draw comes
+//! from a dedicated RNG fork of the experiment seed (tag `0xFA17`), so
+//!
+//! * the fault stream is a pure function of (recipe, seed) — byte-
+//!   identical across hosts, repeats, and sweep `--jobs` values, the
+//!   same determinism contract the telemetry layer holds; and
+//! * installing *no* plan consumes zero draws from the platform,
+//!   image-build, or per-call RNG streams — runs without a `[faults]`
+//!   section are bit-identical to a build without this module.
+//!
+//! The plan is layered onto [`super::FaasPlatform`] via its existing
+//! hooks: `acquire` (throttle storms + idle-instance reclaim sweeps),
+//! `cold_start_latency` (straggler tail), `env_factor` (brownouts) and
+//! `maybe_crash` (extra crash rate). See `docs/robustness.md`.
+
+use crate::util::Rng;
+
+/// RNG fork tag for fault streams (decorrelated from the platform fork
+/// `0xFAA5`, the image-build fork `0xB01D` and per-call forks).
+pub const FAULT_RNG_TAG: u64 = 0xFA17;
+
+/// Named fault regimes a recipe (or the `[matrix] faults` axis) can
+/// select. Each maps to a [`FaultSpec`] preset via [`FaultSpec::regime`].
+pub const FAULT_REGIMES: &[&str] = &[
+    "none",
+    "standard",
+    "throttle-storm",
+    "spot-chaos",
+    "brownout",
+];
+
+/// One fault regime: all rates/windows that shape the injected fault
+/// stream. All fields are plain numbers so the spec round-trips through
+/// the strict recipe loader and the report exporter losslessly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Regime label (one of [`FAULT_REGIMES`], or "custom" after
+    /// per-key overrides).
+    pub regime: String,
+    /// Recovery-policy name this spec runs under ("standard" |
+    /// "legacy"); resolved by the coordinator, carried here so one
+    /// `[faults]` section / matrix axis value selects both.
+    pub policy: String,
+    /// Extra per-call crash probability (on top of
+    /// `platform.crash_probability`).
+    pub crash_rate: f64,
+    /// Throttle storms: a storm starts every `throttle_every_s` seconds
+    /// (0 = off) ...
+    pub throttle_every_s: f64,
+    /// ... and lasts `throttle_len_s` seconds, during which *every*
+    /// acquire is denied (correlated denial storm).
+    pub throttle_len_s: f64,
+    /// Fraction of cold starts amplified into stragglers (0 = off).
+    pub straggler_rate: f64,
+    /// Cold-start latency multiplier for straggler cold starts.
+    pub straggler_mult: f64,
+    /// Spot-reclaim sweeps: every `evict_every_s` seconds (0 = off) all
+    /// idle warm instances are reclaimed mid-keepalive, forcing cold
+    /// starts where warm reuse was expected.
+    pub evict_every_s: f64,
+    /// Brownouts: a window starts every `brownout_every_s` seconds
+    /// (0 = off) ...
+    pub brownout_every_s: f64,
+    /// ... lasts `brownout_len_s` seconds ...
+    pub brownout_len_s: f64,
+    /// ... and inflates every instance's environment factor (execution
+    /// latency) by this multiplier while active.
+    pub brownout_mult: f64,
+}
+
+impl FaultSpec {
+    /// The no-fault spec (the `"none"` regime).
+    pub fn none() -> Self {
+        FaultSpec {
+            regime: "none".into(),
+            policy: "standard".into(),
+            crash_rate: 0.0,
+            throttle_every_s: 0.0,
+            throttle_len_s: 0.0,
+            straggler_rate: 0.0,
+            straggler_mult: 1.0,
+            evict_every_s: 0.0,
+            brownout_every_s: 0.0,
+            brownout_len_s: 0.0,
+            brownout_mult: 1.0,
+        }
+    }
+
+    /// Look up a named regime preset. `None` for unknown names.
+    pub fn regime(name: &str) -> Option<Self> {
+        let base = Self::none();
+        let spec = match name {
+            "none" => base,
+            // The chaos lab's design point: every fault class active at
+            // rates a resilient policy should absorb.
+            "standard" => FaultSpec {
+                regime: "standard".into(),
+                crash_rate: 0.35,
+                throttle_every_s: 240.0,
+                throttle_len_s: 8.0,
+                straggler_rate: 0.08,
+                straggler_mult: 6.0,
+                evict_every_s: 180.0,
+                brownout_every_s: 300.0,
+                brownout_len_s: 30.0,
+                brownout_mult: 1.5,
+                ..base
+            },
+            // Correlated acquire-denial storms dominate.
+            "throttle-storm" => FaultSpec {
+                regime: "throttle-storm".into(),
+                crash_rate: 0.05,
+                throttle_every_s: 60.0,
+                throttle_len_s: 12.0,
+                ..base
+            },
+            // Spot reclaim: heavy crash rate + frequent idle eviction.
+            "spot-chaos" => FaultSpec {
+                regime: "spot-chaos".into(),
+                crash_rate: 0.25,
+                evict_every_s: 45.0,
+                straggler_rate: 0.05,
+                straggler_mult: 4.0,
+                ..base
+            },
+            // Correlated latency inflation + straggler tails.
+            "brownout" => FaultSpec {
+                regime: "brownout".into(),
+                brownout_every_s: 120.0,
+                brownout_len_s: 25.0,
+                brownout_mult: 2.0,
+                straggler_rate: 0.15,
+                straggler_mult: 8.0,
+                ..base
+            },
+            _ => return None,
+        };
+        Some(spec)
+    }
+
+    /// Parse a `[matrix] faults` axis value / `--faults` CLI override:
+    /// `REGIME` or `REGIME+POLICY` (e.g. `"standard+legacy"`).
+    pub fn parse_axis(value: &str) -> Option<Self> {
+        let (regime, policy) = match value.split_once('+') {
+            Some((r, p)) => (r, Some(p)),
+            None => (value, None),
+        };
+        let mut spec = Self::regime(regime)?;
+        if let Some(p) = policy {
+            if !matches!(p, "standard" | "legacy") {
+                return None;
+            }
+            spec.policy = p.into();
+        }
+        Some(spec)
+    }
+
+    /// The axis/CLI spelling that reproduces this spec (`REGIME` or
+    /// `REGIME+POLICY`).
+    pub fn axis_label(&self) -> String {
+        if self.policy == "standard" {
+            self.regime.clone()
+        } else {
+            format!("{}+{}", self.regime, self.policy)
+        }
+    }
+
+    /// Whether this spec injects anything at all.
+    pub fn is_active(&self) -> bool {
+        self.crash_rate > 0.0
+            || (self.throttle_every_s > 0.0 && self.throttle_len_s > 0.0)
+            || (self.straggler_rate > 0.0 && self.straggler_mult != 1.0)
+            || self.evict_every_s > 0.0
+            || (self.brownout_every_s > 0.0 && self.brownout_len_s > 0.0 && self.brownout_mult != 1.0)
+    }
+}
+
+/// The seeded runtime realization of a [`FaultSpec`] for one
+/// experiment. All randomness comes from one dedicated fork; the window
+/// phases are drawn once at construction so window positions are also
+/// pure functions of (spec, seed).
+#[derive(Debug)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    rng: Rng,
+    throttle_phase: f64,
+    brownout_phase: f64,
+    /// Next spot-reclaim sweep time (advanced as sweeps fire).
+    evict_next: f64,
+    /// Last brownout window index that emitted a span (-1 = none yet).
+    brownout_seen: i64,
+    /// Injected-fault tallies by kind (crash, throttle, straggler,
+    /// evict, brownout) for diagnostics.
+    pub injected: u64,
+}
+
+impl FaultPlan {
+    /// Realize `spec` for the experiment seed.
+    pub fn new(spec: &FaultSpec, seed: u64) -> Self {
+        let mut rng = Rng::new(seed).fork(FAULT_RNG_TAG);
+        // Phases offset the periodic windows so regimes with the same
+        // period do not trivially align across seeds.
+        let throttle_phase = if spec.throttle_every_s > 0.0 {
+            rng.f64() * spec.throttle_every_s
+        } else {
+            0.0
+        };
+        let brownout_phase = if spec.brownout_every_s > 0.0 {
+            rng.f64() * spec.brownout_every_s
+        } else {
+            0.0
+        };
+        let evict_next = if spec.evict_every_s > 0.0 {
+            rng.f64() * spec.evict_every_s
+        } else {
+            f64::INFINITY
+        };
+        FaultPlan {
+            spec: spec.clone(),
+            rng,
+            throttle_phase,
+            brownout_phase,
+            evict_next,
+            brownout_seen: -1,
+            injected: 0,
+        }
+    }
+
+    /// The spec this plan realizes.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Whether a throttle storm is active at `t` (every acquire during
+    /// a storm is denied).
+    pub fn throttled(&mut self, t: f64) -> bool {
+        let every = self.spec.throttle_every_s;
+        if every <= 0.0 || self.spec.throttle_len_s <= 0.0 {
+            return false;
+        }
+        let hit = (t - self.throttle_phase).rem_euclid(every) < self.spec.throttle_len_s;
+        if hit {
+            self.injected += 1;
+        }
+        hit
+    }
+
+    /// Roll the extra crash die for one invocation.
+    pub fn crash(&mut self) -> bool {
+        let hit = self.spec.crash_rate > 0.0 && self.rng.chance(self.spec.crash_rate);
+        if hit {
+            self.injected += 1;
+        }
+        hit
+    }
+
+    /// Cold-start multiplier for one cold start (1.0, or the straggler
+    /// amplification when the straggler die hits).
+    pub fn straggler_mult(&mut self) -> f64 {
+        if self.spec.straggler_rate > 0.0
+            && self.spec.straggler_mult != 1.0
+            && self.rng.chance(self.spec.straggler_rate)
+        {
+            self.injected += 1;
+            self.spec.straggler_mult
+        } else {
+            1.0
+        }
+    }
+
+    /// Whether a spot-reclaim sweep fired in `(last check, t]`. Each
+    /// sweep reclaims *all* idle instances (the caller evicts them);
+    /// multiple overdue sweeps coalesce into one.
+    pub fn eviction_due(&mut self, t: f64) -> bool {
+        if t < self.evict_next {
+            return false;
+        }
+        let every = self.spec.evict_every_s;
+        while self.evict_next <= t {
+            self.evict_next += every;
+        }
+        self.injected += 1;
+        true
+    }
+
+    /// Environment-factor multiplier at `t` (brownout windows inflate
+    /// execution latency of every instance while active).
+    pub fn brownout_factor(&mut self, t: f64) -> f64 {
+        let every = self.spec.brownout_every_s;
+        if every <= 0.0 || self.spec.brownout_len_s <= 0.0 || self.spec.brownout_mult == 1.0 {
+            return 1.0;
+        }
+        let shifted = t - self.brownout_phase;
+        if shifted.rem_euclid(every) < self.spec.brownout_len_s {
+            let window = shifted.div_euclid(every) as i64;
+            if window != self.brownout_seen {
+                self.brownout_seen = window;
+                self.injected += 1;
+            }
+            self.spec.brownout_mult
+        } else {
+            1.0
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regimes_all_resolve_and_none_is_inactive() {
+        for name in FAULT_REGIMES {
+            let spec = FaultSpec::regime(name).unwrap();
+            assert_eq!(spec.regime, *name);
+            assert_eq!(spec.is_active(), *name != "none", "{name}");
+        }
+        assert!(FaultSpec::regime("nope").is_none());
+    }
+
+    #[test]
+    fn axis_values_parse_regime_and_policy() {
+        let s = FaultSpec::parse_axis("standard").unwrap();
+        assert_eq!((s.regime.as_str(), s.policy.as_str()), ("standard", "standard"));
+        let s = FaultSpec::parse_axis("spot-chaos+legacy").unwrap();
+        assert_eq!((s.regime.as_str(), s.policy.as_str()), ("spot-chaos", "legacy"));
+        assert_eq!(s.axis_label(), "spot-chaos+legacy");
+        assert!(FaultSpec::parse_axis("standard+nope").is_none());
+        assert!(FaultSpec::parse_axis("bogus").is_none());
+    }
+
+    #[test]
+    fn fault_stream_is_a_pure_function_of_spec_and_seed() {
+        let spec = FaultSpec::regime("standard").unwrap();
+        let mut a = FaultPlan::new(&spec, 42);
+        let mut b = FaultPlan::new(&spec, 42);
+        for i in 0..2000 {
+            let t = i as f64 * 0.37;
+            assert_eq!(a.throttled(t), b.throttled(t));
+            assert_eq!(a.crash(), b.crash());
+            assert_eq!(a.straggler_mult(), b.straggler_mult());
+            assert_eq!(a.eviction_due(t), b.eviction_due(t));
+            assert_eq!(a.brownout_factor(t), b.brownout_factor(t));
+        }
+        assert_eq!(a.injected, b.injected);
+        assert!(a.injected > 0, "standard regime must inject");
+
+        // A different seed shifts the stream.
+        let mut c = FaultPlan::new(&spec, 43);
+        let drew: Vec<bool> = (0..200).map(|_| c.crash()).collect();
+        let mut d = FaultPlan::new(&spec, 42);
+        let base: Vec<bool> = (0..200).map(|_| d.crash()).collect();
+        assert_ne!(drew, base, "seed must drive the crash stream");
+    }
+
+    #[test]
+    fn throttle_windows_cover_the_configured_fraction() {
+        let spec = FaultSpec {
+            throttle_every_s: 100.0,
+            throttle_len_s: 10.0,
+            ..FaultSpec::none()
+        };
+        let mut plan = FaultPlan::new(&spec, 7);
+        let denied = (0..10_000)
+            .filter(|i| plan.throttled(*i as f64 * 0.1))
+            .count();
+        // 10% duty cycle over 1000 s.
+        assert!((denied as f64 / 10_000.0 - 0.1).abs() < 0.02, "{denied}");
+    }
+
+    #[test]
+    fn eviction_sweeps_fire_once_per_period_and_coalesce() {
+        let spec = FaultSpec {
+            evict_every_s: 50.0,
+            ..FaultSpec::none()
+        };
+        let mut plan = FaultPlan::new(&spec, 9);
+        let mut fired = 0;
+        for i in 0..100 {
+            if plan.eviction_due(i as f64 * 10.0) {
+                fired += 1;
+            }
+        }
+        // ~1000 s / 50 s = ~20 sweeps; phase may drop one.
+        assert!((19..=21).contains(&fired), "{fired}");
+        // A long gap coalesces all overdue sweeps into one.
+        let mut plan = FaultPlan::new(&spec, 9);
+        assert!(plan.eviction_due(10_000.0));
+        assert!(!plan.eviction_due(10_001.0));
+    }
+
+    #[test]
+    fn brownout_inflates_inside_windows_only() {
+        let spec = FaultSpec {
+            brownout_every_s: 100.0,
+            brownout_len_s: 20.0,
+            brownout_mult: 2.0,
+            ..FaultSpec::none()
+        };
+        let mut plan = FaultPlan::new(&spec, 3);
+        let inflated = (0..1000)
+            .filter(|i| plan.brownout_factor(*i as f64) > 1.0)
+            .count();
+        assert!((inflated as f64 / 1000.0 - 0.2).abs() < 0.05, "{inflated}");
+    }
+}

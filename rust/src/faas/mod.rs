@@ -7,11 +7,13 @@
 //! with the VM simulator, and [`profile`] for the named provider
 //! calibrations ([`PlatformProfile`]) that scenarios select platforms by.
 
+pub mod faults;
 pub mod noise;
 mod platform;
 pub mod platform_reference;
 pub mod profile;
 
+pub use faults::{FaultPlan, FaultSpec, FAULT_REGIMES};
 pub use platform::{FaasPlatform, Instance, InstancePool, Placement, PlatformStats};
 pub use platform_reference::ReferencePlatform;
 pub use profile::{profile_by_name, profile_names, profiles, PlatformProfile};

@@ -39,6 +39,7 @@
 //! * the busy tally is an incrementally maintained counter, not a
 //!   `filter().count()` pass.
 
+use super::faults::FaultPlan;
 use super::noise::{EnvState, NoiseParams};
 use crate::config::PlatformConfig;
 use crate::des::Time;
@@ -167,6 +168,13 @@ pub struct FaasPlatform {
     /// Lifecycle-span sink; `None` (the default) skips all emission with
     /// a single branch per event and zero behavioural impact.
     sink: Option<SharedSink>,
+    /// Installed fault plan; `None` (the default) consumes zero RNG
+    /// draws and adds one branch per hook, so un-faulted runs are
+    /// bit-identical to a build without fault support.
+    faults: Option<FaultPlan>,
+    /// Simulated time of the most recent acquire — the timestamp for
+    /// fault spans emitted from hooks that have no clock parameter.
+    now: Time,
 }
 
 impl FaasPlatform {
@@ -199,7 +207,22 @@ impl FaasPlatform {
             cold_seen: 0,
             stats: PlatformStats::default(),
             sink: None,
+            faults: None,
+            now: 0.0,
         }
+    }
+
+    /// Install a deterministic fault plan. All subsequent acquires,
+    /// cold starts, environment factors and crash rolls consult it; the
+    /// plan draws only from its own RNG fork, so installing one never
+    /// perturbs the platform's own noise/crash streams.
+    pub fn install_faults(&mut self, plan: FaultPlan) {
+        self.faults = Some(plan);
+    }
+
+    /// The installed fault plan, if any (diagnostics).
+    pub fn faults(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
     }
 
     /// Attach a telemetry sink: every acquire/release/reap from now on
@@ -222,8 +245,25 @@ impl FaasPlatform {
     /// reaping pops only instances that actually expired, and each
     /// instance is reaped at most once.
     pub fn acquire(&mut self, t: Time) -> Option<Placement> {
+        self.now = t;
         self.reap(t);
+        // Spot-reclaim sweep: reclaim every idle warm instance
+        // mid-keepalive, forcing cold starts where reuse was expected.
+        if self.faults.as_mut().is_some_and(|p| p.eviction_due(t)) {
+            self.evict_idle(t);
+        }
         self.stats.invocations += 1;
+        // Throttle storm: every acquire inside the window is denied,
+        // producing a correlated denial burst instead of the steady
+        // concurrency-limit backpressure below.
+        if self.faults.as_mut().is_some_and(|p| p.throttled(t)) {
+            if let Some(sink) = &self.sink {
+                let mut s = sink.borrow_mut();
+                s.emit(Span::FaultInjected { t, kind: "throttle" });
+                s.emit(Span::AcquireDenied { t });
+            }
+            return None;
+        }
         if let Some(slot) = self.idle.pop_front() {
             let inst = self.slots[slot].as_mut().expect("idle slot holds an instance");
             debug_assert!(
@@ -298,7 +338,41 @@ impl FaasPlatform {
         } else {
             1.0
         };
-        base * mult * self.rng.lognormal(0.0, 0.15)
+        let latency = base * mult * self.rng.lognormal(0.0, 0.15);
+        // Straggler tail: a faulted cold start is amplified well past
+        // the lognormal body (the hedging trigger in the coordinator).
+        let straggler = self.faults.as_mut().map_or(1.0, |p| p.straggler_mult());
+        if straggler != 1.0 {
+            if let Some(sink) = &self.sink {
+                sink.borrow_mut().emit(Span::FaultInjected { t: self.now, kind: "straggler" });
+            }
+        }
+        latency * straggler
+    }
+
+    /// Reclaim every idle warm instance (spot-reclaim sweep). Busy
+    /// instances finish their in-flight call; only the warm pool is
+    /// taken, which is where the damage lands: the next wave of calls
+    /// all pay cold starts.
+    fn evict_idle(&mut self, t: Time) {
+        if self.idle.is_empty() {
+            return;
+        }
+        if let Some(sink) = &self.sink {
+            sink.borrow_mut().emit(Span::FaultInjected { t, kind: "evict" });
+        }
+        while let Some(slot) = self.idle.pop_front() {
+            let inst = self.slots[slot].take().expect("idle slot holds an instance");
+            self.free.push(slot);
+            self.stats.instances_reaped += 1;
+            if let Some(sink) = &self.sink {
+                sink.borrow_mut().emit(Span::Reap {
+                    t,
+                    instance: inst.id,
+                    idle_s: t - inst.idle_since,
+                });
+            }
+        }
     }
 
     /// Metered duration for `raw_s` seconds of execution: clamped to the
@@ -364,11 +438,28 @@ impl FaasPlatform {
     /// Environment factor of an instance at time `t` (advances its AR(1)
     /// co-tenancy state).
     pub fn env_factor(&mut self, instance: usize, t: Time) -> f64 {
-        self.slots[instance]
+        let base = self.slots[instance]
             .as_mut()
             .expect("env_factor() on a reaped instance: stale Placement handle")
             .env
-            .factor(&self.noise, &mut self.rng, t)
+            .factor(&self.noise, &mut self.rng, t);
+        // Brownout window: correlated latency inflation across the whole
+        // fleet while the window is active.
+        match self.faults.as_mut() {
+            Some(plan) => {
+                let before = plan.injected;
+                let factor = plan.brownout_factor(t);
+                if plan.injected > before {
+                    // First sample inside a new window: one span per
+                    // brownout, not one per env draw.
+                    if let Some(sink) = &self.sink {
+                        sink.borrow_mut().emit(Span::FaultInjected { t, kind: "brownout" });
+                    }
+                }
+                base * factor
+            }
+            None => base,
+        }
     }
 
     /// Whether the instance's writable cache is already populated.
@@ -389,7 +480,16 @@ impl FaasPlatform {
 
     /// Roll the crash die for an invocation (failure injection).
     pub fn maybe_crash(&mut self) -> bool {
-        let crash = self.cfg.crash_probability > 0.0 && self.rng.chance(self.cfg.crash_probability);
+        // The baseline die always rolls first so the platform RNG stream
+        // is independent of the fault stream (and vice versa).
+        let base = self.cfg.crash_probability > 0.0 && self.rng.chance(self.cfg.crash_probability);
+        let injected = self.faults.as_mut().is_some_and(|p| p.crash());
+        if injected {
+            if let Some(sink) = &self.sink {
+                sink.borrow_mut().emit(Span::FaultInjected { t: self.now, kind: "crash" });
+            }
+        }
+        let crash = base || injected;
         if crash {
             self.stats.crashes += 1;
         }

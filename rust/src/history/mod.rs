@@ -42,7 +42,7 @@ pub use gate::{
 };
 pub use store::{
     parse_scenario_report, stored_run_to_json, HistoryStore, RunMeta, StoredAdaptive,
-    StoredLive, StoredMetadata, StoredPlatform, StoredRun, StoredRunMetrics, StoredScenario,
-    DEFAULT_STORE_DIR,
+    StoredDegraded, StoredFaults, StoredLive, StoredMetadata, StoredPlatform, StoredRun,
+    StoredRunMetrics, StoredScenario, DEFAULT_STORE_DIR,
 };
 pub use timeline::{BenchmarkSeries, SeriesPoint, Timeline, TimelineEntry};

@@ -347,6 +347,32 @@ pub struct StoredLive {
     pub est_wall_saved_s: f64,
 }
 
+/// `faults` section (fault-injection provenance) when present.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredFaults {
+    pub regime: String,
+    pub policy: String,
+    pub crash_rate: f64,
+    pub throttle_every_s: f64,
+    pub throttle_len_s: f64,
+    pub straggler_rate: f64,
+    pub straggler_mult: f64,
+    pub evict_every_s: f64,
+    pub brownout_every_s: f64,
+    pub brownout_len_s: f64,
+    pub brownout_mult: f64,
+}
+
+/// One `degraded` section entry: a benchmark quarantined below the
+/// retry policy's sample quorum.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredDegraded {
+    pub benchmark: String,
+    pub results: f64,
+    pub quorum: f64,
+    pub median_ratio_pct: f64,
+}
+
 /// A fully parsed stored run: the typed mirror of
 /// `elastibench.scenario-report.v1`.
 #[derive(Debug, Clone)]
@@ -360,6 +386,12 @@ pub struct StoredRun {
     pub analysis: SuiteAnalysis,
     pub adaptive: Option<StoredAdaptive>,
     pub live: Option<StoredLive>,
+    /// `faults` section; `None` for runs without a `[faults]` recipe
+    /// section (including every pre-chaos report).
+    pub faults: Option<StoredFaults>,
+    /// `degraded` section; empty when the run quarantined nothing (the
+    /// section is then absent from the document).
+    pub degraded: Vec<StoredDegraded>,
     /// `telemetry` section (span-derived run metrics); `None` for reports
     /// recorded before telemetry existed.
     pub telemetry: Option<crate::telemetry::RunMetrics>,
@@ -535,6 +567,43 @@ pub fn parse_scenario_report(doc: &Json) -> Result<StoredRun> {
         }
     };
 
+    // Absent unless the recipe had a `[faults]` section — optional by
+    // design, like `telemetry`.
+    let faults = match doc.get("faults") {
+        None => None,
+        Some(f) => Some(StoredFaults {
+            regime: get_str(f, "faults", "regime")?,
+            policy: get_str(f, "faults", "policy")?,
+            crash_rate: get_num(f, "faults", "crash_rate")?,
+            throttle_every_s: get_num(f, "faults", "throttle_every_s")?,
+            throttle_len_s: get_num(f, "faults", "throttle_len_s")?,
+            straggler_rate: get_num(f, "faults", "straggler_rate")?,
+            straggler_mult: get_num(f, "faults", "straggler_mult")?,
+            evict_every_s: get_num(f, "faults", "evict_every_s")?,
+            brownout_every_s: get_num(f, "faults", "brownout_every_s")?,
+            brownout_len_s: get_num(f, "faults", "brownout_len_s")?,
+            brownout_mult: get_num(f, "faults", "brownout_mult")?,
+        }),
+    };
+
+    // Absent when nothing was quarantined.
+    let degraded = match doc.get("degraded") {
+        None => Vec::new(),
+        Some(d) => d
+            .as_arr()
+            .ok_or_else(|| anyhow!("report section \"degraded\" must be an array"))?
+            .iter()
+            .map(|e| {
+                Ok(StoredDegraded {
+                    benchmark: get_str(e, "degraded[]", "benchmark")?,
+                    results: get_num(e, "degraded[]", "results")?,
+                    quorum: get_num(e, "degraded[]", "quorum")?,
+                    median_ratio_pct: get_num(e, "degraded[]", "median_ratio_pct")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+
     // Absent in pre-telemetry documents — optional by design.
     let telemetry = match doc.get("telemetry") {
         None => None,
@@ -553,6 +622,8 @@ pub fn parse_scenario_report(doc: &Json) -> Result<StoredRun> {
         analysis,
         adaptive,
         live,
+        faults,
+        degraded,
         telemetry,
     })
 }
@@ -713,6 +784,45 @@ pub fn stored_run_to_json(run: &StoredRun) -> Json {
             },
         ),
     ];
+    // Optional sections re-emit in the writer's canonical order
+    // (faults, degraded, telemetry) so the round trip stays
+    // byte-identical.
+    if let Some(f) = &run.faults {
+        entries.push((
+            "faults",
+            obj(vec![
+                ("regime", Json::Str(f.regime.clone())),
+                ("policy", Json::Str(f.policy.clone())),
+                ("crash_rate", Json::Num(f.crash_rate)),
+                ("throttle_every_s", Json::Num(f.throttle_every_s)),
+                ("throttle_len_s", Json::Num(f.throttle_len_s)),
+                ("straggler_rate", Json::Num(f.straggler_rate)),
+                ("straggler_mult", Json::Num(f.straggler_mult)),
+                ("evict_every_s", Json::Num(f.evict_every_s)),
+                ("brownout_every_s", Json::Num(f.brownout_every_s)),
+                ("brownout_len_s", Json::Num(f.brownout_len_s)),
+                ("brownout_mult", Json::Num(f.brownout_mult)),
+            ]),
+        ));
+    }
+    if !run.degraded.is_empty() {
+        entries.push((
+            "degraded",
+            Json::Arr(
+                run.degraded
+                    .iter()
+                    .map(|d| {
+                        obj(vec![
+                            ("benchmark", Json::Str(d.benchmark.clone())),
+                            ("results", Json::Num(d.results)),
+                            ("quorum", Json::Num(d.quorum)),
+                            ("median_ratio_pct", Json::Num(d.median_ratio_pct)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
     if let Some(t) = &run.telemetry {
         entries.push(("telemetry", crate::telemetry::run_metrics_to_json(t)));
     }
@@ -802,6 +912,31 @@ mod tests {
             stored_run_to_json(&loaded).to_string(),
             exported.to_string(),
             "live reports round-trip byte-identically"
+        );
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn chaos_report_roundtrips_losslessly() {
+        let store = temp_store("chaos");
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        sc.sut.benchmark_count = 8;
+        sc.exp.calls_per_benchmark = 6;
+        sc.exp.parallelism = 12;
+        sc.faults = Some(crate::faas::FaultSpec::regime("standard").unwrap());
+        let report = run_scenario(&sc, &Analyzer::native()).unwrap();
+        let exported = scenario_report_to_json(&report);
+        let meta = store.record(&report, "t-chaos").unwrap();
+        let loaded = store.load("quick-smoke", &meta.run_id).unwrap();
+        let faults = loaded.faults.as_ref().expect("faults section survives");
+        assert_eq!(faults.regime, "standard");
+        assert_eq!(faults.policy, "standard");
+        assert!(faults.crash_rate > 0.0);
+        assert_eq!(loaded.degraded.len(), report.degraded.len());
+        assert_eq!(
+            stored_run_to_json(&loaded).to_string(),
+            exported.to_string(),
+            "chaos reports round-trip byte-identically"
         );
         let _ = std::fs::remove_dir_all(store.root());
     }

@@ -274,6 +274,8 @@ pub(crate) fn synthetic_run(commit: &str, benches: &[(&str, f64)]) -> StoredRun 
             },
             adaptive: None,
             live: None,
+            faults: None,
+            degraded: vec![],
             telemetry: None,
         }
     }

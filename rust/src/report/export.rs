@@ -232,6 +232,47 @@ pub fn scenario_report_to_json(r: &ScenarioReport) -> Json {
             },
         ),
     ];
+    // Fault-injection provenance: absent (not null) when the recipe has
+    // no `[faults]` section, so every pre-chaos report stays
+    // byte-identical.
+    if let Some(f) = &sc.faults {
+        entries.push((
+            "faults",
+            obj(vec![
+                ("regime", Json::Str(f.regime.clone())),
+                ("policy", Json::Str(f.policy.clone())),
+                ("crash_rate", Json::Num(f.crash_rate)),
+                ("throttle_every_s", Json::Num(f.throttle_every_s)),
+                ("throttle_len_s", Json::Num(f.throttle_len_s)),
+                ("straggler_rate", Json::Num(f.straggler_rate)),
+                ("straggler_mult", Json::Num(f.straggler_mult)),
+                ("evict_every_s", Json::Num(f.evict_every_s)),
+                ("brownout_every_s", Json::Num(f.brownout_every_s)),
+                ("brownout_len_s", Json::Num(f.brownout_len_s)),
+                ("brownout_mult", Json::Num(f.brownout_mult)),
+            ]),
+        ));
+    }
+    // Quorum quarantine: absent when nothing degraded (every clean and
+    // every legacy-policy run).
+    if !r.degraded.is_empty() {
+        entries.push((
+            "degraded",
+            Json::Arr(
+                r.degraded
+                    .iter()
+                    .map(|d| {
+                        obj(vec![
+                            ("benchmark", Json::Str(d.name.clone())),
+                            ("results", Json::Num(d.results as f64)),
+                            ("quorum", Json::Num(d.quorum as f64)),
+                            ("median_ratio_pct", Json::Num(d.median_ratio_pct)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
     // Absent (not null) when the run predates telemetry, so reports stored
     // before this section existed re-serialize byte-identically.
     if let Some(t) = &r.telemetry {
@@ -366,6 +407,40 @@ mod tests {
         }
         // The replay oracle rides along for adaptive-live runs.
         assert!(parsed.get("adaptive").unwrap().get("fixed_total").is_some());
+    }
+
+    #[test]
+    fn chaos_sections_are_absent_without_faults_and_present_with() {
+        let sc = crate::scenario::catalog_entry("quick-smoke").unwrap();
+        let analyzer = crate::stats::Analyzer::native();
+        let clean = crate::scenario::run_scenario(&sc, &analyzer).unwrap();
+        let cj = parse(&scenario_report_to_json(&clean).to_string()).unwrap();
+        assert!(cj.get("faults").is_none(), "no [faults] => no section");
+        assert!(cj.get("degraded").is_none(), "clean run => no quarantine");
+        let mut chaotic = sc.clone();
+        chaotic.faults = Some(crate::faas::FaultSpec::regime("standard").unwrap());
+        let report = crate::scenario::run_scenario(&chaotic, &analyzer).unwrap();
+        let fj = parse(&scenario_report_to_json(&report).to_string()).unwrap();
+        let f = fj.get("faults").unwrap();
+        assert_eq!(f.get("regime").unwrap().as_str(), Some("standard"));
+        assert_eq!(f.get("policy").unwrap().as_str(), Some("standard"));
+        assert!(f.get("crash_rate").unwrap().as_f64().unwrap() > 0.0);
+        assert!(f.get("brownout_mult").unwrap().as_f64().is_some());
+        // `degraded` appears iff the run actually quarantined; when it
+        // does, it mirrors the report's section row for row.
+        match fj.get("degraded") {
+            None => assert!(report.degraded.is_empty()),
+            Some(d) => {
+                let arr = d.as_arr().unwrap();
+                assert_eq!(arr.len(), report.degraded.len());
+                assert!(!arr.is_empty());
+                assert!(arr[0].get("benchmark").unwrap().as_str().is_some());
+                assert!(arr[0].get("quorum").unwrap().as_f64().is_some());
+                assert!(arr[0].get("median_ratio_pct").unwrap().as_f64().is_some());
+            }
+        }
+        let tel = fj.get("telemetry").unwrap();
+        assert!(tel.get("faults_injected").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

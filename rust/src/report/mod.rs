@@ -14,10 +14,10 @@ pub use export::{
     short_commit, write_text, SCENARIO_REPORT_SCHEMA,
 };
 pub use tables::{
-    agreement_table, comparison_row, experiment_summary_table, fmt_duration,
-    gate_table, history_runs_table, live_stop_table, paper_vs_measured_table,
+    agreement_table, chaos_scoreboard_table, comparison_row, experiment_summary_table,
+    fmt_duration, gate_table, history_runs_table, live_stop_table, paper_vs_measured_table,
     run_list_footer, strategy_scoreboard_table, sweep_summary_table,
     telemetry_table, trend_table,
-    GateRow, HistoryRunRow, LiveStopRow, PaperRow, StrategyScoreRow, SummaryRow,
+    ChaosScoreRow, GateRow, HistoryRunRow, LiveStopRow, PaperRow, StrategyScoreRow, SummaryRow,
     SweepRow, TrendCell,
 };

@@ -391,6 +391,98 @@ pub fn strategy_scoreboard_table(rows: &[StrategyScoreRow]) -> String {
     out
 }
 
+/// One (fault regime, profile, retry policy) cell of the chaos accuracy
+/// lab scoreboard (`tests/chaos_lab.rs`): statistical accuracy under
+/// injected faults plus the billed overhead the policy's retries and
+/// hedges added.
+#[derive(Debug, Clone)]
+pub struct ChaosScoreRow {
+    /// Fault regime name (`standard` / `throttle-storm` / ...).
+    pub regime: String,
+    /// Platform profile the cell ran on.
+    pub profile: String,
+    /// Retry policy name (`standard` / `legacy`).
+    pub policy: String,
+    /// A/A verdicts flagged as changes (false positives).
+    pub aa_false_positives: usize,
+    /// A/A verdicts analyzed.
+    pub aa_verdicts: usize,
+    /// Injected regressions the A/B run detected.
+    pub ab_detected: usize,
+    /// Injected regressions present in the A/B run.
+    pub ab_injected: usize,
+    /// Benchmarks quarantined below the sample quorum (A/A + A/B).
+    pub degraded: usize,
+    /// Faults the plan injected (A/A + A/B).
+    pub faults_injected: u64,
+    /// Billed cost attributed to policy retries [USD].
+    pub retry_cost_usd: f64,
+    /// Billed cost attributed to hedged re-issues [USD].
+    pub hedge_cost_usd: f64,
+    /// Total billed cost of the cell [USD].
+    pub cost_usd: f64,
+}
+
+impl ChaosScoreRow {
+    /// A/A false-positive rate [%] (0 when nothing was analyzed).
+    pub fn aa_fp_pct(&self) -> f64 {
+        if self.aa_verdicts == 0 {
+            0.0
+        } else {
+            self.aa_false_positives as f64 / self.aa_verdicts as f64 * 100.0
+        }
+    }
+
+    /// A/B detection rate [%] (0 when nothing was injected).
+    pub fn detection_pct(&self) -> f64 {
+        if self.ab_injected == 0 {
+            0.0
+        } else {
+            self.ab_detected as f64 / self.ab_injected as f64 * 100.0
+        }
+    }
+
+    /// Retry + hedge share of the billed cost [%] — what fault tolerance
+    /// cost on top of the useful work (0 when the cell billed nothing).
+    pub fn overhead_pct(&self) -> f64 {
+        if self.cost_usd <= 0.0 {
+            0.0
+        } else {
+            (self.retry_cost_usd + self.hedge_cost_usd) / self.cost_usd * 100.0
+        }
+    }
+}
+
+/// Render the chaos accuracy scoreboard: one row per
+/// (regime, profile, policy) cell, in harness order.
+pub fn chaos_scoreboard_table(rows: &[ChaosScoreRow]) -> String {
+    let mut out = String::from(
+        "| regime | profile | policy | A/A FP | A/B detected | degraded | faults | \
+         retry+hedge overhead |\n\
+         |---|---|---|---:|---:|---:|---:|---:|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {} | {} | {}/{} ({:.1}%) | {}/{} ({:.1}%) | {} | {} | \
+             ${:.4} ({:.1}%) |\n",
+            r.regime,
+            r.profile,
+            r.policy,
+            r.aa_false_positives,
+            r.aa_verdicts,
+            r.aa_fp_pct(),
+            r.ab_detected,
+            r.ab_injected,
+            r.detection_pct(),
+            r.degraded,
+            r.faults_injected,
+            r.retry_cost_usd + r.hedge_cost_usd,
+            r.overhead_pct(),
+        ));
+    }
+    out
+}
+
 /// One benchmark's live early-stopping outcome (`repeats = "adaptive"`
 /// scenario runs).
 #[derive(Debug, Clone)]
@@ -652,6 +744,54 @@ mod tests {
         };
         assert_eq!(empty.aa_fp_pct(), 0.0);
         assert_eq!(empty.detection_pct(), 0.0);
+    }
+
+    #[test]
+    fn chaos_scoreboard_table_renders() {
+        let row = ChaosScoreRow {
+            regime: "standard".into(),
+            profile: "aws-lambda".into(),
+            policy: "standard".into(),
+            aa_false_positives: 1,
+            aa_verdicts: 40,
+            ab_detected: 9,
+            ab_injected: 10,
+            degraded: 2,
+            faults_injected: 57,
+            retry_cost_usd: 0.01,
+            hedge_cost_usd: 0.01,
+            cost_usd: 0.4,
+        };
+        assert_eq!(row.aa_fp_pct(), 2.5);
+        assert_eq!(row.detection_pct(), 90.0);
+        assert!((row.overhead_pct() - 5.0).abs() < 1e-9);
+        let t = chaos_scoreboard_table(&[row]);
+        assert!(t.contains("| regime | profile | policy |"), "{t}");
+        assert!(
+            t.contains(
+                "| standard | aws-lambda | standard | 1/40 (2.5%) | 9/10 (90.0%) \
+                 | 2 | 57 | $0.0200 (5.0%) |"
+            ),
+            "{t}"
+        );
+        // Degenerate cells render without dividing by zero.
+        let empty = ChaosScoreRow {
+            regime: "none".into(),
+            profile: "gcf".into(),
+            policy: "legacy".into(),
+            aa_false_positives: 0,
+            aa_verdicts: 0,
+            ab_detected: 0,
+            ab_injected: 0,
+            degraded: 0,
+            faults_injected: 0,
+            retry_cost_usd: 0.0,
+            hedge_cost_usd: 0.0,
+            cost_usd: 0.0,
+        };
+        assert_eq!(empty.aa_fp_pct(), 0.0);
+        assert_eq!(empty.detection_pct(), 0.0);
+        assert_eq!(empty.overhead_pct(), 0.0);
     }
 
     #[test]

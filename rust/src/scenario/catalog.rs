@@ -61,6 +61,10 @@ pub const CATALOG_SOURCES: &[(&str, &str)] = &[
         "strategy-lab.toml",
         include_str!("../../../scenarios/strategy-lab.toml"),
     ),
+    (
+        "chaos-lab.toml",
+        include_str!("../../../scenarios/chaos-lab.toml"),
+    ),
 ];
 
 /// Load the full shipped catalog, in catalog order.

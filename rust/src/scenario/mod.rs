@@ -29,8 +29,8 @@ pub use recipe::{
     MATRIX_KEYS, MAX_MATRIX_VARIANTS, SCENARIO_KEYS, STRATEGY_KEYS,
 };
 pub use runner::{
-    commit_id, finish_scenario, run_scenario, run_scenario_experiment,
-    run_scenario_experiment_traced, run_scenario_traced, LiveStopSummary, PendingScenario,
-    ScenarioReport,
+    commit_id, finish_scenario, quarantine_degraded, run_scenario, run_scenario_experiment,
+    run_scenario_experiment_traced, run_scenario_traced, DegradedBenchmark, LiveStopSummary,
+    PendingScenario, ScenarioReport,
 };
 pub use sweep::{default_jobs, run_sweep};

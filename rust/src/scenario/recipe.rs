@@ -28,6 +28,13 @@
 //! [function]                  # optional memory_mb / timeout_s
 //! [sut]                       # optional SutConfig overrides
 //! [platform]                  # optional overrides on TOP of the profile
+//!
+//! [faults]                    # optional: deterministic fault injection
+//! regime = "standard"         # required here; see FAULT_REGIMES
+//! policy = "standard"         # "standard" (default) | "legacy" recovery
+//! crash_rate = 0.35           # numeric keys override the preset
+//!                             # (relabels the spec "custom")
+//!
 //! [history]                   # optional: auto-record runs to a store
 //! store = "results/history"   # store root (default shown)
 //! record = true               # opt-out switch (default true)
@@ -39,6 +46,7 @@
 //! profile   = ["aws-lambda", "gcp-cloud-functions"]
 //! mode      = ["ab", "aa"]
 //! strategy  = ["duet", "rmit"]
+//! faults    = ["standard", "standard+legacy"]
 //! seed      = [60101, 60102]
 //! ```
 //!
@@ -55,7 +63,7 @@ use crate::config::{
     PLATFORM_KEYS, SUT_KEYS,
 };
 use crate::coordinator::strategy::{StrategyKind, STRATEGY_NAMES};
-use crate::faas::{profile_by_name, profile_names, PlatformProfile};
+use crate::faas::{profile_by_name, profile_names, FaultSpec, PlatformProfile, FAULT_REGIMES};
 use crate::sut::Version;
 use anyhow::{anyhow, Result};
 
@@ -70,8 +78,26 @@ pub const HISTORY_KEYS: &[&str] = &["store", "record", "window", "threshold_pct"
 /// [`crate::coordinator::strategy`]).
 pub const STRATEGY_KEYS: &[&str] = &["name"];
 
+/// Keys recognized in the `[faults]` section (deterministic fault
+/// injection; see [`crate::faas::faults`]). `regime` selects a preset;
+/// the numeric keys override individual rates/windows on top of it
+/// (which relabels the spec "custom").
+pub const FAULTS_KEYS: &[&str] = &[
+    "regime",
+    "policy",
+    "crash_rate",
+    "throttle_every_s",
+    "throttle_len_s",
+    "straggler_rate",
+    "straggler_mult",
+    "evict_every_s",
+    "brownout_every_s",
+    "brownout_len_s",
+    "brownout_mult",
+];
+
 /// Axes recognized in the `[matrix]` section.
-pub const MATRIX_KEYS: &[&str] = &["memory_mb", "profile", "mode", "strategy", "seed"];
+pub const MATRIX_KEYS: &[&str] = &["memory_mb", "profile", "mode", "strategy", "faults", "seed"];
 
 /// Hard cap on the grid size one recipe may expand into: a fat-fingered
 /// axis must fail loudly at parse time, not enqueue thousands of runs.
@@ -86,6 +112,7 @@ const SECTIONS: &[(&str, &[&str])] = &[
     ("platform", PLATFORM_KEYS),
     ("history", HISTORY_KEYS),
     ("strategy", STRATEGY_KEYS),
+    ("faults", FAULTS_KEYS),
     ("matrix", MATRIX_KEYS),
 ];
 
@@ -137,9 +164,11 @@ fn expected_kind(section: &str, key: &str) -> Kind {
         ("scenario", "tags") => Kind::Tags,
         ("matrix", "memory_mb" | "seed") => Kind::Ints,
         ("matrix", _) => Kind::Tags,
-        ("scenario", _) | ("strategy", _) | ("experiment", "label") | ("history", "store") => {
-            Kind::Str
-        }
+        ("scenario", _)
+        | ("strategy", _)
+        | ("faults", "regime" | "policy")
+        | ("experiment", "label")
+        | ("history", "store") => Kind::Str,
         ("history", "record") => Kind::Bool,
         ("history", "window") => Kind::Int,
         ("experiment", "randomize_order" | "randomize_version_order") => Kind::Bool,
@@ -237,6 +266,9 @@ pub struct MatrixSpec {
     pub mode: Vec<DuetMode>,
     /// `strategy` axis (empty = not swept).
     pub strategy: Vec<StrategyKind>,
+    /// `faults` axis: each value a `REGIME` or `REGIME+POLICY` spelling
+    /// ([`FaultSpec::parse_axis`]; empty = not swept).
+    pub faults: Vec<FaultSpec>,
     /// `seed` axis; values become `experiment.seed` verbatim (empty =
     /// not swept, seeds are derived from the variant suffix instead).
     pub seed: Vec<u64>,
@@ -256,6 +288,7 @@ impl MatrixSpec {
             * self.profile.len().max(1)
             * self.mode.len().max(1)
             * self.strategy.len().max(1)
+            * self.faults.len().max(1)
             * self.seed.len().max(1)
     }
 }
@@ -297,6 +330,10 @@ pub struct Scenario {
     /// Continuous-benchmarking opt-in (`[history]` section); `None`
     /// when the recipe does not auto-record.
     pub history: Option<HistorySpec>,
+    /// Deterministic fault injection (`[faults]` section or a matrix
+    /// `faults` axis value); `None` when the recipe injects nothing —
+    /// runs are then bit-identical to a build without the fault module.
+    pub faults: Option<FaultSpec>,
     /// Grid axes (`[matrix]` section); `None` for plain recipes.
     pub matrix: Option<MatrixSpec>,
 }
@@ -471,7 +508,11 @@ impl Scenario {
             Some(spec)
         };
 
+        let faults = parse_faults(doc, &mut errs);
         let matrix = parse_matrix(doc, profile, &exp, &mut errs);
+        if faults.is_some() && doc.get("matrix", "faults").is_some() {
+            errs.push("[faults] conflicts with matrix.faults (the axis owns the value)".into());
+        }
 
         if !errs.is_empty() {
             let label = if name.is_empty() { "<recipe>" } else { name.as_str() };
@@ -489,13 +530,15 @@ impl Scenario {
             sut,
             platform,
             history,
+            faults,
             matrix,
         })
     }
 
     /// Expand the `[matrix]` grid into concrete variants, in canonical
     /// axis order (memory, then profile, then mode, then strategy, then
-    /// seed — the same order the suffix spells them). A plain recipe is
+    /// faults, then seed — the same order the suffix spells them). A
+    /// plain recipe is
     /// its own single variant. Expansion is a pure function of the scenario, so variant
     /// lists — and therefore sweep outputs — are identical across
     /// processes and worker counts.
@@ -527,61 +570,74 @@ impl Scenario {
         } else {
             spec.strategy.iter().copied().map(Some).collect()
         };
+        let fault_specs: Vec<Option<&FaultSpec>> = if spec.faults.is_empty() {
+            vec![None]
+        } else {
+            spec.faults.iter().map(Some).collect()
+        };
 
         let mut out = Vec::with_capacity(spec.variant_count());
         for &mem in &mems {
             for profile in &profiles {
                 for &mode in &modes {
                     for &strat in &strategies {
-                        for &seed in &seeds {
-                            let mut sc = self.clone();
-                            sc.matrix = None;
-                            if let Some(pname) = profile {
-                                let p = profile_by_name(pname).unwrap_or_else(|| {
-                                    panic!("unregistered matrix profile {pname:?}")
-                                });
-                                sc.profile_name = pname.to_string();
-                                sc.platform = p.config().overridden(&spec.overrides);
-                                if mem.is_none() && !spec.memory_pinned {
-                                    sc.exp.memory_mb = p.default_memory_mb();
+                        for faults in &fault_specs {
+                            for &seed in &seeds {
+                                let mut sc = self.clone();
+                                sc.matrix = None;
+                                if let Some(pname) = profile {
+                                    let p = profile_by_name(pname).unwrap_or_else(|| {
+                                        panic!("unregistered matrix profile {pname:?}")
+                                    });
+                                    sc.profile_name = pname.to_string();
+                                    sc.platform = p.config().overridden(&spec.overrides);
+                                    if mem.is_none() && !spec.memory_pinned {
+                                        sc.exp.memory_mb = p.default_memory_mb();
+                                    }
                                 }
+                                if let Some(mb) = mem {
+                                    sc.exp.memory_mb = mb;
+                                }
+                                if let Some(m) = mode {
+                                    sc.mode = m;
+                                }
+                                if let Some(s) = strat {
+                                    sc.strategy = s;
+                                }
+                                if let Some(f) = faults {
+                                    sc.faults = Some((*f).clone());
+                                }
+                                let mut parts: Vec<String> = Vec::new();
+                                if let Some(mb) = mem {
+                                    parts.push(format!("mem={mb}"));
+                                }
+                                if let Some(pname) = profile {
+                                    parts.push(format!("profile={pname}"));
+                                }
+                                if let Some(m) = mode {
+                                    parts.push(format!("mode={}", m.as_str()));
+                                }
+                                if let Some(s) = strat {
+                                    parts.push(format!("strategy={}", s.as_str()));
+                                }
+                                if let Some(f) = faults {
+                                    parts.push(format!("faults={}", f.axis_label()));
+                                }
+                                if let Some(s) = seed {
+                                    parts.push(format!("seed={s}"));
+                                }
+                                let suffix = parts.join(",");
+                                sc.name = format!("{}@{suffix}", self.name);
+                                sc.exp.label = sc.name.clone();
+                                // An explicit seed axis pins the value; otherwise
+                                // every grid point derives an independent (but
+                                // reproducible) noise realization from its name.
+                                sc.exp.seed = match seed {
+                                    Some(s) => s,
+                                    None => self.exp.seed ^ suffix_hash(&suffix),
+                                };
+                                out.push(sc);
                             }
-                            if let Some(mb) = mem {
-                                sc.exp.memory_mb = mb;
-                            }
-                            if let Some(m) = mode {
-                                sc.mode = m;
-                            }
-                            if let Some(s) = strat {
-                                sc.strategy = s;
-                            }
-                            let mut parts: Vec<String> = Vec::new();
-                            if let Some(mb) = mem {
-                                parts.push(format!("mem={mb}"));
-                            }
-                            if let Some(pname) = profile {
-                                parts.push(format!("profile={pname}"));
-                            }
-                            if let Some(m) = mode {
-                                parts.push(format!("mode={}", m.as_str()));
-                            }
-                            if let Some(s) = strat {
-                                parts.push(format!("strategy={}", s.as_str()));
-                            }
-                            if let Some(s) = seed {
-                                parts.push(format!("seed={s}"));
-                            }
-                            let suffix = parts.join(",");
-                            sc.name = format!("{}@{suffix}", self.name);
-                            sc.exp.label = sc.name.clone();
-                            // An explicit seed axis pins the value; otherwise
-                            // every grid point derives an independent (but
-                            // reproducible) noise realization from its name.
-                            sc.exp.seed = match seed {
-                                Some(s) => s,
-                                None => self.exp.seed ^ suffix_hash(&suffix),
-                            };
-                            out.push(sc);
                         }
                     }
                 }
@@ -616,6 +672,69 @@ impl Scenario {
     pub fn planned_calls(&self) -> usize {
         self.sut.benchmark_count * self.exp.calls_per_benchmark
     }
+}
+
+/// Parse and validate the `[faults]` section. `regime` is required when
+/// the section is present; numeric keys override the preset's
+/// rates/windows (relabeling the spec "custom" so reports never claim a
+/// preset they do not match). Returns `None` when the recipe has no
+/// `[faults]` section.
+fn parse_faults(doc: &Document, errs: &mut Vec<String>) -> Option<FaultSpec> {
+    let section_present = doc.sections().any(|s| s == "faults");
+    if !section_present {
+        return None;
+    }
+    let mut spec = match doc.get("faults", "regime").and_then(Value::as_str) {
+        None => {
+            errs.push(format!(
+                "faults.regime is required when [faults] is present (one of {FAULT_REGIMES:?})"
+            ));
+            FaultSpec::none()
+        }
+        Some(name) => match FaultSpec::regime(name) {
+            Some(s) => s,
+            None => {
+                errs.push(format!(
+                    "faults.regime must be one of {FAULT_REGIMES:?}, got {name:?}"
+                ));
+                FaultSpec::none()
+            }
+        },
+    };
+    match doc.get("faults", "policy").and_then(Value::as_str) {
+        None => {}
+        Some(p @ ("standard" | "legacy")) => spec.policy = p.into(),
+        Some(other) => errs.push(format!(
+            "faults.policy must be \"standard\" or \"legacy\", got {other:?}"
+        )),
+    }
+    let mut overridden = false;
+    {
+        let mut num_key = |key: &str, field: &mut f64, max: f64| {
+            if let Some(v) = doc.get("faults", key).and_then(Value::as_f64) {
+                if v < 0.0 || v > max {
+                    errs.push(format!("faults.{key} must be in [0, {max}], got {v}"));
+                } else {
+                    *field = v;
+                    overridden = true;
+                }
+            }
+        };
+        let inf = f64::INFINITY;
+        num_key("crash_rate", &mut spec.crash_rate, 1.0);
+        num_key("throttle_every_s", &mut spec.throttle_every_s, inf);
+        num_key("throttle_len_s", &mut spec.throttle_len_s, inf);
+        num_key("straggler_rate", &mut spec.straggler_rate, 1.0);
+        num_key("straggler_mult", &mut spec.straggler_mult, inf);
+        num_key("evict_every_s", &mut spec.evict_every_s, inf);
+        num_key("brownout_every_s", &mut spec.brownout_every_s, inf);
+        num_key("brownout_len_s", &mut spec.brownout_len_s, inf);
+        num_key("brownout_mult", &mut spec.brownout_mult, inf);
+    }
+    if overridden {
+        spec.regime = "custom".into();
+    }
+    Some(spec)
 }
 
 /// Parse and validate the `[matrix]` section (strict, like everything
@@ -685,6 +804,7 @@ fn parse_matrix(
     let profile = str_axis("profile");
     let mode_raw = str_axis("mode");
     let strategy_raw = str_axis("strategy");
+    let faults_raw = str_axis("faults");
 
     for p in &profile {
         if profile_by_name(p).is_none() {
@@ -713,6 +833,16 @@ fn parse_matrix(
             )),
         }
     }
+    let mut faults: Vec<FaultSpec> = Vec::new();
+    for f in &faults_raw {
+        match FaultSpec::parse_axis(f) {
+            Some(spec) => faults.push(spec),
+            None => errs.push(format!(
+                "matrix.faults values must be REGIME or REGIME+POLICY \
+                 (regimes {FAULT_REGIMES:?}, policies \"standard\"/\"legacy\"), got {f:?}"
+            )),
+        }
+    }
 
     // Duplicate axis values would collide on variant names (and silently
     // double-run grid points).
@@ -730,6 +860,9 @@ fn parse_matrix(
     }
     if has_dup(&strategy_raw) {
         errs.push("matrix.strategy has duplicate values".into());
+    }
+    if has_dup(&faults_raw) {
+        errs.push("matrix.faults has duplicate values".into());
     }
     if has_dup(&seed) {
         errs.push("matrix.seed has duplicate values".into());
@@ -760,6 +893,7 @@ fn parse_matrix(
         * profile.len().max(1)
         * mode_raw.len().max(1)
         * strategy_raw.len().max(1)
+        * faults_raw.len().max(1)
         * seed.len().max(1);
     if count > MAX_MATRIX_VARIANTS {
         errs.push(format!(
@@ -797,6 +931,7 @@ fn parse_matrix(
         profile,
         mode,
         strategy,
+        faults,
         seed,
         memory_pinned,
         overrides: doc.clone(),
@@ -1327,6 +1462,110 @@ mod tests {
             "{head}[strategy]\nname = \"rmit\"\n[matrix]\nstrategy = [\"duet\"]"
         ));
         assert!(msg.contains("strategy.name conflicts with matrix.strategy"), "{msg}");
+    }
+
+    #[test]
+    fn faults_section_parses_presets_policies_and_overrides() {
+        let sc = Scenario::from_toml(MINIMAL).unwrap();
+        assert_eq!(sc.faults, None, "faults are opt-in");
+
+        let head = "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\n";
+        let sc = Scenario::from_toml(&format!("{head}[faults]\nregime = \"standard\"")).unwrap();
+        let f = sc.faults.expect("fault spec");
+        assert_eq!(f.regime, "standard");
+        assert_eq!(f.policy, "standard");
+        assert_eq!(f.crash_rate, 0.35);
+        assert!(f.is_active());
+
+        let sc = Scenario::from_toml(&format!(
+            "{head}[faults]\nregime = \"spot-chaos\"\npolicy = \"legacy\""
+        ))
+        .unwrap();
+        let f = sc.faults.unwrap();
+        assert_eq!(f.policy, "legacy");
+        assert_eq!(f.axis_label(), "spot-chaos+legacy");
+
+        // Numeric overrides stack on the preset and relabel it "custom".
+        let sc = Scenario::from_toml(&format!(
+            "{head}[faults]\nregime = \"none\"\ncrash_rate = 0.5\nevict_every_s = 30.0"
+        ))
+        .unwrap();
+        let f = sc.faults.unwrap();
+        assert_eq!(f.regime, "custom");
+        assert_eq!(f.crash_rate, 0.5);
+        assert_eq!(f.evict_every_s, 30.0);
+        assert!(f.is_active());
+    }
+
+    #[test]
+    fn faults_section_is_strict() {
+        let err = |toml: &str| Scenario::from_toml(toml).unwrap_err().to_string();
+        let head = "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\n";
+        // Present-but-regimeless cannot silently mean "none".
+        let msg = err(&format!("{head}[faults]\ncrash_rate = 0.1"));
+        assert!(msg.contains("faults.regime is required"), "{msg}");
+        // Unknown regime: quoted value plus valid spellings.
+        let msg = err(&format!("{head}[faults]\nregime = \"standrad\""));
+        assert!(msg.contains("faults.regime must be one of"), "{msg}");
+        assert!(msg.contains("\"standrad\""), "quotes the bad value: {msg}");
+        assert!(msg.contains("throttle-storm"), "lists alternatives: {msg}");
+        // Unknown policy.
+        let msg = err(&format!(
+            "{head}[faults]\nregime = \"standard\"\npolicy = \"lgacy\""
+        ));
+        assert!(msg.contains("faults.policy must be"), "{msg}");
+        // Unknown keys, wrong types, out-of-range rates.
+        let msg = err(&format!("{head}[faults]\nregime = \"standard\"\ncrashrate = 0.1"));
+        assert!(msg.contains("unknown key faults.crashrate"), "{msg}");
+        let msg = err(&format!("{head}[faults]\nregime = 3"));
+        assert!(msg.contains("faults.regime must be a string"), "{msg}");
+        let msg = err(&format!(
+            "{head}[faults]\nregime = \"standard\"\ncrash_rate = 1.5"
+        ));
+        assert!(msg.contains("faults.crash_rate must be in [0, 1]"), "{msg}");
+    }
+
+    #[test]
+    fn matrix_faults_axis_expands_and_conflicts_with_the_section() {
+        let sc = Scenario::from_toml(
+            r#"
+            [scenario]
+            name = "base"
+            profile = "aws-lambda"
+            [matrix]
+            faults = ["standard", "standard+legacy", "none"]
+            seed = [5]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(sc.variant_count(), 3);
+        let variants = sc.expand();
+        let names: Vec<&str> = variants.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "base@faults=standard,seed=5",
+                "base@faults=standard+legacy,seed=5",
+                "base@faults=none,seed=5",
+            ]
+        );
+        assert_eq!(variants[0].faults.as_ref().unwrap().policy, "standard");
+        assert_eq!(variants[1].faults.as_ref().unwrap().policy, "legacy");
+        assert!(!variants[2].faults.as_ref().unwrap().is_active());
+
+        let err = |toml: &str| Scenario::from_toml(toml).unwrap_err().to_string();
+        let head = "[scenario]\nname = \"t\"\nprofile = \"aws-lambda\"\n";
+        let msg = err(&format!("{head}[matrix]\nfaults = [\"warp\"]"));
+        assert!(msg.contains("matrix.faults values must be"), "{msg}");
+        assert!(msg.contains("\"warp\""), "quotes the bad value: {msg}");
+        let msg = err(&format!(
+            "{head}[matrix]\nfaults = [\"standard\", \"standard\"]"
+        ));
+        assert!(msg.contains("matrix.faults has duplicate values"), "{msg}");
+        let msg = err(&format!(
+            "{head}[faults]\nregime = \"standard\"\n[matrix]\nfaults = [\"none\"]"
+        ));
+        assert!(msg.contains("[faults] conflicts with matrix.faults"), "{msg}");
     }
 
     #[test]

@@ -7,9 +7,9 @@
 //! [`crate::report::scenario_report_to_json`] for the export shape.
 
 use super::recipe::{RepeatPolicy, Scenario};
-use crate::coordinator::{run_experiment_observed, LiveStopConfig, RunReport};
+use crate::coordinator::{run_experiment_chaos, LiveStopConfig, RetryPolicy, RunReport};
 use crate::exp::Workbench;
-use crate::stats::{adaptive_plan, AdaptivePlan, Analyzer, StoppingRule, SuiteAnalysis};
+use crate::stats::{adaptive_plan, AdaptivePlan, Analyzer, Measurements, StoppingRule, SuiteAnalysis};
 use crate::telemetry::{RecordingSink, RunMetrics, SharedSink, Span};
 use anyhow::Result;
 
@@ -34,6 +34,70 @@ pub struct LiveStopSummary {
     pub est_wall_saved_s: f64,
 }
 
+/// A benchmark quarantined by the retry policy's sample quorum: fault
+/// budgets ran out before `min_quorum` paired samples were collected,
+/// so it is pulled from the statistical analysis (whose bootstrap CIs
+/// would be meaningless at that n) and reported here with a *partial*
+/// verdict instead of silently degrading the suite's accuracy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradedBenchmark {
+    /// Benchmark identifier.
+    pub name: String,
+    /// Paired samples actually collected (0 < results < quorum).
+    pub results: usize,
+    /// The quorum the policy required.
+    pub quorum: usize,
+    /// Partial verdict: median(v2)/median(v1) - 1 [%] over the samples
+    /// that *were* collected — indicative only, no CI backs it.
+    pub median_ratio_pct: f64,
+}
+
+/// Median of a non-empty slice (sorted copy; even n averages the two
+/// middle elements) — the quorum section's partial-verdict statistic.
+fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        (v[n / 2 - 1] + v[n / 2]) / 2.0
+    }
+}
+
+/// Split quorum-starved benchmarks out of `measurements`: every
+/// benchmark with `0 < len < quorum` is removed (the analyzer never
+/// sees it) and returned as a [`DegradedBenchmark`] with its partial
+/// median-ratio verdict. `quorum = 0` (the legacy policy) is a no-op,
+/// keeping pre-policy reports byte-identical. Benchmarks with *zero*
+/// samples stay put — they are already accounted for in
+/// `failed_benchmarks` and the analyzer's excluded list.
+pub fn quarantine_degraded(
+    measurements: &mut Vec<Measurements>,
+    quorum: usize,
+) -> Vec<DegradedBenchmark> {
+    if quorum == 0 {
+        return Vec::new();
+    }
+    let mut degraded = Vec::new();
+    let mut kept = Vec::with_capacity(measurements.len());
+    for m in std::mem::take(measurements) {
+        let n = m.len();
+        if n > 0 && n < quorum {
+            degraded.push(DegradedBenchmark {
+                median_ratio_pct: (median(&m.v2[..n]) / median(&m.v1[..n]) - 1.0) * 100.0,
+                name: m.name,
+                results: n,
+                quorum,
+            });
+        } else {
+            kept.push(m);
+        }
+    }
+    *measurements = kept;
+    degraded
+}
+
 /// A fully executed scenario with provenance.
 pub struct ScenarioReport {
     /// The scenario exactly as executed (post-validation).
@@ -47,6 +111,9 @@ pub struct ScenarioReport {
     pub adaptive: Option<AdaptivePlan>,
     /// Live early-stopping outcome (only `repeats = "adaptive"`).
     pub live: Option<LiveStopSummary>,
+    /// Benchmarks quarantined below the retry policy's sample quorum
+    /// (chaos runs only; always empty under the legacy policy).
+    pub degraded: Vec<DegradedBenchmark>,
     /// Aggregated run telemetry (fleet metrics + per-phase cost
     /// attribution), derived from the lifecycle span stream every
     /// scenario run records. `None` only for reports loaded from
@@ -129,6 +196,8 @@ pub struct PendingScenario {
     pub adaptive: Option<AdaptivePlan>,
     /// Live early-stopping outcome (`repeats = "adaptive"`).
     pub live: Option<LiveStopSummary>,
+    /// Benchmarks quarantined below the retry policy's sample quorum.
+    pub degraded: Vec<DegradedBenchmark>,
     /// Aggregated run telemetry (always recorded; plain data, so it
     /// crosses sweep worker threads freely).
     pub telemetry: Option<RunMetrics>,
@@ -182,7 +251,14 @@ pub fn run_scenario_experiment_traced(
     let analysis_seed = sc.exp.seed ^ ANALYSIS_SEED_XOR;
     let rec = RecordingSink::shared();
     let sink: SharedSink = rec.clone();
-    let (run, live) = match sc.repeats {
+    // No `[faults]` section means the byte-compatible legacy policy and
+    // no fault plan: the run is bit-identical to the pre-chaos path.
+    let policy = sc
+        .faults
+        .as_ref()
+        .and_then(|f| RetryPolicy::from_name(&f.policy))
+        .unwrap_or_else(RetryPolicy::legacy);
+    let (mut run, live) = match sc.repeats {
         RepeatPolicy::Adaptive => {
             let cfg = LiveStopConfig {
                 b: analyzer.b,
@@ -191,15 +267,17 @@ pub fn run_scenario_experiment_traced(
                 rule: scenario_rule(sc),
                 seed: analysis_seed,
             };
-            let (run, live) = run_experiment_observed(
+            let (run, live) = run_experiment_chaos(
                 &wb.suite,
                 &wb.sut,
                 &wb.platform,
                 &sc.exp,
                 sc.versions(),
                 sc.strategy.strategy(),
+                sc.faults.as_ref(),
+                &policy,
                 Some(&cfg),
-                &sink,
+                Some(&sink),
             );
             let live = live.expect("live config was passed");
             let planned = sc.planned_calls().max(1);
@@ -215,20 +293,27 @@ pub fn run_scenario_experiment_traced(
             (run, Some(summary))
         }
         RepeatPolicy::Fixed | RepeatPolicy::AdaptiveReplay => (
-            run_experiment_observed(
+            run_experiment_chaos(
                 &wb.suite,
                 &wb.sut,
                 &wb.platform,
                 &sc.exp,
                 sc.versions(),
                 sc.strategy.strategy(),
+                sc.faults.as_ref(),
+                &policy,
                 None,
-                &sink,
+                Some(&sink),
             )
             .0,
             None,
         ),
     };
+    // Quorum quarantine (graceful degradation): pull benchmarks whose
+    // sample count fault budgets could not rescue out of the analysis
+    // input — they surface in the report's `degraded` section instead
+    // of polluting the verdicts with under-powered CIs.
+    let degraded = quarantine_degraded(&mut run.measurements, policy.min_quorum);
     let adaptive = match sc.repeats {
         RepeatPolicy::Fixed => None,
         // The replay over the collected measurements: for live runs it is
@@ -255,6 +340,7 @@ pub fn run_scenario_experiment_traced(
             run,
             adaptive,
             live,
+            degraded,
             telemetry: Some(metrics),
             engine_mode: match sc.repeats {
                 RepeatPolicy::Fixed => "fixed",
@@ -280,6 +366,7 @@ pub fn finish_scenario(
         analysis,
         adaptive: pending.adaptive,
         live: pending.live,
+        degraded: pending.degraded,
         telemetry: pending.telemetry,
         commit: commit_id(),
         version: crate::version().to_string(),
@@ -420,6 +507,96 @@ mod tests {
         } else {
             assert!(live.est_cost_saved_usd > 0.0);
             assert!(live.est_wall_saved_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn quarantine_splits_on_quorum_and_is_a_noop_for_legacy() {
+        let meas = |name: &str, v1: &[f64], v2: &[f64]| Measurements {
+            name: name.into(),
+            v1: v1.to_vec(),
+            v2: v2.to_vec(),
+        };
+        let fresh = || {
+            vec![
+                meas("full", &[1.0, 2.0, 3.0, 4.0], &[1.0, 2.0, 3.0, 4.0]),
+                meas("short", &[100.0, 100.0], &[110.0, 112.0]),
+                meas("dead", &[], &[]),
+                meas("lopsided", &[10.0, 10.0, 10.0, 10.0, 10.0], &[12.0, 11.0, 13.0]),
+            ]
+        };
+        // quorum = 0 (legacy policy): nothing moves.
+        let mut ms = fresh();
+        assert!(quarantine_degraded(&mut ms, 0).is_empty());
+        assert_eq!(ms.len(), 4);
+        // quorum = 4: `short` (2 pairs) and `lopsided` (3 pairs) are
+        // quarantined; `full` keeps its verdict path and `dead` stays
+        // for the failed-benchmark accounting.
+        let mut ms = fresh();
+        let degraded = quarantine_degraded(&mut ms, 4);
+        let names: Vec<&str> = ms.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, ["full", "dead"]);
+        assert_eq!(degraded.len(), 2);
+        assert_eq!(degraded[0].name, "short");
+        assert_eq!(degraded[0].results, 2);
+        assert_eq!(degraded[0].quorum, 4);
+        // median(v2)=111, median(v1)=100 -> +11%.
+        assert!((degraded[0].median_ratio_pct - 11.0).abs() < 1e-9);
+        // The partial verdict only uses the paired prefix: median of
+        // v2[..3]=12 over v1[..3]=10 -> +20%.
+        assert_eq!(degraded[1].name, "lopsided");
+        assert_eq!(degraded[1].results, 3);
+        assert!((degraded[1].median_ratio_pct - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unfaulted_scenarios_match_the_pre_chaos_path() {
+        // Differential: with no [faults] section the chaos entry point
+        // must reproduce the legacy observed run bit for bit.
+        let sc = catalog_entry("quick-smoke").unwrap();
+        assert!(sc.faults.is_none());
+        let report = run_scenario(&sc, &Analyzer::native()).unwrap();
+        assert!(report.degraded.is_empty());
+        let wb = Workbench::with_sut_and_platform(sc.sut.clone(), sc.platform.clone());
+        let sink: SharedSink = RecordingSink::shared();
+        let (run, _) = crate::coordinator::run_experiment_observed(
+            &wb.suite,
+            &wb.sut,
+            &wb.platform,
+            &sc.exp,
+            sc.versions(),
+            sc.strategy.strategy(),
+            None,
+            &sink,
+        );
+        assert_eq!(run.wall_s, report.run.wall_s);
+        assert_eq!(run.cost_usd, report.run.cost_usd);
+        assert_eq!(run.calls_total, report.run.calls_total);
+        assert_eq!(run.measurements.len(), report.run.measurements.len());
+        for (x, y) in run.measurements.iter().zip(&report.run.measurements) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.v1, y.v1);
+            assert_eq!(x.v2, y.v2);
+        }
+    }
+
+    #[test]
+    fn faulted_scenario_is_deterministic_and_injects_faults() {
+        let mut sc = catalog_entry("quick-smoke").unwrap();
+        sc.faults = Some(crate::faas::FaultSpec::regime("standard").unwrap());
+        let a = run_scenario(&sc, &Analyzer::native()).unwrap();
+        let b = run_scenario(&sc, &Analyzer::native()).unwrap();
+        assert_eq!(a.run.wall_s, b.run.wall_s);
+        assert_eq!(a.run.cost_usd, b.run.cost_usd);
+        assert_eq!(a.run.calls_total, b.run.calls_total);
+        assert_eq!(a.degraded, b.degraded);
+        let tel = a.telemetry.as_ref().expect("telemetry recorded");
+        assert!(tel.faults_injected > 0, "standard regime must inject");
+        // Quarantined benchmarks left the analysis input entirely.
+        for d in &a.degraded {
+            assert!(d.results > 0 && d.results < d.quorum);
+            assert!(!a.run.measurements.iter().any(|m| m.name == d.name));
+            assert!(!a.analysis.verdicts.iter().any(|v| v.name == d.name));
         }
     }
 

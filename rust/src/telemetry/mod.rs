@@ -118,6 +118,11 @@ pub enum Span {
         /// Delay until the handler starts [s]: warm dispatch or
         /// cold-start init.
         queue_wait_s: f64,
+        /// How many earlier attempts of this planned call failed
+        /// (0 = first attempt; >0 = this call is a retry).
+        attempt: u32,
+        /// Whether this call is one leg of a hedged pair.
+        hedge: bool,
     },
     /// A call completed (successfully or not) and its instance was
     /// released.
@@ -165,6 +170,45 @@ pub enum Span {
         events: u64,
         /// Peak pending event count (arena high-water mark).
         peak_pending: usize,
+    },
+    /// The platform's fault plan injected a fault (see
+    /// [`crate::faas::faults`]).
+    FaultInjected {
+        /// Injection time [simulated s].
+        t: f64,
+        /// Fault kind: "crash" | "throttle" | "straggler" | "evict" |
+        /// "brownout".
+        kind: &'static str,
+    },
+    /// The retry policy scheduled a delayed re-issue of a failed or
+    /// denied call (only emitted under a non-legacy policy).
+    RetryScheduled {
+        /// Decision time [simulated s].
+        t: f64,
+        /// Suite index of the benchmark.
+        bench: usize,
+        /// Failed call's sequence number (0 for acquire denials, which
+        /// never received one).
+        call: u64,
+        /// Failure kind label driving the retry.
+        kind: &'static str,
+        /// 0-based attempt (denial count for acquire denials) that just
+        /// failed.
+        attempt: u32,
+        /// Backoff delay before the re-issue [s].
+        delay_s: f64,
+    },
+    /// A hedged call pair resolved: the first leg to finish with samples
+    /// won; the loser is canceled (billed, contributes nothing).
+    HedgeWon {
+        /// Resolution time [simulated s].
+        t: f64,
+        /// Suite index of the benchmark.
+        bench: usize,
+        /// Winning call sequence number.
+        winner: u64,
+        /// Losing call sequence number.
+        loser: u64,
     },
 }
 
@@ -253,12 +297,24 @@ pub struct RunMetrics {
     pub des_events: u64,
     /// DES peak pending event count.
     pub des_peak_pending: u64,
+    /// Faults injected by the platform's fault plan (0 without one).
+    pub faults_injected: u64,
+    /// Delayed retries the policy scheduled (0 under the legacy policy).
+    pub retries_scheduled: u64,
+    /// Hedged call pairs that resolved with a winner.
+    pub hedges_won: u64,
     /// Per-request fees [USD].
     pub cost_requests_usd: f64,
     /// Billed instance-cache warmup attributable to cold calls [USD].
     pub cost_cold_start_usd: f64,
     /// Billed execution [USD].
     pub cost_execution_usd: f64,
+    /// Billed cost of retry calls (attempt > 0) [USD] — the recovery
+    /// overhead the policy paid re-issuing failed calls.
+    pub cost_retry_usd: f64,
+    /// Billed cost of hedged call pairs [USD] — both legs, the winner's
+    /// useful work plus the canceled loser.
+    pub cost_hedge_usd: f64,
     /// Billing-floor + granularity round-up residual [USD]; see the
     /// module docs for why this is a residual.
     pub cost_rounding_usd: f64,
@@ -291,6 +347,26 @@ impl RunMetrics {
         let mut des_peak_pending = 0u64;
         let mut cold_billed_s = 0.0f64;
         let mut exec_billed_s = 0.0f64;
+        let mut retry_billed_s = 0.0f64;
+        let mut hedge_billed_s = 0.0f64;
+        let mut faults_injected = 0u64;
+        let mut retries_scheduled = 0u64;
+        let mut hedges_won = 0u64;
+        // Pre-pass: which call ids are retries / hedge legs. The issue
+        // span precedes the completion span for every call, but hedge
+        // losers can complete after their pair's HedgeWon — a single
+        // pass could misroute them, so membership is resolved up front.
+        let mut retry_calls: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        let mut hedge_calls: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        for span in spans {
+            if let Span::CallIssued { call, attempt, hedge, .. } = *span {
+                if hedge {
+                    hedge_calls.insert(call);
+                } else if attempt > 0 {
+                    retry_calls.insert(call);
+                }
+            }
+        }
         for span in spans {
             match *span {
                 Span::ColdStart { .. } => {
@@ -307,14 +383,26 @@ impl RunMetrics {
                 }
                 Span::CallIssued { queue_wait_s, .. } => queue_waits.push(queue_wait_s),
                 Span::CallCompleted {
-                    warmup_s, billed_s, ..
+                    call,
+                    warmup_s,
+                    billed_s,
+                    ..
                 } => {
-                    // Warmup is the cold-attributable billed time; clamp
-                    // to the billed duration (crash partial billing and
-                    // function-timeout clamps can undercut it).
-                    let cold = warmup_s.min(billed_s);
-                    cold_billed_s += cold;
-                    exec_billed_s += billed_s - cold;
+                    if hedge_calls.contains(&call) {
+                        // Hedged pairs are a policy cost: both legs land
+                        // in the hedge phase, warmup included.
+                        hedge_billed_s += billed_s;
+                    } else if retry_calls.contains(&call) {
+                        retry_billed_s += billed_s;
+                    } else {
+                        // Warmup is the cold-attributable billed time;
+                        // clamp to the billed duration (crash partial
+                        // billing and function-timeout clamps can
+                        // undercut it).
+                        let cold = warmup_s.min(billed_s);
+                        cold_billed_s += cold;
+                        exec_billed_s += billed_s - cold;
+                    }
                 }
                 Span::LiveStop { .. } => live_stop_decisions += 1,
                 Span::CallsCanceled { count, .. } => calls_canceled += count as u64,
@@ -326,6 +414,9 @@ impl RunMetrics {
                     des_events = events;
                     des_peak_pending = peak_pending as u64;
                 }
+                Span::FaultInjected { .. } => faults_injected += 1,
+                Span::RetryScheduled { .. } => retries_scheduled += 1,
+                Span::HedgeWon { .. } => hedges_won += 1,
             }
         }
         queue_waits.sort_by(|a, b| total_cmp_f64(*a, *b));
@@ -334,6 +425,8 @@ impl RunMetrics {
         let cost_requests_usd = invocations as f64 * usd_per_request;
         let cost_cold_start_usd = cold_billed_s * mem_gb * usd_per_gb_s;
         let cost_execution_usd = exec_billed_s * mem_gb * usd_per_gb_s;
+        let cost_retry_usd = retry_billed_s * mem_gb * usd_per_gb_s;
+        let cost_hedge_usd = hedge_billed_s * mem_gb * usd_per_gb_s;
         // Residual, not a sum of per-call round-ups: the rounding phase
         // is *defined* as whatever makes phase_total_usd() reproduce
         // cost_usd bit-exactly (same association order there as here).
@@ -341,8 +434,14 @@ impl RunMetrics {
         // metering inflation puts cost far from partial (Sterbenz no
         // longer applies), so correct iteratively: each pass shrinks the
         // error below an ulp and the loop settles in <= 2 passes for the
-        // positive, same-scale values billing produces.
-        let partial = cost_requests_usd + cost_cold_start_usd + cost_execution_usd;
+        // positive, same-scale values billing produces. (Adding the
+        // retry/hedge phases keeps the pre-chaos association bit-exact:
+        // both are +0.0 when absent, which is the identity on the sum.)
+        let partial = cost_requests_usd
+            + cost_cold_start_usd
+            + cost_execution_usd
+            + cost_retry_usd
+            + cost_hedge_usd;
         let mut cost_rounding_usd = cost_usd - partial;
         for _ in 0..4 {
             let total = partial + cost_rounding_usd;
@@ -366,18 +465,28 @@ impl RunMetrics {
             live_stop_decisions,
             des_events,
             des_peak_pending,
+            faults_injected,
+            retries_scheduled,
+            hedges_won,
             cost_requests_usd,
             cost_cold_start_usd,
             cost_execution_usd,
+            cost_retry_usd,
+            cost_hedge_usd,
             cost_rounding_usd,
         }
     }
 
-    /// Sum of the four cost phases — bit-identical to the `cost_usd` the
+    /// Sum of the cost phases — bit-identical to the `cost_usd` the
     /// metrics were built from (the rounding phase is the exact
-    /// residual).
+    /// residual). The retry/hedge phases are +0.0 for un-faulted runs,
+    /// which leaves the pre-chaos four-phase sum bit-exact.
     pub fn phase_total_usd(&self) -> f64 {
-        (self.cost_requests_usd + self.cost_cold_start_usd + self.cost_execution_usd)
+        (self.cost_requests_usd
+            + self.cost_cold_start_usd
+            + self.cost_execution_usd
+            + self.cost_retry_usd
+            + self.cost_hedge_usd)
             + self.cost_rounding_usd
     }
 }
@@ -402,7 +511,7 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
 /// JSON shape of a [`RunMetrics`] block (the report's `telemetry`
 /// section and the trace file's embedded `metrics`).
 pub fn run_metrics_to_json(m: &RunMetrics) -> Json {
-    obj(vec![
+    let mut fields = vec![
         ("invocations", Json::Num(m.invocations as f64)),
         ("cold_starts", Json::Num(m.cold_starts as f64)),
         ("warm_reuses", Json::Num(m.warm_reuses as f64)),
@@ -417,11 +526,30 @@ pub fn run_metrics_to_json(m: &RunMetrics) -> Json {
         ("live_stop_decisions", Json::Num(m.live_stop_decisions as f64)),
         ("des_events", Json::Num(m.des_events as f64)),
         ("des_peak_pending", Json::Num(m.des_peak_pending as f64)),
-        ("cost_requests_usd", Json::Num(m.cost_requests_usd)),
-        ("cost_cold_start_usd", Json::Num(m.cost_cold_start_usd)),
-        ("cost_execution_usd", Json::Num(m.cost_execution_usd)),
-        ("cost_rounding_usd", Json::Num(m.cost_rounding_usd)),
-    ])
+    ];
+    // Chaos counters/phases are absent-not-zero: un-faulted legacy runs
+    // keep the pre-chaos section byte-identical, and the history round
+    // trip stays lossless (absent parses back to 0).
+    if m.faults_injected > 0 {
+        fields.push(("faults_injected", Json::Num(m.faults_injected as f64)));
+    }
+    if m.retries_scheduled > 0 {
+        fields.push(("retries_scheduled", Json::Num(m.retries_scheduled as f64)));
+    }
+    if m.hedges_won > 0 {
+        fields.push(("hedges_won", Json::Num(m.hedges_won as f64)));
+    }
+    fields.push(("cost_requests_usd", Json::Num(m.cost_requests_usd)));
+    fields.push(("cost_cold_start_usd", Json::Num(m.cost_cold_start_usd)));
+    fields.push(("cost_execution_usd", Json::Num(m.cost_execution_usd)));
+    if m.cost_retry_usd != 0.0 {
+        fields.push(("cost_retry_usd", Json::Num(m.cost_retry_usd)));
+    }
+    if m.cost_hedge_usd != 0.0 {
+        fields.push(("cost_hedge_usd", Json::Num(m.cost_hedge_usd)));
+    }
+    fields.push(("cost_rounding_usd", Json::Num(m.cost_rounding_usd)));
+    obj(fields)
 }
 
 /// Parse a `telemetry` section back into [`RunMetrics`] (the history
@@ -433,6 +561,8 @@ pub fn run_metrics_from_json(j: &Json) -> Result<RunMetrics> {
             .and_then(Json::as_f64)
             .with_context(|| format!("telemetry section: missing/non-numeric {key:?}"))
     };
+    // Chaos fields are exported absent-not-zero; absent parses to 0.
+    let opt = |key: &str| -> f64 { j.get(key).and_then(Json::as_f64).unwrap_or(0.0) };
     Ok(RunMetrics {
         invocations: num("invocations")? as u64,
         cold_starts: num("cold_starts")? as u64,
@@ -448,9 +578,14 @@ pub fn run_metrics_from_json(j: &Json) -> Result<RunMetrics> {
         live_stop_decisions: num("live_stop_decisions")? as u64,
         des_events: num("des_events")? as u64,
         des_peak_pending: num("des_peak_pending")? as u64,
+        faults_injected: opt("faults_injected") as u64,
+        retries_scheduled: opt("retries_scheduled") as u64,
+        hedges_won: opt("hedges_won") as u64,
         cost_requests_usd: num("cost_requests_usd")?,
         cost_cold_start_usd: num("cost_cold_start_usd")?,
         cost_execution_usd: num("cost_execution_usd")?,
+        cost_retry_usd: opt("cost_retry_usd"),
+        cost_hedge_usd: opt("cost_hedge_usd"),
         cost_rounding_usd: num("cost_rounding_usd")?,
     })
 }
@@ -543,6 +678,8 @@ pub fn chrome_trace_json(scenario: &str, spans: &[Span], metrics: &RunMetrics) -
                 instance,
                 cold,
                 queue_wait_s,
+                attempt,
+                hedge,
             } => instant_event(
                 "call-issued",
                 t,
@@ -553,6 +690,8 @@ pub fn chrome_trace_json(scenario: &str, spans: &[Span], metrics: &RunMetrics) -
                     ("instance", Json::Num(instance as f64)),
                     ("cold", Json::Bool(cold)),
                     ("queue_wait_s", Json::Num(queue_wait_s)),
+                    ("attempt", Json::Num(attempt as f64)),
+                    ("hedge", Json::Bool(hedge)),
                 ]),
             ),
             Span::CallCompleted {
@@ -614,6 +753,46 @@ pub fn chrome_trace_json(scenario: &str, spans: &[Span], metrics: &RunMetrics) -
                     ("peak_pending", Json::Num(peak_pending as f64)),
                 ]),
             ),
+            Span::FaultInjected { t, kind } => instant_event(
+                "fault-injected",
+                t,
+                Json::Num(0.0),
+                obj(vec![("kind", Json::Str(kind.into()))]),
+            ),
+            Span::RetryScheduled {
+                t,
+                bench,
+                call,
+                kind,
+                attempt,
+                delay_s,
+            } => instant_event(
+                "retry-scheduled",
+                t,
+                Json::Num(0.0),
+                obj(vec![
+                    ("bench", Json::Num(bench as f64)),
+                    ("call", Json::Num(call as f64)),
+                    ("kind", Json::Str(kind.into())),
+                    ("attempt", Json::Num(attempt as f64)),
+                    ("delay_s", Json::Num(delay_s)),
+                ]),
+            ),
+            Span::HedgeWon {
+                t,
+                bench,
+                winner,
+                loser,
+            } => instant_event(
+                "hedge-won",
+                t,
+                Json::Num(0.0),
+                obj(vec![
+                    ("bench", Json::Num(bench as f64)),
+                    ("winner", Json::Num(winner as f64)),
+                    ("loser", Json::Num(loser as f64)),
+                ]),
+            ),
         })
         .collect();
     obj(vec![
@@ -644,6 +823,8 @@ mod tests {
                 instance: 0,
                 cold: true,
                 queue_wait_s: 2.0,
+                attempt: 0,
+                hedge: false,
             },
             Span::ColdStart { t: 0.1, dur_s: 2.1, instance: 1 },
             Span::CallIssued {
@@ -653,6 +834,8 @@ mod tests {
                 instance: 1,
                 cold: true,
                 queue_wait_s: 2.1,
+                attempt: 0,
+                hedge: false,
             },
             Span::AcquireDenied { t: 0.2 },
             Span::CallCompleted {
@@ -674,6 +857,8 @@ mod tests {
                 instance: 0,
                 cold: false,
                 queue_wait_s: 0.02,
+                attempt: 0,
+                hedge: false,
             },
             Span::CallCompleted {
                 t_start: 2.2,
@@ -831,6 +1016,133 @@ mod tests {
         let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         assert_eq!(percentile(&v, 50.0), 50.0);
         assert_eq!(percentile(&v, 99.0), 99.0);
+    }
+
+    /// A faulted stream: one retry call, one hedged pair (whose loser
+    /// completes *after* the HedgeWon span — the ordering the pre-pass
+    /// exists for), a fault injection and a scheduled retry.
+    fn chaos_spans() -> Vec<Span> {
+        vec![
+            Span::FaultInjected { t: 0.0, kind: "crash" },
+            Span::CallIssued {
+                t: 0.0,
+                call: 1,
+                bench: 0,
+                instance: 0,
+                cold: true,
+                queue_wait_s: 1.0,
+                attempt: 1,
+                hedge: false,
+            },
+            Span::CallIssued {
+                t: 0.5,
+                call: 2,
+                bench: 1,
+                instance: 1,
+                cold: true,
+                queue_wait_s: 20.0,
+                attempt: 0,
+                hedge: true,
+            },
+            Span::CallIssued {
+                t: 0.5,
+                call: 3,
+                bench: 1,
+                instance: 2,
+                cold: true,
+                queue_wait_s: 2.0,
+                attempt: 0,
+                hedge: true,
+            },
+            Span::RetryScheduled {
+                t: 1.0,
+                bench: 2,
+                call: 0,
+                kind: "acquire-denied",
+                attempt: 0,
+                delay_s: 0.4,
+            },
+            Span::CallCompleted {
+                t_start: 1.0,
+                dur_s: 2.0,
+                call: 1,
+                bench: 0,
+                instance: 0,
+                warmup_s: 0.5,
+                billed_s: 2.0,
+                failure: None,
+            },
+            Span::CallCompleted {
+                t_start: 2.5,
+                dur_s: 3.0,
+                call: 3,
+                bench: 1,
+                instance: 2,
+                warmup_s: 0.25,
+                billed_s: 3.0,
+                failure: None,
+            },
+            Span::HedgeWon { t: 5.5, bench: 1, winner: 3, loser: 2 },
+            // Hedge loser completes after the pair resolved.
+            Span::CallCompleted {
+                t_start: 20.5,
+                dur_s: 4.0,
+                call: 2,
+                bench: 1,
+                instance: 1,
+                warmup_s: 20.0,
+                billed_s: 4.0,
+                failure: None,
+            },
+        ]
+    }
+
+    #[test]
+    fn retry_and_hedge_costs_route_to_their_phases() {
+        let m = RunMetrics::from_spans(&chaos_spans(), 9.0, 1.0, 1.0, 0.0);
+        assert_eq!(m.faults_injected, 1);
+        assert_eq!(m.retries_scheduled, 1);
+        assert_eq!(m.hedges_won, 1);
+        // Retry call 1 bills 2.0; hedge legs 2+3 bill 4.0+3.0 — the
+        // loser's post-HedgeWon completion must still land in the hedge
+        // phase (pre-pass membership), never in cold/exec.
+        assert_eq!(m.cost_retry_usd, 2.0);
+        assert_eq!(m.cost_hedge_usd, 7.0);
+        assert_eq!(m.cost_cold_start_usd, 0.0);
+        assert_eq!(m.cost_execution_usd, 0.0);
+        assert_eq!(m.phase_total_usd().to_bits(), 9.0f64.to_bits());
+    }
+
+    #[test]
+    fn chaos_fields_are_absent_not_zero_and_round_trip() {
+        // Un-faulted stream: the JSON section must not mention any chaos
+        // field (pre-chaos byte-compat)...
+        let plain = RunMetrics::from_spans(&sample_spans(), 1.0, 2.0, 1.666667e-5, 2e-7);
+        let j = run_metrics_to_json(&plain).to_string();
+        for key in [
+            "faults_injected",
+            "retries_scheduled",
+            "hedges_won",
+            "cost_retry_usd",
+            "cost_hedge_usd",
+        ] {
+            assert!(!j.contains(key), "unfaulted telemetry leaks {key}: {j}");
+        }
+        // ...and absent keys parse back to zero, re-exporting identically.
+        let parsed = crate::util::json::parse(&j).unwrap();
+        let back = run_metrics_from_json(&parsed).unwrap();
+        assert_eq!(back, plain);
+        assert_eq!(run_metrics_to_json(&back).to_string(), j);
+        // A faulted stream exports all five and round-trips bit-exactly.
+        let chaos = RunMetrics::from_spans(&chaos_spans(), 9.25, 1.0, 1.0, 0.0);
+        let cj = run_metrics_to_json(&chaos).to_string();
+        for key in ["faults_injected", "retries_scheduled", "hedges_won", "cost_retry_usd", "cost_hedge_usd"]
+        {
+            assert!(cj.contains(key), "faulted telemetry missing {key}: {cj}");
+        }
+        let cback = run_metrics_from_json(&crate::util::json::parse(&cj).unwrap()).unwrap();
+        assert_eq!(cback, chaos);
+        assert_eq!(cback.phase_total_usd().to_bits(), chaos.phase_total_usd().to_bits());
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! Chaos accuracy lab: the A/A + A/B accuracy scoreboard under injected
+//! platform faults, fault regime x provider calibration x retry policy.
+//!
+//! Each cell runs one A/A experiment (both lanes v1 — every change
+//! verdict is a false positive) and one A/B experiment (v1 vs v2 —
+//! detection scored against the generator's ground truth) through
+//! [`run_experiment_chaos`] with the cell's [`FaultSpec`] installed,
+//! then aggregates false-positive rate, detection rate, quarantined
+//! benchmarks, injected faults and the billed retry/hedge overhead into
+//! a [`ChaosScoreRow`]. The rendered scoreboard is the headline
+//! artifact; CI exports the same numbers as `BENCH_chaos.json` when
+//! `ELASTIBENCH_CHAOS_BENCH_JSON` names a path.
+//!
+//! Hard gates bind the `standard` policy — the shipped default: under
+//! the `standard` fault regime its A/A false-positive rate must stay
+//! within the analyzer's alpha (<= 5% of verdicts) and it must find
+//! >= 90% of the injected changes whose FaaS-side magnitude is >= 10%.
+//! The `legacy` policy (retry budgets off) is measured in the same
+//! cells, and the harness asserts the contrast: switching the policy
+//! off must demonstrably degrade at least one score under the standard
+//! regime — otherwise the policy is dead weight.
+//!
+//! `ELASTIBENCH_CHAOS_SMOKE=1` trims the grid to the standard regime on
+//! aws-lambda (both policies) for the CI smoke job.
+//! `ELASTIBENCH_CHAOS_MAX_AA_FP_PCT` / `ELASTIBENCH_CHAOS_MIN_DETECTION_PCT`
+//! override the gate thresholds — CI uses an impossible threshold to
+//! assert that a red scoreboard really fails the test binary.
+
+use elastibench::config::{ExperimentConfig, PlatformConfig, SutConfig};
+use elastibench::coordinator::{run_experiment_chaos, RetryPolicy, StrategyKind};
+use elastibench::faas::{profile_by_name, FaultSpec};
+use elastibench::report::{chaos_scoreboard_table, ChaosScoreRow};
+use elastibench::scenario::quarantine_degraded;
+use elastibench::stats::{Analyzer, SuiteAnalysis};
+use elastibench::sut::{generate, Suite, Version};
+use elastibench::telemetry::{RecordingSink, RunMetrics, SharedSink};
+use elastibench::util::benchkit::BenchReport;
+
+/// Seed offset between run seed and analysis seed (the convention the
+/// scenario runner and experiment drivers share).
+const ANALYSIS_SEED_XOR: u64 = 0xA11A;
+
+/// A gate threshold, overridable via environment for the CI red-path
+/// check (an impossible threshold must fail the binary — the exit-code
+/// contract of the gate).
+fn gate_pct(var: &str, default: f64) -> f64 {
+    std::env::var(var)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+const PROFILES: &[&str] = &["aws-lambda", "gcp-cloud-functions", "azure-functions"];
+
+/// Every active fault regime on the board.
+const REGIMES: &[&str] = &["standard", "throttle-storm", "spot-chaos", "brownout"];
+
+/// Lab SUT: every benchmark FaaS-runnable, five injected true changes
+/// so the generator's big magnitude ladder engages.
+fn lab_sut() -> SutConfig {
+    SutConfig {
+        benchmark_count: 12,
+        true_changes: 5,
+        faas_incompatible: 0,
+        slow_setup: 0,
+        ..SutConfig::default()
+    }
+}
+
+/// 6 calls x 2 in-call repeats = 12 results per benchmark — just above
+/// the analyzer's 10-sample floor, so fault-induced sample loss is what
+/// separates the policies: one unrecovered crash costs 2 samples, two
+/// drop the benchmark below the quorum.
+fn lab_exp(label: &str, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        label: label.into(),
+        calls_per_benchmark: 6,
+        repeats_per_call: 2,
+        parallelism: 30,
+        seed,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Injected changes the harness scores detection over: FaaS-runnable,
+/// not a benchmark-code change, and with a FaaS-side ground truth of at
+/// least 10% — the magnitude class the analyzer is calibrated to find.
+fn detectable_changes(suite: &Suite) -> Vec<String> {
+    suite
+        .benchmarks
+        .iter()
+        .filter(|b| {
+            b.has_true_change()
+                && !b.benchmark_changed()
+                && !b.writes_fs
+                && b.setup_s < 6.0
+                && b.true_change_pct(true).abs() >= 10.0
+        })
+        .map(|b| b.name.clone())
+        .collect()
+}
+
+/// One faulted experiment half (A/A or A/B): run under the regime and
+/// policy, quarantine quorum-starved benchmarks, analyze the rest.
+/// Returns the analysis, quarantined count, span-derived metrics and
+/// billed cost.
+fn run_half(
+    suite: &Suite,
+    sut: &SutConfig,
+    platform: &PlatformConfig,
+    exp: &ExperimentConfig,
+    versions: (Version, Version),
+    faults: &FaultSpec,
+    policy: &RetryPolicy,
+    analyzer: &Analyzer,
+) -> (SuiteAnalysis, usize, RunMetrics, f64) {
+    let rec = RecordingSink::shared();
+    let sink: SharedSink = rec.clone();
+    let (run, _) = run_experiment_chaos(
+        suite,
+        sut,
+        platform,
+        exp,
+        versions,
+        StrategyKind::Duet.strategy(),
+        Some(faults),
+        policy,
+        None,
+        Some(&sink),
+    );
+    let spans = std::mem::take(&mut rec.borrow_mut().spans);
+    let metrics = RunMetrics::from_spans(
+        &spans,
+        run.cost_usd,
+        exp.memory_mb as f64 / 1024.0,
+        platform.usd_per_gb_s,
+        platform.usd_per_request,
+    );
+    let mut measurements = run.measurements;
+    let degraded = quarantine_degraded(&mut measurements, policy.min_quorum);
+    let analysis = analyzer
+        .analyze(&exp.label, &measurements, exp.seed ^ ANALYSIS_SEED_XOR)
+        .expect("analyze faulted run");
+    (analysis, degraded.len(), metrics, run.cost_usd)
+}
+
+/// Run one scoreboard cell: A/A then A/B under (regime, profile,
+/// policy).
+fn score_cell(
+    suite: &Suite,
+    sut: &SutConfig,
+    platform: &PlatformConfig,
+    faults: &FaultSpec,
+    profile: &str,
+    policy: &RetryPolicy,
+    seed: u64,
+    analyzer: &Analyzer,
+    detectable: &[String],
+) -> ChaosScoreRow {
+    let exp_aa = lab_exp(
+        &format!("chaos-aa-{}-{profile}-{}", faults.regime, policy.name),
+        seed,
+    );
+    let (aa, aa_deg, aa_m, aa_cost) = run_half(
+        suite,
+        sut,
+        platform,
+        &exp_aa,
+        (Version::V1, Version::V1),
+        faults,
+        policy,
+        analyzer,
+    );
+    let exp_ab = lab_exp(
+        &format!("chaos-ab-{}-{profile}-{}", faults.regime, policy.name),
+        seed ^ 0xAB,
+    );
+    let (ab, ab_deg, ab_m, ab_cost) = run_half(
+        suite,
+        sut,
+        platform,
+        &exp_ab,
+        (Version::V1, Version::V2),
+        faults,
+        policy,
+        analyzer,
+    );
+    let ab_detected = detectable
+        .iter()
+        .filter(|name| ab.get(name).is_some_and(|v| v.change.is_change()))
+        .count();
+    ChaosScoreRow {
+        regime: faults.regime.clone(),
+        profile: profile.to_string(),
+        policy: policy.name.clone(),
+        aa_false_positives: aa.change_count(),
+        aa_verdicts: aa.verdicts.len(),
+        ab_detected,
+        ab_injected: detectable.len(),
+        degraded: aa_deg + ab_deg,
+        faults_injected: aa_m.faults_injected + ab_m.faults_injected,
+        retry_cost_usd: aa_m.cost_retry_usd + ab_m.cost_retry_usd,
+        hedge_cost_usd: aa_m.cost_hedge_usd + ab_m.cost_hedge_usd,
+        cost_usd: aa_cost + ab_cost,
+    }
+}
+
+#[test]
+fn chaos_scoreboard_gates_the_default_policy_and_shows_the_contrast() {
+    let smoke = std::env::var("ELASTIBENCH_CHAOS_SMOKE").is_ok();
+    let profiles: &[&str] = if smoke { &PROFILES[..1] } else { PROFILES };
+    let regimes: &[&str] = if smoke { &REGIMES[..1] } else { REGIMES };
+
+    let analyzer = Analyzer::native();
+    let sut = lab_sut();
+    let suite = generate(&sut);
+    let detectable = detectable_changes(&suite);
+    assert!(
+        detectable.len() >= 3,
+        "lab SUT must inject >= 3 large detectable changes, got {detectable:?}"
+    );
+
+    let policies = [RetryPolicy::standard(), RetryPolicy::legacy()];
+    let mut rows: Vec<ChaosScoreRow> = Vec::new();
+    for (ri, regime) in regimes.iter().enumerate() {
+        let faults = FaultSpec::regime(regime).expect("registered regime");
+        for (pi, profile) in profiles.iter().enumerate() {
+            let platform = profile_by_name(profile).expect("registered profile").config();
+            for (oi, policy) in policies.iter().enumerate() {
+                let seed = 0xC4A0_0000
+                    + (ri as u64) * 0x1000
+                    + (pi as u64) * 0x100
+                    + (oi as u64) * 0x10;
+                rows.push(score_cell(
+                    &suite,
+                    &sut,
+                    &platform,
+                    &faults,
+                    profile,
+                    policy,
+                    seed,
+                    &analyzer,
+                    &detectable,
+                ));
+            }
+        }
+    }
+
+    // Full coverage: one row per regime x profile x policy, every cell
+    // actually injected faults and billed something.
+    assert_eq!(rows.len(), regimes.len() * profiles.len() * policies.len());
+    for r in &rows {
+        assert!(
+            r.faults_injected > 0,
+            "{}/{}/{}: regime injected nothing",
+            r.regime,
+            r.profile,
+            r.policy
+        );
+        assert!(r.cost_usd > 0.0, "{}/{}/{}: zero billed cost", r.regime, r.profile, r.policy);
+        assert_eq!(r.ab_injected, detectable.len());
+        // The legacy policy never hedges (threshold off) or quarantines
+        // (quorum off) — those scores are structurally zero. Its single
+        // immediate crash retry can still bill retry cost.
+        if r.policy == "legacy" {
+            assert_eq!(r.degraded, 0, "{}/{}: legacy quarantined", r.regime, r.profile);
+            assert_eq!(r.hedge_cost_usd, 0.0, "{}/{}: legacy hedged", r.regime, r.profile);
+        }
+    }
+
+    println!("{}", chaos_scoreboard_table(&rows));
+
+    // Hard gates on the shipped default: the standard policy under the
+    // standard regime, aggregated across profiles.
+    let std_rows: Vec<&ChaosScoreRow> = rows
+        .iter()
+        .filter(|r| r.regime == "standard" && r.policy == "standard")
+        .collect();
+    assert_eq!(std_rows.len(), profiles.len());
+    let fp: usize = std_rows.iter().map(|r| r.aa_false_positives).sum();
+    let verdicts: usize = std_rows.iter().map(|r| r.aa_verdicts).sum();
+    let fp_pct = fp as f64 / verdicts.max(1) as f64 * 100.0;
+    let max_fp_pct = gate_pct("ELASTIBENCH_CHAOS_MAX_AA_FP_PCT", 5.0);
+    assert!(
+        fp_pct <= max_fp_pct,
+        "standard policy A/A false-positive rate {fp_pct:.1}% ({fp}/{verdicts}) exceeds \
+         {max_fp_pct}%"
+    );
+    let detected: usize = std_rows.iter().map(|r| r.ab_detected).sum();
+    let injected: usize = std_rows.iter().map(|r| r.ab_injected).sum();
+    let detection_pct = detected as f64 / injected.max(1) as f64 * 100.0;
+    let min_detection_pct = gate_pct("ELASTIBENCH_CHAOS_MIN_DETECTION_PCT", 90.0);
+    assert!(
+        detection_pct >= min_detection_pct,
+        "standard policy detected {detected}/{injected} ({detection_pct:.1}%) under the \
+         standard regime (gate: >= {min_detection_pct}%)"
+    );
+
+    // The contrast: turning the policy off must degrade at least one
+    // score under the standard regime — fewer detections, more false
+    // positives, or benchmarks silently starved out of the analysis.
+    let leg_rows: Vec<&ChaosScoreRow> = rows
+        .iter()
+        .filter(|r| r.regime == "standard" && r.policy == "legacy")
+        .collect();
+    let leg_detected: usize = leg_rows.iter().map(|r| r.ab_detected).sum();
+    let leg_fp: usize = leg_rows.iter().map(|r| r.aa_false_positives).sum();
+    let leg_verdicts: usize = leg_rows.iter().map(|r| r.aa_verdicts).sum();
+    let leg_fp_pct = leg_fp as f64 / leg_verdicts.max(1) as f64 * 100.0;
+    assert!(
+        leg_detected < detected || leg_fp_pct > fp_pct || leg_verdicts < verdicts,
+        "legacy policy must degrade at least one score under the standard regime: \
+         detected {leg_detected} vs {detected}, A/A FP {leg_fp_pct:.1}% vs {fp_pct:.1}%, \
+         analyzed {leg_verdicts} vs {verdicts}"
+    );
+
+    // CI artifact: the same scoreboard as a bench-report document.
+    if let Ok(path) = std::env::var("ELASTIBENCH_CHAOS_BENCH_JSON") {
+        let mut bench = BenchReport::new("chaos");
+        for r in &rows {
+            let key = format!("{}.{}.{}", r.regime, r.profile, r.policy);
+            bench.metric(&format!("{key}.aa_fp_pct"), r.aa_fp_pct());
+            bench.metric(&format!("{key}.detection_pct"), r.detection_pct());
+            bench.metric(&format!("{key}.degraded"), r.degraded as f64);
+            bench.metric(&format!("{key}.faults_injected"), r.faults_injected as f64);
+            bench.metric(&format!("{key}.overhead_pct"), r.overhead_pct());
+        }
+        bench.metric("standard.aa_fp_pct_overall", fp_pct);
+        bench.metric("standard.detection_pct_overall", detection_pct);
+        bench
+            .write(std::path::Path::new(&path))
+            .expect("write BENCH_chaos.json");
+    }
+}
+
+/// Faulted runs are pure functions of (recipe, seed): the same cell
+/// executed twice yields bit-identical reports (f64 Debug formatting is
+/// shortest-round-trip, so equal strings mean bit-equal values).
+#[test]
+fn faulted_cells_are_deterministic_across_repeats() {
+    let sut = lab_sut();
+    let suite = generate(&sut);
+    let platform = profile_by_name("aws-lambda").expect("profile").config();
+    let faults = FaultSpec::regime("spot-chaos").expect("regime");
+    let policy = RetryPolicy::standard();
+    let exp = lab_exp("chaos-repeat", 0xC4A0_FFFF);
+    let run_once = || {
+        run_experiment_chaos(
+            &suite,
+            &sut,
+            &platform,
+            &exp,
+            (Version::V1, Version::V2),
+            StrategyKind::Duet.strategy(),
+            Some(&faults),
+            &policy,
+            None,
+            None,
+        )
+        .0
+    };
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+}
+
+/// Zero-impact guarantee: running through the chaos entry point with no
+/// fault spec and the legacy policy reproduces the default path byte
+/// for byte.
+#[test]
+fn absent_faults_with_legacy_policy_are_byte_identical_to_the_default_path() {
+    let sut = lab_sut();
+    let suite = generate(&sut);
+    let platform = profile_by_name("gcp-cloud-functions").expect("profile").config();
+    let exp = lab_exp("chaos-absent", 0xC4A0_1DE7);
+    let plain = elastibench::coordinator::run_experiment_with(
+        &suite,
+        &sut,
+        &platform,
+        &exp,
+        (Version::V1, Version::V2),
+        StrategyKind::Duet.strategy(),
+    );
+    let chaos = run_experiment_chaos(
+        &suite,
+        &sut,
+        &platform,
+        &exp,
+        (Version::V1, Version::V2),
+        StrategyKind::Duet.strategy(),
+        None,
+        &RetryPolicy::legacy(),
+        None,
+        None,
+    )
+    .0;
+    assert_eq!(format!("{chaos:?}"), format!("{plain:?}"));
+}

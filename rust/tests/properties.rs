@@ -375,6 +375,78 @@ fn prop_vm_and_faas_agree_on_large_effects() {
     });
 }
 
+#[test]
+fn prop_faulted_runs_are_pure_functions_of_recipe_and_seed() {
+    // Fault injection must not break determinism: whatever the regime,
+    // policy and strategy, re-running from identical inputs yields a
+    // bit-identical report AND a bit-identical lifecycle span stream
+    // (sweep-level `--jobs` invariance over a faulted recipe is pinned
+    // in rust/tests/scenario_catalog.rs).
+    use elastibench::coordinator::{run_experiment_chaos, RetryPolicy, StrategyKind};
+    use elastibench::faas::FaultSpec;
+    use elastibench::telemetry::{RecordingSink, SharedSink, Span};
+
+    let regimes = ["standard", "throttle-storm", "spot-chaos", "brownout"];
+    check("faulted run purity", 2, |g: &mut Gen| {
+        let sut = SutConfig {
+            benchmark_count: 6,
+            true_changes: 2,
+            faas_incompatible: 0,
+            slow_setup: 0,
+            seed: g.u64(0..u64::MAX),
+            ..SutConfig::default()
+        };
+        let suite = generate(&sut);
+        let exp = ExperimentConfig {
+            calls_per_benchmark: 4,
+            repeats_per_call: 2,
+            parallelism: g.usize(1..20),
+            seed: g.u64(0..u64::MAX),
+            ..ExperimentConfig::default()
+        };
+        let faults = FaultSpec::regime(regimes[g.usize(0..regimes.len())]).unwrap();
+        let policy = if g.bool(0.5) { RetryPolicy::standard() } else { RetryPolicy::legacy() };
+        for kind in StrategyKind::all() {
+            let run_once = || -> (String, Vec<Span>) {
+                let rec = RecordingSink::shared();
+                let sink: SharedSink = rec.clone();
+                let (report, _) = run_experiment_chaos(
+                    &suite,
+                    &sut,
+                    &PlatformConfig::default(),
+                    &exp,
+                    (Version::V1, Version::V2),
+                    kind.strategy(),
+                    Some(&faults),
+                    &policy,
+                    None,
+                    Some(&sink),
+                );
+                let spans = std::mem::take(&mut rec.borrow_mut().spans);
+                (format!("{report:?}"), spans)
+            };
+            let (a_report, a_spans) = run_once();
+            let (b_report, b_spans) = run_once();
+            assert_eq!(
+                a_report,
+                b_report,
+                "{}/{}/{}: faulted report must be deterministic",
+                kind.as_str(),
+                faults.regime,
+                policy.name
+            );
+            assert_eq!(
+                format!("{a_spans:?}"),
+                format!("{b_spans:?}"),
+                "{}/{}/{}: faulted span stream must be deterministic",
+                kind.as_str(),
+                faults.regime,
+                policy.name
+            );
+        }
+    });
+}
+
 // ---------- history importer round trip ----------
 
 #[test]
@@ -401,6 +473,16 @@ fn prop_scenario_report_roundtrips_through_history_loader() {
         if g.bool(0.5) {
             // Exercise the `adaptive` report section too.
             sc.repeats = RepeatPolicy::Adaptive;
+        }
+        if g.bool(0.5) {
+            // Exercise the `faults` / `degraded` report sections too.
+            use elastibench::faas::FaultSpec;
+            let regimes = ["standard", "throttle-storm", "spot-chaos", "brownout"];
+            let mut faults = FaultSpec::regime(regimes[g.usize(0..regimes.len())]).unwrap();
+            if g.bool(0.3) {
+                faults.policy = "legacy".to_string();
+            }
+            sc.faults = Some(faults);
         }
         let report = run_scenario(&sc, &analyzer).unwrap();
         let exported = scenario_report_to_json(&report).to_string();

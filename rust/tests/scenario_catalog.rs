@@ -218,6 +218,94 @@ fn strategy_lab_entry_sweeps_all_strategies_end_to_end() {
 }
 
 #[test]
+fn chaos_lab_entry_sweeps_fault_regimes_and_stays_jobs_invariant() {
+    // The chaos-lab catalog entry expands one recipe into four fault
+    // cells (incl. a legacy-policy contrast cell); a scaled-down sweep
+    // must execute every variant, stamp each report with its `faults`
+    // section, and — the fault-injection half of the determinism bar —
+    // stay byte-identical across `--jobs` worker counts.
+    let sc = catalog_entry("chaos-lab").unwrap();
+    assert!(sc.matrix.is_some());
+    assert!(sc.faults.is_none(), "the axis owns the fault value");
+    let variants = sc.expand();
+    assert_eq!(variants.len(), 4);
+    let expected = [
+        ("standard", "standard"),
+        ("standard+legacy", "legacy"),
+        ("spot-chaos", "standard"),
+        ("throttle-storm", "standard"),
+    ];
+    for (v, (label, policy)) in variants.iter().zip(expected) {
+        assert_eq!(v.name, format!("chaos-lab@faults={label}"), "{}", v.name);
+        let f = v.faults.as_ref().expect("variant carries a fault spec");
+        assert_eq!(f.policy, policy, "{}", v.name);
+        assert!(f.is_active(), "{}", v.name);
+    }
+
+    let small: Vec<Scenario> = variants
+        .iter()
+        .map(|v| {
+            let mut s = v.clone();
+            s.sut.benchmark_count = 8;
+            s.sut.true_changes = 2;
+            s.sut.faas_incompatible = 1;
+            s.sut.slow_setup = 0;
+            s.exp.calls_per_benchmark = 5;
+            s.exp.parallelism = 12;
+            s
+        })
+        .collect();
+    let serial = run_sweep(&small, 1, || Ok(Analyzer::native())).unwrap();
+    let pooled = run_sweep(&small, 3, || Ok(Analyzer::native())).unwrap();
+    assert_eq!(serial.len(), 4);
+    for (i, (a, b)) in serial.iter().zip(&pooled).enumerate() {
+        let ja = scenario_report_to_json(a).to_string();
+        let jb = scenario_report_to_json(b).to_string();
+        assert_eq!(ja, jb, "faulted report {} differs across worker counts", small[i].name);
+
+        let j = parse(&ja).unwrap();
+        let faults = j.get("faults").unwrap_or_else(|| panic!("{}: no faults section", small[i].name));
+        assert_eq!(
+            faults.get("regime").unwrap().as_str(),
+            Some(small[i].faults.as_ref().unwrap().regime.as_str()),
+            "{}",
+            small[i].name
+        );
+        let injected = j
+            .get("telemetry")
+            .unwrap()
+            .get("faults_injected")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(injected > 0.0, "{}: nothing injected", small[i].name);
+        if small[i].faults.as_ref().unwrap().policy == "legacy" {
+            // Legacy recovery has no quorum: nothing gets quarantined.
+            assert!(j.get("degraded").is_none(), "{}", small[i].name);
+        }
+        assert!(a.run.calls_ok > 0, "{}: no successful calls", small[i].name);
+    }
+
+    // Every other shipped recipe stays fault-free, and its report JSON
+    // carries no chaos keys at all (absent, not null/zero) — the bytes
+    // are identical to a build without the fault module.
+    for entry in catalog() {
+        if entry.name != "chaos-lab" {
+            assert!(entry.faults.is_none(), "{} gained faults", entry.name);
+            assert!(entry.matrix.as_ref().map_or(true, |m| m.faults.is_empty()), "{}", entry.name);
+        }
+    }
+    let analyzer = Analyzer::native();
+    let mut smoke = catalog_entry("quick-smoke").unwrap();
+    smoke.sut.benchmark_count = 6;
+    smoke.exp.parallelism = 8;
+    let j = parse(&scenario_report_to_json(&run_scenario(&smoke, &analyzer).unwrap()).to_string())
+        .unwrap();
+    assert!(j.get("faults").is_none());
+    assert!(j.get("degraded").is_none());
+}
+
+#[test]
 fn hyperscale_entry_exercises_pool_churn() {
     // The large-fleet catalog entry: parallelism at the 1000-instance
     // scale, thousands of planned calls, and a keepalive short enough
